@@ -1,0 +1,62 @@
+//! DFPA iteration trace (paper Figs 2 and 6): how the distribution, the
+//! observed speeds and the imbalance evolve step by step, including the
+//! paging-borderline case the paper studies in detail (n = 5120 on HCL).
+//!
+//! Writes the long-format CSV that plots 1:1 against Fig 6.
+//!
+//! Run: `cargo run --release --example dfpa_trace [n] [epsilon]`
+
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
+use hfpm::cluster::presets;
+use hfpm::dfpa::{run_dfpa, DfpaOptions, IterationRecord};
+
+fn main() -> hfpm::Result<()> {
+    let n: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5120);
+    let eps: f64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.025);
+    let spec = presets::hcl15();
+    println!(
+        "DFPA trace: n = {n}, ε = {eps}, cluster `{}` ({} nodes)\n",
+        spec.name,
+        spec.size()
+    );
+
+    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+    let (mut cluster, nodes) = build_cluster(&spec, &cfg, Default::default())?;
+    let mut bench = RowBench {
+        cluster: &mut cluster,
+        n,
+    };
+    let r = run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(eps))?;
+
+    // per-iteration view of the four most interesting nodes (paper Fig 6
+    // shows hcl03, hcl06, hcl08, hcl16)
+    let watch: Vec<usize> = ["hcl03", "hcl06", "hcl08", "hcl16"]
+        .iter()
+        .filter_map(|h| nodes.iter().position(|nd| nd.spec.host == *h))
+        .collect();
+    println!("iter | {:>24} | imbalance", "rows on watched nodes");
+    for rec in &r.records {
+        let rows: Vec<String> = watch.iter().map(|&i| rec.d[i].to_string()).collect();
+        println!(
+            "{:>4} | {:>24} | {:.3}",
+            rec.iter,
+            rows.join(", "),
+            rec.imbalance
+        );
+    }
+    println!(
+        "\nconverged: {} after {} iterations (imbalance {:.3})",
+        r.converged, r.iterations, r.imbalance
+    );
+
+    let out = std::path::PathBuf::from("results/dfpa_trace.csv");
+    IterationRecord::write_csv(&r.records, &out)?;
+    println!("full trace: {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the library in 60 lines.
+//!
+//! 1. Partition data over processors with *known* speed functions (the
+//!    geometric algorithm of ref. [16], Fig 1 of the paper).
+//! 2. Balance the same load when the speeds are *unknown*, with DFPA
+//!    discovering partial models on-line over a simulated heterogeneous
+//!    cluster.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hfpm::cluster::presets;
+use hfpm::dfpa::{run_dfpa, DfpaOptions};
+use hfpm::fpm::{PiecewiseModel, SpeedFunction};
+use hfpm::partition;
+
+fn main() -> hfpm::Result<()> {
+    // --- 1. known speed functions → geometric partitioning ----------------
+    // four processors with different speed curves (units/second)
+    let mut models = Vec::new();
+    for (peak, knee) in [(900.0, 4e4), (650.0, 8e4), (400.0, 2e4), (250.0, 1e5)] {
+        let mut m = PiecewiseModel::new();
+        m.insert(1_000.0, peak);
+        m.insert(knee, peak * 0.8);
+        m.insert(knee * 4.0, peak * 0.25); // memory cliff
+        models.push(m);
+    }
+    let n = 200_000u64;
+    let part = partition::partition(n, &models)?;
+    println!("geometric partitioning of {n} units over 4 processors:");
+    for (i, (&d, m)) in part.d.iter().zip(&models).enumerate() {
+        println!(
+            "  P{}: {:>7} units  → t = {:.2}s  (speed {:.0} u/s at that size)",
+            i + 1,
+            d,
+            m.time(d as f64),
+            m.speed(d as f64)
+        );
+    }
+    println!("  (equal times = the optimal line through the origin, paper Fig 1)\n");
+
+    // --- 2. unknown speeds → DFPA on a simulated cluster -------------------
+    let spec = presets::mini4();
+    println!(
+        "DFPA on the `{}` preset ({} nodes, heterogeneity {:.1}):",
+        spec.name,
+        spec.size(),
+        spec.peak_heterogeneity()
+    );
+    let cfg = hfpm::apps::Matmul1dConfig::new(4096, hfpm::apps::Strategy::Dfpa);
+    let (mut cluster, _) = hfpm::apps::matmul1d::build_cluster(&spec, &cfg, Default::default())?;
+    let mut bench = hfpm::apps::matmul1d::RowBench {
+        cluster: &mut cluster,
+        n: 4096,
+    };
+    let r = run_dfpa(4096, &mut bench, DfpaOptions::with_epsilon(0.05))?;
+    println!(
+        "  converged in {} iterations (imbalance {:.1}%, ε = 5%)",
+        r.iterations,
+        100.0 * r.imbalance
+    );
+    println!("  rows per node: {:?}", r.d);
+    println!(
+        "  model points measured per node: {} (a full FPM needs 20+)",
+        r.points_per_processor()
+    );
+    Ok(())
+}

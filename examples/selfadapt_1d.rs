@@ -1,0 +1,67 @@
+//! Self-adaptable 1D matrix multiplication (paper §3.1, Tables 2–3).
+//!
+//! Runs the same application with four partitioning strategies on the
+//! 15-node HCL preset and prints the paper-style comparison: DFPA pays a
+//! small on-line cost but reaches FFMPA-quality distributions without
+//! FFMPA's enormous offline model-construction bill.
+//!
+//! Run: `cargo run --release --example selfadapt_1d [n]`
+
+use hfpm::apps::matmul1d::{run, Matmul1dConfig, Strategy};
+use hfpm::baselines::ffmpa;
+use hfpm::cluster::node::build_nodes;
+use hfpm::cluster::presets;
+use hfpm::fpm::analytic::Footprint;
+use hfpm::util::table::{fdur, fnum, Table};
+
+fn main() -> hfpm::Result<()> {
+    let n: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5120);
+    let spec = presets::hcl15();
+    println!(
+        "1D matmul, n = {n}, cluster `{}` ({} nodes, heterogeneity {:.1})\n",
+        spec.name,
+        spec.size(),
+        spec.peak_heterogeneity()
+    );
+
+    let mut t = Table::new(
+        "strategy comparison (times are modeled cluster seconds)",
+        &["strategy", "partition", "matmul", "total", "iters", "imbalance %"],
+    );
+    let mut ffmpa_build = None;
+    for strategy in [Strategy::Even, Strategy::Cpm, Strategy::Ffmpa, Strategy::Dfpa] {
+        let mut cfg = Matmul1dConfig::new(n, strategy);
+        cfg.epsilon = 0.025;
+        let r = run(&spec, &cfg)?;
+        if let Some(b) = r.model_build_s {
+            ffmpa_build = Some(b);
+        }
+        t.add_row(vec![
+            strategy.name().to_string(),
+            fdur(r.partition_s),
+            fdur(r.matmul_s),
+            fdur(r.total_s),
+            r.iterations.to_string(),
+            fnum(100.0 * r.imbalance, 1),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // the full-model construction bill FFMPA hides (paper: 1850 s)
+    let fp = Footprint::matmul_1d(n as usize);
+    let nodes = build_nodes(&spec, fp, 32);
+    let full = ffmpa::full_grid_build_cost(&nodes, 8192);
+    println!(
+        "\nFFMPA's pre-built models cost {} of cluster time over {} grid points",
+        fdur(full.parallel_s),
+        full.points_per_proc,
+    );
+    if let Some(b) = ffmpa_build {
+        println!("(this run only needed the n-specific slice: {})", fdur(b));
+    }
+    println!("DFPA needs none of that — it discovers partial models in-band.");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+"""AOT bridge: lower the L2 model functions to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser on the rust side reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per bucket plus ``manifest.txt`` with lines
+
+    <name> <kind> <shape...> <file>
+
+that ``rust/src/runtime/artifact.rs`` parses.
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines: list[str] = []
+
+    def emit(name: str, kind: str, dims: tuple[int, ...], lowered) -> None:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        dim_str = " ".join(str(d) for d in dims)
+        manifest_lines.append(f"{name} {kind} {dim_str} {fname}")
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for nb, n in model.MATMUL_BUCKETS:
+        emit(
+            f"matmul_nb{nb}_n{n}",
+            "matmul1d",
+            (nb, n),
+            model.lower_local_matmul(nb, n),
+        )
+    for nb, n in model.UPDATE_BUCKETS:
+        emit(
+            f"update_nb{nb}_n{n}",
+            "rank1",
+            (nb, n),
+            model.lower_rank1_update(nb, n),
+        )
+    for mb, nb, t in model.BLOCK_UPDATE_BUCKETS:
+        emit(
+            f"blockupd_mb{mb}_nb{nb}_t{t}",
+            "block2d",
+            (mb, nb, t),
+            model.lower_block_update(mb, nb, t),
+        )
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"  wrote manifest.txt ({len(manifest_lines)} artifacts)")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    print(f"AOT-lowering kernels to {args.out}")
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from . import matmul, ref, update
+from .matmul import matmul as matmul_kernel
+from .update import block_update, rank1_update
+
+__all__ = ["matmul", "ref", "update", "matmul_kernel", "rank1_update", "block_update"]

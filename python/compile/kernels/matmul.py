@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: VMEM-tiled blocked matmul for the MXU.
+
+Hardware adaptation (DESIGN.md §4): the paper's local compute was
+GotoBLAS2's L2-blocked dgemm on 2005-era CPUs. The TPU-shaped equivalent
+tiles for VMEM with ``BlockSpec`` and feeds the 128×128 MXU systolic array:
+the grid walks (i, j) output tiles with an inner k loop accumulating in a
+VMEM scratch block, which is exactly the HBM↔VMEM schedule GotoBLAS
+expressed with cache blocking.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both the python
+tests and the rust runtime execute. Real-TPU block-shape choices are
+justified by the VMEM/MXU estimates in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-native tile edge. Block shapes are min(dim, 128) so small problems
+# stay single-block while large ones tile the systolic array exactly.
+MXU_TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_shape(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Choose (bm, bk, bn) tiles: MXU-sized, never exceeding the problem."""
+    return min(m, MXU_TILE), min(k, MXU_TILE), min(n, MXU_TILE)
+
+
+def vmem_bytes(m: int, k: int, n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step: A, B, O tiles + f32 acc.
+
+    Used by the perf notes: must stay well under ~16 MiB/core VMEM; the
+    default 128³ f32 tiling needs 4·128·128·(3+1) = 256 KiB — room for
+    double-buffering by the pipeline emitter.
+    """
+    bm, bk, bn = block_shape(m, k, n)
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn) + 4 * bm * bn
+
+
+@functools.partial(jax.jit, static_argnames=("debug",))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, debug: bool = False) -> jnp.ndarray:
+    """C[m, n] = A[m, k] @ B[k, n] via the Pallas kernel.
+
+    Requires every dimension to be divisible by its block edge (the AOT
+    bucket shapes are all multiples of 64/128; the runtime pads to the
+    bucket). f32 accumulation regardless of input dtype.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bk, bn = block_shape(m, k, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn}); "
+        "pad to the AOT bucket first"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+        debug=debug,
+    )(a, b)

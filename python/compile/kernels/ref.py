@@ -1,0 +1,25 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest/hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation (the MXU contract)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def rank1_update_ref(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The paper's 1D core kernel: C[nb, n] += A[nb, 1] · B[1, n].
+
+    One step of the outer-product matrix update (Fig 4b).
+    """
+    return c + (a @ b).astype(c.dtype)
+
+
+def block_update_ref(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The 2D app's core kernel: C[mb, nb] += A[mb, t] · B[t, nb] (Fig 7b)."""
+    return c + jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(c.dtype)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: the paper's core computational kernels as updates.
+
+Two variants:
+
+- :func:`rank1_update` — the 1D app's kernel (paper Fig 4b): one step of
+  the outer-product update ``C[nb, n] += A[nb, 1] · B[1, n]``. This is the
+  unit DFPA benchmarks: executing ``nb·n`` computation units.
+- :func:`block_update` — the 2D app's kernel (paper Fig 7b):
+  ``C[mb, nb] += A[mb, t] · B[t, nb]`` where the matrix elements are b×b
+  blocks flattened into the ``t`` contraction dim.
+
+Both tile over the output with VMEM-sized blocks; the rank-1 contraction
+has no k loop so each grid step is a single fused multiply-add over its
+tile — bandwidth-bound on any hardware, which is precisely why the paper's
+speed functions are memory-regime-shaped.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import MXU_TILE
+
+
+def _rank1_kernel(c_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = c_ref[...] + (
+        a_ref[...] * b_ref[...]
+    ).astype(c_ref.dtype)
+
+
+@jax.jit
+def rank1_update(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[nb, n] += A[nb, 1] · B[1, n] (broadcast outer product).
+
+    Tiles the output into (b_rows × b_cols) VMEM blocks; A broadcasts along
+    columns, B along rows.
+    """
+    nb, n = c.shape
+    assert a.shape == (nb, 1), f"A shape {a.shape} != ({nb}, 1)"
+    assert b.shape == (1, n), f"B shape {b.shape} != (1, {n})"
+    br, bc = min(nb, MXU_TILE), min(n, MXU_TILE)
+    assert nb % br == 0 and n % bc == 0, (
+        f"shape ({nb},{n}) not divisible by blocks ({br},{bc})"
+    )
+    grid = (nb // br, n // bc)
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def _block_update_kernel(c_ref, a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def block_update(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[mb, nb] += A[mb, t] · B[t, nb] — the 2D app's pivot update."""
+    mb, nb = c.shape
+    mb2, t = a.shape
+    t2, nb2 = b.shape
+    assert mb == mb2 and nb == nb2 and t == t2, (
+        f"shape mismatch: C{c.shape} A{a.shape} B{b.shape}"
+    )
+    bm, bn, bk = min(mb, MXU_TILE), min(nb, MXU_TILE), min(t, MXU_TILE)
+    assert mb % bm == 0 and nb % bn == 0 and t % bk == 0
+    n_k = t // bk
+    grid = (mb // bm, nb // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_block_update_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb, nb), c.dtype),
+        interpret=True,
+    )(c, a, b)

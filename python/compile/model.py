@@ -1,0 +1,93 @@
+"""L2 JAX compute graph: the local computational kernels of the paper's
+applications, built on the L1 Pallas kernels.
+
+The 1D matmul application's *local compute* on a worker owning an
+``nb``-row slice is ``C_b[nb, n] = A_b[nb, n] @ B[n, n]`` — n repetitions
+of the paper's rank-1 update fused into one blocked matmul. The 2D app's
+local compute per pivot step is the ``block_update``. Both are jitted jax
+functions calling the Pallas kernels, so the AOT lowering captures the
+kernel inside the same HLO module the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_update, matmul_kernel, rank1_update
+
+
+def local_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The 1D worker's local compute: C_b = A_b @ B (Pallas-tiled)."""
+    return matmul_kernel(a, b)
+
+
+def panel_update(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One step of the paper's 1D kernel: C_b += A_b[:, k:k+1] · B[k:k+1, :]."""
+    return rank1_update(c, a, b)
+
+
+def pivot_update(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The 2D worker's pivot update: C_b += A_b · B_b (block panel)."""
+    return block_update(c, a, b)
+
+
+def pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a 2D array up to (rows, cols) — the runtime's bucket fit."""
+    r, c = x.shape
+    assert rows >= r and cols >= c, f"cannot pad {x.shape} down to ({rows},{cols})"
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+# --- AOT bucket family -----------------------------------------------------
+#
+# XLA executables have static shapes; the rust runtime rounds a worker's
+# slice up to the nearest bucket and rescales measured time by the
+# true/bucket unit ratio (runtime/artifact.rs). Buckets are multiples of
+# the kernel block edge so the Pallas grid always divides evenly.
+
+#: (nb, n) shapes for the 1D local matmul: C[nb, n] = A[nb, n] @ B[n, n].
+MATMUL_BUCKETS: list[tuple[int, int]] = [
+    (64, 256),
+    (128, 256),
+    (256, 256),
+    (64, 512),
+    (128, 512),
+    (256, 512),
+    (512, 512),
+]
+
+#: (nb, n) shapes for the rank-1 update benchmark kernel.
+UPDATE_BUCKETS: list[tuple[int, int]] = [
+    (64, 512),
+    (128, 512),
+    (256, 512),
+    (512, 512),
+]
+
+#: (mb, nb, t) shapes for the 2D pivot update.
+BLOCK_UPDATE_BUCKETS: list[tuple[int, int, int]] = [
+    (128, 128, 64),
+    (256, 256, 64),
+]
+
+
+def lower_local_matmul(nb: int, n: int):
+    """Lower the 1D local matmul at bucket (nb, n) to a jax Lowered."""
+    sa = jax.ShapeDtypeStruct((nb, n), jnp.float32)
+    sb = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return jax.jit(lambda a, b: (local_matmul(a, b),)).lower(sa, sb)
+
+
+def lower_rank1_update(nb: int, n: int):
+    """Lower the rank-1 update at bucket (nb, n)."""
+    sc = jax.ShapeDtypeStruct((nb, n), jnp.float32)
+    sa = jax.ShapeDtypeStruct((nb, 1), jnp.float32)
+    sb = jax.ShapeDtypeStruct((1, n), jnp.float32)
+    return jax.jit(lambda c, a, b: (panel_update(c, a, b),)).lower(sc, sa, sb)
+
+
+def lower_block_update(mb: int, nb: int, t: int):
+    """Lower the 2D pivot update at bucket (mb, nb, t)."""
+    sc = jax.ShapeDtypeStruct((mb, nb), jnp.float32)
+    sa = jax.ShapeDtypeStruct((mb, t), jnp.float32)
+    sb = jax.ShapeDtypeStruct((t, nb), jnp.float32)
+    return jax.jit(lambda c, a, b: (pivot_update(c, a, b),)).lower(sc, sa, sb)

@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (multiples of the block edge, plus sub-block
+sizes) and dtypes; every case asserts allclose against ref.py. This is the
+core correctness signal for the AOT artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import block_update, matmul_kernel, rank1_update
+from compile.kernels.matmul import MXU_TILE, block_shape, vmem_bytes
+from compile.kernels.ref import block_update_ref, matmul_ref, rank1_update_ref
+
+# dimension strategy: sub-block sizes and multiples of the 128 tile
+_dims = st.sampled_from([8, 16, 32, 64, 128, 256, 384, 512])
+_dtypes = st.sampled_from([np.float32, jnp.bfloat16])
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+class TestMatmulKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(m=_dims, k=_dims, n=_dims, dtype=_dtypes, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, dtype, seed):
+        a = _rand((m, k), dtype, seed)
+        b = _rand((k, n), dtype, seed + 1)
+        got = matmul_kernel(a, b)
+        want = matmul_ref(a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=_tol(dtype),
+            atol=_tol(dtype) * k,
+        )
+
+    def test_identity(self):
+        eye = jnp.eye(128, dtype=jnp.float32)
+        x = _rand((128, 128), np.float32, 7)
+        np.testing.assert_allclose(np.asarray(matmul_kernel(eye, x)), np.asarray(x), rtol=1e-6)
+
+    def test_zeros(self):
+        z = jnp.zeros((256, 128), jnp.float32)
+        b = _rand((128, 256), np.float32, 9)
+        assert float(jnp.abs(matmul_kernel(z, b)).max()) == 0.0
+
+    def test_rejects_mismatched_inner(self):
+        a = jnp.zeros((64, 32), jnp.float32)
+        b = jnp.zeros((64, 64), jnp.float32)
+        with pytest.raises(AssertionError):
+            matmul_kernel(a, b)
+
+    def test_rejects_nondivisible(self):
+        # 200 is not a multiple of the 128 block edge used for dim > 128
+        a = jnp.zeros((200, 128), jnp.float32)
+        b = jnp.zeros((128, 128), jnp.float32)
+        with pytest.raises(AssertionError):
+            matmul_kernel(a, b)
+
+    def test_block_shape_caps_at_tile(self):
+        assert block_shape(1024, 1024, 1024) == (MXU_TILE,) * 3
+        assert block_shape(64, 32, 16) == (64, 32, 16)
+
+    def test_vmem_budget(self):
+        # the default tiling must leave room for double buffering in ~16MiB
+        assert vmem_bytes(4096, 4096, 4096) <= 2 * 1024 * 1024
+
+
+class TestRank1Update:
+    @settings(max_examples=25, deadline=None)
+    @given(nb=_dims, n=_dims, dtype=_dtypes, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, nb, n, dtype, seed):
+        c = _rand((nb, n), dtype, seed)
+        a = _rand((nb, 1), dtype, seed + 1)
+        b = _rand((1, n), dtype, seed + 2)
+        got = rank1_update(c, a, b)
+        want = rank1_update_ref(c, a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=_tol(dtype),
+            atol=_tol(dtype),
+        )
+
+    def test_zero_vectors_noop(self):
+        c = _rand((64, 128), np.float32, 3)
+        a = jnp.zeros((64, 1), jnp.float32)
+        b = jnp.zeros((1, 128), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(rank1_update(c, a, b)), np.asarray(c))
+
+    def test_accumulation_composes(self):
+        # n rank-1 updates == one matmul (the paper's app identity)
+        nb, n, k = 32, 64, 8
+        a = _rand((nb, k), np.float32, 11)
+        b = _rand((k, n), np.float32, 12)
+        c = jnp.zeros((nb, n), jnp.float32)
+        for t in range(k):
+            c = rank1_update(c, a[:, t : t + 1], b[t : t + 1, :])
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+
+
+class TestBlockUpdate:
+    @settings(max_examples=20, deadline=None)
+    @given(mb=_dims, nb=_dims, t=st.sampled_from([8, 64, 128, 256]),
+           dtype=_dtypes, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, mb, nb, t, dtype, seed):
+        c = _rand((mb, nb), dtype, seed)
+        a = _rand((mb, t), dtype, seed + 1)
+        b = _rand((t, nb), dtype, seed + 2)
+        got = block_update(c, a, b)
+        want = block_update_ref(c, a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=_tol(dtype),
+            atol=_tol(dtype) * t,
+        )
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(AssertionError):
+            block_update(
+                jnp.zeros((64, 64), jnp.float32),
+                jnp.zeros((64, 32), jnp.float32),
+                jnp.zeros((16, 64), jnp.float32),
+            )

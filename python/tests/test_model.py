@@ -1,0 +1,87 @@
+"""L2 model checks: lowering, bucket family, padding."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+
+
+class TestLocalMatmul:
+    def test_equals_numpy(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((128, 256)).astype(np.float32)
+        b = rng.standard_normal((256, 256)).astype(np.float32)
+        got = model.local_matmul(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-3)
+
+    def test_app_identity_full_multiply(self):
+        # the distributed app computes C = A @ B by slicing rows: any row
+        # partition of A must reassemble to the full product
+        rng = np.random.default_rng(1)
+        n = 256
+        a = rng.standard_normal((n, n)).astype(np.float32)
+        b = rng.standard_normal((n, n)).astype(np.float32)
+        c_full = np.asarray(model.local_matmul(jnp.asarray(a), jnp.asarray(b)))
+        c_parts = [
+            np.asarray(model.local_matmul(jnp.asarray(a[lo:hi]), jnp.asarray(b)))
+            for lo, hi in [(0, 64), (64, 192), (192, 256)]
+        ]
+        np.testing.assert_allclose(np.vstack(c_parts), c_full, rtol=1e-5)
+
+
+class TestPadding:
+    @settings(max_examples=20, deadline=None)
+    @given(r=st.integers(1, 100), c=st.integers(1, 100), seed=st.integers(0, 999))
+    def test_pad_preserves_content(self, r, c, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((r, c)).astype(np.float32)
+        p = model.pad_to(jnp.asarray(x), 128, 128)
+        assert p.shape == (128, 128)
+        np.testing.assert_array_equal(np.asarray(p)[:r, :c], x)
+        assert float(jnp.abs(p[r:, :]).max() if r < 128 else 0.0) == 0.0
+
+    def test_pad_rejects_shrink(self):
+        with pytest.raises(AssertionError):
+            model.pad_to(jnp.zeros((10, 10)), 5, 20)
+
+    def test_padded_matmul_matches_trimmed(self):
+        # padding A with zero rows only appends zero rows to C — this is
+        # the property the rust runtime's bucket-fit relies on
+        rng = np.random.default_rng(3)
+        a = rng.standard_normal((100, 256)).astype(np.float32)
+        b = rng.standard_normal((256, 256)).astype(np.float32)
+        ap = model.pad_to(jnp.asarray(a), 128, 256)
+        c = np.asarray(model.local_matmul(ap, jnp.asarray(b)))
+        np.testing.assert_allclose(c[:100], a @ b, rtol=1e-4, atol=1e-3)
+        assert np.abs(c[100:]).max() == 0.0
+
+
+class TestBuckets:
+    def test_bucket_shapes_divisible_by_blocks(self):
+        from compile.kernels.matmul import block_shape
+
+        for nb, n in model.MATMUL_BUCKETS:
+            bm, bk, bn = block_shape(nb, n, n)
+            assert nb % bm == 0 and n % bk == 0 and n % bn == 0
+
+    def test_buckets_sorted_and_unique(self):
+        assert len(set(model.MATMUL_BUCKETS)) == len(model.MATMUL_BUCKETS)
+        assert len(set(model.UPDATE_BUCKETS)) == len(model.UPDATE_BUCKETS)
+
+
+class TestLowering:
+    def test_local_matmul_lowers(self):
+        lowered = model.lower_local_matmul(64, 256)
+        text = str(lowered.compiler_ir("stablehlo"))
+        assert "stablehlo" in text or "func.func" in text
+
+    def test_rank1_lowers(self):
+        lowered = model.lower_rank1_update(64, 512)
+        assert lowered is not None
+
+    def test_block_update_lowers(self):
+        lowered = model.lower_block_update(128, 128, 64)
+        assert lowered is not None

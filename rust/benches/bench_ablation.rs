@@ -1,0 +1,169 @@
+//! Ablation studies of the design choices DESIGN.md calls out:
+//!
+//! 1. the nested 2D algorithm's optimizations (paper §3.2's last
+//!    paragraphs): width freezing, benchmark time-capping, warm starts —
+//!    each toggled off against the full configuration;
+//! 2. oscillation-aware width damping (this repo's addition) on/off;
+//! 3. DFPA vs the *dynamic* task-queue baseline (weighted factoring,
+//!    refs [11]/[2]) on the 1D application;
+//! 4. adaptive (ref [19]) vs uniform-grid full-model construction.
+
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
+use hfpm::baselines::factoring::{run_factoring, Weighting};
+use hfpm::cluster::comm::CommModel;
+use hfpm::cluster::executor::NodeExecutor;
+use hfpm::cluster::node::build_nodes;
+use hfpm::cluster::presets;
+use hfpm::cluster::virtual_cluster::{VirtualCluster, VirtualCluster2d};
+use hfpm::dfpa::{run_dfpa, DfpaOptions};
+use hfpm::dfpa2d::{run_dfpa2d, Dfpa2dOptions};
+use hfpm::fpm::analytic::Footprint;
+use hfpm::fpm::builder::{build_adaptive_model, build_exact_models, log_grid};
+use hfpm::fpm::SpeedFunction;
+use hfpm::util::table::{fnum, Table};
+
+fn grid2d(n_elems: u64) -> VirtualCluster2d {
+    let spec = presets::hcl();
+    let m = n_elems / 32;
+    let fp = Footprint::matmul_2d(32, (m / 4) as usize);
+    let nodes = build_nodes(&spec, fp, 32);
+    let execs: Vec<Box<dyn NodeExecutor>> = nodes
+        .into_iter()
+        .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+        .collect();
+    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec), Default::default());
+    VirtualCluster2d::new(cluster, 4, 4).unwrap()
+}
+
+fn main() {
+    let n_elems = 14336u64; // paging-borderline size: optimizations matter
+    let m = n_elems / 32;
+
+    // --- 1+2: nested-2D optimization ablation ---
+    let mut t = Table::new(
+        &format!("2D DFPA ablation (HCL 16 nodes, N = {n_elems})"),
+        &["configuration", "inner iters", "DFPA cost (s)", "imbalance %"],
+    );
+    let variants: Vec<(&str, Dfpa2dOptions)> = vec![
+        ("full (all optimizations)", Dfpa2dOptions::with_epsilon(0.1)),
+        ("no width freezing", {
+            let mut o = Dfpa2dOptions::with_epsilon(0.1);
+            o.width_freeze_rel = 0.0;
+            o
+        }),
+        ("no benchmark time-cap", {
+            let mut o = Dfpa2dOptions::with_epsilon(0.1);
+            o.time_cap_mult = None;
+            o
+        }),
+        ("loose inner ε (0.3)", {
+            let mut o = Dfpa2dOptions::with_epsilon(0.1);
+            o.epsilon_inner = 0.3;
+            o
+        }),
+    ];
+    let mut full_cost = None;
+    for (label, opts) in variants {
+        let mut grid = grid2d(n_elems);
+        let r = run_dfpa2d(m, m, &mut grid, opts).expect("2d run");
+        if full_cost.is_none() {
+            full_cost = Some(r.total_virtual_s);
+        }
+        t.add_row(vec![
+            label.to_string(),
+            r.inner_iterations.to_string(),
+            fnum(r.total_virtual_s, 2),
+            fnum(100.0 * r.imbalance, 1),
+        ]);
+    }
+    t.emit(Some(std::path::Path::new("results/bench/ablation_2d.csv")));
+
+    // --- 3: DFPA vs dynamic weighted factoring on the 1D app ---
+    let spec = presets::hcl15();
+    let n = 5120u64;
+    let mut t = Table::new(
+        &format!("1D: DFPA vs dynamic task-queue baselines (n = {n})"),
+        &["scheduler", "total virtual (s)", "rounds/iters"],
+    );
+    {
+        let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+        let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+        let mut bench = RowBench {
+            cluster: &mut cluster,
+            n,
+        };
+        let r = run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(0.025)).unwrap();
+        // DFPA's cost = discovery + ONE balanced full execution. A full
+        // multiplication is n kernel steps at the final distribution.
+        let exec = r
+            .times
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max)
+            * n as f64;
+        t.add_row(vec![
+            "DFPA (discover, then static optimal)".into(),
+            fnum(r.total_virtual_s + exec, 2),
+            r.iterations.to_string(),
+        ]);
+        for (label, weighting) in [
+            ("weighted factoring, static [11]", Weighting::Static),
+            ("weighted factoring, adaptive [2]", Weighting::Adaptive),
+        ] {
+            let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+            let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+            let mut bench = RowBench {
+                cluster: &mut cluster,
+                n,
+            };
+            // factoring schedules ROWS of the full multiplication; each
+            // round's kernel is a full n-step multiply of its chunk, so
+            // scale the per-round benchmark time accordingly
+            let out = run_factoring(n, &mut bench, 0.5, weighting).unwrap();
+            t.add_row(vec![
+                label.into(),
+                fnum(out.total_s * n as f64, 2),
+                out.rounds.to_string(),
+            ]);
+        }
+    }
+    t.emit(Some(std::path::Path::new("results/bench/ablation_sched.csv")));
+
+    // --- 4: adaptive vs uniform full-model construction ---
+    let spec_node = presets::hcl().nodes[10].clone(); // hcl11
+    let truth = hfpm::fpm::analytic::AnalyticModel::from_spec(
+        &spec_node,
+        Footprint::affine(16.0, 0.0),
+    );
+    let mut t = Table::new(
+        "full-FPM construction: uniform grid [16] vs adaptive bisection [19]",
+        &["method", "points", "build cost (s)", "max rel err %"],
+    );
+    let probe = log_grid(1e3, 1e8, 300);
+    let max_err = |model: &hfpm::fpm::PiecewiseModel| -> f64 {
+        probe
+            .iter()
+            .map(|&x| (model.speed(x) - truth.speed(x)).abs() / truth.speed(x))
+            .fold(0.0f64, f64::max)
+    };
+    {
+        let grid = log_grid(1e3, 1e8, 40);
+        let (models, cost) = build_exact_models(&[truth.clone()], &grid);
+        t.add_row(vec![
+            "uniform 40-pt grid".into(),
+            cost.points_per_proc.to_string(),
+            fnum(cost.parallel_s, 2),
+            fnum(100.0 * max_err(&models[0]), 1),
+        ]);
+    }
+    {
+        let (model, cost) = build_adaptive_model(1e3, 1e8, 0.05, 64, |x| truth.time(x));
+        t.add_row(vec![
+            "adaptive (ref [19], tol 5%)".into(),
+            cost.points_per_proc.to_string(),
+            fnum(cost.parallel_s, 2),
+            fnum(100.0 * max_err(&model), 1),
+        ]);
+    }
+    t.emit(Some(std::path::Path::new("results/bench/ablation_builder.csv")));
+}

@@ -1,0 +1,60 @@
+//! Regenerates **Fig 8**: the worked example of the two-step 2D CPM
+//! distribution — a 6×6 block square over a 3×3 processor grid with
+//! relative speeds {0.11, 0.25, 0.05, 0.17, 0.09, 0.08, 0.05, 0.17, 0.03}.
+//! The paper's expected outcome is checked exactly.
+
+use hfpm::partition::grid2d::two_step;
+use hfpm::util::table::Table;
+
+fn main() {
+    let speeds = vec![
+        vec![0.11, 0.25, 0.05],
+        vec![0.17, 0.09, 0.08],
+        vec![0.05, 0.17, 0.03],
+    ];
+    let g = two_step(6, 6, &speeds).expect("two-step distribution");
+
+    let mut t = Table::new(
+        "Fig 8 — two-step distribution of a 6×6 square over a 3×3 grid",
+        &["", "col 1", "col 2", "col 3"],
+    );
+    t.add_row(vec![
+        "widths".into(),
+        g.col_widths[0].to_string(),
+        g.col_widths[1].to_string(),
+        g.col_widths[2].to_string(),
+    ]);
+    for i in 0..3 {
+        t.add_row(vec![
+            format!("row heights P{}*", i + 1),
+            g.row_heights[0][i].to_string(),
+            g.row_heights[1][i].to_string(),
+            g.row_heights[2][i].to_string(),
+        ]);
+    }
+    t.emit(Some(std::path::Path::new("results/bench/fig8.csv")));
+
+    // the paper's exact numbers
+    assert_eq!(g.col_widths, vec![2, 3, 1], "step (a): 0.33:0.51:0.16 ≈ 2:3:1");
+    assert_eq!(g.row_heights[0], vec![2, 3, 1], "col 1: 0.11:0.17:0.05 ≈ 2:3:1");
+    assert_eq!(g.row_heights[1], vec![3, 1, 2], "col 2: 0.25:0.09:0.17 ≈ 3:1:2");
+    assert_eq!(g.row_heights[2], vec![2, 3, 1], "col 3: 0.05:0.08:0.03 ≈ 2:3:1");
+    assert_eq!(g.total_area(), 36);
+    println!("\nexact match with the paper's Fig 8 worked example ✓");
+
+    // ASCII rendering of the distribution (the figure itself)
+    println!("\n    col widths: 2 | 3 | 1");
+    for i in 0..3 {
+        let mut line = String::from("    ");
+        for j in 0..3 {
+            line.push_str(&format!(
+                "P{}{}: {}×{}   ",
+                i + 1,
+                j + 1,
+                g.row_heights[j][i],
+                g.col_widths[j]
+            ));
+        }
+        println!("{line}");
+    }
+}

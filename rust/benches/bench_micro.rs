@@ -1,0 +1,111 @@
+//! L3 micro-benchmarks (criterion-lite): the coordinator hot paths that
+//! §Perf of EXPERIMENTS.md tracks — geometric partitioning, piecewise
+//! model evaluation/insertion, integer finishing, cluster supersteps and
+//! whole DFPA runs. Wall time, not virtual time.
+//!
+//! `cargo bench --bench bench_micro [filter] [--quick]`
+
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
+use hfpm::bench_harness::main_with;
+use hfpm::cluster::presets;
+use hfpm::dfpa::{run_dfpa, DfpaOptions};
+use hfpm::fpm::{PiecewiseModel, SpeedFunction};
+use hfpm::partition::{self, hsp};
+use hfpm::util::rng::Pcg32;
+
+fn random_models(p: usize, points: usize, seed: u64) -> Vec<PiecewiseModel> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..p)
+        .map(|_| {
+            let mut m = PiecewiseModel::new();
+            let mut x = rng.uniform(1.0, 20.0);
+            let mut s = rng.uniform(200.0, 900.0);
+            for _ in 0..points {
+                m.insert(x, s);
+                x *= rng.uniform(1.5, 3.0);
+                s *= rng.uniform(0.5, 0.98);
+            }
+            m
+        })
+        .collect()
+}
+
+fn main() {
+    main_with("micro", |g| {
+        // --- geometric partitioner ---
+        for (p, pts) in [(15usize, 8usize), (15, 32), (128, 8)] {
+            let models = random_models(p, pts, 42);
+            g.bench(&format!("partition/geometric p={p} pts={pts}"), |b| {
+                b.throughput(p as u64);
+                b.iter(|| partition::partition(1_000_000, &models).unwrap());
+            });
+        }
+
+        // --- piecewise model ops ---
+        let model = &random_models(1, 64, 7)[0];
+        g.bench("piecewise/eval 64-pt model", |b| {
+            let mut x = 1.0f64;
+            b.iter(|| {
+                x = (x * 1.618) % 1e7 + 1.0;
+                std::hint::black_box(model.speed(x))
+            });
+        });
+        g.bench("piecewise/insert into 64-pt model", |b| {
+            let mut rng = Pcg32::seeded(3);
+            b.iter(|| {
+                let mut m = model.clone();
+                m.insert(rng.uniform(1.0, 1e7), rng.uniform(1.0, 900.0));
+                m
+            });
+        });
+
+        // --- integer finishing ---
+        let mut rng = Pcg32::seeded(11);
+        let reals: Vec<f64> = (0..128).map(|_| rng.uniform(0.0, 1e4)).collect();
+        let n: u64 = reals.iter().sum::<f64>().round() as u64;
+        g.bench("hsp/round_to_sum p=128", |b| {
+            b.iter(|| hsp::round_to_sum(&reals, n));
+        });
+        let models128 = random_models(128, 8, 13);
+        g.bench("hsp/refine p=128", |b| {
+            let d0 = hsp::round_to_sum(&reals, n);
+            b.iter(|| {
+                let mut d = d0.clone();
+                hsp::refine(&mut d, &models128);
+                d
+            });
+        });
+
+        // --- cluster superstep (leader/worker round trip) ---
+        g.bench("cluster/superstep 16 workers", |b| {
+            let spec = presets::hcl();
+            let cfg = Matmul1dConfig::new(4096, Strategy::Dfpa);
+            let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+            let d = vec![1_000_000u64; 16];
+            b.iter(|| cluster.run_1d(&d).unwrap());
+        });
+
+        // --- whole DFPA runs (wall cost of the algorithm itself) ---
+        for n in [4096u64, 8192] {
+            g.bench(&format!("dfpa/full run hcl15 n={n}"), |b| {
+                let spec = presets::hcl15();
+                b.iter(|| {
+                    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+                    let (mut cluster, _) =
+                        build_cluster(&spec, &cfg, Default::default()).unwrap();
+                    let mut bench = RowBench {
+                        cluster: &mut cluster,
+                        n,
+                    };
+                    run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(0.025)).unwrap()
+                });
+            });
+        }
+
+        // --- comm model arithmetic ---
+        g.bench("comm/dfpa_iteration_cost grid5000", |b| {
+            let m = hfpm::cluster::comm::CommModel::new(presets::grid5000());
+            b.iter(|| m.dfpa_iteration_cost(0));
+        });
+    });
+}

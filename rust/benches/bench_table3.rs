@@ -1,0 +1,53 @@
+//! Regenerates **Table 3**: the DFPA-based application with ε = 10% vs
+//! ε = 2.5% on 15 HCL nodes — the paper's point being that tightening ε
+//! adds a few iterations but similar distributions and negligible cost.
+
+use hfpm::apps::matmul1d::{run, Matmul1dConfig, Strategy};
+use hfpm::cluster::presets;
+use hfpm::util::table::{fnum, Table};
+
+// paper rows: (n, mm10, dfpa10, it10, mm25, dfpa25, it25)
+const PAPER: &[(u64, f64, f64, u64, f64, f64, u64)] = &[
+    (2048, 3.21, 0.22, 4, 3.16, 0.23, 6),
+    (3072, 10.72, 0.30, 2, 10.70, 0.31, 3),
+    (4096, 25.44, 0.43, 2, 25.42, 0.49, 4),
+    (5120, 52.66, 4.96, 11, 52.61, 6.18, 11),
+    (6144, 101.45, 10.74, 3, 101.45, 11.83, 4),
+    (7168, 183.81, 19.55, 5, 183.79, 21.05, 5),
+    (8192, 280.04, 28.84, 5, 280.04, 26.78, 5),
+];
+
+fn main() {
+    let spec = presets::hcl15();
+    let mut t = Table::new(
+        "Table 3 — DFPA app at ε = 10% vs 2.5%, 15 HCL nodes",
+        &[
+            "n",
+            "matmul (s) 10%", "DFPA (s) 10%", "iters 10%",
+            "matmul (s) 2.5%", "DFPA (s) 2.5%", "iters 2.5%",
+            "paper iters 10/2.5",
+        ],
+    );
+    for &(n, _, _, p10, _, _, p25) in PAPER {
+        let mut row = vec![n.to_string()];
+        let mut iters = Vec::new();
+        for eps in [0.10, 0.025] {
+            let mut cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+            cfg.epsilon = eps;
+            let r = run(&spec, &cfg).expect("run");
+            row.push(fnum(r.matmul_s, 2));
+            row.push(fnum(r.partition_s, 3));
+            row.push(r.iterations.to_string());
+            iters.push(r.iterations);
+        }
+        row.push(format!("{p10}/{p25}"));
+        t.add_row(row);
+        // shape check mirrors the paper: tighter ε never needs fewer steps
+        assert!(
+            iters[1] >= iters[0],
+            "n={n}: ε=2.5% used fewer iterations than ε=10%"
+        );
+    }
+    t.emit(Some(std::path::Path::new("results/bench/table3.csv")));
+    println!("\nshape check passed: iterations(2.5%) ≥ iterations(10%) for every n");
+}

@@ -1,0 +1,65 @@
+//! Regenerates **Table 5**: cost of the DFPA-based heterogeneous 2D matrix
+//! multiplication on 16 HCL nodes — total time, DFPA time, iterations,
+//! matmul time and DFPA cost %. The paper's shape: cost % creeps from
+//! ~0.2% at n = 8192 to ~17% at n = 19456 as paging territory grows.
+
+use hfpm::apps::matmul2d::{run, Matmul2dConfig};
+use hfpm::apps::Strategy;
+use hfpm::cluster::presets;
+use hfpm::util::table::{fnum, Table};
+
+// paper rows: (n, total, dfpa_s, iters, matmul, cost_pct)
+const PAPER: &[(u64, f64, f64, u64, f64, f64)] = &[
+    (8192, 61.91, 0.17, 16, 61.74, 0.28),
+    (9216, 65.91, 0.14, 11, 65.76, 0.21),
+    (10240, 105.22, 0.19, 13, 105.02, 0.18),
+    (11264, 137.34, 0.22, 15, 137.11, 0.16),
+    (13312, 246.49, 5.84, 44, 240.65, 2.36),
+    (14336, 264.45, 16.25, 62, 248.20, 6.14),
+    (15360, 311.28, 24.06, 69, 287.22, 7.73),
+    (16384, 448.27, 28.44, 71, 419.83, 6.34),
+    (17408, 483.23, 52.51, 69, 430.71, 10.86),
+    (19456, 770.00, 131.45, 74, 638.55, 17.07),
+];
+
+fn main() {
+    let spec = presets::hcl();
+    let mut t = Table::new(
+        "Table 5 — DFPA-based 2D matmul on 16 HCL nodes",
+        &[
+            "n", "total (s)", "DFPA (s)", "iters", "matmul (s)", "cost %",
+            "paper iters", "paper cost %",
+        ],
+    );
+    let mut costs = Vec::new();
+    for &(n, _, _, p_iters, _, p_cost) in PAPER {
+        let mut cfg = Matmul2dConfig::new(n, Strategy::Dfpa);
+        cfg.epsilon = 0.1;
+        let r = run(&spec, &cfg).expect("2d run");
+        costs.push(r.overhead_pct);
+        t.add_row(vec![
+            n.to_string(),
+            fnum(r.total_s, 2),
+            fnum(r.partition_s, 3),
+            r.iterations.to_string(),
+            fnum(r.matmul_s, 2),
+            fnum(r.overhead_pct, 2),
+            p_iters.to_string(),
+            fnum(p_cost, 2),
+        ]);
+    }
+    t.emit(Some(std::path::Path::new("results/bench/table5.csv")));
+
+    // shape: the late (paging) sizes must cost relatively more than the
+    // early ones
+    let early: f64 = costs[..4].iter().sum::<f64>() / 4.0;
+    let late: f64 = costs[costs.len() - 3..].iter().sum::<f64>() / 3.0;
+    println!(
+        "\nmean DFPA cost: {:.2}% early sizes vs {:.2}% paging sizes (paper: 0.2% → ~12%)",
+        early, late
+    );
+    assert!(
+        late >= early,
+        "cost % should not shrink as paging grows: {late} < {early}"
+    );
+}

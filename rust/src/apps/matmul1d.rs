@@ -1,0 +1,417 @@
+//! The 1D parallel matrix-multiplication application (paper §3.1).
+//!
+//! `C = A × B` on p heterogeneous processors: A and C are horizontally
+//! sliced (`nb_i` rows each), every processor holds all of B (so the app
+//! has no compute-phase communication — chosen by the paper to isolate the
+//! partitioning cost). The application:
+//!
+//! 1. partitions the rows with one of [`Strategy`] (the DFPA benchmark
+//!    steps run the paper's rank-1 update kernel);
+//! 2. distributes the slices (bcast B + scatter A, accounted by the comm
+//!    model);
+//! 3. runs the multiplication (`n` rank-1 updates, i.e. `rows·n²` units on
+//!    each worker);
+//! 4. gathers C.
+//!
+//! In [`ExecutionMode::Real`] the benchmark steps execute the AOT-compiled
+//! Pallas kernel through PJRT, and [`run_real_verified`] additionally
+//! computes the actual product slice-by-slice through the runtime and
+//! checks `C == A·B` against a naive rust oracle.
+
+use super::workload::{matmul_ref, max_abs_diff, row_ranges, Matrix};
+use crate::baselines::{cpm_app, ffmpa};
+use crate::cluster::comm::CommModel;
+use crate::cluster::executor::{ExecutionMode, NodeExecutor};
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::node::{build_nodes, SimNode};
+use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::config::ClusterSpec;
+use crate::dfpa::algorithm::{even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport};
+use crate::error::{HfpmError, Result};
+use crate::fpm::analytic::Footprint;
+use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
+use crate::util::stats::max_relative_imbalance;
+
+/// Partitioning strategy for the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Even,
+    Cpm,
+    Ffmpa,
+    Dfpa,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "even" => Some(Self::Even),
+            "cpm" => Some(Self::Cpm),
+            "ffmpa" => Some(Self::Ffmpa),
+            "dfpa" => Some(Self::Dfpa),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Even => "even",
+            Self::Cpm => "cpm",
+            Self::Ffmpa => "ffmpa",
+            Self::Dfpa => "dfpa",
+        }
+    }
+}
+
+/// Configuration of one application run.
+#[derive(Debug, Clone)]
+pub struct Matmul1dConfig {
+    /// Matrix size (n × n).
+    pub n: u64,
+    /// Termination accuracy for DFPA.
+    pub epsilon: f64,
+    pub strategy: Strategy,
+    pub mode: ExecutionMode,
+    /// Element size in bytes for footprint/comm (the paper used doubles).
+    pub elem_bytes: u64,
+    pub max_iters: usize,
+}
+
+impl Matmul1dConfig {
+    pub fn new(n: u64, strategy: Strategy) -> Self {
+        Self {
+            n,
+            epsilon: 0.025,
+            strategy,
+            mode: ExecutionMode::Simulated,
+            elem_bytes: 8,
+            max_iters: 100,
+        }
+    }
+}
+
+/// Timing report of one run. All times are virtual seconds on the modeled
+/// cluster (wall-derived in real mode).
+#[derive(Debug, Clone)]
+pub struct Matmul1dReport {
+    pub strategy: Strategy,
+    pub n: u64,
+    pub p: usize,
+    /// Final row distribution.
+    pub d: Vec<u64>,
+    /// Partitioning cost (DFPA/CPM benchmark steps + collectives). Zero
+    /// for Even; for FFMPA the partitioning itself (model building is
+    /// reported separately, as in the paper).
+    pub partition_s: f64,
+    /// Leader wall time spent in partitioning compute (real seconds).
+    pub partition_wall_s: f64,
+    /// FFMPA model construction cost (virtual, parallel), if applicable.
+    pub model_build_s: Option<f64>,
+    /// Data distribution (B bcast + A scatter) + C gather.
+    pub comm_s: f64,
+    /// The matrix multiplication itself.
+    pub matmul_s: f64,
+    /// partition_s + comm_s + matmul_s — the paper's "application,
+    /// including DFPA" column.
+    pub total_s: f64,
+    /// DFPA iterations (1 for CPM's single benchmark, 0 for Even/FFMPA).
+    pub iterations: usize,
+    /// Load imbalance of the final distribution.
+    pub imbalance: f64,
+}
+
+/// Row-granularity benchmarker: DFPA distributes rows, the cluster kernel
+/// works in computation units (`rows · n` per rank-1 update).
+pub struct RowBench<'a> {
+    pub cluster: &'a mut VirtualCluster,
+    pub n: u64,
+}
+
+impl Benchmarker for RowBench<'_> {
+    fn processors(&self) -> usize {
+        self.cluster.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        let units: Vec<u64> = d.iter().map(|&r| r * self.n).collect();
+        self.cluster.run_1d(&units)
+    }
+}
+
+/// Build the cluster runtime for a config.
+pub fn build_cluster(
+    spec: &ClusterSpec,
+    cfg: &Matmul1dConfig,
+    faults: FaultPlan,
+) -> Result<(VirtualCluster, Vec<SimNode>)> {
+    let fp = Footprint {
+        per_unit: 2.0 * cfg.elem_bytes as f64,
+        fixed: (cfg.n * cfg.n * cfg.elem_bytes) as f64,
+    };
+    let nodes = build_nodes(spec, fp, 32);
+    let execs: Vec<Box<dyn NodeExecutor>> = match cfg.mode {
+        ExecutionMode::Simulated => nodes
+            .iter()
+            .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
+            .collect(),
+        ExecutionMode::Real => {
+            let service = PjrtService::start_default()?;
+            // stationary measurements are a DFPA prerequisite — calibrate
+            // the kernel rates before any benchmark step runs
+            service.calibrate_rank1(5)?;
+            let reference = nodes[0].truth().clone();
+            nodes
+                .iter()
+                .map(|nd| {
+                    Box::new(RealScaledExecutor::new(
+                        service.clone(),
+                        nd.truth().clone(),
+                        reference.clone(),
+                        cfg.n,
+                        nd.host(),
+                    )) as Box<dyn NodeExecutor>
+                })
+                .collect()
+        }
+    };
+    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), faults);
+    Ok((cluster, nodes))
+}
+
+/// Run the application and report its cost breakdown.
+pub fn run(spec: &ClusterSpec, cfg: &Matmul1dConfig) -> Result<Matmul1dReport> {
+    run_with_faults(spec, cfg, FaultPlan::none())
+}
+
+pub fn run_with_faults(
+    spec: &ClusterSpec,
+    cfg: &Matmul1dConfig,
+    faults: FaultPlan,
+) -> Result<Matmul1dReport> {
+    let p = spec.size();
+    if cfg.n < p as u64 {
+        return Err(HfpmError::InvalidArg(format!(
+            "matrix size {} smaller than processor count {p}",
+            cfg.n
+        )));
+    }
+    let (mut cluster, nodes) = build_cluster(spec, cfg, faults)?;
+
+    // --- phase 1: partition -------------------------------------------------
+    let mut model_build_s = None;
+    let mut iterations = 0usize;
+    let mut partition_wall = 0.0f64;
+    let before_partition = cluster.now();
+    let d: Vec<u64> = match cfg.strategy {
+        Strategy::Even => even_distribution(cfg.n, p),
+        Strategy::Cpm => {
+            let mut bench = RowBench {
+                cluster: &mut cluster,
+                n: cfg.n,
+            };
+            let out = cpm_app::partition_cpm(cfg.n, &mut bench)?;
+            iterations = 1;
+            out.d
+        }
+        Strategy::Ffmpa => {
+            let (models, cost) =
+                ffmpa::build_full_models_for_n(&nodes, cfg.n, spec.noise_rel, spec.seed);
+            model_build_s = Some(cost.parallel_s);
+            let sw = crate::util::timer::Stopwatch::start();
+            let d = ffmpa::partition_rows(&models, cfg.n, cfg.n)?;
+            partition_wall += sw.elapsed_s();
+            d
+        }
+        Strategy::Dfpa => {
+            let mut bench = RowBench {
+                cluster: &mut cluster,
+                n: cfg.n,
+            };
+            let opts = DfpaOptions {
+                epsilon: cfg.epsilon,
+                max_iters: cfg.max_iters,
+                ..Default::default()
+            };
+            let r = run_dfpa(cfg.n, &mut bench, opts)?;
+            iterations = r.iterations;
+            partition_wall += r.partition_wall_s;
+            r.d
+        }
+    };
+    let partition_s = cluster.now() - before_partition;
+
+    // --- phase 2: data distribution ------------------------------------------
+    let comm = cluster.comm().clone();
+    let b_bytes = cfg.n * cfg.n * cfg.elem_bytes;
+    let bcast_b = comm.collective(crate::cluster::comm::Collective::BinomialTree, 0, b_bytes);
+    let slice_bytes: Vec<u64> = d.iter().map(|&r| r * cfg.n * cfg.elem_bytes).collect();
+    let scatter_a = comm.distribute_slices(0, &slice_bytes);
+    let gather_c = comm.distribute_slices(0, &slice_bytes);
+    let comm_s = bcast_b + scatter_a + gather_c;
+    cluster.charge(comm_s);
+
+    // --- phase 3: the multiplication -----------------------------------------
+    // one kernel step per pivot column: n × (rank-1 update at rows_i·n units)
+    let units: Vec<u64> = d.iter().map(|&r| r * cfg.n).collect();
+    let step = cluster.run_1d(&units)?;
+    let step_max = step
+        .times
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max);
+    let matmul_s = step_max * cfg.n as f64;
+    // charge the remaining n-1 steps (the first is already on the clock)
+    cluster.charge(matmul_s - step.virtual_cost_s.min(matmul_s));
+
+    let active: Vec<f64> = step
+        .times
+        .iter()
+        .zip(&d)
+        .filter(|(_, &r)| r > 0)
+        .map(|(&t, _)| t)
+        .collect();
+    let imbalance = max_relative_imbalance(&active);
+
+    Ok(Matmul1dReport {
+        strategy: cfg.strategy,
+        n: cfg.n,
+        p,
+        d,
+        partition_s,
+        partition_wall_s: partition_wall,
+        model_build_s,
+        comm_s,
+        matmul_s,
+        total_s: partition_s + comm_s + matmul_s,
+        iterations,
+        imbalance,
+    })
+}
+
+/// Real end-to-end run: partition with DFPA (real PJRT benchmarks), then
+/// actually compute `C = A × B` slice-by-slice through the runtime and
+/// verify against the naive oracle. `n` must be one of the artifact `n`s.
+pub struct RealRunOutcome {
+    pub report: Matmul1dReport,
+    pub max_error: f32,
+    /// Wall seconds spent in PJRT kernel executions.
+    pub kernel_wall_s: f64,
+    pub kernel_execs: u64,
+}
+
+pub fn run_real_verified(spec: &ClusterSpec, n: u64, epsilon: f64) -> Result<RealRunOutcome> {
+    let manifest = ArtifactManifest::load_default()?;
+    if !manifest.matmul1d_ns().contains(&n) {
+        return Err(HfpmError::InvalidArg(format!(
+            "real verification needs n ∈ {:?}, got {n}",
+            manifest.matmul1d_ns()
+        )));
+    }
+    let mut cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+    cfg.mode = ExecutionMode::Real;
+    cfg.epsilon = epsilon;
+    let report = run(spec, &cfg)?;
+
+    // compute the actual product through PJRT, slice by slice
+    let mut engine = PjrtEngine::new(manifest)?;
+    let a = Matrix::random(n as usize, n as usize, 0xA);
+    let b = Matrix::random(n as usize, n as usize, 0xB);
+    let mut parts: Vec<Matrix> = Vec::with_capacity(report.d.len());
+    for (lo, hi) in row_ranges(&report.d) {
+        if hi == lo {
+            parts.push(Matrix::zeros(0, n as usize));
+            continue;
+        }
+        let slice = a.row_slice(lo, hi);
+        let mut c_part = Matrix::zeros(0, n as usize);
+        // chunk the slice through the bucket family
+        let mut row = 0usize;
+        while row < slice.rows {
+            let remaining = (slice.rows - row) as u64;
+            let meta = engine.manifest().matmul1d_bucket(remaining, n)?.clone();
+            let nb = meta.dims[0] as usize;
+            let take = remaining.min(nb as u64) as usize;
+            let chunk = slice.row_slice(row, row + take).pad_to(nb, n as usize);
+            let (out, _) = engine.execute_f32(
+                &meta.name,
+                &[
+                    (&chunk.data, &[nb, n as usize]),
+                    (&b.data, &[n as usize, n as usize]),
+                ],
+            )?;
+            let full = Matrix {
+                rows: nb,
+                cols: n as usize,
+                data: out,
+            };
+            c_part = Matrix::vstack(&[c_part, full.trim(take, n as usize)]);
+            row += take;
+        }
+        parts.push(c_part);
+    }
+    let c = Matrix::vstack(&parts);
+    let reference = matmul_ref(&a, &b);
+    let max_error = max_abs_diff(&c, &reference);
+    Ok(RealRunOutcome {
+        report,
+        max_error,
+        kernel_wall_s: engine.total_exec_s,
+        kernel_execs: engine.exec_count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn dfpa_run_reports_consistent_totals() {
+        let spec = presets::mini4();
+        let cfg = Matmul1dConfig::new(1024, Strategy::Dfpa);
+        let r = run(&spec, &cfg).unwrap();
+        assert_eq!(r.d.iter().sum::<u64>(), 1024);
+        assert!((r.total_s - (r.partition_s + r.comm_s + r.matmul_s)).abs() < 1e-9);
+        assert!(r.iterations >= 1);
+        assert!(r.matmul_s > 0.0);
+    }
+
+    #[test]
+    fn strategies_ordering_dfpa_beats_even() {
+        // on a heterogeneous cluster DFPA's distribution must beat Even's
+        let spec = presets::mini4();
+        let mut c_even = Matmul1dConfig::new(2048, Strategy::Even);
+        c_even.epsilon = 0.05;
+        let mut c_dfpa = Matmul1dConfig::new(2048, Strategy::Dfpa);
+        c_dfpa.epsilon = 0.05;
+        let r_even = run(&spec, &c_even).unwrap();
+        let r_dfpa = run(&spec, &c_dfpa).unwrap();
+        assert!(
+            r_dfpa.matmul_s < r_even.matmul_s,
+            "dfpa {} vs even {}",
+            r_dfpa.matmul_s,
+            r_even.matmul_s
+        );
+    }
+
+    #[test]
+    fn ffmpa_reports_model_cost() {
+        let spec = presets::mini4();
+        let cfg = Matmul1dConfig::new(1024, Strategy::Ffmpa);
+        let r = run(&spec, &cfg).unwrap();
+        assert!(r.model_build_s.unwrap() > 0.0);
+        assert_eq!(r.iterations, 0);
+    }
+
+    #[test]
+    fn n_smaller_than_p_rejected() {
+        let spec = presets::hcl();
+        let cfg = Matmul1dConfig::new(8, Strategy::Even);
+        assert!(run(&spec, &cfg).is_err());
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("DFPA"), Some(Strategy::Dfpa));
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+}

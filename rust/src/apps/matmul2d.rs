@@ -1,0 +1,307 @@
+//! The 2D heterogeneous matrix-multiplication application (paper §3.2).
+//!
+//! ScaLAPACK-style blocked SUMMA over a `p×q` processor grid: an `N×N`
+//! matrix in `b×b` blocks (`m = N/b` blocks per side); at pivot step `k`
+//! the pivot block-column of A and block-row of B are broadcast and every
+//! processor updates its rectangle (`m_ij × n_j` blocks). The partitioning
+//! determines the rectangle sizes:
+//!
+//! - **CPM** — single benchmark → two-step distribution (ref. [13], Fig 8);
+//! - **FFMPA** — the iterative algorithm of ref. [18] over *pre-built* full
+//!   models (here: the nodes' ground-truth surfaces, cost-free queries);
+//! - **DFPA** — the nested algorithm of §3.2 with on-line partial
+//!   estimates ([`crate::dfpa2d`]).
+
+use crate::cluster::comm::{Collective, CommModel};
+use crate::cluster::executor::NodeExecutor;
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::node::{build_nodes, SimNode};
+use crate::cluster::virtual_cluster::{VirtualCluster, VirtualCluster2d};
+use crate::config::ClusterSpec;
+use crate::dfpa::algorithm::{even_distribution, StepReport};
+use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions};
+use crate::error::{HfpmError, Result};
+use crate::fpm::analytic::Footprint;
+use crate::fpm::SpeedSurface;
+use crate::partition::grid2d;
+use crate::util::stats::max_relative_imbalance;
+
+pub use super::matmul1d::Strategy;
+
+/// Configuration of one 2D run.
+#[derive(Debug, Clone)]
+pub struct Matmul2dConfig {
+    /// Matrix size in elements (N × N).
+    pub n_elems: u64,
+    /// Block edge in elements (b × b blocks).
+    pub block: u64,
+    pub strategy: Strategy,
+    pub epsilon: f64,
+    pub elem_bytes: u64,
+}
+
+impl Matmul2dConfig {
+    pub fn new(n_elems: u64, strategy: Strategy) -> Self {
+        Self {
+            n_elems,
+            block: 32,
+            strategy,
+            epsilon: 0.1,
+            elem_bytes: 8,
+        }
+    }
+
+    /// Blocks per matrix side.
+    pub fn m_blocks(&self) -> u64 {
+        self.n_elems / self.block
+    }
+}
+
+/// Report of one 2D run (Table 5 columns).
+#[derive(Debug, Clone)]
+pub struct Matmul2dReport {
+    pub strategy: Strategy,
+    pub n_elems: u64,
+    pub p: usize,
+    pub q: usize,
+    pub widths: Vec<u64>,
+    pub heights: Vec<Vec<u64>>,
+    /// Partition-phase cost ("DFPA time").
+    pub partition_s: f64,
+    /// Inner benchmark iterations ("DFPA iterations").
+    pub iterations: usize,
+    /// The multiplication itself.
+    pub matmul_s: f64,
+    pub comm_s: f64,
+    pub total_s: f64,
+    pub imbalance: f64,
+    /// partition_s / total_s in percent ("DFPA cost %").
+    pub overhead_pct: f64,
+}
+
+/// Near-square factorization of the cluster size into p×q, p ≥ q.
+pub fn grid_shape(nprocs: usize) -> (usize, usize) {
+    let mut best = (nprocs, 1);
+    let mut q = 1;
+    while q * q <= nprocs {
+        if nprocs % q == 0 {
+            best = (nprocs / q, q);
+        }
+        q += 1;
+    }
+    best
+}
+
+/// FFMPA oracle: answers column benchmarks straight from the pre-built
+/// surfaces with zero virtual cost (the models already exist).
+struct SurfaceOracle {
+    surfaces: Vec<Vec<SpeedSurface>>, // [j][i]
+}
+
+impl Benchmarker2d for SurfaceOracle {
+    fn grid(&self) -> (usize, usize) {
+        (self.surfaces[0].len(), self.surfaces.len())
+    }
+
+    fn run_column(
+        &mut self,
+        j: usize,
+        width: u64,
+        heights: &[u64],
+        _cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let times: Vec<f64> = heights
+            .iter()
+            .zip(&self.surfaces[j])
+            .map(|(&h, s)| {
+                if h == 0 {
+                    0.0
+                } else {
+                    s.time(h as f64, width as f64)
+                }
+            })
+            .collect();
+        Ok(StepReport {
+            times,
+            virtual_cost_s: 0.0, // model queries, not benchmarks
+        })
+    }
+}
+
+fn build_cluster_2d(
+    spec: &ClusterSpec,
+    cfg: &Matmul2dConfig,
+    p: usize,
+    q: usize,
+) -> Result<(VirtualCluster2d, Vec<SimNode>)> {
+    let fp = Footprint::matmul_2d(cfg.block as usize, (cfg.m_blocks() / q as u64) as usize);
+    let nodes = build_nodes(spec, fp, cfg.block as usize);
+    let execs: Vec<Box<dyn NodeExecutor>> = nodes
+        .iter()
+        .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
+        .collect();
+    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), FaultPlan::none());
+    Ok((VirtualCluster2d::new(cluster, p, q)?, nodes))
+}
+
+/// Run the 2D application.
+pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
+    let nprocs = spec.size();
+    let (p, q) = grid_shape(nprocs);
+    let m = cfg.m_blocks();
+    if m < p as u64 || m < q as u64 {
+        return Err(HfpmError::InvalidArg(format!(
+            "{m} blocks per side too few for a {p}×{q} grid"
+        )));
+    }
+    let (mut grid, nodes) = build_cluster_2d(spec, cfg, p, q)?;
+
+    // --- partition phase ---
+    let before = grid.cluster.now();
+    let mut iterations = 0usize;
+    let (widths, heights) = match cfg.strategy {
+        Strategy::Even => {
+            let w = even_distribution(m, q);
+            let h = vec![even_distribution(m, p); q];
+            (w, h)
+        }
+        Strategy::Cpm => {
+            // single benchmark at the even distribution, then two-step
+            let w0 = even_distribution(m, q);
+            let h0 = even_distribution(m, p);
+            let mut speeds = vec![vec![0.0f64; q]; p];
+            for j in 0..q {
+                let report = grid.run_column(j, w0[j], &h0, None)?;
+                for i in 0..p {
+                    let units = (h0[i] * w0[j]) as f64;
+                    speeds[i][j] = if report.times[i] > 0.0 {
+                        units / report.times[i]
+                    } else {
+                        1.0
+                    };
+                }
+            }
+            iterations = q;
+            let gp = grid2d::two_step(m, m, &speeds)?;
+            (gp.col_widths, gp.row_heights)
+        }
+        Strategy::Ffmpa => {
+            // iterative algorithm [18] over pre-built full models
+            let mut oracle = SurfaceOracle {
+                surfaces: (0..q)
+                    .map(|j| {
+                        (0..p)
+                            .map(|i| nodes[grid.rank(i, j)].surface().clone())
+                            .collect()
+                    })
+                    .collect(),
+            };
+            let r = run_dfpa2d(m, m, &mut oracle, Dfpa2dOptions::with_epsilon(cfg.epsilon))?;
+            (r.widths, r.heights)
+        }
+        Strategy::Dfpa => {
+            let r = run_dfpa2d(m, m, &mut grid, Dfpa2dOptions::with_epsilon(cfg.epsilon))?;
+            iterations = r.inner_iterations;
+            (r.widths, r.heights)
+        }
+    };
+    let partition_s = grid.cluster.now() - before;
+
+    // --- evaluate the final distribution: one pivot step per column ---
+    let mut times = vec![vec![0.0f64; p]; q];
+    let mut step_costs = vec![0.0f64; q];
+    for j in 0..q {
+        let report = grid.run_column(j, widths[j], &heights[j], None)?;
+        times[j] = report.times.clone();
+        step_costs[j] = report
+            .times
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+    }
+    let step_max = step_costs.iter().cloned().fold(0.0f64, f64::max);
+    let matmul_s = step_max * m as f64;
+
+    // per-step pivot broadcasts: a block column of A (m/p blocks avg per
+    // proc) and block row of B, binomial over the grid
+    let comm = grid.cluster.comm().clone();
+    let pivot_bytes = (m / p as u64).max(1) * cfg.block * cfg.block * cfg.elem_bytes;
+    let comm_s = m as f64
+        * (comm.collective(Collective::BinomialTree, 0, pivot_bytes)
+            + comm.collective(Collective::BinomialTree, 0, pivot_bytes));
+
+    let active: Vec<f64> = (0..q)
+        .flat_map(|j| (0..p).map(move |i| (i, j)))
+        .filter(|&(i, j)| heights[j][i] > 0)
+        .map(|(i, j)| times[j][i])
+        .filter(|&t| t > 0.0)
+        .collect();
+    let imbalance = max_relative_imbalance(&active);
+
+    let total_s = partition_s + matmul_s + comm_s;
+    Ok(Matmul2dReport {
+        strategy: cfg.strategy,
+        n_elems: cfg.n_elems,
+        p,
+        q,
+        widths,
+        heights,
+        partition_s,
+        iterations,
+        matmul_s,
+        comm_s,
+        total_s,
+        imbalance,
+        overhead_pct: 100.0 * partition_s / total_s.max(1e-12),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn grid_shape_factorizations() {
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(15), (5, 3));
+        assert_eq!(grid_shape(28), (7, 4));
+        assert_eq!(grid_shape(7), (7, 1));
+    }
+
+    #[test]
+    fn dfpa2d_app_runs_and_balances() {
+        let spec = presets::mini4();
+        let cfg = Matmul2dConfig::new(4096, Strategy::Dfpa);
+        let r = run(&spec, &cfg).unwrap();
+        assert_eq!(r.widths.iter().sum::<u64>(), cfg.m_blocks());
+        for hs in &r.heights {
+            assert_eq!(hs.iter().sum::<u64>(), cfg.m_blocks());
+        }
+        assert!(r.partition_s > 0.0);
+        assert!(r.matmul_s > 0.0);
+        assert!(r.overhead_pct < 100.0);
+    }
+
+    #[test]
+    fn ffmpa_beats_or_matches_cpm() {
+        let spec = presets::mini4();
+        let mut best = f64::INFINITY;
+        let r_ffmpa = run(&spec, &Matmul2dConfig::new(4096, Strategy::Ffmpa)).unwrap();
+        best = best.min(r_ffmpa.matmul_s);
+        let r_cpm = run(&spec, &Matmul2dConfig::new(4096, Strategy::Cpm)).unwrap();
+        assert!(
+            best <= r_cpm.matmul_s * 1.05,
+            "ffmpa {} vs cpm {}",
+            r_ffmpa.matmul_s,
+            r_cpm.matmul_s
+        );
+    }
+
+    #[test]
+    fn rejects_tiny_matrices() {
+        let spec = presets::hcl();
+        let cfg = Matmul2dConfig::new(64, Strategy::Even); // 2 blocks < p
+        assert!(run(&spec, &cfg).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's applications: 1D (§3.1) and 2D (§3.2) heterogeneous
+//! parallel matrix multiplication, plus workload helpers.
+
+pub mod matmul1d;
+pub mod matmul2d;
+pub mod workload;
+
+pub use matmul1d::{Matmul1dConfig, Matmul1dReport, Strategy};
+pub use matmul2d::{Matmul2dConfig, Matmul2dReport};

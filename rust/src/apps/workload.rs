@@ -1,0 +1,194 @@
+//! Matrix workload helpers for the applications: seeded generation, row
+//! slicing, reference multiply, and verification.
+
+use crate::util::rng::Pcg32;
+
+/// A dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Seeded uniform [-1, 1) matrix.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Copy rows `[lo, hi)` into a new matrix (a worker's slice).
+    pub fn row_slice(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Vertically stack slices back into one matrix (gather of C).
+    pub fn vstack(parts: &[Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        assert!(parts.iter().all(|p| p.cols == cols));
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Zero-pad to `rows × cols` (bucket fit).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..self.rows {
+            let src = r * self.cols;
+            let dst = r * cols;
+            out.data[dst..dst + self.cols].copy_from_slice(&self.data[src..src + self.cols]);
+        }
+        out
+    }
+
+    /// Trim to `rows × cols` (undo padding).
+    pub fn trim(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows <= self.rows && cols <= self.cols);
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            let src = r * self.cols;
+            let dst = r * cols;
+            out.data[dst..dst + cols].copy_from_slice(&self.data[src..src + cols]);
+        }
+        out
+    }
+}
+
+/// Naive reference matmul (ikj loop order), independent of the kernels
+/// under test. f64 accumulation for a trustworthy oracle.
+pub fn matmul_ref(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c64 = vec![0.0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a.data[i * k + kk] as f64;
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let crow = &mut c64[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv as f64;
+            }
+        }
+    }
+    Matrix {
+        rows: m,
+        cols: n,
+        data: c64.into_iter().map(|x| x as f32).collect(),
+    }
+}
+
+/// Maximum absolute elementwise difference.
+pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Convert a row distribution to (lo, hi) ranges.
+pub fn row_ranges(d: &[u64]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(d.len());
+    let mut lo = 0usize;
+    for &r in d {
+        let hi = lo + r as usize;
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_multiply() {
+        let a = Matrix::random(16, 16, 1);
+        let c = matmul_ref(&a, &Matrix::identity(16));
+        assert!(max_abs_diff(&a, &c) < 1e-6);
+    }
+
+    #[test]
+    fn slice_and_stack_roundtrip() {
+        let a = Matrix::random(10, 4, 2);
+        let parts = vec![a.row_slice(0, 3), a.row_slice(3, 7), a.row_slice(7, 10)];
+        let back = Matrix::vstack(&parts);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn pad_trim_roundtrip() {
+        let a = Matrix::random(5, 7, 3);
+        let padded = a.pad_to(8, 8);
+        assert_eq!(padded.rows, 8);
+        assert_eq!(padded.at(6, 0), 0.0);
+        let back = padded.trim(5, 7);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn sliced_multiply_equals_full() {
+        let a = Matrix::random(12, 8, 4);
+        let b = Matrix::random(8, 8, 5);
+        let full = matmul_ref(&a, &b);
+        let parts: Vec<Matrix> = row_ranges(&[5, 4, 3])
+            .into_iter()
+            .map(|(lo, hi)| matmul_ref(&a.row_slice(lo, hi), &b))
+            .collect();
+        let stacked = Matrix::vstack(&parts);
+        assert!(max_abs_diff(&full, &stacked) < 1e-6);
+    }
+
+    #[test]
+    fn row_ranges_cover() {
+        let r = row_ranges(&[3, 0, 7]);
+        assert_eq!(r, vec![(0, 3), (3, 3), (3, 10)]);
+    }
+
+    #[test]
+    fn deterministic_random() {
+        assert_eq!(Matrix::random(4, 4, 9), Matrix::random(4, 4, 9));
+        assert_ne!(Matrix::random(4, 4, 9), Matrix::random(4, 4, 10));
+    }
+}

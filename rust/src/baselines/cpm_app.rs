@@ -1,0 +1,85 @@
+//! CPM baseline: constant performance models from a single benchmark.
+//!
+//! The conventional approach (paper refs [1, 13]): run the kernel once per
+//! processor at the even distribution, treat the observed speeds as
+//! constants, distribute proportionally. Accurate only when speed is
+//! size-independent — exactly the assumption the paper shows breaking on
+//! heterogeneous memory hierarchies.
+
+use crate::dfpa::algorithm::{even_distribution, Benchmarker};
+use crate::error::Result;
+use crate::partition::cpm::partition_proportional;
+
+/// Outcome of the CPM partitioning phase.
+#[derive(Debug, Clone)]
+pub struct CpmOutcome {
+    /// The proportional distribution (same unit domain as the benchmarker).
+    pub d: Vec<u64>,
+    /// Observed constant speeds.
+    pub speeds: Vec<f64>,
+    /// Virtual cost of the single benchmark step.
+    pub benchmark_cost_s: f64,
+}
+
+/// Benchmark once at the even distribution and distribute proportionally.
+pub fn partition_cpm<B: Benchmarker>(n: u64, bench: &mut B) -> Result<CpmOutcome> {
+    let p = bench.processors();
+    let d0 = even_distribution(n, p);
+    let report = bench.run_parallel(&d0)?;
+    let speeds: Vec<f64> = d0
+        .iter()
+        .zip(&report.times)
+        .map(|(&d, &t)| if t > 0.0 { d as f64 / t } else { 1.0 })
+        .collect();
+    let d = partition_proportional(n, &speeds)?;
+    Ok(CpmOutcome {
+        d,
+        speeds,
+        benchmark_cost_s: report.virtual_cost_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfpa::algorithm::StepReport;
+    use crate::fpm::{ConstantModel, SpeedFunction};
+
+    struct Stub(Vec<ConstantModel>);
+    impl Benchmarker for Stub {
+        fn processors(&self) -> usize {
+            self.0.len()
+        }
+        fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+            let times: Vec<f64> = d
+                .iter()
+                .zip(&self.0)
+                .map(|(&di, m)| m.time(di as f64))
+                .collect();
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            Ok(StepReport {
+                times,
+                virtual_cost_s: max,
+            })
+        }
+    }
+
+    #[test]
+    fn proportional_for_constant_speeds() {
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let out = partition_cpm(400, &mut b).unwrap();
+        assert_eq!(out.d, vec![100, 300]);
+        assert!(out.benchmark_cost_s > 0.0);
+    }
+
+    #[test]
+    fn sums_preserved() {
+        let mut b = Stub(vec![
+            ConstantModel(3.0),
+            ConstantModel(7.0),
+            ConstantModel(11.0),
+        ]);
+        let out = partition_cpm(1000, &mut b).unwrap();
+        assert_eq!(out.d.iter().sum::<u64>(), 1000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Even distribution: the homogeneous-platform assumption.
+
+pub use crate::dfpa::algorithm::even_distribution;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexport_works() {
+        assert_eq!(even_distribution(7, 2), vec![4, 3]);
+    }
+}

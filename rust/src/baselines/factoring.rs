@@ -1,0 +1,169 @@
+//! Dynamic load balancing by weighted factoring — the task-queue family
+//! the paper's related work discusses (refs [11] Hummel et al. and [2]
+//! Cariño & Banicescu with adaptive weights).
+//!
+//! Instead of *partitioning* the work up front, the leader keeps a queue
+//! of chunks and deals them out in rounds: each round assigns a fraction
+//! (the *factor*, classically ½) of the remaining units, split across
+//! processors in proportion to their weights. Static weighted factoring
+//! fixes the weights from one initial benchmark (like CPM); the adaptive
+//! variant (ref [2]) re-estimates weights from each round's observed
+//! speeds, which lets it react to size-dependent speed like DFPA — at the
+//! cost of scheduling rounds throughout the whole computation instead of
+//! converging to a static optimal distribution.
+//!
+//! This gives the repo a *dynamic* baseline to contrast with DFPA's
+//! static-distribution-with-discovery approach (bench_ablation).
+
+use crate::dfpa::algorithm::Benchmarker;
+use crate::error::{HfpmError, Result};
+use crate::partition::cpm::partition_proportional;
+
+/// Outcome of a factoring run.
+#[derive(Debug, Clone)]
+pub struct FactoringOutcome {
+    /// Units each processor executed in total.
+    pub executed: Vec<u64>,
+    /// Number of scheduling rounds.
+    pub rounds: usize,
+    /// Total virtual time: Σ over rounds of (slowest member + collectives).
+    pub total_s: f64,
+    /// Per-round makespans.
+    pub round_times: Vec<f64>,
+}
+
+/// Scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Weighting {
+    /// Weights fixed after the first round (Hummel et al. [11]).
+    Static,
+    /// Weights re-estimated from each round's speeds (Cariño [2]).
+    Adaptive,
+}
+
+/// Run weighted factoring over `n` units with the given chunk factor
+/// (classically 0.5) until everything is executed.
+pub fn run_factoring<B: Benchmarker>(
+    n: u64,
+    bench: &mut B,
+    factor: f64,
+    weighting: Weighting,
+) -> Result<FactoringOutcome> {
+    if !(0.0 < factor && factor < 1.0) {
+        return Err(HfpmError::InvalidArg(format!(
+            "factor must be in (0,1), got {factor}"
+        )));
+    }
+    let p = bench.processors();
+    if p == 0 {
+        return Err(HfpmError::Partition("no processors".into()));
+    }
+    let mut weights = vec![1.0f64; p]; // first round: even
+    let mut executed = vec![0u64; p];
+    let mut remaining = n;
+    let mut total_s = 0.0;
+    let mut round_times = Vec::new();
+
+    while remaining > 0 {
+        // this round's batch: factor × remaining, at least p units (tail
+        // rounds hand out whatever is left)
+        let batch = ((remaining as f64 * factor).ceil() as u64)
+            .max(p as u64)
+            .min(remaining);
+        let d = partition_proportional(batch, &weights)?;
+        let report = bench.run_parallel(&d)?;
+        total_s += report.virtual_cost_s;
+        round_times.push(report.virtual_cost_s);
+        for i in 0..p {
+            executed[i] += d[i];
+        }
+        remaining -= batch;
+
+        if weighting == Weighting::Adaptive || round_times.len() == 1 {
+            // re-estimate weights from observed speeds (skip idle ranks)
+            let mut new_w = weights.clone();
+            for i in 0..p {
+                if d[i] > 0 && report.times[i] > 0.0 {
+                    new_w[i] = d[i] as f64 / report.times[i];
+                }
+            }
+            weights = new_w;
+        }
+    }
+    Ok(FactoringOutcome {
+        executed,
+        rounds: round_times.len(),
+        total_s,
+        round_times,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfpa::algorithm::StepReport;
+    use crate::fpm::{ConstantModel, SpeedFunction};
+
+    struct Stub(Vec<ConstantModel>);
+    impl Benchmarker for Stub {
+        fn processors(&self) -> usize {
+            self.0.len()
+        }
+        fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+            let times: Vec<f64> = d
+                .iter()
+                .zip(&self.0)
+                .map(|(&x, m)| if x == 0 { 0.0 } else { m.time(x as f64) })
+                .collect();
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            Ok(StepReport {
+                times,
+                virtual_cost_s: max,
+            })
+        }
+    }
+
+    #[test]
+    fn executes_everything() {
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let out = run_factoring(1000, &mut b, 0.5, Weighting::Adaptive).unwrap();
+        assert_eq!(out.executed.iter().sum::<u64>(), 1000);
+        assert!(out.rounds >= 2);
+    }
+
+    #[test]
+    fn adaptive_tracks_speeds() {
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let out = run_factoring(4000, &mut b, 0.5, Weighting::Adaptive).unwrap();
+        // the first round is even (half the work split 50/50), later
+        // rounds go ≈3:1 — overall ≈ (1000+500):(1000+1500) = 1.67:1
+        let ratio = out.executed[1] as f64 / out.executed[0] as f64;
+        assert!((1.3..=3.8).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn factoring_beats_even_single_shot() {
+        // even single-shot = one round with equal weights: makespan bound
+        // by the slow processor doing n/2
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let even_makespan = ConstantModel(10.0).time(500.0);
+        let out = run_factoring(1000, &mut b, 0.5, Weighting::Adaptive).unwrap();
+        assert!(out.total_s < even_makespan, "{} vs {even_makespan}", out.total_s);
+    }
+
+    #[test]
+    fn rejects_bad_factor() {
+        let mut b = Stub(vec![ConstantModel(1.0)]);
+        assert!(run_factoring(10, &mut b, 0.0, Weighting::Static).is_err());
+        assert!(run_factoring(10, &mut b, 1.0, Weighting::Static).is_err());
+    }
+
+    #[test]
+    fn static_freezes_first_round_weights() {
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let out = run_factoring(1000, &mut b, 0.5, Weighting::Static).unwrap();
+        assert_eq!(out.executed.iter().sum::<u64>(), 1000);
+        // still heavily favors the fast processor after round 1
+        assert!(out.executed[1] > out.executed[0]);
+    }
+}

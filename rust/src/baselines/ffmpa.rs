@@ -1,0 +1,122 @@
+//! FFMPA — partitioning on pre-built full functional performance models.
+//!
+//! The paper's reference point: if the platform is stable and the
+//! application will run many times, full FPMs can be built offline (at
+//! great cost — 1850 s for the paper's 160-point grid) and each run then
+//! partitions optimally in microseconds. This module reproduces both the
+//! model construction (against the simulated nodes' ground truths, with
+//! noise) and the partitioning.
+
+use crate::cluster::node::SimNode;
+use crate::error::Result;
+use crate::fpm::builder::{build_full_models, BuildCost};
+use crate::fpm::{PiecewiseModel, ScaledModel, SpeedFunction};
+use crate::partition;
+use crate::util::rng::Pcg32;
+
+/// The paper's per-n experiment grid: `n_b = n/80, 2n/80, …, n/4` (20
+/// points), expressed in computation units (`n_b · n`).
+pub fn grid_for_n(n: u64) -> Vec<f64> {
+    (1..=20)
+        .map(|k| ((k * n) / 80).max(1) * n)
+        .map(|u| u as f64)
+        .collect()
+}
+
+/// Build "full" models for the given nodes at matrix size `n` by measuring
+/// their ground-truth speed functions on the paper grid (plus measurement
+/// noise). Returns the models (units domain) and the construction cost.
+pub fn build_full_models_for_n(
+    nodes: &[SimNode],
+    n: u64,
+    noise_rel: f64,
+    seed: u64,
+) -> (Vec<PiecewiseModel>, BuildCost) {
+    let grid = grid_for_n(n);
+    let mut rng = Pcg32::new(seed, 0xFF);
+    build_full_models(nodes.len(), &grid, |p, x| {
+        let t = nodes[p].truth().time(x);
+        t * rng.noise_factor(noise_rel)
+    })
+}
+
+/// Total model-construction cost over the paper's full multi-n grid
+/// (`n = 1024, 2048, …, n_max`) — the "1850 seconds" analogue reported
+/// next to Table 2.
+pub fn full_grid_build_cost(nodes: &[SimNode], n_max: u64) -> BuildCost {
+    let mut total = BuildCost::default();
+    let mut n = 1024u64;
+    while n <= n_max {
+        // footprint changes with n (B matrix resident): rebuild node views
+        let fp = crate::fpm::analytic::Footprint::matmul_1d(n as usize);
+        let truths: Vec<_> = nodes.iter().map(|nd| nd.truth().with_footprint(fp)).collect();
+        let grid = grid_for_n(n);
+        for &x in &grid {
+            let times: Vec<f64> = truths.iter().map(|t| t.time(x)).collect();
+            total.serial_s += times.iter().sum::<f64>();
+            total.parallel_s += times.iter().cloned().fold(0.0f64, f64::max);
+            total.points_per_proc += 1;
+        }
+        n += 1024;
+    }
+    total
+}
+
+/// Partition `rows` matrix rows using the pre-built unit-domain models
+/// (each row is `n` units). Returns the row distribution.
+pub fn partition_rows(models: &[PiecewiseModel], rows: u64, n: u64) -> Result<Vec<u64>> {
+    let views: Vec<ScaledModel<&PiecewiseModel>> = models
+        .iter()
+        .map(|m| ScaledModel::new(m, n as f64))
+        .collect();
+    Ok(partition::partition(rows, &views)?.d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::build_nodes;
+    use crate::cluster::presets;
+    use crate::fpm::analytic::Footprint;
+
+    fn nodes(n: u64) -> Vec<SimNode> {
+        let spec = presets::mini4();
+        build_nodes(&spec, Footprint::matmul_1d(n as usize), 32)
+    }
+
+    #[test]
+    fn grid_has_20_points() {
+        let g = grid_for_n(2048);
+        assert_eq!(g.len(), 20);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn build_then_partition_balances() {
+        let n = 2048u64;
+        let nodes = nodes(n);
+        let (models, cost) = build_full_models_for_n(&nodes, n, 0.0, 1);
+        assert_eq!(models.len(), 4);
+        assert_eq!(cost.points_per_proc, 20);
+        let d = partition_rows(&models, n, n).unwrap();
+        assert_eq!(d.iter().sum::<u64>(), n);
+        // resulting times (per truth) should be well balanced
+        let times: Vec<f64> = d
+            .iter()
+            .zip(&nodes)
+            .map(|(&r, nd)| nd.truth().time((r * n) as f64))
+            .collect();
+        let imb = crate::util::stats::max_relative_imbalance(&times);
+        assert!(imb < 0.25, "imbalance {imb}, d = {d:?}");
+    }
+
+    #[test]
+    fn full_grid_cost_dwarfs_single_grid() {
+        let n = 4096u64;
+        let nodes = nodes(n);
+        let full = full_grid_build_cost(&nodes, 8192);
+        let (_, single) = build_full_models_for_n(&nodes, n, 0.0, 1);
+        assert!(full.parallel_s > 5.0 * single.parallel_s);
+        assert_eq!(full.points_per_proc, 20 * 8);
+    }
+}

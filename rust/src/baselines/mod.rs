@@ -1,0 +1,13 @@
+//! Baseline partitioning strategies the paper compares DFPA against.
+//!
+//! - [`ffmpa`] — Full-Functional-Model Partitioning Algorithm: partition on
+//!   *pre-built* full FPMs; best app time, but the model construction cost
+//!   (excluded from the paper's Table 2 app column, reported separately)
+//!   is orders of magnitude larger than DFPA's.
+//! - [`cpm_app`] — constant performance models from a single benchmark.
+//! - [`even`] — homogeneous `n/p` distribution.
+
+pub mod cpm_app;
+pub mod even;
+pub mod factoring;
+pub mod ffmpa;

@@ -1,0 +1,59 @@
+//! `bench_harness` — a criterion-lite micro/macro benchmark runner (the
+//! offline build has no `criterion`).
+//!
+//! Features used by this repo's benches:
+//! - warmup phase, then timed iterations until both a minimum iteration
+//!   count and a minimum measurement time are reached;
+//! - mean / stddev / percentiles via `util::stats::Summary`;
+//! - throughput annotation (elements/s);
+//! - grouped, aligned reporting and per-bench CSV dumps under `results/`;
+//! - `filter` support via CLI args so `cargo bench -- <pattern>` works.
+
+pub mod runner;
+
+pub use runner::{BenchGroup, BenchResult, Bencher};
+
+/// Entry point used by each `harness = false` bench target.
+///
+/// Parses CLI args (a filter pattern and `--quick`), builds a group, runs
+/// the user's registration function, and prints the report.
+pub fn main_with<F>(group_name: &str, register: F)
+where
+    F: FnOnce(&mut BenchGroup),
+{
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // cargo bench passes "--bench"; ignore flags we don't own
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("HFPM_BENCH_QUICK").is_ok();
+    let filter = args
+        .iter()
+        .find(|a| !a.starts_with('-'))
+        .cloned();
+    let mut group = BenchGroup::new(group_name, filter, quick);
+    register(&mut group);
+    group.finish();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_group_runs_and_reports() {
+        let mut g = BenchGroup::new("test-group", None, true);
+        g.bench("noop", |b| {
+            b.iter(|| std::hint::black_box(1 + 1));
+        });
+        let results = g.results();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].summary.mean > 0.0);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut g = BenchGroup::new("test-group", Some("match-me".to_string()), true);
+        g.bench("other", |b| b.iter(|| 1));
+        g.bench("match-me-exactly", |b| b.iter(|| 1));
+        assert_eq!(g.results().len(), 1);
+        assert_eq!(g.results()[0].name, "match-me-exactly");
+    }
+}

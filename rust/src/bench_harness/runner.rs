@@ -1,0 +1,189 @@
+//! Measurement loop and reporting for `bench_harness`.
+
+use crate::util::stats::Summary;
+use crate::util::table::{fdur, Table};
+use crate::util::timer::Stopwatch;
+use std::time::Duration;
+
+/// Passed to each benchmark closure; call [`Bencher::iter`] exactly once.
+pub struct Bencher {
+    samples: Vec<f64>,
+    min_iters: u64,
+    min_time: Duration,
+    warmup: Duration,
+    throughput_elems: Option<u64>,
+}
+
+impl Bencher {
+    fn new(quick: bool) -> Self {
+        if quick {
+            Self {
+                samples: Vec::new(),
+                min_iters: 10,
+                min_time: Duration::from_millis(50),
+                warmup: Duration::from_millis(10),
+                throughput_elems: None,
+            }
+        } else {
+            Self {
+                samples: Vec::new(),
+                min_iters: 30,
+                min_time: Duration::from_millis(500),
+                warmup: Duration::from_millis(100),
+                throughput_elems: None,
+            }
+        }
+    }
+
+    /// Annotate the benchmark with a per-iteration element count so the
+    /// report includes throughput.
+    pub fn throughput(&mut self, elements: u64) {
+        self.throughput_elems = Some(elements);
+    }
+
+    /// Run the measurement loop over `f`.
+    pub fn iter<T>(&mut self, mut f: impl FnMut() -> T) {
+        // warmup
+        let w = Stopwatch::start();
+        while w.elapsed_s() < self.warmup.as_secs_f64() {
+            std::hint::black_box(f());
+        }
+        // measure
+        let total = Stopwatch::start();
+        loop {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            self.samples.push(sw.elapsed_s());
+            let enough_iters = self.samples.len() as u64 >= self.min_iters;
+            let enough_time = total.elapsed_s() >= self.min_time.as_secs_f64();
+            if enough_iters && enough_time {
+                break;
+            }
+            // hard cap: very slow macro-benches get at least 3 samples but
+            // never run longer than 20x min_time
+            if self.samples.len() >= 3 && total.elapsed_s() > 20.0 * self.min_time.as_secs_f64() {
+                break;
+            }
+        }
+    }
+
+    /// For macro-benches that measure a batch internally: record an explicit
+    /// sample in seconds.
+    pub fn record_sample(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub throughput_elems: Option<u64>,
+}
+
+/// A named group of benchmarks with shared filter/report.
+pub struct BenchGroup {
+    name: String,
+    filter: Option<String>,
+    quick: bool,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(name: &str, filter: Option<String>, quick: bool) -> Self {
+        Self {
+            name: name.to_string(),
+            filter,
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Run one benchmark if it matches the filter.
+    pub fn bench(&mut self, name: &str, f: impl FnOnce(&mut Bencher)) {
+        if let Some(pat) = &self.filter {
+            if !name.contains(pat.as_str()) && !self.name.contains(pat.as_str()) {
+                return;
+            }
+        }
+        let mut b = Bencher::new(self.quick);
+        f(&mut b);
+        if b.samples.is_empty() {
+            eprintln!("warn: bench `{name}` recorded no samples");
+            return;
+        }
+        let summary = Summary::from_samples(&b.samples);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            throughput_elems: b.throughput_elems,
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the report table and dump CSV under `results/bench/`.
+    pub fn finish(self) {
+        if self.results.is_empty() {
+            println!("(bench group `{}`: nothing matched the filter)", self.name);
+            return;
+        }
+        let mut t = Table::new(
+            &format!("bench group: {}", self.name),
+            &["benchmark", "iters", "mean", "p50", "p95", "stddev", "throughput"],
+        );
+        for r in &self.results {
+            let tp = match r.throughput_elems {
+                Some(e) if r.summary.mean > 0.0 => {
+                    let per_s = e as f64 / r.summary.mean;
+                    if per_s > 1e9 {
+                        format!("{:.2} Gelem/s", per_s / 1e9)
+                    } else if per_s > 1e6 {
+                        format!("{:.2} Melem/s", per_s / 1e6)
+                    } else {
+                        format!("{:.2} Kelem/s", per_s / 1e3)
+                    }
+                }
+                _ => "-".to_string(),
+            };
+            t.add_row(vec![
+                r.name.clone(),
+                r.summary.count.to_string(),
+                fdur(r.summary.mean),
+                fdur(r.summary.p50),
+                fdur(r.summary.p95),
+                fdur(r.summary.stddev),
+                tp,
+            ]);
+        }
+        let csv = std::path::PathBuf::from("results/bench").join(format!("{}.csv", self.name));
+        t.emit(Some(&csv));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_min_iters() {
+        let mut b = Bencher::new(true);
+        b.iter(|| std::hint::black_box(2u64.pow(10)));
+        assert!(b.samples.len() >= 10);
+    }
+
+    #[test]
+    fn record_sample_direct() {
+        let mut b = Bencher::new(true);
+        b.record_sample(0.5);
+        b.record_sample(1.5);
+        assert_eq!(b.samples, vec![0.5, 1.5]);
+    }
+}

@@ -1,0 +1,117 @@
+//! CLI argument parsing (no `clap` offline — a small declarative parser).
+//!
+//! Grammar: `repro <command> [--flag value | --switch] ...`
+
+use crate::error::{HfpmError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positional command + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(HfpmError::InvalidArg("bare `--`".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HfpmError::InvalidArg(format!("--{flag} expects an integer, got `{v}`"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HfpmError::InvalidArg(format!("--{flag} expects a number, got `{v}`"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("run1d --n 4096 --strategy dfpa --verbose");
+        assert_eq!(a.command, "run1d");
+        assert_eq!(a.get("n"), Some("4096"));
+        assert_eq!(a.get("strategy"), Some("dfpa"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --eps=0.025");
+        assert_eq!(a.get_f64("eps", 0.1).unwrap(), 0.025);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_u64("n", 42).unwrap(), 42);
+        assert!(parse("x --n abc").get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_then_flag() {
+        let a = parse("x --quick --n 7");
+        assert!(a.has("quick"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 7);
+    }
+}

@@ -1,0 +1,172 @@
+//! Communication cost model: Hockney point-to-point plus the collective
+//! algorithms an MPI implementation would use on the modeled fabric.
+//!
+//! DFPA's per-iteration communication is: the leader **scatters** the new
+//! allocations (one integer per worker) and **gathers** the observed times
+//! (one float per worker); the application distribution phase additionally
+//! **scatters matrix slices** (large payloads). Costs are charged to the
+//! virtual clock by the [`super::virtual_cluster`] runtime.
+
+use crate::config::ClusterSpec;
+
+/// Which collective algorithm to cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Root sends to each rank in sequence (small-message scatter in most
+    /// MPIs; also the worst case).
+    LinearScatter,
+    /// Binomial tree (used for broadcast and small gathers); `⌈log2 p⌉`
+    /// rounds.
+    BinomialTree,
+    /// Each rank sends to root one after another (linear gather).
+    LinearGather,
+}
+
+/// Communication model over a cluster spec.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    spec: ClusterSpec,
+}
+
+impl CommModel {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Point-to-point transfer time of `bytes` between ranks `a` and `b`.
+    pub fn p2p(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.spec.link(a, b).transfer_s(bytes)
+    }
+
+    /// Cost of a collective rooted at `root` moving `bytes_per_rank` to or
+    /// from every other rank.
+    pub fn collective(&self, kind: Collective, root: usize, bytes_per_rank: u64) -> f64 {
+        let p = self.spec.size();
+        if p <= 1 {
+            return 0.0;
+        }
+        match kind {
+            Collective::LinearScatter | Collective::LinearGather => (0..p)
+                .filter(|&r| r != root)
+                .map(|r| self.p2p(root, r, bytes_per_rank))
+                .sum(),
+            Collective::BinomialTree => {
+                // ⌈log2 p⌉ rounds; each round's cost is the slowest link
+                // used in that round. We approximate with the worst link
+                // from the root's site times the round count — accurate for
+                // single-site clusters, pessimistic for multi-site (where
+                // real MPIs are hierarchy-aware anyway).
+                let rounds = (p as f64).log2().ceil();
+                let worst = (0..p)
+                    .filter(|&r| r != root)
+                    .map(|r| self.p2p(root, r, bytes_per_rank))
+                    .fold(0.0f64, f64::max);
+                rounds * worst
+            }
+        }
+    }
+
+    /// DFPA per-iteration control cost: scatter of one `u64` allocation +
+    /// gather of one `f64` time per worker, both as binomial trees of
+    /// 8-byte payloads (what an MPI_Scatter/MPI_Gather of one word costs).
+    pub fn dfpa_iteration_cost(&self, root: usize) -> f64 {
+        self.collective(Collective::BinomialTree, root, 8)
+            + self.collective(Collective::BinomialTree, root, 8)
+    }
+
+    /// Control cost (scatter + gather of one 8-byte word) over a *subset*
+    /// of ranks — used by the 2D algorithm's per-column supersteps.
+    pub fn subset_control_cost(&self, root: usize, members: &[usize]) -> f64 {
+        let k = members.len();
+        if k <= 1 {
+            return 0.0;
+        }
+        let rounds = (k as f64).log2().ceil();
+        let worst = members
+            .iter()
+            .filter(|&&r| r != root)
+            .map(|&r| self.p2p(root, r, 8))
+            .fold(0.0f64, f64::max);
+        2.0 * rounds * worst
+    }
+
+    /// Cost of distributing matrix slices: rank `r` receives `bytes[r]`
+    /// from the root, sequentially (large messages serialize on the root's
+    /// NIC).
+    pub fn distribute_slices(&self, root: usize, bytes: &[u64]) -> f64 {
+        bytes
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != root)
+            .map(|(r, &b)| self.p2p(root, r, b))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn p2p_self_is_free() {
+        let m = CommModel::new(presets::mini4());
+        assert_eq!(m.p2p(1, 1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn p2p_scales_with_bytes() {
+        let m = CommModel::new(presets::mini4());
+        let t1 = m.p2p(0, 1, 1000);
+        let t2 = m.p2p(0, 1, 1_000_000);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn linear_scatter_counts_all_ranks() {
+        let m = CommModel::new(presets::mini4());
+        let per = m.p2p(0, 1, 100);
+        let total = m.collective(Collective::LinearScatter, 0, 100);
+        assert!((total - 3.0 * per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binomial_cheaper_than_linear_for_large_p() {
+        let m = CommModel::new(presets::grid5000());
+        let lin = m.collective(Collective::LinearGather, 0, 8);
+        let tree = m.collective(Collective::BinomialTree, 0, 8);
+        assert!(tree < lin, "tree {tree} vs linear {lin}");
+    }
+
+    #[test]
+    fn dfpa_iteration_cost_is_small() {
+        // control messages on GigE: well under a millisecond per iteration
+        let m = CommModel::new(presets::hcl());
+        let c = m.dfpa_iteration_cost(0);
+        assert!(c > 0.0 && c < 1e-3, "cost {c}");
+    }
+
+    #[test]
+    fn wan_links_dominate_grid5000() {
+        let m = CommModel::new(presets::grid5000());
+        // nodes 0 and 1 share site 0; node 2 is on site 1
+        let intra = m.p2p(0, 1, 8);
+        let inter = m.p2p(0, 2, 8);
+        assert!(inter > 10.0 * intra);
+    }
+
+    #[test]
+    fn slice_distribution_counts_bytes() {
+        let m = CommModel::new(presets::mini4());
+        let t = m.distribute_slices(0, &[0, 1 << 20, 1 << 20, 1 << 20]);
+        let per = m.p2p(0, 1, 1 << 20);
+        assert!((t - 3.0 * per).abs() < 1e-12);
+    }
+}

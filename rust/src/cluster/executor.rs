@@ -1,0 +1,98 @@
+//! Kernel execution abstraction for cluster workers.
+//!
+//! A worker's executor answers one question: *how long does this node take
+//! to run the computational kernel at this problem size?* Implementations:
+//!
+//! - [`super::node::SimNode`] — analytic speed model + noise, zero wall
+//!   cost (drives all table/figure regeneration);
+//! - [`crate::runtime::RealScaledExecutor`] — actually executes the
+//!   AOT-compiled Pallas/XLA kernel through PJRT, measures wall time, and
+//!   scales it by the node's heterogeneity factor (proves the L1→L2→L3
+//!   stack composes; used by the e2e example).
+
+use crate::error::Result;
+
+/// Per-node kernel executor. `Send` so each worker thread can own one.
+pub trait NodeExecutor: Send {
+    /// Execute `units` computation units of the 1D kernel; return the
+    /// observed execution time in (virtual) seconds.
+    fn execute(&mut self, units: u64) -> Result<f64>;
+
+    /// Execute the 2D kernel on a `rows × width` block panel. Defaults to
+    /// treating the task as `rows·width` 1D units (correct whenever speed
+    /// depends mainly on the task area).
+    fn execute_2d(&mut self, rows: u64, width: u64) -> Result<f64> {
+        self.execute(rows.saturating_mul(width))
+    }
+
+    /// Host name (diagnostics).
+    fn host(&self) -> &str {
+        "?"
+    }
+}
+
+/// How the cluster executes kernels — selected by CLI/app configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Analytic speed models + noise; virtual time only.
+    Simulated,
+    /// AOT-compiled XLA kernels through PJRT, wall time scaled per node.
+    Real,
+}
+
+impl ExecutionMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "simulated" => Some(Self::Simulated),
+            "real" | "pjrt" => Some(Self::Real),
+            _ => None,
+        }
+    }
+}
+
+/// Apply the paper's optimization (4): cap a benchmark's duration. Returns
+/// `(reported_time, was_capped)`. A capped observation is a *lower bound*
+/// on the true time — the caller records speed `units/cap`, which is an
+/// upper bound on the real speed; safe for partitioning because the capped
+/// processor is certain to be slow enough to receive less work either way.
+pub fn apply_time_cap(t: f64, cap: Option<f64>) -> (f64, bool) {
+    match cap {
+        Some(c) if t > c && c > 0.0 => (c, true),
+        _ => (t, false),
+    }
+}
+
+/// Convenience: a `KernelExecutor` trait object.
+pub type KernelExecutor = Box<dyn NodeExecutor>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(f64);
+    impl NodeExecutor for Fixed {
+        fn execute(&mut self, units: u64) -> Result<f64> {
+            Ok(self.0 * units as f64)
+        }
+    }
+
+    #[test]
+    fn default_2d_uses_area() {
+        let mut e = Fixed(0.5);
+        assert_eq!(e.execute_2d(3, 4).unwrap(), 6.0);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ExecutionMode::parse("sim"), Some(ExecutionMode::Simulated));
+        assert_eq!(ExecutionMode::parse("REAL"), Some(ExecutionMode::Real));
+        assert_eq!(ExecutionMode::parse("x"), None);
+    }
+
+    #[test]
+    fn time_cap() {
+        assert_eq!(apply_time_cap(5.0, Some(2.0)), (2.0, true));
+        assert_eq!(apply_time_cap(1.0, Some(2.0)), (1.0, false));
+        assert_eq!(apply_time_cap(5.0, None), (5.0, false));
+    }
+}

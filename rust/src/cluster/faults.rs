@@ -1,0 +1,87 @@
+//! Fault injection for the cluster runtime: dead workers and stragglers.
+//!
+//! Self-adaptable applications run on platforms that can misbehave; the
+//! integration tests use this module to verify the leader's error paths
+//! (a dead worker surfaces as `HfpmError::WorkerFailed`, a straggler is
+//! simply absorbed by DFPA as a slow processor — which is the paper's
+//! whole point).
+
+use std::collections::BTreeMap;
+
+/// What goes wrong, per rank.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Rank → step index at which the worker dies (fails permanently).
+    pub die_at_step: BTreeMap<usize, usize>,
+    /// Rank → multiplicative slowdown applied from `straggle_from_step`.
+    pub straggler_factor: BTreeMap<usize, f64>,
+    /// First step at which stragglers slow down.
+    pub straggle_from_step: usize,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_death(mut self, rank: usize, step: usize) -> Self {
+        self.die_at_step.insert(rank, step);
+        self
+    }
+
+    pub fn with_straggler(mut self, rank: usize, factor: f64, from_step: usize) -> Self {
+        assert!(factor >= 1.0);
+        self.straggler_factor.insert(rank, factor);
+        self.straggle_from_step = from_step;
+        self
+    }
+
+    /// Should `rank` fail at `step`?
+    pub fn dies(&self, rank: usize, step: usize) -> bool {
+        self.die_at_step.get(&rank).is_some_and(|&s| step >= s)
+    }
+
+    /// Slowdown factor for `rank` at `step` (1.0 = healthy).
+    pub fn slowdown(&self, rank: usize, step: usize) -> f64 {
+        if step >= self.straggle_from_step {
+            self.straggler_factor.get(&rank).copied().unwrap_or(1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_by_default() {
+        let p = FaultPlan::none();
+        assert!(!p.dies(0, 100));
+        assert_eq!(p.slowdown(0, 100), 1.0);
+    }
+
+    #[test]
+    fn death_is_permanent() {
+        let p = FaultPlan::none().with_death(2, 3);
+        assert!(!p.dies(2, 2));
+        assert!(p.dies(2, 3));
+        assert!(p.dies(2, 10));
+        assert!(!p.dies(1, 10));
+    }
+
+    #[test]
+    fn straggler_from_step() {
+        let p = FaultPlan::none().with_straggler(1, 4.0, 2);
+        assert_eq!(p.slowdown(1, 1), 1.0);
+        assert_eq!(p.slowdown(1, 2), 4.0);
+        assert_eq!(p.slowdown(0, 5), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn straggler_factor_below_one_rejected() {
+        let _ = FaultPlan::none().with_straggler(0, 0.5, 0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Simulated heterogeneous cluster substrate.
+//!
+//! The paper's experiments ran on a real 16-node heterogeneous cluster
+//! (HCL, Table 1) and on Grid5000 (28 nodes over 8 sites). Neither exists
+//! in this environment, so this module provides the closest synthetic
+//! equivalent that exercises the same code paths (DESIGN.md §2):
+//!
+//! - [`presets`] — `hcl()` and `grid5000()` cluster specs built from the
+//!   published hardware tables;
+//! - [`node`] — a simulated node: a [`crate::config::MachineSpec`] plus the
+//!   analytic speed model and a private noise stream;
+//! - [`comm`] — Hockney (`α + β·m`) point-to-point costs and collective
+//!   algorithms (binomial-tree broadcast/gather, linear scatter) matching
+//!   an MPI implementation on the modeled fabric;
+//! - [`executor`] — how a node "executes" a kernel: `Simulated` (analytic
+//!   time, zero wall cost), `Real` (runs the AOT-compiled XLA kernel via
+//!   PJRT and scales measured wall time by the node's heterogeneity
+//!   factor), or a custom callback;
+//! - [`virtual_cluster`] — the leader/worker runtime: one thread per node,
+//!   real message channels, virtual clock accounting; implements
+//!   [`crate::dfpa::Benchmarker`] and [`crate::dfpa2d::Benchmarker2d`];
+//! - [`faults`] — fault injection (dead worker, straggler) for the
+//!   failure-path tests.
+
+pub mod comm;
+pub mod executor;
+pub mod faults;
+pub mod node;
+pub mod presets;
+pub mod virtual_cluster;
+
+pub use comm::{CommModel, Collective};
+pub use executor::{ExecutionMode, KernelExecutor};
+pub use node::SimNode;
+pub use virtual_cluster::{VirtualCluster, VirtualCluster2d};

@@ -1,0 +1,171 @@
+//! A simulated cluster node: hardware spec → analytic speed model → noisy
+//! kernel timings.
+
+use super::executor::NodeExecutor;
+use crate::config::MachineSpec;
+use crate::error::Result;
+use crate::fpm::analytic::{AnalyticModel, Footprint, RegimeParams};
+use crate::fpm::{SpeedFunction, SpeedSurface};
+use crate::util::rng::Pcg32;
+
+/// A simulated node executing the 1D kernel (and, via its surface, the 2D
+/// kernel). Each node draws timing noise from its own PCG stream so runs
+/// are reproducible regardless of scheduling.
+#[derive(Debug, Clone)]
+pub struct SimNode {
+    pub rank: usize,
+    pub spec: MachineSpec,
+    model: AnalyticModel,
+    surface: SpeedSurface,
+    noise_rel: f64,
+    rng: Pcg32,
+}
+
+impl SimNode {
+    /// Create a node for a given 1D kernel footprint. `block` sizes the 2D
+    /// surface kernel (b×b blocks).
+    pub fn new(
+        rank: usize,
+        spec: &MachineSpec,
+        footprint: Footprint,
+        block: usize,
+        noise_rel: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            rank,
+            spec: spec.clone(),
+            model: AnalyticModel::from_spec(spec, footprint),
+            surface: SpeedSurface::from_spec(spec, block),
+            noise_rel,
+            rng: Pcg32::new(seed, rank as u64 + 1),
+        }
+    }
+
+    pub fn with_params(mut self, params: RegimeParams) -> Self {
+        self.model = AnalyticModel::with_params(&self.spec, self.model.footprint, params);
+        self
+    }
+
+    /// The node's ground-truth 1D speed model (used by FFMPA to pre-build
+    /// "full" models, and by tests as the oracle).
+    pub fn truth(&self) -> &AnalyticModel {
+        &self.model
+    }
+
+    /// The node's 2D ground-truth surface.
+    pub fn surface(&self) -> &SpeedSurface {
+        &self.surface
+    }
+
+    /// Change the 1D kernel footprint (new problem size n ⇒ new fixed
+    /// term).
+    pub fn set_footprint(&mut self, fp: Footprint) {
+        self.model = self.model.with_footprint(fp);
+    }
+
+    fn noise(&mut self) -> f64 {
+        if self.noise_rel > 0.0 {
+            self.rng.noise_factor(self.noise_rel)
+        } else {
+            1.0
+        }
+    }
+}
+
+impl NodeExecutor for SimNode {
+    fn execute(&mut self, units: u64) -> Result<f64> {
+        if units == 0 {
+            return Ok(0.0);
+        }
+        let t = self.model.time(units as f64);
+        Ok(t * self.noise())
+    }
+
+    fn execute_2d(&mut self, rows: u64, width: u64) -> Result<f64> {
+        if rows == 0 || width == 0 {
+            return Ok(0.0);
+        }
+        let t = self.surface.time(rows as f64, width as f64);
+        Ok(t * self.noise())
+    }
+
+    fn host(&self) -> &str {
+        &self.spec.host
+    }
+}
+
+/// Build the full set of simulated nodes for a cluster spec.
+pub fn build_nodes(
+    spec: &crate::config::ClusterSpec,
+    footprint: Footprint,
+    block: usize,
+) -> Vec<SimNode> {
+    spec.nodes
+        .iter()
+        .enumerate()
+        .map(|(rank, ms)| SimNode::new(rank, ms, footprint, block, spec.noise_rel, spec.seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn node_times_match_truth_noiselessly() {
+        let spec = MachineSpec::new("a", "", 3.0, 800.0, 0.4, 1024, 1024);
+        let mut node = SimNode::new(0, &spec, Footprint::affine(16.0, 0.0), 32, 0.0, 1);
+        let t = node.execute(1_000_000).unwrap();
+        let want = node.truth().time(1_000_000.0);
+        assert!((t - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_perturbs_but_not_wildly() {
+        let spec = MachineSpec::new("a", "", 3.0, 800.0, 0.4, 1024, 1024);
+        let mut node = SimNode::new(0, &spec, Footprint::affine(16.0, 0.0), 32, 0.02, 1);
+        let want = node.truth().time(1_000_000.0);
+        for _ in 0..100 {
+            let t = node.execute(1_000_000).unwrap();
+            assert!((t / want - 1.0).abs() < 0.25, "t={t} want={want}");
+        }
+    }
+
+    #[test]
+    fn zero_units_zero_time() {
+        let spec = MachineSpec::new("a", "", 3.0, 800.0, 0.4, 1024, 1024);
+        let mut node = SimNode::new(0, &spec, Footprint::affine(16.0, 0.0), 32, 0.0, 1);
+        assert_eq!(node.execute(0).unwrap(), 0.0);
+        assert_eq!(node.execute_2d(0, 10).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn build_nodes_covers_cluster() {
+        let spec = presets::hcl();
+        let nodes = build_nodes(&spec, Footprint::matmul_1d(2048), 32, );
+        assert_eq!(nodes.len(), 16);
+        assert_eq!(nodes[10].host(), "hcl11");
+    }
+
+    #[test]
+    fn nodes_have_distinct_noise_streams() {
+        let spec = presets::mini4();
+        let mut nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let t0 = nodes[0].execute(1 << 20).unwrap();
+        let t1 = nodes[1].execute(1 << 20).unwrap();
+        // distinct hardware AND distinct noise → different times
+        assert_ne!(t0, t1);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let spec = presets::mini4();
+        let run = || {
+            let mut nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+            (0..4).map(|i| nodes[i].execute(1 << 22).unwrap()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

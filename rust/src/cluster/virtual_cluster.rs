@@ -1,0 +1,470 @@
+//! The leader/worker cluster runtime.
+//!
+//! One OS thread per simulated node, real `mpsc` message channels, and a
+//! **virtual clock** on the leader: workers *report* kernel durations
+//! (computed by their [`NodeExecutor`]), and the leader folds a parallel
+//! step into virtual time as `max_i(t_i) + collectives` — the BSP
+//! accounting described in DESIGN.md §2. The real wall cost of a simulated
+//! step is microseconds, which is what lets the benches regenerate every
+//! table of the paper in seconds.
+//!
+//! The same runtime drives *real* execution: give the workers
+//! PJRT-backed executors and the reported durations are measured wall
+//! times (scaled per node), while the protocol and accounting stay
+//! identical.
+
+use super::comm::CommModel;
+use super::executor::{apply_time_cap, NodeExecutor};
+use super::faults::FaultPlan;
+use crate::dfpa::algorithm::{Benchmarker, StepReport};
+use crate::dfpa2d::nested::Benchmarker2d;
+use crate::error::{HfpmError, Result};
+use crate::util::timer::VirtualClock;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A task assignment for one step.
+#[derive(Debug, Clone, Copy)]
+enum Task {
+    OneD { units: u64 },
+    TwoD { rows: u64, width: u64 },
+}
+
+enum LeaderMsg {
+    Execute {
+        step: usize,
+        task: Task,
+        cap: Option<f64>,
+    },
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Done {
+        rank: usize,
+        time_s: f64,
+        capped: bool,
+    },
+    Failed {
+        rank: usize,
+        reason: String,
+    },
+}
+
+struct WorkerHandle {
+    tx: Sender<LeaderMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The cluster runtime. Rank 0 is the leader-side root for collectives.
+pub struct VirtualCluster {
+    comm: CommModel,
+    workers: Vec<WorkerHandle>,
+    reply_rx: Receiver<WorkerMsg>,
+    clock: VirtualClock,
+    step: usize,
+    /// Count of benchmark supersteps executed (diagnostics).
+    pub steps_run: usize,
+    /// Observations cut short by a time cap (paper optimization 4).
+    pub capped_observations: usize,
+    /// Reply timeout for hang protection.
+    timeout: Duration,
+}
+
+impl VirtualCluster {
+    /// Spawn one worker thread per executor.
+    pub fn spawn(
+        executors: Vec<Box<dyn NodeExecutor>>,
+        comm: CommModel,
+        faults: FaultPlan,
+    ) -> Self {
+        let (reply_tx, reply_rx) = channel::<WorkerMsg>();
+        let faults = Arc::new(faults);
+        let workers = executors
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut exec)| {
+                let (tx, rx) = channel::<LeaderMsg>();
+                let reply = reply_tx.clone();
+                let plan = Arc::clone(&faults);
+                let join = std::thread::Builder::new()
+                    .name(format!("worker-{rank}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                LeaderMsg::Shutdown => break,
+                                LeaderMsg::Execute { step, task, cap } => {
+                                    if plan.dies(rank, step) {
+                                        let _ = reply.send(WorkerMsg::Failed {
+                                            rank,
+                                            reason: format!("injected death at step {step}"),
+                                        });
+                                        // a dead worker stops serving
+                                        break;
+                                    }
+                                    let result = match task {
+                                        Task::OneD { units } => exec.execute(units),
+                                        Task::TwoD { rows, width } => {
+                                            exec.execute_2d(rows, width)
+                                        }
+                                    };
+                                    match result {
+                                        Ok(t) => {
+                                            let t = t * plan.slowdown(rank, step);
+                                            let (t, capped) = apply_time_cap(t, cap);
+                                            let _ = reply.send(WorkerMsg::Done {
+                                                rank,
+                                                time_s: t,
+                                                capped,
+                                            });
+                                        }
+                                        Err(e) => {
+                                            let _ = reply.send(WorkerMsg::Failed {
+                                                rank,
+                                                reason: e.to_string(),
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread");
+                WorkerHandle {
+                    tx,
+                    join: Some(join),
+                }
+            })
+            .collect();
+        Self {
+            comm,
+            workers,
+            reply_rx,
+            clock: VirtualClock::new(),
+            step: 0,
+            steps_run: 0,
+            capped_observations: 0,
+            timeout: Duration::from_secs(120),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn comm(&self) -> &CommModel {
+        &self.comm
+    }
+
+    /// Virtual time elapsed so far.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Charge an explicit virtual cost (e.g. application data distribution).
+    pub fn charge(&mut self, seconds: f64) {
+        self.clock.advance(seconds);
+    }
+
+    /// Execute one superstep: `tasks[rank] = None` sits the rank out.
+    /// Returns per-rank times (0.0 for non-participants) and the step's
+    /// virtual cost (max duration + control collectives over participants).
+    fn run_step(&mut self, tasks: &[Option<(Task, Option<f64>)>]) -> Result<StepReport> {
+        assert_eq!(tasks.len(), self.size());
+        let step = self.step;
+        self.step += 1;
+        self.steps_run += 1;
+
+        let mut expected = 0usize;
+        for (rank, t) in tasks.iter().enumerate() {
+            if let Some((task, cap)) = t {
+                self.workers[rank]
+                    .tx
+                    .send(LeaderMsg::Execute {
+                        step,
+                        task: *task,
+                        cap: *cap,
+                    })
+                    .map_err(|_| HfpmError::WorkerFailed {
+                        rank,
+                        reason: "channel closed (worker dead)".into(),
+                    })?;
+                expected += 1;
+            }
+        }
+
+        let mut times = vec![0.0f64; self.size()];
+        let mut failure: Option<HfpmError> = None;
+        for _ in 0..expected {
+            match self.reply_rx.recv_timeout(self.timeout) {
+                Ok(WorkerMsg::Done {
+                    rank,
+                    time_s,
+                    capped,
+                }) => {
+                    times[rank] = time_s;
+                    if capped {
+                        self.capped_observations += 1;
+                    }
+                }
+                Ok(WorkerMsg::Failed { rank, reason }) => {
+                    failure.get_or_insert(HfpmError::WorkerFailed { rank, reason });
+                }
+                Err(_) => {
+                    failure.get_or_insert(HfpmError::Cluster(
+                        "timed out waiting for worker replies".into(),
+                    ));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        let members: Vec<usize> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_some())
+            .map(|(r, _)| r)
+            .collect();
+        let control = self.comm.subset_control_cost(0, &members);
+        let max_t = times.iter().cloned().fold(0.0f64, f64::max);
+        let cost = max_t + control;
+        self.clock.advance(cost);
+        Ok(StepReport {
+            times,
+            virtual_cost_s: cost,
+        })
+    }
+
+    /// Run the 1D kernel with `d[rank]` units on every rank.
+    pub fn run_1d(&mut self, d: &[u64]) -> Result<StepReport> {
+        let tasks: Vec<Option<(Task, Option<f64>)>> = d
+            .iter()
+            .map(|&units| {
+                if units == 0 {
+                    None
+                } else {
+                    Some((Task::OneD { units }, None))
+                }
+            })
+            .collect();
+        self.run_step(&tasks)
+    }
+
+    /// Run the 2D kernel on an arbitrary subset (used per column).
+    pub fn run_2d_subset(
+        &mut self,
+        assignments: &[(usize, u64, u64)], // (rank, rows, width)
+        cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let mut tasks: Vec<Option<(Task, Option<f64>)>> = vec![None; self.size()];
+        for &(rank, rows, width) in assignments {
+            if rows > 0 && width > 0 {
+                tasks[rank] = Some((Task::TwoD { rows, width }, cap));
+            }
+        }
+        self.run_step(&tasks)
+    }
+}
+
+impl Drop for VirtualCluster {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(LeaderMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Benchmarker for VirtualCluster {
+    fn processors(&self) -> usize {
+        self.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        self.run_1d(d)
+    }
+}
+
+/// Grid view over a [`VirtualCluster`] for the 2D algorithm: processor
+/// `(i, j)` of the `p×q` grid is cluster rank `j·p + i` (column-major, so
+/// one column's processors are contiguous).
+pub struct VirtualCluster2d {
+    pub cluster: VirtualCluster,
+    p: usize,
+    q: usize,
+}
+
+impl VirtualCluster2d {
+    pub fn new(cluster: VirtualCluster, p: usize, q: usize) -> Result<Self> {
+        if p * q != cluster.size() {
+            return Err(HfpmError::InvalidArg(format!(
+                "grid {p}×{q} does not match cluster size {}",
+                cluster.size()
+            )));
+        }
+        Ok(Self { cluster, p, q })
+    }
+
+    pub fn rank(&self, i: usize, j: usize) -> usize {
+        j * self.p + i
+    }
+}
+
+impl Benchmarker2d for VirtualCluster2d {
+    fn grid(&self) -> (usize, usize) {
+        (self.p, self.q)
+    }
+
+    fn run_column(
+        &mut self,
+        j: usize,
+        width: u64,
+        heights: &[u64],
+        time_cap_s: Option<f64>,
+    ) -> Result<StepReport> {
+        assert_eq!(heights.len(), self.p);
+        let assignments: Vec<(usize, u64, u64)> = heights
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| (self.rank(i, j), h, width))
+            .collect();
+        let report = self.cluster.run_2d_subset(&assignments, time_cap_s)?;
+        // re-index the full-cluster times vector to column-local order
+        let times: Vec<f64> = (0..self.p)
+            .map(|i| report.times[self.rank(i, j)])
+            .collect();
+        Ok(StepReport {
+            times,
+            virtual_cost_s: report.virtual_cost_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::build_nodes;
+    use crate::cluster::presets;
+    use crate::dfpa::{run_dfpa, DfpaOptions};
+    use crate::fpm::analytic::Footprint;
+
+    fn mini_cluster(noise: f64) -> VirtualCluster {
+        let mut spec = presets::mini4();
+        spec.noise_rel = noise;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+    }
+
+    #[test]
+    fn superstep_reports_all_ranks() {
+        let mut c = mini_cluster(0.0);
+        let r = c.run_1d(&[1000, 1000, 1000, 1000]).unwrap();
+        assert_eq!(r.times.len(), 4);
+        assert!(r.times.iter().all(|&t| t > 0.0));
+        assert!(r.virtual_cost_s >= r.times.iter().cloned().fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn zero_units_sit_out() {
+        let mut c = mini_cluster(0.0);
+        let r = c.run_1d(&[1000, 0, 1000, 0]).unwrap();
+        assert_eq!(r.times[1], 0.0);
+        assert_eq!(r.times[3], 0.0);
+        assert!(r.times[0] > 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_accumulates() {
+        let mut c = mini_cluster(0.0);
+        let t0 = c.now();
+        c.run_1d(&[1 << 20; 4]).unwrap();
+        let t1 = c.now();
+        c.run_1d(&[1 << 20; 4]).unwrap();
+        let t2 = c.now();
+        assert!(t0 < t1 && t1 < t2);
+    }
+
+    #[test]
+    fn dfpa_runs_on_virtual_cluster() {
+        let mut c = mini_cluster(0.0);
+        let r = run_dfpa(2_000_000, &mut c, DfpaOptions::with_epsilon(0.1)).unwrap();
+        assert!(r.converged, "imbalance {}", r.imbalance);
+        assert_eq!(r.d.iter().sum::<u64>(), 2_000_000);
+        // slow node p4 (2.9 GHz Celeron) gets fewer units than fast p1
+        assert!(r.d[3] < r.d[0], "d = {:?}", r.d);
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_error() {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        let faults = FaultPlan::none().with_death(2, 1);
+        let mut c = VirtualCluster::spawn(execs, CommModel::new(spec), faults);
+        assert!(c.run_1d(&[100; 4]).is_ok()); // step 0 fine
+        let err = c.run_1d(&[100; 4]).unwrap_err(); // step 1: rank 2 dies
+        match err {
+            HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 2),
+            other => panic!("unexpected error {other}"),
+        }
+    }
+
+    #[test]
+    fn straggler_slows_but_succeeds() {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let mk = || {
+            build_nodes(&spec, Footprint::affine(16.0, 0.0), 32)
+                .into_iter()
+                .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+                .collect::<Vec<_>>()
+        };
+        let mut healthy =
+            VirtualCluster::spawn(mk(), CommModel::new(spec.clone()), FaultPlan::none());
+        let t_h = healthy.run_1d(&[1 << 20; 4]).unwrap().times[1];
+        let faults = FaultPlan::none().with_straggler(1, 5.0, 0);
+        let mut slow = VirtualCluster::spawn(mk(), CommModel::new(spec.clone()), faults);
+        let t_s = slow.run_1d(&[1 << 20; 4]).unwrap().times[1];
+        assert!((t_s / t_h - 5.0).abs() < 0.01, "{t_s} vs {t_h}");
+    }
+
+    #[test]
+    fn grid_view_maps_columns() {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        let c = VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none());
+        let mut g = VirtualCluster2d::new(c, 2, 2).unwrap();
+        assert_eq!(g.rank(0, 1), 2);
+        let r = g.run_column(1, 8, &[16, 16], None).unwrap();
+        assert_eq!(r.times.len(), 2);
+        assert!(r.times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn grid_size_mismatch_rejected() {
+        let c = mini_cluster(0.0);
+        assert!(VirtualCluster2d::new(c, 3, 2).is_err());
+    }
+}

@@ -1,0 +1,284 @@
+//! Typed cluster specification — the simulated analogue of the paper's
+//! Table 1 (HCL cluster) and the Grid5000 testbed description.
+//!
+//! A `ClusterSpec` is loadable from a mini-TOML file (see `configs/hcl.toml`)
+//! or constructed programmatically by `cluster::presets`.
+
+use super::parser::{Document, TableMap};
+use crate::error::{HfpmError, Result};
+
+/// Hardware description of one node, the inputs to the analytic speed model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    /// Host name (e.g. "hcl11").
+    pub host: String,
+    /// Model string, informational (e.g. "IBM X-Series 306").
+    pub model: String,
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// Front-side bus / memory-bus speed in MHz (Table 1 column "Bus");
+    /// drives the memory-bound speed regime of the analytic model.
+    pub bus_mhz: f64,
+    /// Sustained floating "computation units" (1 mul + 1 add) per cycle the
+    /// kernel achieves when working in cache. Captures ILP/SIMD quality of
+    /// the microarchitecture; ~0.5–1.5 for the naive kernels of the paper era.
+    pub units_per_cycle: f64,
+    /// L2 cache size in KiB (the last-level cache on the Table 1 machines).
+    pub l2_kib: u64,
+    /// Main memory in MiB.
+    pub ram_mib: u64,
+    /// Site id (0 = local cluster; Grid5000 nodes spread over sites 0..7).
+    pub site: usize,
+}
+
+impl MachineSpec {
+    pub fn new(
+        host: &str,
+        model: &str,
+        clock_ghz: f64,
+        bus_mhz: f64,
+        units_per_cycle: f64,
+        l2_kib: u64,
+        ram_mib: u64,
+    ) -> Self {
+        Self {
+            host: host.to_string(),
+            model: model.to_string(),
+            clock_ghz,
+            bus_mhz,
+            units_per_cycle,
+            l2_kib,
+            ram_mib,
+            site: 0,
+        }
+    }
+
+    pub fn with_site(mut self, site: usize) -> Self {
+        self.site = site;
+        self
+    }
+
+    /// Peak in-cache speed in computation units per second.
+    pub fn peak_units_per_s(&self) -> f64 {
+        self.clock_ghz * 1e9 * self.units_per_cycle
+    }
+}
+
+/// Hockney point-to-point model parameters: `t(m) = alpha + beta * m` for an
+/// m-byte message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Latency in seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time in seconds (1/bandwidth).
+    pub beta: f64,
+}
+
+impl LinkModel {
+    pub const fn new(alpha: f64, beta: f64) -> Self {
+        Self { alpha, beta }
+    }
+
+    /// Gigabit Ethernet with a decent switch (the HCL cluster fabric).
+    pub const GIGE: LinkModel = LinkModel::new(50e-6, 8.3e-9);
+
+    /// Grid5000 inter-site WAN (RTT-dominated).
+    pub const WAN: LinkModel = LinkModel::new(5e-3, 10e-9);
+
+    /// Transfer time of an m-byte message.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+}
+
+/// Full cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<MachineSpec>,
+    /// Link model within a site.
+    pub intra_site: LinkModel,
+    /// Link model between distinct sites.
+    pub inter_site: LinkModel,
+    /// Relative stddev of multiplicative timing noise applied by the
+    /// simulator (the paper's measurements fluctuate a few percent).
+    pub noise_rel: f64,
+    /// RNG seed for the cluster's noise streams.
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    pub fn size(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Link model between two node ranks.
+    pub fn link(&self, a: usize, b: usize) -> LinkModel {
+        if self.nodes[a].site == self.nodes[b].site {
+            self.intra_site
+        } else {
+            self.inter_site
+        }
+    }
+
+    /// Heterogeneity as the paper defines it: ratio of fastest to slowest
+    /// peak speeds.
+    pub fn peak_heterogeneity(&self) -> f64 {
+        let peaks: Vec<f64> = self.nodes.iter().map(|n| n.peak_units_per_s()).collect();
+        let max = peaks.iter().cloned().fold(f64::MIN, f64::max);
+        let min = peaks.iter().cloned().fold(f64::MAX, f64::min);
+        max / min
+    }
+
+    /// Restrict to a subset of node indices (e.g. the paper excludes hcl07
+    /// in Tables 2/3).
+    pub fn subset(&self, keep: &[usize]) -> ClusterSpec {
+        let nodes = keep.iter().map(|&i| self.nodes[i].clone()).collect();
+        ClusterSpec {
+            name: format!("{}-subset", self.name),
+            nodes,
+            ..self.clone()
+        }
+    }
+
+    /// Drop a node by host name.
+    pub fn without_host(&self, host: &str) -> ClusterSpec {
+        let nodes: Vec<MachineSpec> = self
+            .nodes
+            .iter()
+            .filter(|n| n.host != host)
+            .cloned()
+            .collect();
+        ClusterSpec {
+            name: format!("{}-excl-{host}", self.name),
+            nodes,
+            ..self.clone()
+        }
+    }
+
+    /// Load a cluster spec from a mini-TOML document.
+    pub fn from_document(doc: &Document) -> Result<ClusterSpec> {
+        let name = Document::get_str_or(&doc.root, "name", "cluster")?;
+        let noise_rel = Document::get_float_or(&doc.root, "noise_rel", 0.02)?;
+        let seed = Document::get_int_or(&doc.root, "seed", 0x5EED)? as u64;
+
+        let parse_link = |map: Option<&TableMap>, def: LinkModel| -> Result<LinkModel> {
+            match map {
+                None => Ok(def),
+                Some(m) => Ok(LinkModel::new(
+                    Document::get_float_or(m, "alpha", def.alpha)?,
+                    Document::get_float_or(m, "beta", def.beta)?,
+                )),
+            }
+        };
+        let intra_site = parse_link(doc.sections.get("intra_site"), LinkModel::GIGE)?;
+        let inter_site = parse_link(doc.sections.get("inter_site"), LinkModel::WAN)?;
+
+        let node_tables = doc
+            .table_arrays
+            .get("node")
+            .ok_or_else(|| HfpmError::Config("cluster spec needs at least one [[node]]".into()))?;
+        let mut nodes = Vec::with_capacity(node_tables.len());
+        for t in node_tables {
+            nodes.push(MachineSpec {
+                host: Document::get_str(t, "host")?,
+                model: Document::get_str_or(t, "model", "")?,
+                clock_ghz: Document::get_float(t, "clock_ghz")?,
+                bus_mhz: Document::get_float_or(t, "bus_mhz", 800.0)?,
+                units_per_cycle: Document::get_float_or(t, "units_per_cycle", 0.8)?,
+                l2_kib: Document::get_int(t, "l2_kib")? as u64,
+                ram_mib: Document::get_int(t, "ram_mib")? as u64,
+                site: Document::get_int_or(t, "site", 0)? as usize,
+            });
+        }
+        if nodes.is_empty() {
+            return Err(HfpmError::Config("cluster spec has no nodes".into()));
+        }
+        Ok(ClusterSpec {
+            name,
+            nodes,
+            intra_site,
+            inter_site,
+            noise_rel,
+            seed,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<ClusterSpec> {
+        Self::from_document(&Document::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        name = "mini"
+        noise_rel = 0.01
+        seed = 7
+        [intra_site]
+        alpha = 1.0e-4
+        beta = 1.0e-8
+        [[node]]
+        host = "a"
+        clock_ghz = 3.0
+        l2_kib = 1024
+        ram_mib = 1024
+        [[node]]
+        host = "b"
+        clock_ghz = 1.5
+        units_per_cycle = 0.5
+        l2_kib = 256
+        ram_mib = 256
+        site = 1
+    "#;
+
+    #[test]
+    fn loads_sample() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let spec = ClusterSpec::from_document(&doc).unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.size(), 2);
+        assert_eq!(spec.nodes[1].host, "b");
+        assert_eq!(spec.nodes[1].site, 1);
+        assert!((spec.intra_site.alpha - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_selection_by_site() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let spec = ClusterSpec::from_document(&doc).unwrap();
+        assert_eq!(spec.link(0, 0), spec.intra_site);
+        assert_eq!(spec.link(0, 1), spec.inter_site);
+    }
+
+    #[test]
+    fn heterogeneity_ratio() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let spec = ClusterSpec::from_document(&doc).unwrap();
+        // peaks: 3.0*0.8 vs 1.5*0.5 → ratio 2.4/0.75 = 3.2
+        assert!((spec.peak_heterogeneity() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn without_host_drops() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let spec = ClusterSpec::from_document(&doc).unwrap().without_host("a");
+        assert_eq!(spec.size(), 1);
+        assert_eq!(spec.nodes[0].host, "b");
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let doc = Document::parse("name = \"x\"\n").unwrap();
+        assert!(ClusterSpec::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let l = LinkModel::new(1e-3, 1e-9);
+        assert!((l.transfer_s(1_000_000) - 2e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration: mini-TOML parsing and typed cluster/experiment specs.
+
+pub mod cluster_spec;
+pub mod parser;
+
+pub use cluster_spec::{ClusterSpec, LinkModel, MachineSpec};
+pub use parser::{Document, TableMap, Value};

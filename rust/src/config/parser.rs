@@ -1,0 +1,368 @@
+//! Mini-TOML parser.
+//!
+//! The offline environment has no `serde`/`toml`, so cluster and experiment
+//! configuration files are parsed with this small, strict subset of TOML:
+//!
+//! - `[section]` and `[[array-of-tables]]` headers
+//! - `key = value` with string, integer, float, bool and flat-array values
+//! - `#` comments, blank lines
+//!
+//! That covers every config this project ships (see `configs/*.toml`).
+
+use crate::error::{HfpmError, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (TOML-style ergonomics).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One table of key→value pairs.
+pub type TableMap = BTreeMap<String, Value>;
+
+/// A parsed document: the root table, named sections, and arrays-of-tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub root: TableMap,
+    pub sections: BTreeMap<String, TableMap>,
+    pub table_arrays: BTreeMap<String, Vec<TableMap>>,
+}
+
+impl Document {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Document> {
+        enum Target {
+            Root,
+            Section(String),
+            ArrayElem(String),
+        }
+        let mut doc = Document::default();
+        let mut target = Target::Root;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| {
+                HfpmError::Config(format!("line {}: {} in {:?}", lineno + 1, msg, raw.trim()))
+            };
+
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(err("empty table-array name"));
+                }
+                doc.table_arrays.entry(name.clone()).or_default().push(TableMap::new());
+                target = Target::ArrayElem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                doc.sections.entry(name.clone()).or_default();
+                target = Target::Section(name);
+            } else if let Some(eq) = find_top_level_eq(line) {
+                let key = line[..eq].trim();
+                let val_text = line[eq + 1..].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(val_text)
+                    .ok_or_else(|| err(&format!("cannot parse value `{val_text}`")))?;
+                let map = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Section(name) => doc.sections.get_mut(name).unwrap(),
+                    Target::ArrayElem(name) => {
+                        doc.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                if map.insert(key.to_string(), value).is_some() {
+                    return Err(err(&format!("duplicate key `{key}`")));
+                }
+            } else {
+                return Err(err("expected `[section]` or `key = value`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Parse from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Document> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            HfpmError::Config(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Typed getters with section-qualified error messages.
+    pub fn get<'a>(map: &'a TableMap, key: &str) -> Result<&'a Value> {
+        map.get(key)
+            .ok_or_else(|| HfpmError::Config(format!("missing key `{key}`")))
+    }
+
+    pub fn get_str(map: &TableMap, key: &str) -> Result<String> {
+        Self::get(map, key)?
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be a string")))
+    }
+
+    pub fn get_int(map: &TableMap, key: &str) -> Result<i64> {
+        Self::get(map, key)?
+            .as_int()
+            .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be an integer")))
+    }
+
+    pub fn get_float(map: &TableMap, key: &str) -> Result<f64> {
+        Self::get(map, key)?
+            .as_float()
+            .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be a number")))
+    }
+
+    pub fn get_bool(map: &TableMap, key: &str) -> Result<bool> {
+        Self::get(map, key)?
+            .as_bool()
+            .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be a bool")))
+    }
+
+    pub fn get_float_or(map: &TableMap, key: &str, default: f64) -> Result<f64> {
+        match map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be a number"))),
+        }
+    }
+
+    pub fn get_int_or(map: &TableMap, key: &str, default: i64) -> Result<i64> {
+        match map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be an integer"))),
+        }
+    }
+
+    pub fn get_str_or(map: &TableMap, key: &str, default: &str) -> Result<String> {
+        match map.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| HfpmError::Config(format!("key `{key}` must be a string"))),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the first `=` outside of string literals / brackets.
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(text: &str) -> Option<Value> {
+    let t = text.trim();
+    if t.is_empty() {
+        return None;
+    }
+    if let Some(inner) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        // no escape support beyond doubled quotes — configs don't need it
+        return Some(Value::Str(inner.to_string()));
+    }
+    if t == "true" {
+        return Some(Value::Bool(true));
+    }
+    if t == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Some(Value::Array(vec![]));
+        }
+        let mut vals = Vec::new();
+        for part in split_top_level(inner) {
+            vals.push(parse_value(part.trim())?);
+        }
+        return Some(Value::Array(vals));
+    }
+    // numbers: underscores allowed as separators
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Split a flat array body on commas outside string literals.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_root_and_sections() {
+        let doc = Document::parse(
+            r#"
+            name = "hcl"   # a comment
+            seed = 42
+            [comm]
+            alpha = 5.0e-5
+            beta = 8.0e-9
+            fast = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(Document::get_str(&doc.root, "name").unwrap(), "hcl");
+        assert_eq!(Document::get_int(&doc.root, "seed").unwrap(), 42);
+        let comm = &doc.sections["comm"];
+        assert!((Document::get_float(comm, "alpha").unwrap() - 5.0e-5).abs() < 1e-18);
+        assert!(Document::get_bool(comm, "fast").unwrap());
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = Document::parse(
+            r#"
+            [[node]]
+            host = "hcl01"
+            ram_mb = 1024
+            [[node]]
+            host = "hcl05"
+            ram_mb = 256
+            "#,
+        )
+        .unwrap();
+        let nodes = &doc.table_arrays["node"];
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(Document::get_str(&nodes[1], "host").unwrap(), "hcl05");
+        assert_eq!(Document::get_int(&nodes[1], "ram_mb").unwrap(), 256);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Document::parse("sizes = [1024, 2048, 4096]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let sizes = doc.root["sizes"].as_array().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_int(), Some(4096));
+        let names = doc.root["names"].as_array().unwrap();
+        assert_eq!(names[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::parse("x = 3\n").unwrap();
+        assert_eq!(Document::get_float(&doc.root, "x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = Document::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(Document::get_int(&doc.root, "n").unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(Document::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Document::parse("this is not toml\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = Document::parse("s = \"a # b\"\n").unwrap();
+        assert_eq!(doc.root["s"].as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = Document::parse("").unwrap();
+        assert_eq!(Document::get_float_or(&doc.root, "x", 1.5).unwrap(), 1.5);
+        assert_eq!(Document::get_int_or(&doc.root, "n", 7).unwrap(), 7);
+        assert_eq!(Document::get_str_or(&doc.root, "s", "d").unwrap(), "d");
+    }
+}

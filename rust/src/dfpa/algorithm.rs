@@ -1,0 +1,453 @@
+//! The DFPA leader-side driver (paper §2, steps 1–6).
+
+use super::trace::IterationRecord;
+use crate::error::{HfpmError, Result};
+use crate::fpm::PiecewiseModel;
+use crate::partition::{partition_with, GeometricOptions};
+use crate::util::stats::max_relative_imbalance;
+use crate::util::timer::Stopwatch;
+
+/// The result of one parallel benchmark step across all processors.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Observed execution time of each processor on its assignment
+    /// (virtual seconds on the simulated cluster, wall seconds in real
+    /// execution mode).
+    pub times: Vec<f64>,
+    /// Total virtual cost of the step as seen by the leader: the slowest
+    /// benchmark plus the scatter/gather collectives.
+    pub virtual_cost_s: f64,
+}
+
+/// Something that can execute a distribution on all processors in parallel
+/// and report per-processor times. Implemented by the cluster runtime
+/// (thread workers + virtual clock) and by test/analytic stubs.
+pub trait Benchmarker {
+    /// Number of processors.
+    fn processors(&self) -> usize;
+
+    /// Execute `d[i]` units on processor `i` for all `i` simultaneously;
+    /// return observed times. `d` has length `processors()`. Entries may
+    /// be 0 (that processor sits the step out and reports time 0).
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport>;
+}
+
+/// DFPA tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct DfpaOptions {
+    /// Termination accuracy ε (paper: 10% and 2.5% in the experiments).
+    pub epsilon: f64,
+    /// Hard iteration bound (the paper's runs need ≤ ~75).
+    pub max_iters: usize,
+    /// Geometric partitioner options.
+    pub geometric: GeometricOptions,
+}
+
+impl Default for DfpaOptions {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.025,
+            max_iters: 100,
+            geometric: GeometricOptions::default(),
+        }
+    }
+}
+
+impl DfpaOptions {
+    pub fn with_epsilon(epsilon: f64) -> Self {
+        Self {
+            epsilon,
+            ..Default::default()
+        }
+    }
+}
+
+/// The outcome of a DFPA run.
+#[derive(Debug, Clone)]
+pub struct DfpaResult {
+    /// Final distribution (Σ = n).
+    pub d: Vec<u64>,
+    /// Final observed times.
+    pub times: Vec<f64>,
+    /// Iterations executed (= number of parallel benchmark steps).
+    pub iterations: usize,
+    /// Whether the ε criterion was met (false only if `max_iters` hit).
+    pub converged: bool,
+    /// Final imbalance.
+    pub imbalance: f64,
+    /// The partial FPM estimate built for each processor.
+    pub models: Vec<PiecewiseModel>,
+    /// Total virtual cost of all benchmark steps + collectives — the
+    /// "DFPA execution time" column of the paper's Tables 2–4.
+    pub total_virtual_s: f64,
+    /// Real wall time the leader spent in model refinement +
+    /// re-partitioning (the algorithmic overhead).
+    pub partition_wall_s: f64,
+    /// Per-iteration trace (Figs 2 and 6).
+    pub records: Vec<IterationRecord>,
+}
+
+impl DfpaResult {
+    /// Experimental points measured per processor (Table 2, column 6 is
+    /// the max over processors — equal to `iterations` by construction).
+    pub fn points_per_processor(&self) -> usize {
+        self.models.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+}
+
+/// Even initial distribution: `n/p` each, remainder spread over the first
+/// `n % p` processors (paper step 1).
+pub fn even_distribution(n: u64, p: usize) -> Vec<u64> {
+    let base = n / p as u64;
+    let rem = (n % p as u64) as usize;
+    (0..p)
+        .map(|i| base + if i < rem { 1 } else { 0 })
+        .collect()
+}
+
+/// Run DFPA: balance `n` units over the benchmarker's processors.
+pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Result<DfpaResult> {
+    let p = bench.processors();
+    if p == 0 {
+        return Err(HfpmError::Partition("no processors".into()));
+    }
+    if n == 0 {
+        return Err(HfpmError::InvalidArg("n must be positive".into()));
+    }
+    if opts.epsilon <= 0.0 {
+        return Err(HfpmError::InvalidArg(format!(
+            "epsilon must be positive, got {}",
+            opts.epsilon
+        )));
+    }
+
+    let mut models: Vec<PiecewiseModel> = vec![PiecewiseModel::new(); p];
+    let mut records: Vec<IterationRecord> = Vec::new();
+    let mut total_virtual = 0.0f64;
+    let mut partition_wall = 0.0f64;
+    // best (lowest-imbalance) distribution seen, for the stagnation exit
+    let mut best: Option<(f64, Vec<u64>, Vec<f64>)> = None;
+    let mut stagnant = 0usize;
+    let mut since_best = 0usize;
+
+    // step 1: even distribution
+    let mut d = even_distribution(n, p);
+
+    for iter in 0..opts.max_iters {
+        // parallel benchmark + gather (steps 1/4)
+        let report = bench.run_parallel(&d)?;
+        if report.times.len() != p {
+            return Err(HfpmError::Cluster(format!(
+                "benchmarker returned {} times for {p} processors",
+                report.times.len()
+            )));
+        }
+        total_virtual += report.virtual_cost_s;
+
+        // observed speeds; processors with d_i = 0 contribute no point
+        let speeds: Vec<f64> = d
+            .iter()
+            .zip(&report.times)
+            .map(|(&di, &ti)| if di == 0 || ti <= 0.0 { 0.0 } else { di as f64 / ti })
+            .collect();
+
+        // the imbalance test only ranges over processors that worked
+        let active_times: Vec<f64> = report
+            .times
+            .iter()
+            .zip(&d)
+            .filter(|(_, &di)| di > 0)
+            .map(|(&t, _)| t)
+            .collect();
+        let imbalance = max_relative_imbalance(&active_times);
+
+        // refine models with the new observations (step 5 ELSE branch) —
+        // done before the convergence check so the returned models include
+        // the final observation.
+        let sw = Stopwatch::start();
+        for i in 0..p {
+            if d[i] > 0 && speeds[i] > 0.0 {
+                models[i].insert(d[i] as f64, speeds[i]);
+            }
+        }
+
+        records.push(IterationRecord {
+            iter,
+            d: d.clone(),
+            times: report.times.clone(),
+            speeds: speeds.clone(),
+            imbalance,
+            virtual_cost_s: report.virtual_cost_s,
+            partition_wall_s: 0.0, // patched below if we re-partition
+        });
+
+        // steps 2/5: termination test
+        if imbalance <= opts.epsilon {
+            partition_wall += sw.elapsed_s();
+            return Ok(DfpaResult {
+                d,
+                times: report.times,
+                iterations: iter + 1,
+                converged: true,
+                imbalance,
+                models,
+                total_virtual_s: total_virtual,
+                partition_wall_s: partition_wall,
+                records,
+            });
+        }
+
+        // step 3: re-partition on the refined estimates.
+        // Processors that have no model point yet (assigned 0 units) are
+        // given the slowest observed speed as a pessimistic constant.
+        let min_speed = speeds
+            .iter()
+            .cloned()
+            .filter(|&s| s > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        for (i, m) in models.iter_mut().enumerate() {
+            if m.is_empty() {
+                let guess = if min_speed.is_finite() { min_speed } else { 1.0 };
+                m.insert(1.0_f64.max(d[i] as f64), guess);
+            }
+        }
+        let part = partition_with(n, &models, opts.geometric)?;
+        let wall = sw.elapsed_s();
+        partition_wall += wall;
+        records.last_mut().unwrap().partition_wall_s = wall;
+
+        // track the best distribution seen so far
+        let improved = match &best {
+            Some((b, _, _)) => imbalance < *b * 0.98,
+            None => true,
+        };
+        if improved {
+            best = Some((imbalance, d.clone(), report.times.clone()));
+            since_best = 0;
+        } else {
+            since_best += 1;
+        }
+        // plateau: no meaningful improvement for 6 consecutive iterations —
+        // the remaining imbalance is the platform's noise/quantization
+        // floor for this ε, not a modeling error
+        if since_best >= 6 {
+            break;
+        }
+
+        // stagnation: the models reached a fixpoint — re-benchmarking the
+        // same distribution only refreshes measurement noise. The residual
+        // imbalance is then a *quantization* floor (±1 unit on a small
+        // allocation can exceed ε), not a modeling error: stop instead of
+        // burning benchmark time.
+        if part.d == d {
+            stagnant += 1;
+            if stagnant >= 3 {
+                break;
+            }
+        } else {
+            stagnant = 0;
+        }
+        d = part.d;
+    }
+
+    // max_iters or stagnation: report the best distribution observed,
+    // flagged as non-converged. Callers decide whether that is an error.
+    let (imbalance, d, times) = best.unwrap_or_else(|| {
+        let last = records.last().expect("at least one iteration ran");
+        (last.imbalance, d.clone(), last.times.clone())
+    });
+    Ok(DfpaResult {
+        d,
+        times,
+        iterations: records.len(),
+        converged: false,
+        imbalance,
+        models,
+        total_virtual_s: total_virtual,
+        partition_wall_s: partition_wall,
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpm::{AnalyticModel, ConstantModel, SpeedFunction};
+    use crate::fpm::analytic::Footprint;
+    use crate::config::MachineSpec;
+    use crate::util::rng::Pcg32;
+
+    /// Benchmarker over ground-truth speed functions, optional noise.
+    pub struct ModelBench<M> {
+        pub truths: Vec<M>,
+        pub noise_rel: f64,
+        pub rng: Pcg32,
+        pub steps: usize,
+    }
+
+    impl<M: SpeedFunction> ModelBench<M> {
+        pub fn new(truths: Vec<M>, noise_rel: f64) -> Self {
+            Self {
+                truths,
+                noise_rel,
+                rng: Pcg32::seeded(0xD15A),
+                steps: 0,
+            }
+        }
+    }
+
+    impl<M: SpeedFunction> Benchmarker for ModelBench<M> {
+        fn processors(&self) -> usize {
+            self.truths.len()
+        }
+
+        fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+            self.steps += 1;
+            let times: Vec<f64> = d
+                .iter()
+                .zip(&self.truths)
+                .map(|(&di, m)| {
+                    if di == 0 {
+                        0.0
+                    } else {
+                        m.time(di as f64) * self.rng.noise_factor(self.noise_rel)
+                    }
+                })
+                .collect();
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            Ok(StepReport {
+                times,
+                virtual_cost_s: max,
+            })
+        }
+    }
+
+    #[test]
+    fn even_distribution_sums() {
+        assert_eq!(even_distribution(10, 3), vec![4, 3, 3]);
+        assert_eq!(even_distribution(9, 3), vec![3, 3, 3]);
+        assert_eq!(even_distribution(2, 3), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn homogeneous_converges_immediately() {
+        let mut b = ModelBench::new(vec![ConstantModel(10.0); 4], 0.0);
+        let r = run_dfpa(100, &mut b, DfpaOptions::with_epsilon(0.05)).unwrap();
+        assert!(r.converged);
+        assert_eq!(r.iterations, 1); // the even distribution already balances
+        assert_eq!(r.d, vec![25; 4]);
+    }
+
+    #[test]
+    fn constant_heterogeneous_converges_in_two() {
+        let mut b = ModelBench::new(
+            vec![ConstantModel(10.0), ConstantModel(30.0)],
+            0.0,
+        );
+        let r = run_dfpa(400, &mut b, DfpaOptions::with_epsilon(0.02)).unwrap();
+        assert!(r.converged);
+        assert_eq!(r.d.iter().sum::<u64>(), 400);
+        assert_eq!(r.d, vec![100, 300]);
+        assert!(r.iterations <= 3, "took {}", r.iterations);
+    }
+
+    #[test]
+    fn analytic_models_converge() {
+        // two nodes with different paging points: the hard case
+        let fp = Footprint::affine(16.0, 0.0);
+        let a = AnalyticModel::from_spec(
+            &MachineSpec::new("big", "", 3.0, 800.0, 0.4, 1024, 1024),
+            fp,
+        );
+        let b = AnalyticModel::from_spec(
+            &MachineSpec::new("small", "", 3.6, 800.0, 0.4, 2048, 256),
+            fp,
+        );
+        let mut bench = ModelBench::new(vec![a, b], 0.0);
+        // 30M units → 480 MB total: the small node pages if given half
+        let r = run_dfpa(30_000_000, &mut bench, DfpaOptions::with_epsilon(0.05)).unwrap();
+        assert!(r.converged, "imbalance {}", r.imbalance);
+        assert_eq!(r.d.iter().sum::<u64>(), 30_000_000);
+        assert!(r.imbalance <= 0.05);
+        // the small-RAM node must have been protected from paging
+        let small_bytes = 16.0 * r.d[1] as f64;
+        assert!(
+            small_bytes < 256.0 * 1024.0 * 1024.0,
+            "small node still paging: {small_bytes} bytes"
+        );
+    }
+
+    #[test]
+    fn noisy_convergence_with_loose_epsilon() {
+        let fp = Footprint::affine(16.0, 0.0);
+        let truths: Vec<AnalyticModel> = [(3.4, 1024u64), (1.8, 1024), (2.9, 256), (3.6, 2048)]
+            .iter()
+            .map(|&(ghz, ram)| {
+                AnalyticModel::from_spec(
+                    &MachineSpec::new("n", "", ghz, 800.0, 0.4, 1024, ram),
+                    fp,
+                )
+            })
+            .collect();
+        let mut bench = ModelBench::new(truths, 0.02);
+        let r = run_dfpa(20_000_000, &mut bench, DfpaOptions::with_epsilon(0.10)).unwrap();
+        assert!(r.converged, "imbalance {}", r.imbalance);
+        assert!(r.iterations <= 30, "iterations {}", r.iterations);
+    }
+
+    #[test]
+    fn model_points_equal_iterations() {
+        let mut b = ModelBench::new(
+            vec![ConstantModel(5.0), ConstantModel(25.0)],
+            0.0,
+        );
+        let r = run_dfpa(300, &mut b, DfpaOptions::with_epsilon(0.01)).unwrap();
+        // every iteration adds ≤ 1 point per processor
+        assert!(r.points_per_processor() <= r.iterations);
+    }
+
+    #[test]
+    fn zero_n_is_error() {
+        let mut b = ModelBench::new(vec![ConstantModel(1.0)], 0.0);
+        assert!(run_dfpa(0, &mut b, DfpaOptions::default()).is_err());
+    }
+
+    #[test]
+    fn bad_epsilon_is_error() {
+        let mut b = ModelBench::new(vec![ConstantModel(1.0)], 0.0);
+        assert!(run_dfpa(10, &mut b, DfpaOptions::with_epsilon(0.0)).is_err());
+    }
+
+    #[test]
+    fn max_iters_flags_nonconvergence() {
+        // extremely noisy platform + tiny epsilon: cannot converge
+        let mut b = ModelBench::new(vec![ConstantModel(10.0), ConstantModel(20.0)], 0.5);
+        let opts = DfpaOptions {
+            epsilon: 1e-6,
+            max_iters: 5,
+            ..Default::default()
+        };
+        let r = run_dfpa(1000, &mut b, opts).unwrap();
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 5);
+        assert_eq!(r.d.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn trace_records_are_complete() {
+        let mut b = ModelBench::new(
+            vec![ConstantModel(10.0), ConstantModel(40.0)],
+            0.0,
+        );
+        let r = run_dfpa(500, &mut b, DfpaOptions::with_epsilon(0.02)).unwrap();
+        assert_eq!(r.records.len(), r.iterations);
+        for (k, rec) in r.records.iter().enumerate() {
+            assert_eq!(rec.iter, k);
+            assert_eq!(rec.d.iter().sum::<u64>(), 500);
+            assert_eq!(rec.times.len(), 2);
+        }
+        // virtual cost equals the sum over records
+        let total: f64 = r.records.iter().map(|rec| rec.virtual_cost_s).sum();
+        assert!((total - r.total_virtual_s).abs() < 1e-12);
+    }
+}

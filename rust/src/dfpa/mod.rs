@@ -1,0 +1,26 @@
+//! DFPA — the Distributed Functional Partitioning Algorithm (paper §2).
+//!
+//! The paper's main contribution: balance `n` computation units across `p`
+//! heterogeneous processors whose speed functions are **not known a
+//! priori**, to a relative accuracy ε, by alternating
+//!
+//! 1. a parallel benchmark of the current distribution (observing
+//!    `t_i(d_i)` on every processor),
+//! 2. a refinement of each processor's piecewise-linear partial FPM with
+//!    the newly observed point `(d_i, d_i / t_i(d_i))`, and
+//! 3. a re-partitioning with the geometric algorithm of ref. [16] applied
+//!    to the refined estimates,
+//!
+//! until `max_{i,j} |t_i − t_j| / t_i ≤ ε`.
+//!
+//! The algorithm is *distributed* in the sense that its measurements run on
+//! all processors in parallel; the model refinement and re-partitioning run
+//! on the leader (`P_1`). This module contains the leader-side driver,
+//! generic over a [`Benchmarker`] — the cluster runtime implements it with
+//! real worker threads, tests implement it directly over speed models.
+
+pub mod algorithm;
+pub mod trace;
+
+pub use algorithm::{run_dfpa, Benchmarker, DfpaOptions, DfpaResult, StepReport};
+pub use trace::IterationRecord;

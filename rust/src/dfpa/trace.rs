@@ -1,0 +1,74 @@
+//! Per-iteration DFPA trace records — the data behind the paper's Figs 2
+//! and 6 (how the distribution and the observed speeds evolve step by
+//! step).
+
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One DFPA iteration as observed by the leader.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    /// Iteration number (0 = the initial even distribution).
+    pub iter: usize,
+    /// Units assigned to each processor this iteration.
+    pub d: Vec<u64>,
+    /// Observed execution times `t_i(d_i)` (virtual seconds).
+    pub times: Vec<f64>,
+    /// Demonstrated speeds `s_i = d_i / t_i` (units/s).
+    pub speeds: Vec<f64>,
+    /// The paper's imbalance metric `max_{i,j} |t_i − t_j| / t_i`.
+    pub imbalance: f64,
+    /// Virtual cost of this iteration (benchmark max + collectives).
+    pub virtual_cost_s: f64,
+    /// Real wall time the leader spent re-partitioning (seconds).
+    pub partition_wall_s: f64,
+}
+
+impl IterationRecord {
+    /// Write a trace to CSV in long format:
+    /// `iter,proc,d,time_s,speed,imbalance` — one row per (iter, proc).
+    pub fn write_csv(records: &[IterationRecord], path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["iter", "proc", "d", "time_s", "speed", "imbalance"],
+        )?;
+        for r in records {
+            for (p, ((&d, &t), &s)) in r.d.iter().zip(&r.times).zip(&r.speeds).enumerate() {
+                w.row(&[
+                    r.iter.to_string(),
+                    p.to_string(),
+                    d.to_string(),
+                    format!("{t:.6}"),
+                    format!("{s:.3}"),
+                    format!("{:.6}", r.imbalance),
+                ])?;
+            }
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let rec = IterationRecord {
+            iter: 0,
+            d: vec![10, 20],
+            times: vec![1.0, 1.5],
+            speeds: vec![10.0, 13.3],
+            imbalance: 0.5,
+            virtual_cost_s: 1.5,
+            partition_wall_s: 0.001,
+        };
+        let dir = std::env::temp_dir().join("hfpm_trace_test");
+        let path = dir.join("trace.csv");
+        IterationRecord::write_csv(&[rec], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iter,proc,d,time_s,speed,imbalance"));
+        assert_eq!(text.lines().count(), 3); // header + 2 procs
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

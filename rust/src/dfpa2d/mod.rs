@@ -1,0 +1,19 @@
+//! Nested 2D DFPA partitioning (paper §3.2).
+//!
+//! Partition an `m×n` block grid over a `p×q` processor grid without
+//! pre-built models:
+//!
+//! - **outer loop** — balance column widths `n_j` in proportion to the sum
+//!   of the speeds each column's processors demonstrated at the current
+//!   distribution (step (ii), [`crate::partition::column`]);
+//! - **inner loop** — for each column run DFPA over the 1D *projection* of
+//!   the processors' 2D speed surfaces at the current column width
+//!   (step (i)), building partial FPM estimates on-line.
+//!
+//! Implements the paper's four cost optimizations (§3.2, last paragraphs):
+//! benchmark-point reuse across iterations, column-width freezing,
+//! warm-started row heights, and benchmark time-capping.
+
+pub mod nested;
+
+pub use nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, Dfpa2dResult};

@@ -1,0 +1,508 @@
+//! The nested 2D DFPA partitioning driver (paper §3.2).
+
+use crate::dfpa::algorithm::StepReport;
+use crate::error::{HfpmError, Result};
+use crate::fpm::{PiecewiseModel, ScaledModel};
+use crate::partition::column::{freeze_small_changes, rebalance_widths};
+use crate::partition::{partition_with, GeometricOptions};
+use crate::util::stats::max_relative_imbalance;
+use crate::util::timer::Stopwatch;
+
+/// Executes one column's benchmark step on a (simulated or real) cluster:
+/// processor `(i, j)` runs a kernel of `heights[i] × width` block-units.
+pub trait Benchmarker2d {
+    /// Processor grid shape `(p, q)`: `p` rows × `q` columns.
+    fn grid(&self) -> (usize, usize);
+
+    /// Run column `j`'s processors in parallel on their `(heights[i],
+    /// width)` tasks; report per-processor times and the step's virtual
+    /// cost. `time_cap_s` requests the paper's optimization (4): the
+    /// benchmark may be cut off at the cap (the reported time is then the
+    /// cap, a usable lower bound on speed).
+    fn run_column(
+        &mut self,
+        j: usize,
+        width: u64,
+        heights: &[u64],
+        time_cap_s: Option<f64>,
+    ) -> Result<StepReport>;
+}
+
+/// Options for the nested algorithm.
+#[derive(Debug, Clone, Copy)]
+pub struct Dfpa2dOptions {
+    /// Global termination accuracy ε over all p·q processors.
+    pub epsilon: f64,
+    /// Inner (per-column) DFPA accuracy; defaults to ε (the paper uses the
+    /// same criterion for both loops).
+    pub epsilon_inner: f64,
+    /// Maximum outer iterations.
+    pub max_outer: usize,
+    /// Maximum inner iterations per column per outer step.
+    pub max_inner: usize,
+    /// Optimization (2): freeze a column width when its relative change is
+    /// below this threshold (0 disables).
+    pub width_freeze_rel: f64,
+    /// Optimization (4): cap each benchmark at this multiple of the
+    /// fastest time observed in the previous step (None disables).
+    pub time_cap_mult: Option<f64>,
+    pub geometric: GeometricOptions,
+}
+
+impl Default for Dfpa2dOptions {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.1,
+            epsilon_inner: 0.1,
+            max_outer: 20,
+            max_inner: 20,
+            width_freeze_rel: 0.03,
+            time_cap_mult: Some(8.0),
+            geometric: GeometricOptions::default(),
+        }
+    }
+}
+
+impl Dfpa2dOptions {
+    pub fn with_epsilon(eps: f64) -> Self {
+        Self {
+            epsilon: eps,
+            epsilon_inner: eps,
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of a nested 2D partitioning run.
+#[derive(Debug, Clone)]
+pub struct Dfpa2dResult {
+    /// Column widths (blocks), `Σ = n`.
+    pub widths: Vec<u64>,
+    /// Row heights per column: `heights[j][i]`, `Σ_i = m`.
+    pub heights: Vec<Vec<u64>>,
+    /// Final observed times `t_ij` indexed `[j][i]`.
+    pub times: Vec<Vec<f64>>,
+    /// Outer iterations executed.
+    pub outer_iterations: usize,
+    /// Total inner DFPA iterations summed over columns and outer steps —
+    /// the "DFPA iterations" column of Table 5.
+    pub inner_iterations: usize,
+    /// Global imbalance at exit.
+    pub imbalance: f64,
+    pub converged: bool,
+    /// Virtual cost of all partitioning-related benchmarks (Table 5's
+    /// "DFPA time").
+    pub total_virtual_s: f64,
+    /// Leader wall time spent in model updates + re-partitioning.
+    pub partition_wall_s: f64,
+    /// Per-processor partial model estimates (units domain), `[j][i]`.
+    pub models: Vec<Vec<PiecewiseModel>>,
+}
+
+/// Run the nested 2D DFPA over an `m×n` block grid on a `p×q` processor
+/// grid.
+///
+/// Model reuse (optimization 1) works in the *units* domain: a benchmark of
+/// `(rows, width)` contributes the point `(rows·width, speed)` to the
+/// processor's single persistent model, so observations made at one column
+/// width inform partitioning at another (footprint, and therefore speed, is
+/// dominated by the task area — see `fpm::surface`).
+pub fn run_dfpa2d<B: Benchmarker2d>(
+    m: u64,
+    n: u64,
+    bench: &mut B,
+    opts: Dfpa2dOptions,
+) -> Result<Dfpa2dResult> {
+    let (p, q) = bench.grid();
+    if p == 0 || q == 0 {
+        return Err(HfpmError::Partition("empty processor grid".into()));
+    }
+    if m < p as u64 || n < q as u64 {
+        return Err(HfpmError::InvalidArg(format!(
+            "grid {m}×{n} too small for {p}×{q} processors"
+        )));
+    }
+
+    // step 1: even initial partitioning
+    let mut widths = crate::dfpa::algorithm::even_distribution(n, q);
+    let mut heights: Vec<Vec<u64>> =
+        vec![crate::dfpa::algorithm::even_distribution(m, p); q];
+
+    // persistent per-processor models (units domain), [j][i]
+    let mut models: Vec<Vec<PiecewiseModel>> = vec![vec![PiecewiseModel::new(); p]; q];
+
+    let mut total_virtual = 0.0f64;
+    let mut partition_wall = 0.0f64;
+    let mut inner_total = 0usize;
+    let mut last_times: Vec<Vec<f64>> = vec![vec![0.0; p]; q];
+    let mut prev_fastest: Option<f64> = None;
+    // best (lowest observed makespan) distribution seen across outer steps:
+    // the width map can oscillate around paging cliffs (speeds measured at
+    // one size mispredict the proposed size), so the final answer is the
+    // best observed, not the last.
+    let mut best: Option<(f64, Vec<u64>, Vec<Vec<u64>>, Vec<Vec<f64>>, f64)> = None;
+    // last width-update direction per column (+1 grew, −1 shrank), for the
+    // oscillation detector
+    let mut last_dir: Vec<i8> = vec![0; q];
+
+    for outer in 0..opts.max_outer {
+        // --- step 2: per-column inner DFPA (columns conceptually parallel;
+        // virtual cost of the outer step = max over columns) ---
+        let mut col_costs = vec![0.0f64; q];
+        for j in 0..q {
+            let width = widths[j];
+            let mut d = heights[j].clone(); // warm start (optimization 3)
+            for _inner in 0..opts.max_inner {
+                inner_total += 1;
+                let cap = match (opts.time_cap_mult, prev_fastest) {
+                    (Some(mult), Some(fast)) => Some(mult * fast),
+                    _ => None,
+                };
+                let report = bench.run_column(j, width, &d, cap)?;
+                if report.times.len() != p {
+                    return Err(HfpmError::Cluster(format!(
+                        "column benchmark returned {} times for {p} processors",
+                        report.times.len()
+                    )));
+                }
+                col_costs[j] += report.virtual_cost_s;
+
+                let sw = Stopwatch::start();
+                for i in 0..p {
+                    let units = d[i] * width;
+                    if units > 0 && report.times[i] > 0.0 {
+                        models[j][i].insert(units as f64, units as f64 / report.times[i]);
+                    }
+                }
+                last_times[j] = report.times.clone();
+
+                let active: Vec<f64> = report
+                    .times
+                    .iter()
+                    .zip(&d)
+                    .filter(|(_, &di)| di > 0)
+                    .map(|(&t, _)| t)
+                    .collect();
+                let imb = max_relative_imbalance(&active);
+                if imb <= opts.epsilon_inner {
+                    partition_wall += sw.elapsed_s();
+                    break;
+                }
+
+                // re-partition the column's rows on the units-domain models
+                // viewed at this width
+                let views: Vec<ScaledModel<&PiecewiseModel>> = models[j]
+                    .iter()
+                    .map(|mm| ScaledModel::new(mm, width as f64))
+                    .collect();
+                // processors without a point yet get a pessimistic constant
+                let have_any = views.iter().any(|v| !v.inner.is_empty());
+                if !have_any {
+                    partition_wall += sw.elapsed_s();
+                    continue;
+                }
+                let min_speed = models[j]
+                    .iter()
+                    .flat_map(|mm| mm.points().iter().map(|pt| pt.s))
+                    .fold(f64::INFINITY, f64::min);
+                for mm in models[j].iter_mut() {
+                    if mm.is_empty() {
+                        mm.insert(width.max(1) as f64, min_speed);
+                    }
+                }
+                let views: Vec<ScaledModel<&PiecewiseModel>> = models[j]
+                    .iter()
+                    .map(|mm| ScaledModel::new(mm, width as f64))
+                    .collect();
+                let part = partition_with(m, &views, opts.geometric)?;
+                partition_wall += sw.elapsed_s();
+                if part.d == d {
+                    break; // fixpoint for this column at this width
+                }
+                d = part.d;
+            }
+            heights[j] = d;
+        }
+        total_virtual += col_costs.iter().cloned().fold(0.0f64, f64::max);
+
+        // track the fastest observed time for the cap heuristic
+        let fastest = last_times
+            .iter()
+            .flatten()
+            .cloned()
+            .filter(|&t| t > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if fastest.is_finite() {
+            prev_fastest = Some(fastest);
+        }
+
+        // --- step 3: global convergence test over all active processors ---
+        let mut active_times = Vec::with_capacity(p * q);
+        for j in 0..q {
+            for i in 0..p {
+                if heights[j][i] > 0 && last_times[j][i] > 0.0 {
+                    active_times.push(last_times[j][i]);
+                }
+            }
+        }
+        let imbalance = max_relative_imbalance(&active_times);
+        let makespan = active_times.iter().cloned().fold(0.0f64, f64::max);
+        match &best {
+            Some((b, ..)) if *b <= makespan => {}
+            _ => {
+                best = Some((
+                    makespan,
+                    widths.clone(),
+                    heights.clone(),
+                    last_times.clone(),
+                    imbalance,
+                ))
+            }
+        }
+        if imbalance <= opts.epsilon {
+            return Ok(Dfpa2dResult {
+                widths,
+                heights,
+                times: last_times,
+                outer_iterations: outer + 1,
+                inner_iterations: inner_total,
+                imbalance,
+                converged: true,
+                total_virtual_s: total_virtual,
+                partition_wall_s: partition_wall,
+                models,
+            });
+        }
+
+        // --- step (ii): rebalance column widths by demonstrated speeds ---
+        let sw = Stopwatch::start();
+        let speeds: Vec<Vec<f64>> = (0..q)
+            .map(|j| {
+                (0..p)
+                    .map(|i| {
+                        let units = heights[j][i] * widths[j];
+                        if units > 0 && last_times[j][i] > 0.0 {
+                            units as f64 / last_times[j][i]
+                        } else {
+                            0.0
+                        }
+                    })
+                    .filter(|&s| s > 0.0)
+                    .collect()
+            })
+            .collect();
+        if speeds.iter().any(|col| col.is_empty()) {
+            return Err(HfpmError::Partition(
+                "a column demonstrated no positive speed".into(),
+            ));
+        }
+        let proposed = rebalance_widths(n, &speeds)?;
+        // damping: the demonstrated speeds extrapolate poorly across paging
+        // cliffs, and the raw proportional update can oscillate (narrow →
+        // healthy speeds → wide → paging → narrow …). Damp a column with
+        // the geometric mean only when its update *direction flips*; smooth
+        // monotone convergence keeps the full step.
+        let damped_reals: Vec<f64> = (0..q)
+            .map(|j| {
+                let w = widths[j].max(1) as f64;
+                let pw = proposed[j].max(1) as f64;
+                let dir: i8 = match pw.partial_cmp(&w).unwrap() {
+                    std::cmp::Ordering::Greater => 1,
+                    std::cmp::Ordering::Less => -1,
+                    std::cmp::Ordering::Equal => 0,
+                };
+                let flipped = dir != 0 && last_dir[j] != 0 && dir != last_dir[j];
+                last_dir[j] = dir;
+                if flipped {
+                    (w * pw).sqrt()
+                } else {
+                    pw
+                }
+            })
+            .collect();
+        let mut damped = crate::partition::hsp::round_to_sum(&damped_reals, n);
+        // no empty columns: every column keeps at least one block
+        for j in 0..q {
+            if damped[j] == 0 {
+                let donor = (0..q).max_by_key(|&k| damped[k]).unwrap();
+                damped[donor] -= 1;
+                damped[j] = 1;
+            }
+        }
+        let new_widths = if opts.width_freeze_rel > 0.0 {
+            freeze_small_changes(&widths, &damped, opts.width_freeze_rel)
+        } else {
+            damped
+        };
+        partition_wall += sw.elapsed_s();
+
+        if new_widths == widths {
+            // widths are stable but the global ε was not met: the remaining
+            // imbalance is inside columns; the next outer pass re-runs the
+            // inner loops (whose warm starts make them cheap). If nothing
+            // moved at all this iteration we are at a fixpoint: stop.
+            let heights_stable = (0..q).all(|j| {
+                let v: Vec<ScaledModel<&PiecewiseModel>> = models[j]
+                    .iter()
+                    .map(|mm| ScaledModel::new(mm, widths[j] as f64))
+                    .collect();
+                match partition_with(m, &v, opts.geometric) {
+                    Ok(part) => part.d == heights[j],
+                    Err(_) => true,
+                }
+            });
+            if heights_stable {
+                let (_, bw, bh, bt, bi) = best.expect("at least one outer step ran");
+                return Ok(Dfpa2dResult {
+                    widths: bw,
+                    heights: bh,
+                    times: bt,
+                    outer_iterations: outer + 1,
+                    inner_iterations: inner_total,
+                    imbalance: bi,
+                    converged: bi <= opts.epsilon,
+                    total_virtual_s: total_virtual,
+                    partition_wall_s: partition_wall,
+                    models,
+                });
+            }
+        }
+        widths = new_widths;
+    }
+
+    // max_outer exhausted: return the best distribution observed
+    let (_, bw, bh, bt, bi) = best.expect("at least one outer step ran");
+    Ok(Dfpa2dResult {
+        widths: bw,
+        heights: bh,
+        times: bt,
+        outer_iterations: opts.max_outer,
+        inner_iterations: inner_total,
+        imbalance: bi,
+        converged: false,
+        total_virtual_s: total_virtual,
+        partition_wall_s: partition_wall,
+        models,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineSpec;
+    use crate::fpm::SpeedSurface;
+    use crate::util::rng::Pcg32;
+
+    /// Analytic-surface benchmarker for a p×q grid.
+    struct SurfBench {
+        surfaces: Vec<Vec<SpeedSurface>>, // [j][i]
+        noise: f64,
+        rng: Pcg32,
+    }
+
+    impl SurfBench {
+        fn new(specs: Vec<Vec<MachineSpec>>, block: usize, noise: f64) -> Self {
+            let surfaces = specs
+                .iter()
+                .map(|col| col.iter().map(|s| SpeedSurface::from_spec(s, block)).collect())
+                .collect();
+            Self {
+                surfaces,
+                noise,
+                rng: Pcg32::seeded(77),
+            }
+        }
+    }
+
+    impl Benchmarker2d for SurfBench {
+        fn grid(&self) -> (usize, usize) {
+            (self.surfaces[0].len(), self.surfaces.len())
+        }
+
+        fn run_column(
+            &mut self,
+            j: usize,
+            width: u64,
+            heights: &[u64],
+            cap: Option<f64>,
+        ) -> Result<StepReport> {
+            let times: Vec<f64> = heights
+                .iter()
+                .zip(&self.surfaces[j])
+                .map(|(&h, s)| {
+                    if h == 0 {
+                        0.0
+                    } else {
+                        let t = s.time(h as f64, width as f64)
+                            * self.rng.noise_factor(self.noise);
+                        match cap {
+                            Some(c) => t.min(c),
+                            None => t,
+                        }
+                    }
+                })
+                .collect();
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            Ok(StepReport {
+                times,
+                virtual_cost_s: max,
+            })
+        }
+    }
+
+    fn grid_3x3() -> Vec<Vec<MachineSpec>> {
+        // columns of 3 nodes each with varied clocks/RAM
+        let mk = |ghz: f64, ram: u64| MachineSpec::new("n", "", ghz, 800.0, 0.4, 1024, ram);
+        vec![
+            vec![mk(3.4, 1024), mk(1.8, 1024), mk(2.9, 1024)],
+            vec![mk(3.6, 2048), mk(3.0, 256), mk(3.4, 1024)],
+            vec![mk(3.2, 512), mk(3.4, 512), mk(2.8, 1024)],
+        ]
+    }
+
+    #[test]
+    fn converges_on_heterogeneous_grid() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let r = run_dfpa2d(256, 256, &mut bench, Dfpa2dOptions::with_epsilon(0.1)).unwrap();
+        assert!(r.converged, "imbalance {}", r.imbalance);
+        assert_eq!(r.widths.iter().sum::<u64>(), 256);
+        for j in 0..3 {
+            assert_eq!(r.heights[j].iter().sum::<u64>(), 256, "column {j}");
+        }
+    }
+
+    #[test]
+    fn areas_favor_fast_processors() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let r = run_dfpa2d(256, 256, &mut bench, Dfpa2dOptions::with_epsilon(0.1)).unwrap();
+        // the 1.8 GHz node (col 0, row 1) must own less area than the
+        // 3.4 GHz node of the same column (col 0, row 0)
+        let area_slow = r.heights[0][1] * r.widths[0];
+        let area_fast = r.heights[0][0] * r.widths[0];
+        assert!(
+            area_fast > area_slow,
+            "fast {area_fast} vs slow {area_slow}"
+        );
+    }
+
+    #[test]
+    fn noisy_grid_converges_with_loose_eps() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.02);
+        let r = run_dfpa2d(192, 192, &mut bench, Dfpa2dOptions::with_epsilon(0.15)).unwrap();
+        assert!(r.converged, "imbalance {}", r.imbalance);
+    }
+
+    #[test]
+    fn too_small_grid_is_error() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        assert!(run_dfpa2d(2, 256, &mut bench, Dfpa2dOptions::default()).is_err());
+    }
+
+    #[test]
+    fn inner_iterations_accumulate() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let r = run_dfpa2d(256, 256, &mut bench, Dfpa2dOptions::with_epsilon(0.05)).unwrap();
+        // at least one inner step per column per outer iteration
+        assert!(r.inner_iterations >= 3 * r.outer_iterations);
+    }
+}

@@ -1,0 +1,69 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum HfpmError {
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("partitioning failed: {0}")]
+    Partition(String),
+
+    #[error("DFPA did not converge after {iterations} iterations (imbalance {imbalance:.4}, ε={epsilon:.4})")]
+    NoConvergence {
+        iterations: usize,
+        imbalance: f64,
+        epsilon: f64,
+    },
+
+    #[error("cluster runtime error: {0}")]
+    Cluster(String),
+
+    #[error("worker {rank} failed: {reason}")]
+    WorkerFailed { rank: usize, reason: String },
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("PJRT runtime error: {0}")]
+    Runtime(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for HfpmError {
+    fn from(e: xla::Error) -> Self {
+        HfpmError::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, HfpmError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = HfpmError::NoConvergence {
+            iterations: 50,
+            imbalance: 0.31,
+            epsilon: 0.025,
+        };
+        let s = e.to_string();
+        assert!(s.contains("50"));
+        assert!(s.contains("0.31"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: HfpmError = io.into();
+        assert!(matches!(e, HfpmError::Io(_)));
+    }
+}

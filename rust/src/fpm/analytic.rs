@@ -1,0 +1,284 @@
+//! Analytic ground-truth speed functions — the simulated substitute for the
+//! paper's real heterogeneous nodes.
+//!
+//! The speed of a node executing the matrix-update kernel on `x` computation
+//! units is driven by the *memory footprint* `w(x)` of the task:
+//!
+//! 1. **cache regime** (`w ≲ L2`): the kernel runs near the node's peak
+//!    arithmetic speed;
+//! 2. **memory regime** (`L2 ≲ w ≲ RAM`): the kernel is bound by the memory
+//!    bus; speed settles on a plateau `mem_speed < peak`;
+//! 3. **paging regime** (`w > RAM`): page faults dominate; speed collapses
+//!    hyperbolically towards a disk-bound floor.
+//!
+//! This is exactly the shape family in the paper's Figs 3, 5 and 6 and it
+//! satisfies the FPM shape restriction of ref. [16] (monotonically
+//! non-increasing beyond the cache bump). The transition between regimes is
+//! blended smoothly in log-footprint space so estimates never see artificial
+//! kinks at regime borders.
+
+use super::SpeedFunction;
+use crate::config::MachineSpec;
+
+/// Maps computation units to the working-set footprint in bytes.
+///
+/// Every kernel in this repo has an affine footprint `w(x) = a·x + b`
+/// (see DESIGN.md: for the 1D kernel with matrix size `n`, a full `B`
+/// matrix is resident on every node, so `w(x) = 16·x + 8·n²`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Footprint {
+    /// Bytes per computation unit.
+    pub per_unit: f64,
+    /// Fixed resident bytes independent of the assignment.
+    pub fixed: f64,
+}
+
+impl Footprint {
+    pub const fn affine(per_unit: f64, fixed: f64) -> Self {
+        Self { per_unit, fixed }
+    }
+
+    /// Footprint of the paper's 1D matmul kernel: slices of A and C
+    /// (`2·n_b·n` doubles, i.e. `2x` doubles) plus the whole of B (`n²`).
+    pub fn matmul_1d(n: usize) -> Self {
+        let n = n as f64;
+        Self::affine(2.0 * 8.0, n * n * 8.0)
+    }
+
+    /// Footprint of the 2D kernel on a `b×b`-blocked matrix: the local
+    /// `m_b×n_b` block panel of C plus pivot row/column, with `x = m_b·n_b`
+    /// block-units. At fixed column width `n_b` the footprint is affine in
+    /// x with a row/column fringe term.
+    pub fn matmul_2d(block: usize, col_width: usize) -> Self {
+        let b2 = (block * block) as f64 * 8.0;
+        let nb = col_width.max(1) as f64;
+        // C panel: x blocks; A fringe: x/nb blocks; B fringe: nb blocks.
+        Self::affine(b2 * (3.0 + 1.0 / nb), b2 * nb)
+    }
+
+    #[inline]
+    pub fn bytes(&self, units: f64) -> f64 {
+        self.per_unit * units + self.fixed
+    }
+}
+
+/// Tunable regime parameters (defaults fit the paper-era hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct RegimeParams {
+    /// Fraction of installed RAM usable by the application (OS reserve).
+    pub ram_usable_frac: f64,
+    /// Effective cache boundary as a multiple of L2 size.
+    pub cache_boundary_mult: f64,
+    /// Log-space width of the cache→memory blend.
+    pub cache_blend_width: f64,
+    /// Paging collapse exponent: `s ∝ (ram/w)^k` past the RAM boundary.
+    pub paging_exponent: f64,
+    /// Floor speed as a fraction of the memory-regime plateau (disk-bound).
+    pub floor_frac: f64,
+    /// Memory-bus efficiency (sustained/theoretical bandwidth).
+    pub bus_efficiency: f64,
+    /// Bytes that must cross the bus per computation unit in the memory
+    /// regime (naive kernel: one C element read+write per unit + B stream).
+    pub bytes_per_unit_mem: f64,
+}
+
+impl Default for RegimeParams {
+    fn default() -> Self {
+        Self {
+            ram_usable_frac: 0.82,
+            cache_boundary_mult: 1.0,
+            cache_blend_width: 0.45,
+            paging_exponent: 10.0,
+            floor_frac: 0.04,
+            bus_efficiency: 0.5,
+            bytes_per_unit_mem: 12.0,
+        }
+    }
+}
+
+/// Ground-truth analytic speed function of one node for one kernel.
+#[derive(Debug, Clone)]
+pub struct AnalyticModel {
+    /// In-cache peak speed, units/s.
+    pub peak: f64,
+    /// Memory-regime plateau speed, units/s.
+    pub mem_speed: f64,
+    /// Effective cache boundary, bytes.
+    pub cache_bytes: f64,
+    /// Effective RAM boundary, bytes.
+    pub ram_bytes: f64,
+    /// Unit→bytes mapping for the kernel being modeled.
+    pub footprint: Footprint,
+    params: RegimeParams,
+}
+
+impl AnalyticModel {
+    /// Build the model for `spec` running a kernel with footprint `fp`.
+    pub fn from_spec(spec: &MachineSpec, fp: Footprint) -> Self {
+        Self::with_params(spec, fp, RegimeParams::default())
+    }
+
+    pub fn with_params(spec: &MachineSpec, fp: Footprint, params: RegimeParams) -> Self {
+        let peak = spec.peak_units_per_s();
+        // memory plateau: bus-bandwidth-bound
+        let bw = spec.bus_mhz * 1e6 * 8.0 * params.bus_efficiency; // bytes/s
+        let mem_speed = (bw / params.bytes_per_unit_mem).min(peak);
+        Self {
+            peak,
+            mem_speed,
+            cache_bytes: spec.l2_kib as f64 * 1024.0 * params.cache_boundary_mult,
+            ram_bytes: spec.ram_mib as f64 * 1024.0 * 1024.0 * params.ram_usable_frac,
+            footprint: fp,
+            params,
+        }
+    }
+
+    /// Speed as a function of working-set bytes (regime model).
+    pub fn speed_at_bytes(&self, w: f64) -> f64 {
+        let w = w.max(1.0);
+        // smooth cache→memory transition in log space
+        let z = (self.cache_bytes.ln() - w.ln()) / self.params.cache_blend_width;
+        let sigma = 1.0 / (1.0 + (-z).exp());
+        let base = self.mem_speed + (self.peak - self.mem_speed) * sigma;
+        if w <= self.ram_bytes {
+            base
+        } else {
+            let collapse = (self.ram_bytes / w).powf(self.params.paging_exponent);
+            (base * collapse).max(self.mem_speed * self.params.floor_frac)
+        }
+    }
+
+    /// Does an assignment of `x` units page on this node?
+    pub fn pages_at(&self, x: f64) -> bool {
+        self.footprint.bytes(x) > self.ram_bytes
+    }
+
+    /// Largest number of units that fits in RAM (0 if even the fixed
+    /// footprint pages).
+    pub fn ram_capacity_units(&self) -> f64 {
+        ((self.ram_bytes - self.footprint.fixed) / self.footprint.per_unit).max(0.0)
+    }
+
+    /// A re-footprinted copy (same node, different kernel/problem size).
+    pub fn with_footprint(&self, fp: Footprint) -> Self {
+        Self {
+            footprint: fp,
+            ..self.clone()
+        }
+    }
+}
+
+impl SpeedFunction for AnalyticModel {
+    fn speed(&self, x: f64) -> f64 {
+        self.speed_at_bytes(self.footprint.bytes(x.max(0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineSpec;
+
+    fn spec() -> MachineSpec {
+        // resembles hcl11: 3.2 GHz P4, 800 MHz bus, 1 MiB L2, 512 MiB RAM
+        MachineSpec::new("hcl11", "IBM X-Series 306", 3.2, 800.0, 0.35, 1024, 512)
+    }
+
+    fn model() -> AnalyticModel {
+        AnalyticModel::from_spec(&spec(), Footprint::affine(16.0, 0.0))
+    }
+
+    #[test]
+    fn cache_regime_is_near_peak() {
+        let m = model();
+        // 1000 units → 16 KB, deep in a 1 MiB cache
+        let s = m.speed(1000.0);
+        assert!(s > 0.9 * m.peak, "cache speed {s} vs peak {}", m.peak);
+    }
+
+    #[test]
+    fn memory_regime_is_plateau() {
+        let m = model();
+        // 10M units → 160 MB: in RAM, far beyond cache
+        let s = m.speed(10_000_000.0);
+        assert!(
+            (s - m.mem_speed).abs() < 0.1 * m.mem_speed,
+            "mem speed {s} vs plateau {}",
+            m.mem_speed
+        );
+    }
+
+    #[test]
+    fn paging_collapses_speed() {
+        let m = model();
+        let cap = m.ram_capacity_units();
+        let s_fit = m.speed(cap * 0.95);
+        let s_page = m.speed(cap * 1.3);
+        assert!(
+            s_page < 0.2 * s_fit,
+            "paging should collapse: {s_page} vs {s_fit}"
+        );
+    }
+
+    #[test]
+    fn floor_is_positive() {
+        let m = model();
+        let s = m.speed(1e12);
+        assert!(s > 0.0);
+        assert!((s - m.mem_speed * 0.04).abs() < 1e-6 * m.mem_speed);
+    }
+
+    #[test]
+    fn speed_monotone_non_increasing_past_cache() {
+        let m = model();
+        let mut prev = f64::INFINITY;
+        // from cache boundary onward the model must be non-increasing
+        let start = m.cache_bytes / 16.0;
+        for i in 0..500 {
+            let x = start * (1.0 + i as f64 * 0.05);
+            let s = m.speed(x);
+            assert!(
+                s <= prev * (1.0 + 1e-9),
+                "not monotone at x={x}: {s} > {prev}"
+            );
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn footprint_matmul_1d_includes_b_matrix() {
+        let fp = Footprint::matmul_1d(2048);
+        assert!((fp.fixed - 2048.0 * 2048.0 * 8.0).abs() < 1.0);
+        assert!((fp.per_unit - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_footprint_can_exceed_ram() {
+        // n=8192 B matrix = 512 MiB > 0.85·512 MiB usable: pages at x=0
+        let m = AnalyticModel::from_spec(&spec(), Footprint::matmul_1d(8192));
+        assert!(m.pages_at(1.0));
+        assert_eq!(m.ram_capacity_units(), 0.0);
+    }
+
+    #[test]
+    fn time_is_monotone_increasing() {
+        let m = model();
+        let mut prev = 0.0;
+        for i in 1..2000 {
+            let x = i as f64 * 50_000.0;
+            let t = m.time(x);
+            assert!(t > prev, "time not increasing at x={x}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn faster_bus_means_faster_plateau() {
+        let slow = MachineSpec::new("a", "", 3.0, 533.0, 0.35, 256, 1024);
+        let fast = MachineSpec::new("b", "", 3.0, 1000.0, 0.35, 1024, 1024);
+        let fp = Footprint::affine(16.0, 0.0);
+        let ms = AnalyticModel::from_spec(&slow, fp);
+        let mf = AnalyticModel::from_spec(&fast, fp);
+        assert!(mf.mem_speed > ms.mem_speed);
+    }
+}

@@ -1,0 +1,259 @@
+//! Piecewise-linear partial FPM estimates — the data structure DFPA refines.
+//!
+//! The model is a set of experimentally observed points
+//! `{(d^(1), s(d^(1))), …, (d^(m), s(d^(m)))}`, `d^(1) < … < d^(m)`,
+//! evaluated as (paper §2, step 5):
+//!
+//! - **left of the first point** — constant `s(d^(1))` (the segment
+//!   `(0, s(d^(1))) → (d^(1), s(d^(1)))`);
+//! - **between points** — linear interpolation on consecutive points;
+//! - **right of the last point** — constant `s(d^(m))` (the segment
+//!   `(d^(m), s(d^(m))) → (∞, s(d^(m)))`).
+//!
+//! Inserting a new observation `(d, s(d))` realizes the paper's three
+//! cases: `d < d^(1)` replaces the left constant extension with two
+//! connected segments; `d^(k) < d < d^(k+1)` splits an interior segment;
+//! `d > d^(m)` replaces the right constant extension. All three are the
+//! same sorted-insert under the evaluation rules above.
+
+use super::SpeedFunction;
+
+/// One observed point of a speed function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedPoint {
+    /// Problem size in computation units.
+    pub x: f64,
+    /// Observed speed, units/second.
+    pub s: f64,
+}
+
+/// A piecewise-linear estimate of a speed function built from observations.
+#[derive(Debug, Clone, Default)]
+pub struct PiecewiseModel {
+    /// Sorted by `x`, strictly increasing.
+    points: Vec<SpeedPoint>,
+}
+
+impl PiecewiseModel {
+    pub fn new() -> Self {
+        Self { points: Vec::new() }
+    }
+
+    /// The first approximation DFPA builds after the even-distribution
+    /// benchmark: a constant model through a single point (paper step 2).
+    pub fn constant(x: f64, s: f64) -> Self {
+        let mut m = Self::new();
+        m.insert(x, s);
+        m
+    }
+
+    /// Number of experimental points (the paper reports this as the cost
+    /// metric of model construction — Table 2, column 6).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[SpeedPoint] {
+        &self.points
+    }
+
+    /// Insert an observation `(x, s(x))`, keeping points sorted.
+    ///
+    /// Re-measuring an existing `x` replaces the stored speed with the new
+    /// observation (the most recent measurement of a dynamic platform is
+    /// the freshest estimate).
+    pub fn insert(&mut self, x: f64, s: f64) {
+        assert!(x > 0.0, "problem size must be positive, got {x}");
+        assert!(s > 0.0, "speed must be positive, got {s}");
+        match self
+            .points
+            .binary_search_by(|p| p.x.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => self.points[i].s = s,
+            Err(i) => self.points.insert(i, SpeedPoint { x, s }),
+        }
+    }
+
+    /// Merge every point of `other` into `self` (used by the 2D algorithm's
+    /// optimization of reusing all previous benchmarks).
+    pub fn absorb(&mut self, other: &PiecewiseModel) {
+        for p in &other.points {
+            self.insert(p.x, p.s);
+        }
+    }
+
+    /// The x-range covered by observations, if any.
+    pub fn observed_range(&self) -> Option<(f64, f64)> {
+        match (self.points.first(), self.points.last()) {
+            (Some(a), Some(b)) => Some((a.x, b.x)),
+            _ => None,
+        }
+    }
+
+    /// Does the estimate satisfy the shape restriction of ref. [16]
+    /// (`x / s(x)` non-decreasing over the observed points)? DFPA keeps
+    /// working when this is violated by noise, but the geometric
+    /// partitioner can use it to pick a fast path.
+    pub fn is_canonical(&self) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[0].x / w[0].s <= w[1].x / w[1].s + 1e-12)
+    }
+}
+
+impl SpeedFunction for PiecewiseModel {
+    fn speed(&self, x: f64) -> f64 {
+        let pts = &self.points;
+        assert!(
+            !pts.is_empty(),
+            "evaluating an empty piecewise model — DFPA must observe at least one point first"
+        );
+        let x = x.max(0.0);
+        if x <= pts[0].x {
+            return pts[0].s; // constant left extension
+        }
+        if x >= pts[pts.len() - 1].x {
+            return pts[pts.len() - 1].s; // constant right extension
+        }
+        // interior: find the segment [i, i+1] with pts[i].x <= x < pts[i+1].x
+        let i = match pts.binary_search_by(|p| p.x.partial_cmp(&x).unwrap()) {
+            Ok(i) => return pts[i].s,
+            Err(i) => i - 1,
+        };
+        let (a, b) = (pts[i], pts[i + 1]);
+        let frac = (x - a.x) / (b.x - a.x);
+        a.s + (b.s - a.s) * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_model_everywhere() {
+        let m = PiecewiseModel::constant(100.0, 50.0);
+        assert_eq!(m.speed(1.0), 50.0);
+        assert_eq!(m.speed(100.0), 50.0);
+        assert_eq!(m.speed(1e9), 50.0);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn interior_interpolation() {
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(20.0, 50.0);
+        assert!((m.speed(15.0) - 75.0).abs() < 1e-12);
+        assert!((m.speed(12.5) - 87.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_point_returns_observation() {
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(20.0, 50.0);
+        m.insert(30.0, 25.0);
+        assert_eq!(m.speed(20.0), 50.0);
+    }
+
+    #[test]
+    fn paper_case_extend_left() {
+        // existing range [10, 20]; new point at 5 becomes the left anchor
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(20.0, 50.0);
+        m.insert(5.0, 120.0);
+        assert_eq!(m.speed(1.0), 120.0); // new constant left extension
+        assert!((m.speed(7.5) - 110.0).abs() < 1e-12); // new segment 5→10
+    }
+
+    #[test]
+    fn paper_case_interior_split() {
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(30.0, 60.0);
+        m.insert(20.0, 90.0); // split the 10→30 segment
+        assert!((m.speed(15.0) - 95.0).abs() < 1e-12);
+        assert!((m.speed(25.0) - 75.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_case_extend_right() {
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(20.0, 50.0);
+        m.insert(40.0, 10.0);
+        assert_eq!(m.speed(1e6), 10.0); // new constant right extension
+        assert!((m.speed(30.0) - 30.0).abs() < 1e-12); // new segment 20→40
+    }
+
+    #[test]
+    fn remeasure_replaces() {
+        let mut m = PiecewiseModel::new();
+        m.insert(10.0, 100.0);
+        m.insert(10.0, 80.0);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.speed(10.0), 80.0);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = PiecewiseModel::constant(10.0, 100.0);
+        let b = {
+            let mut b = PiecewiseModel::new();
+            b.insert(20.0, 50.0);
+            b.insert(10.0, 90.0);
+            b
+        };
+        a.absorb(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.speed(10.0), 90.0); // b's point replaced a's
+    }
+
+    #[test]
+    fn continuity_at_knots() {
+        let mut m = PiecewiseModel::new();
+        for (x, s) in [(10.0, 100.0), (20.0, 70.0), (40.0, 30.0), (80.0, 10.0)] {
+            m.insert(x, s);
+        }
+        for p in m.points().to_vec() {
+            let eps = 1e-9 * p.x;
+            let lo = m.speed(p.x - eps);
+            let hi = m.speed(p.x + eps);
+            assert!((lo - p.s).abs() < 1e-3, "left limit at {}", p.x);
+            assert!((hi - p.s).abs() < 1e-3, "right limit at {}", p.x);
+        }
+    }
+
+    #[test]
+    fn canonical_detection() {
+        let mut good = PiecewiseModel::new();
+        good.insert(10.0, 100.0);
+        good.insert(20.0, 90.0); // x/s: 0.1, 0.22 — increasing
+        assert!(good.is_canonical());
+
+        let mut bad = PiecewiseModel::new();
+        bad.insert(10.0, 10.0); // x/s = 1.0
+        bad.insert(20.0, 100.0); // x/s = 0.2 — decreasing
+        assert!(!bad.is_canonical());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty piecewise model")]
+    fn empty_eval_panics() {
+        let m = PiecewiseModel::new();
+        let _ = m.speed(1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_size_rejected() {
+        let mut m = PiecewiseModel::new();
+        m.insert(0.0, 5.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Two-parameter speed surfaces `g(x, y)` (paper §3.1–3.2, Figs 5 and 9).
+//!
+//! For the matrix kernels the problem size has two parameters (`n_b`, `n`
+//! for the 1D app; `m_b`, `n_b` for the 2D app). The speed surface is the
+//! continuous extension of `f : N² → R₊` mapping sizes to speeds. The 2D
+//! partitioning algorithm never uses the full surface directly — it works
+//! on **1D projections at fixed column width** (Fig 9b), which is exactly
+//! what [`SpeedSurface::project`] produces.
+
+use super::analytic::{AnalyticModel, Footprint, RegimeParams};
+use super::SpeedFunction;
+use crate::config::MachineSpec;
+
+/// An analytic 2D speed surface for one node executing the blocked
+/// matrix-update kernel with `b×b` blocks.
+///
+/// `x` = rows of blocks (`m_b`), `y` = columns of blocks (`n_b`); a
+/// "computation unit" is one `b×b` block update, so the task has `x·y`
+/// units and the footprint is `8b²·(x·y + x + y)` bytes (C panel plus the
+/// pivot column of A and pivot row of B).
+#[derive(Debug, Clone)]
+pub struct SpeedSurface {
+    node: AnalyticModel,
+    block: usize,
+}
+
+impl SpeedSurface {
+    pub fn from_spec(spec: &MachineSpec, block: usize) -> Self {
+        Self::with_params(spec, block, RegimeParams::default())
+    }
+
+    pub fn with_params(spec: &MachineSpec, block: usize, params: RegimeParams) -> Self {
+        // footprint handled explicitly in `bytes`; the inner model's own
+        // footprint mapping is unused (identity).
+        let node = AnalyticModel::with_params(spec, Footprint::affine(1.0, 0.0), params);
+        Self { node, block }
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Working-set bytes of an `x×y`-block task: the worker's resident
+    /// panels of A, B and C (each `x·y` blocks in the ScaLAPACK-style
+    /// distribution) plus the pivot row/column fringe.
+    pub fn bytes(&self, x: f64, y: f64) -> f64 {
+        let b2 = (self.block * self.block) as f64 * 8.0;
+        b2 * (3.0 * x * y + x + y)
+    }
+
+    /// Speed in block-units/s at problem size `(x, y)`. One block-unit is
+    /// a `b×b` block update (`b³` multiply-adds), so the node's elementwise
+    /// rate is divided by `b³`.
+    pub fn speed(&self, x: f64, y: f64) -> f64 {
+        let elem_rate = self.node.speed_at_bytes(self.bytes(x.max(0.0), y.max(0.0)));
+        elem_rate / (self.block as f64).powi(3)
+    }
+
+    /// Execution time of the `(x, y)` task.
+    pub fn time(&self, x: f64, y: f64) -> f64 {
+        let units = x * y;
+        if units <= 0.0 {
+            0.0
+        } else {
+            units / self.speed(x, y)
+        }
+    }
+
+    /// 1D projection at fixed column width `y = width` — the speed as a
+    /// function of *units* `u = x·width` along the column (Fig 9b). The
+    /// projection is itself a `SpeedFunction` usable by DFPA's partitioner.
+    pub fn project(&self, width: f64) -> SurfaceProjection<'_> {
+        assert!(width > 0.0);
+        SurfaceProjection {
+            surface: self,
+            width,
+        }
+    }
+}
+
+/// A fixed-width 1D slice of a [`SpeedSurface`].
+#[derive(Debug, Clone)]
+pub struct SurfaceProjection<'a> {
+    surface: &'a SpeedSurface,
+    width: f64,
+}
+
+impl SpeedFunction for SurfaceProjection<'_> {
+    fn speed(&self, units: f64) -> f64 {
+        let x = units.max(0.0) / self.width;
+        self.surface.speed(x, self.width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn surf() -> SpeedSurface {
+        let spec = MachineSpec::new("hcl09", "IBM E-server 326", 1.8, 1000.0, 0.5, 1024, 1024);
+        SpeedSurface::from_spec(&spec, 32)
+    }
+
+    #[test]
+    fn small_tasks_fast() {
+        let s = surf();
+        // a handful of 32x32 blocks fits in cache
+        assert!(s.speed(2.0, 2.0) > s.speed(500.0, 500.0));
+    }
+
+    #[test]
+    fn surface_symmetric_in_footprint() {
+        let s = surf();
+        // footprint is symmetric in (x, y): speed should be too
+        assert!((s.speed(10.0, 40.0) - s.speed(40.0, 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_matches_surface() {
+        let s = surf();
+        let proj = s.project(64.0);
+        let x = 100.0;
+        let units = x * 64.0;
+        assert!((proj.speed(units) - s.speed(x, 64.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_time_monotone() {
+        let s = surf();
+        let proj = s.project(128.0);
+        let mut prev = 0.0;
+        for i in 1..300 {
+            let u = i as f64 * 5000.0;
+            let t = proj.time(u);
+            assert!(t > prev, "time must increase with units (u={u})");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn extreme_aspect_pages_sooner() {
+        let s = surf();
+        // at equal unit counts the fringe (x + y) is minimized by a square
+        // task; an extremely skinny column has a larger footprint and can
+        // only be slower or equal
+        let u: f64 = 3_000_000.0;
+        let side = u.sqrt();
+        assert!(s.bytes(u / 8.0, 8.0) > s.bytes(side, side));
+        let skinny = s.project(8.0);
+        let square = s.project(side);
+        assert!(skinny.speed(u) <= square.speed(u) + 1e-9);
+    }
+}

@@ -1,0 +1,52 @@
+//! # hfpm — self-adaptable data partitioning for heterogeneous HPC platforms
+//!
+//! Reproduction of Lastovetsky, Reddy, Rychkov & Clarke,
+//! *"Design and implementation of self-adaptable parallel algorithms for
+//! scientific computing on highly heterogeneous HPC platforms"* (2011).
+//!
+//! The library implements:
+//!
+//! - **Functional performance models** ([`fpm`]) — processor speed as a
+//!   function of problem size, including the piecewise-linear partial
+//!   estimates built on-line by DFPA and 2D speed surfaces.
+//! - **Data partitioning algorithms** ([`partition`]) — the geometric
+//!   FPM partitioner of Lastovetsky & Reddy (ref. [16] in the paper), the
+//!   constant-performance (CPM) baseline, integer rounding, and 2D grid
+//!   distribution.
+//! - **DFPA** ([`dfpa`], [`dfpa2d`]) — the paper's contribution: the
+//!   distributed functional partitioning algorithm and its nested 2D
+//!   variant for matrix multiplication.
+//! - **A simulated heterogeneous cluster** ([`cluster`]) — nodes with
+//!   cache/memory/paging speed regimes (HCL and Grid5000 presets), a
+//!   Hockney communication model, MPI-like collectives and a leader/worker
+//!   thread runtime with a virtual clock.
+//! - **Applications** ([`apps`]) — the 1D and 2D parallel matrix
+//!   multiplication applications of the paper's §3, runnable in simulated
+//!   or real (PJRT-backed) execution mode.
+//! - **A PJRT runtime** ([`runtime`]) — loads the AOT-compiled JAX/Pallas
+//!   matmul kernels (`artifacts/*.hlo.txt`) and executes them from the
+//!   coordinator hot path via the `xla` crate.
+//!
+//! Support modules: [`config`] (mini-TOML), [`bench_harness`]
+//! (criterion-lite), [`testkit`] (proptest-lite), [`util`].
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod error;
+pub mod testkit;
+pub mod util;
+
+pub mod fpm;
+pub mod partition;
+
+pub mod cluster;
+pub mod dfpa;
+pub mod dfpa2d;
+
+pub mod apps;
+pub mod baselines;
+pub mod metrics;
+pub mod runtime;
+
+pub use error::{HfpmError, Result};

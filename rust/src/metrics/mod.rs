@@ -1,0 +1,95 @@
+//! Experiment metrics: a recorder that accumulates named runs and renders
+//! paper-style comparison tables (used by the CLI and the benches).
+
+use crate::util::table::{fnum, Table};
+use std::collections::BTreeMap;
+
+/// One recorded run: a row of named numeric fields.
+#[derive(Debug, Clone, Default)]
+pub struct Run {
+    pub label: String,
+    pub fields: BTreeMap<String, f64>,
+}
+
+impl Run {
+    pub fn new(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            fields: BTreeMap::new(),
+        }
+    }
+
+    pub fn set(mut self, key: &str, value: f64) -> Self {
+        self.fields.insert(key.to_string(), value);
+        self
+    }
+}
+
+/// Accumulates runs and renders them with a fixed column order.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub runs: Vec<Run>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, run: Run) {
+        self.runs.push(run);
+    }
+
+    pub fn get(&self, label: &str, key: &str) -> Option<f64> {
+        self.runs
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.fields.get(key))
+            .copied()
+    }
+
+    /// Render with the given columns (label first). Missing fields show
+    /// as '-'.
+    pub fn table(&self, title: &str, columns: &[(&str, usize)]) -> Table {
+        let mut headers = vec!["run"];
+        headers.extend(columns.iter().map(|(c, _)| *c));
+        let mut t = Table::new(title, &headers);
+        for run in &self.runs {
+            let mut row = vec![run.label.clone()];
+            for (c, prec) in columns {
+                row.push(
+                    run.fields
+                        .get(*c)
+                        .map(|v| fnum(*v, *prec))
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+            }
+            t.add_row(row);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_lookup() {
+        let mut rec = Recorder::new();
+        rec.record(Run::new("dfpa-2048").set("total_s", 3.43).set("iters", 4.0));
+        assert_eq!(rec.get("dfpa-2048", "total_s"), Some(3.43));
+        assert_eq!(rec.get("dfpa-2048", "nope"), None);
+        assert_eq!(rec.get("missing", "total_s"), None);
+    }
+
+    #[test]
+    fn table_renders_missing_as_dash() {
+        let mut rec = Recorder::new();
+        rec.record(Run::new("a").set("x", 1.0));
+        let t = rec.table("demo", &[("x", 2), ("y", 2)]);
+        let text = t.render();
+        assert!(text.contains("1.00"));
+        assert!(text.contains('-'));
+    }
+}

@@ -1,0 +1,97 @@
+//! Column-width rebalancing — step (ii) of the nested 2D partitioning
+//! algorithm (paper §3.2, step 3 ELSE branch):
+//!
+//! `n_j = n · (Σ_i s_ij) / (Σ_j Σ_i s_ij)`
+//!
+//! i.e. the new width of column `j` is proportional to the sum of the
+//! speeds its processors demonstrated at the current distribution.
+
+use super::cpm;
+use crate::error::Result;
+
+/// Compute new column widths from observed per-processor speeds.
+///
+/// `speeds[j][i]` is the speed processor `i` of column `j` demonstrated on
+/// its current `(m_ij, n_j)` task. Returns widths summing to `n`.
+pub fn rebalance_widths(n: u64, speeds: &[Vec<f64>]) -> Result<Vec<u64>> {
+    let sums: Vec<f64> = speeds.iter().map(|col| col.iter().sum()).collect();
+    cpm::partition_proportional(n, &sums)
+}
+
+/// The paper's optimization (2): freeze a column's width if the proposed
+/// change is relatively small. Returns the widths to actually use.
+pub fn freeze_small_changes(old: &[u64], proposed: &[u64], rel_threshold: f64) -> Vec<u64> {
+    assert_eq!(old.len(), proposed.len());
+    let mut out = Vec::with_capacity(old.len());
+    let mut drift: i64 = 0; // units withheld from frozen columns
+    for (&o, &p) in old.iter().zip(proposed.iter()) {
+        let change = (p as i64 - o as i64).unsigned_abs();
+        if o > 0 && (change as f64 / o as f64) < rel_threshold {
+            drift += p as i64 - o as i64;
+            out.push(o);
+        } else {
+            out.push(p);
+        }
+    }
+    // redistribute the drift to unfrozen columns (or, if all froze, to the
+    // largest column) so Σ widths stays equal to Σ proposed
+    if drift != 0 {
+        let idx = out
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &w)| w)
+            .map(|(i, _)| i)
+            .unwrap();
+        let adjusted = out[idx] as i64 + drift;
+        out[idx] = adjusted.max(0) as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_proportional_to_column_sums() {
+        // column speed sums 10 and 30 → widths 1:3
+        let speeds = vec![vec![4.0, 6.0], vec![10.0, 20.0]];
+        let w = rebalance_widths(8, &speeds).unwrap();
+        assert_eq!(w, vec![2, 6]);
+    }
+
+    #[test]
+    fn widths_sum_to_n() {
+        let speeds = vec![vec![1.0], vec![2.5], vec![3.7]];
+        for n in [3u64, 10, 99] {
+            let w = rebalance_widths(n, &speeds).unwrap();
+            assert_eq!(w.iter().sum::<u64>(), n);
+        }
+    }
+
+    #[test]
+    fn freeze_keeps_small_changes() {
+        let old = vec![100, 100];
+        let proposed = vec![102, 98]; // 2% change
+        let w = freeze_small_changes(&old, &proposed, 0.05);
+        assert_eq!(w.iter().sum::<u64>(), 200);
+        assert_eq!(w, vec![100, 100]);
+    }
+
+    #[test]
+    fn freeze_allows_large_changes() {
+        let old = vec![100, 100];
+        let proposed = vec![150, 50];
+        let w = freeze_small_changes(&old, &proposed, 0.05);
+        assert_eq!(w, vec![150, 50]);
+    }
+
+    #[test]
+    fn freeze_preserves_total_mixed() {
+        let old = vec![100, 100, 100];
+        let proposed = vec![101, 160, 39]; // first frozen, others move
+        let w = freeze_small_changes(&old, &proposed, 0.05);
+        assert_eq!(w.iter().sum::<u64>(), 300);
+        assert_eq!(w[0], 100);
+    }
+}

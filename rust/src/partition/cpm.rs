@@ -1,0 +1,68 @@
+//! Constant-performance-model (CPM) partitioning — the conventional
+//! baseline the paper compares against (refs [1, 13]).
+//!
+//! Each processor is characterized by a single positive speed constant
+//! (typically from one benchmark run); computations are distributed in
+//! proportion to these constants.
+
+use super::hsp;
+use crate::error::{HfpmError, Result};
+use crate::fpm::ConstantModel;
+
+/// Distribute `n` units proportionally to `speeds`.
+pub fn partition_proportional(n: u64, speeds: &[f64]) -> Result<Vec<u64>> {
+    if speeds.is_empty() {
+        return Err(HfpmError::Partition("no processors".into()));
+    }
+    if speeds.iter().any(|&s| !(s > 0.0)) {
+        return Err(HfpmError::Partition(format!(
+            "speeds must be positive: {speeds:?}"
+        )));
+    }
+    let total: f64 = speeds.iter().sum();
+    let reals: Vec<f64> = speeds.iter().map(|&s| n as f64 * s / total).collect();
+    let mut d = hsp::round_to_sum(&reals, n);
+    let models: Vec<ConstantModel> = speeds.iter().map(|&s| ConstantModel(s)).collect();
+    hsp::refine(&mut d, &models);
+    Ok(d)
+}
+
+/// Relative speeds normalized to sum to 1 (the paper's Fig 8 uses such a
+/// normalized vector for its worked 2D example).
+pub fn normalize(speeds: &[f64]) -> Vec<f64> {
+    let total: f64 = speeds.iter().sum();
+    speeds.iter().map(|&s| s / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_simple() {
+        let d = partition_proportional(600, &[10.0, 20.0, 30.0]).unwrap();
+        assert_eq!(d, vec![100, 200, 300]);
+    }
+
+    #[test]
+    fn proportional_sums_to_n() {
+        for n in [1u64, 7, 100, 12345] {
+            let d = partition_proportional(n, &[3.0, 7.0, 11.5, 0.5]).unwrap();
+            assert_eq!(d.iter().sum::<u64>(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rejects_nonpositive_speed() {
+        assert!(partition_proportional(10, &[1.0, 0.0]).is_err());
+        assert!(partition_proportional(10, &[1.0, -2.0]).is_err());
+        assert!(partition_proportional(10, &[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn normalize_sums_to_one() {
+        let v = normalize(&[2.0, 3.0, 5.0]);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((v[2] - 0.5).abs() < 1e-12);
+    }
+}

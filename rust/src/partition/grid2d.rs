@@ -1,0 +1,119 @@
+//! Two-step 2D grid distribution (ref. [13]; the paper's Fig 8).
+//!
+//! A `rows×cols` square of blocks is distributed over a `p×q` processor
+//! grid: first the columns of the square are split over the `q` processor
+//! columns in proportion to each column's total speed; then each vertical
+//! rectangle is split independently over the `p` processors of its column
+//! in proportion to their speeds.
+
+use super::cpm;
+use crate::error::{HfpmError, Result};
+
+/// The result of a two-step distribution: column widths and per-column row
+/// heights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridPartition {
+    /// Width (in blocks) of each processor-column rectangle, `Σ = cols`.
+    pub col_widths: Vec<u64>,
+    /// `row_heights[j][i]`: height of processor `(i, j)`'s rectangle,
+    /// `Σ_i = rows` for every column `j`.
+    pub row_heights: Vec<Vec<u64>>,
+}
+
+impl GridPartition {
+    /// Area (blocks) owned by processor `(i, j)`.
+    pub fn area(&self, i: usize, j: usize) -> u64 {
+        self.col_widths[j] * self.row_heights[j][i]
+    }
+
+    /// Total area must equal rows × cols.
+    pub fn total_area(&self) -> u64 {
+        self.col_widths
+            .iter()
+            .zip(self.row_heights.iter())
+            .map(|(&w, hs)| w * hs.iter().sum::<u64>())
+            .sum()
+    }
+}
+
+/// Two-step CPM distribution: `speeds[i][j]` is the relative speed of the
+/// processor in row `i`, column `j` of the grid.
+pub fn two_step(
+    rows: u64,
+    cols: u64,
+    speeds: &[Vec<f64>],
+) -> Result<GridPartition> {
+    let p = speeds.len();
+    if p == 0 {
+        return Err(HfpmError::Partition("empty processor grid".into()));
+    }
+    let q = speeds[0].len();
+    if q == 0 || speeds.iter().any(|r| r.len() != q) {
+        return Err(HfpmError::Partition("ragged processor grid".into()));
+    }
+
+    // step 1: column widths ∝ column speed sums
+    let col_sums: Vec<f64> = (0..q).map(|j| (0..p).map(|i| speeds[i][j]).sum()).collect();
+    let col_widths = cpm::partition_proportional(cols, &col_sums)?;
+
+    // step 2: each column's rows ∝ the column's processor speeds
+    let mut row_heights = Vec::with_capacity(q);
+    for j in 0..q {
+        let col_speeds: Vec<f64> = (0..p).map(|i| speeds[i][j]).collect();
+        row_heights.push(cpm::partition_proportional(rows, &col_speeds)?);
+    }
+    Ok(GridPartition {
+        col_widths,
+        row_heights,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig 8 worked example: a 6×6 square over a 3×3 grid with
+    /// relative speeds {0.11,0.25,0.05, 0.17,0.09,0.08, 0.05,0.17,0.03}.
+    #[test]
+    fn fig8_worked_example() {
+        let speeds = vec![
+            vec![0.11, 0.25, 0.05],
+            vec![0.17, 0.09, 0.08],
+            vec![0.05, 0.17, 0.03],
+        ];
+        let g = two_step(6, 6, &speeds).unwrap();
+        // column sums 0.33 : 0.51 : 0.16 ≈ 2 : 3 : 1
+        assert_eq!(g.col_widths, vec![2, 3, 1]);
+        // first column rows 0.11 : 0.17 : 0.05 ≈ 2 : 3 : 1
+        assert_eq!(g.row_heights[0], vec![2, 3, 1]);
+        // second column rows 0.25 : 0.09 : 0.17 ≈ 3 : 1 : 2
+        assert_eq!(g.row_heights[1], vec![3, 1, 2]);
+        // third column rows 0.05 : 0.08 : 0.03 ≈ 2 : 3 : 1
+        assert_eq!(g.row_heights[2], vec![2, 3, 1]);
+        assert_eq!(g.total_area(), 36);
+    }
+
+    #[test]
+    fn areas_consistent() {
+        let speeds = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let g = two_step(10, 10, &speeds).unwrap();
+        assert_eq!(g.total_area(), 100);
+        assert_eq!(g.area(0, 0), g.col_widths[0] * g.row_heights[0][0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let speeds = vec![vec![1.0, 2.0], vec![3.0]];
+        assert!(two_step(4, 4, &speeds).is_err());
+    }
+
+    #[test]
+    fn homogeneous_grid_even() {
+        let speeds = vec![vec![1.0; 4]; 4];
+        let g = two_step(8, 8, &speeds).unwrap();
+        assert!(g.col_widths.iter().all(|&w| w == 2));
+        for j in 0..4 {
+            assert!(g.row_heights[j].iter().all(|&h| h == 2));
+        }
+    }
+}

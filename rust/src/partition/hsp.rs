@@ -1,0 +1,200 @@
+//! Integer finishing for real-valued allocations: largest-remainder
+//! rounding plus single-unit local refinement ("heterogeneous set
+//! partitioning" finish).
+//!
+//! The geometric bisection produces real allocations `x_i` with
+//! `Σx_i ≈ n`; the final distribution must be integer with `Σd_i = n`
+//! exactly. Largest-remainder keeps every `d_i` within one unit of `x_i`;
+//! the refinement pass then greedily moves single units from the
+//! current-makespan processor to the processor that would finish them
+//! fastest, while that strictly reduces the makespan. For canonical speed
+//! functions one unit of slack is already optimal; refinement mops up the
+//! non-canonical (noisy-estimate) cases.
+
+use crate::fpm::SpeedFunction;
+
+/// Round non-negative reals to integers preserving `Σ = n` (largest
+/// remainder / Hamilton method). Panics if `Σx_i` rounds further than
+/// `xs.len()` units away from `n` (indicates a broken caller).
+pub fn round_to_sum(xs: &[f64], n: u64) -> Vec<u64> {
+    assert!(!xs.is_empty());
+    let mut d: Vec<u64> = xs.iter().map(|&x| x.max(0.0).floor() as u64).collect();
+    let mut assigned: u64 = d.iter().sum();
+
+    if assigned > n {
+        // floor overshoot can only happen when Σxs > n (caller passed the
+        // over-allocating bracket); trim from the largest fractional parts'
+        // complement — i.e. smallest remainders first
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = xs[a] - xs[a].floor();
+            let fb = xs[b] - xs[b].floor();
+            fa.partial_cmp(&fb).unwrap()
+        });
+        let mut i = 0;
+        while assigned > n {
+            let idx = order[i % order.len()];
+            if d[idx] > 0 {
+                d[idx] -= 1;
+                assigned -= 1;
+            }
+            i += 1;
+        }
+        return d;
+    }
+
+    // distribute the deficit to the largest remainders
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = xs[a] - xs[a].floor();
+        let fb = xs[b] - xs[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut i = 0;
+    while assigned < n {
+        d[order[i % order.len()]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    d
+}
+
+/// Greedy single-unit refinement: repeatedly move one unit off the
+/// processor that currently defines the makespan onto the one that
+/// minimizes the resulting makespan, while this strictly improves. Bounded
+/// by `4p` moves.
+///
+/// Perf note (§Perf): the naive version recomputed every processor's time
+/// for every candidate destination — O(p²) model evaluations per move,
+/// O(p³) per call, 53 ms at p = 128. This version caches the time vector
+/// and uses the top-2 maxima to evaluate a candidate move in O(1), giving
+/// O(p) evaluations per move.
+pub fn refine<M: SpeedFunction>(d: &mut [u64], models: &[M]) {
+    assert_eq!(d.len(), models.len());
+    let p = d.len();
+    if p < 2 {
+        return;
+    }
+    // cached per-processor times
+    let time_of = |di: u64, m: &M| -> f64 {
+        if di == 0 {
+            0.0
+        } else {
+            m.time(di as f64)
+        }
+    };
+    let mut times: Vec<f64> = d
+        .iter()
+        .zip(models.iter())
+        .map(|(&di, m)| time_of(di, m))
+        .collect();
+
+    let max_moves = 4 * p;
+    for _ in 0..max_moves {
+        // top-2 maxima of the cached times
+        let (mut i1, mut t1, mut t2) = (0usize, f64::MIN, f64::MIN);
+        for (i, &t) in times.iter().enumerate() {
+            if t > t1 {
+                t2 = t1;
+                t1 = t;
+                i1 = i;
+            } else if t > t2 {
+                t2 = t;
+            }
+        }
+        let (src, cur_make) = (i1, t1);
+        if d[src] == 0 {
+            break;
+        }
+        let t_src_new = time_of(d[src] - 1, &models[src]);
+        // makespan of everyone except src after the move ≥ t2
+        let others_max = t2.max(0.0);
+
+        let mut best: Option<(usize, f64, f64)> = None; // (dst, new_make, t_dst_new)
+        for dst in 0..p {
+            if dst == src {
+                continue;
+            }
+            let t_dst_new = models[dst].time((d[dst] + 1) as f64);
+            let new_make = t_dst_new.max(t_src_new).max(others_max);
+            if new_make < cur_make - 1e-15 {
+                match best {
+                    Some((_, b, _)) if b <= new_make => {}
+                    _ => best = Some((dst, new_make, t_dst_new)),
+                }
+            }
+        }
+        match best {
+            Some((dst, _, t_dst_new)) => {
+                d[src] -= 1;
+                d[dst] += 1;
+                times[src] = t_src_new;
+                times[dst] = t_dst_new;
+            }
+            None => break, // local optimum
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpm::ConstantModel;
+
+    #[test]
+    fn round_exact_integers_untouched() {
+        let d = round_to_sum(&[10.0, 20.0, 30.0], 60);
+        assert_eq!(d, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn round_distributes_deficit_by_remainder() {
+        let d = round_to_sum(&[1.9, 1.1, 1.0], 4);
+        assert_eq!(d.iter().sum::<u64>(), 4);
+        assert_eq!(d[0], 2); // biggest remainder gets the extra unit
+    }
+
+    #[test]
+    fn round_handles_overshoot() {
+        let d = round_to_sum(&[2.0, 2.0, 2.0], 5);
+        assert_eq!(d.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn round_never_negative() {
+        let d = round_to_sum(&[0.2, 0.3, 5.5], 2);
+        assert_eq!(d.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn refine_improves_bad_start() {
+        let models = vec![ConstantModel(10.0), ConstantModel(10.0)];
+        let mut d = vec![10u64, 0u64];
+        refine(&mut d, &models);
+        assert_eq!(d.iter().sum::<u64>(), 10);
+        // equal speeds → near-even split after refinement
+        assert!(d[0].abs_diff(d[1]) <= 1, "{d:?}");
+    }
+
+    #[test]
+    fn refine_preserves_sum() {
+        let models = vec![
+            ConstantModel(3.0),
+            ConstantModel(17.0),
+            ConstantModel(29.0),
+        ];
+        let mut d = vec![30u64, 10, 9];
+        let total: u64 = d.iter().sum();
+        refine(&mut d, &models);
+        assert_eq!(d.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn refine_noop_on_balanced() {
+        let models = vec![ConstantModel(1.0), ConstantModel(2.0)];
+        let mut d = vec![10u64, 20u64]; // perfectly balanced
+        let before = d.clone();
+        refine(&mut d, &models);
+        assert_eq!(d, before);
+    }
+}

@@ -1,0 +1,19 @@
+//! Data partitioning algorithms.
+//!
+//! - [`geometric`] — the FPM partitioner of ref. [16]: bisection on the
+//!   line through the origin (the building block used by DFPA every
+//!   iteration).
+//! - [`cpm`] — proportional distribution from constant speeds (the
+//!   conventional baseline).
+//! - [`hsp`] — integer finishing: largest-remainder rounding + single-unit
+//!   refinement.
+//! - [`grid2d`] — the two-step 2D grid distribution of ref. [13] (Fig 8).
+//! - [`column`] — column-width rebalancing for the nested 2D algorithm.
+
+pub mod column;
+pub mod cpm;
+pub mod geometric;
+pub mod grid2d;
+pub mod hsp;
+
+pub use geometric::{partition, partition_with, GeometricOptions, Partition};

@@ -1,0 +1,269 @@
+//! Artifact manifest: discovery and bucket selection.
+//!
+//! `artifacts/manifest.txt` lines have the form
+//!
+//! ```text
+//! <name> <kind> <dim0> [<dim1> ...] <file>
+//! ```
+//!
+//! e.g. `matmul_nb128_n512 matmul1d 128 512 matmul_nb128_n512.hlo.txt`.
+//! The runtime rounds a requested problem size *up* to the smallest bucket
+//! that fits and rescales measured time by the unit ratio (documented in
+//! [`super::real_exec`]).
+
+use crate::error::{HfpmError, Result};
+use std::path::{Path, PathBuf};
+
+/// Kind of kernel an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// 1D local matmul: C[nb, n] = A[nb, n] · B[n, n]; dims = (nb, n).
+    Matmul1d,
+    /// Rank-1 update benchmark kernel; dims = (nb, n).
+    Rank1,
+    /// 2D pivot update; dims = (mb, nb, t).
+    Block2d,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "matmul1d" => Some(Self::Matmul1d),
+            "rank1" => Some(Self::Rank1),
+            "block2d" => Some(Self::Block2d),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub dims: Vec<u64>,
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Computation units of this bucket (product of the task dims; for
+    /// matmul1d the local compute is nb·n·n units, for rank1 nb·n, for
+    /// block2d mb·nb·t block-ops).
+    pub fn units(&self) -> u64 {
+        match self.kind {
+            ArtifactKind::Matmul1d => self.dims[0] * self.dims[1] * self.dims[1],
+            ArtifactKind::Rank1 => self.dims[0] * self.dims[1],
+            ArtifactKind::Block2d => self.dims.iter().product(),
+        }
+    }
+}
+
+/// The parsed manifest with bucket lookup.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            HfpmError::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default location: `$HFPM_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("HFPM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() < 4 {
+                return Err(HfpmError::Artifact(format!(
+                    "manifest line {}: expected `name kind dims... file`, got `{line}`",
+                    lineno + 1
+                )));
+            }
+            let kind = ArtifactKind::parse(fields[1]).ok_or_else(|| {
+                HfpmError::Artifact(format!("unknown artifact kind `{}`", fields[1]))
+            })?;
+            let dims: Vec<u64> = fields[2..fields.len() - 1]
+                .iter()
+                .map(|d| {
+                    d.parse::<u64>().map_err(|_| {
+                        HfpmError::Artifact(format!("bad dim `{d}` on line {}", lineno + 1))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let expected_dims = match kind {
+                ArtifactKind::Block2d => 3,
+                _ => 2,
+            };
+            if dims.len() != expected_dims {
+                return Err(HfpmError::Artifact(format!(
+                    "artifact `{}`: expected {expected_dims} dims, got {}",
+                    fields[0],
+                    dims.len()
+                )));
+            }
+            artifacts.push(ArtifactMeta {
+                name: fields[0].to_string(),
+                kind,
+                dims,
+                path: dir.join(fields[fields.len() - 1]),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(HfpmError::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Self {
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Smallest `matmul1d` bucket with `nb ≥ rows` and `n == cols` exactly
+    /// (the B matrix can't be padded without changing the product), else
+    /// the largest-nb bucket at that n (caller splits the work).
+    pub fn matmul1d_bucket(&self, rows: u64, cols: u64) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Matmul1d && a.dims[1] == cols)
+            .collect();
+        if candidates.is_empty() {
+            return Err(HfpmError::Artifact(format!(
+                "no matmul1d artifact with n = {cols}; available: {:?}",
+                self.artifacts
+                    .iter()
+                    .filter(|a| a.kind == ArtifactKind::Matmul1d)
+                    .map(|a| a.dims[1])
+                    .collect::<Vec<_>>()
+            )));
+        }
+        candidates.sort_by_key(|a| a.dims[0]);
+        Ok(candidates
+            .iter()
+            .find(|a| a.dims[0] >= rows)
+            .copied()
+            .unwrap_or_else(|| candidates[candidates.len() - 1]))
+    }
+
+    /// Smallest `rank1` bucket with `nb ≥ rows` (any n); falls back to the
+    /// largest available. Used by the real-execution DFPA benchmark.
+    pub fn rank1_bucket(&self, rows: u64) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Rank1)
+            .collect();
+        if candidates.is_empty() {
+            return Err(HfpmError::Artifact("no rank1 artifacts in manifest".into()));
+        }
+        candidates.sort_by_key(|a| a.dims[0]);
+        Ok(candidates
+            .iter()
+            .find(|a| a.dims[0] >= rows)
+            .copied()
+            .unwrap_or_else(|| candidates[candidates.len() - 1]))
+    }
+
+    /// Supported `n` values for the 1D kernel.
+    pub fn matmul1d_ns(&self) -> Vec<u64> {
+        let mut ns: Vec<u64> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Matmul1d)
+            .map(|a| a.dims[1])
+            .collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+matmul_nb64_n256 matmul1d 64 256 matmul_nb64_n256.hlo.txt
+matmul_nb128_n256 matmul1d 128 256 matmul_nb128_n256.hlo.txt
+update_nb64_n512 rank1 64 512 update_nb64_n512.hlo.txt
+blockupd_mb128_nb128_t64 block2d 128 128 64 blockupd_mb128_nb128_t64.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::Matmul1d);
+        assert_eq!(m.artifacts[3].dims, vec![128, 128, 64]);
+        assert!(m.artifacts[0].path.ends_with("matmul_nb64_n256.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_rounds_up() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.matmul1d_bucket(50, 256).unwrap().dims[0], 64);
+        assert_eq!(m.matmul1d_bucket(64, 256).unwrap().dims[0], 64);
+        assert_eq!(m.matmul1d_bucket(65, 256).unwrap().dims[0], 128);
+    }
+
+    #[test]
+    fn oversize_falls_back_to_largest() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.matmul1d_bucket(10_000, 256).unwrap().dims[0], 128);
+    }
+
+    #[test]
+    fn missing_n_is_error() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.matmul1d_bucket(64, 1024).is_err());
+    }
+
+    #[test]
+    fn units_per_kind() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts[0].units(), 64 * 256 * 256); // matmul1d
+        assert_eq!(m.artifacts[2].units(), 64 * 512); // rank1
+        assert_eq!(m.artifacts[3].units(), 128 * 128 * 64); // block2d
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ArtifactManifest::parse("bad line\n", Path::new("/tmp")).is_err());
+        assert!(ArtifactManifest::parse("", Path::new("/tmp")).is_err());
+        assert!(
+            ArtifactManifest::parse("x unknown 1 2 f.hlo.txt\n", Path::new("/tmp")).is_err()
+        );
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration-style: only runs when `make artifacts` has been run
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = ArtifactManifest::load(dir).unwrap();
+            assert!(!m.matmul1d_ns().is_empty());
+        }
+    }
+}

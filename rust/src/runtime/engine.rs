@@ -1,0 +1,178 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps `xla::PjRtClient` (CPU) with an executable cache keyed by artifact
+//! name. Adapted from the working reference at /opt/xla-example/load_hlo.
+
+use super::artifact::{ArtifactManifest, ArtifactMeta};
+use crate::error::{HfpmError, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// A compiled, executable kernel plus its metadata.
+pub struct LoadedKernel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine owns the PJRT client and the executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: HashMap<String, LoadedKernel>,
+    /// Cumulative kernel wall time (profiling).
+    pub total_exec_s: f64,
+    /// Number of kernel executions.
+    pub exec_count: u64,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over a manifest.
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            total_exec_s: 0.0,
+            exec_count: 0,
+        })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(ArtifactManifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact `name`.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedKernel> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| HfpmError::Artifact(format!("unknown artifact `{name}`")))?
+                .clone();
+            let path = meta.path.to_string_lossy().to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                HfpmError::Artifact(format!("parse {path}: {e}"))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(meta.name.clone(), LoadedKernel { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on f32 input buffers (each `(data, shape)`),
+    /// returning the first tuple element as a flat f32 vec + its wall time.
+    ///
+    /// All model functions return 1-tuples (lowered with
+    /// `return_tuple=True`), matching `to_tuple1` here.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<(Vec<f32>, f64)> {
+        self.load(name)?;
+        let kernel = &self.cache[name];
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims)?);
+        }
+        let start = Instant::now();
+        let result = kernel.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let dt = start.elapsed().as_secs_f64();
+        self.total_exec_s += dt;
+        self.exec_count += 1;
+        let out = result.to_tuple1()?;
+        Ok((out.to_vec::<f32>()?, dt))
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn engine() -> Option<PjrtEngine> {
+        // these tests need `make artifacts` to have run
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping PJRT test: artifacts not built");
+            return None;
+        }
+        Some(PjrtEngine::new(ArtifactManifest::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn matmul_artifact_numerics() {
+        let Some(mut e) = engine() else { return };
+        let name = "matmul_nb64_n256";
+        let nb = 64usize;
+        let n = 256usize;
+        // A = all 0.5, B = identity → C == A
+        let a = vec![0.5f32; nb * n];
+        let mut b = vec![0.0f32; n * n];
+        for i in 0..n {
+            b[i * n + i] = 1.0;
+        }
+        let (c, dt) = e
+            .execute_f32(name, &[(&a, &[nb, n]), (&b, &[n, n])])
+            .unwrap();
+        assert_eq!(c.len(), nb * n);
+        assert!(c.iter().all(|&x| (x - 0.5).abs() < 1e-5));
+        assert!(dt > 0.0);
+    }
+
+    #[test]
+    fn rank1_artifact_numerics() {
+        let Some(mut e) = engine() else { return };
+        let nb = 64usize;
+        let n = 512usize;
+        let c0 = vec![1.0f32; nb * n];
+        let a = vec![2.0f32; nb];
+        let b = vec![3.0f32; n];
+        let (c, _) = e
+            .execute_f32(
+                "update_nb64_n512",
+                &[(&c0, &[nb, n]), (&a, &[nb, 1]), (&b, &[1, n])],
+            )
+            .unwrap();
+        // 1 + 2*3 = 7 everywhere
+        assert!(c.iter().all(|&x| (x - 7.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(mut e) = engine() else { return };
+        let a = vec![0.0f32; 64 * 256];
+        let b = vec![0.0f32; 256 * 256];
+        e.execute_f32("matmul_nb64_n256", &[(&a, &[64, 256]), (&b, &[256, 256])])
+            .unwrap();
+        e.execute_f32("matmul_nb64_n256", &[(&a, &[64, 256]), (&b, &[256, 256])])
+            .unwrap();
+        assert_eq!(e.cached(), 1);
+        assert_eq!(e.exec_count, 2);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.execute_f32("nope", &[]).is_err());
+    }
+}

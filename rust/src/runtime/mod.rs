@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas kernels and execute them
+//! from the coordinator hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 model
+//! to `artifacts/*.hlo.txt` once; this module loads the HLO **text** (the
+//! interchange format xla_extension 0.5.1 accepts — see python/compile/
+//! aot.py), compiles each artifact on the PJRT CPU client, caches the
+//! executables, and runs them with concrete buffers.
+
+pub mod artifact;
+pub mod engine;
+pub mod real_exec;
+pub mod service;
+
+pub use artifact::{ArtifactKind, ArtifactManifest, ArtifactMeta};
+pub use engine::PjrtEngine;
+pub use real_exec::RealScaledExecutor;
+pub use service::PjrtService;

@@ -1,0 +1,199 @@
+//! PJRT service thread.
+//!
+//! The `xla` crate's `PjRtClient` is `!Send` (internal `Rc`), but cluster
+//! workers run on their own threads. The service owns the engine on one
+//! dedicated thread and exposes a cloneable, `Send` handle with a
+//! request/reply channel API. Serializing kernel executions through one
+//! thread is also the *correct* measurement discipline on a single
+//! physical CPU: concurrent kernel runs would contaminate each other's
+//! wall times.
+
+use super::artifact::ArtifactManifest;
+use super::engine::PjrtEngine;
+use crate::error::{HfpmError, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+struct Request {
+    name: String,
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    reply: Sender<Result<(Vec<f32>, f64)>>,
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Sender<Request>,
+    manifest: ArtifactManifest,
+    /// Best observed execution rate per artifact (units/s), shared by all
+    /// handles: the rate is a property of the *host*, and sharing it keeps
+    /// every simulated node's time scale coherent (see real_exec.rs).
+    rates: Arc<Mutex<HashMap<String, f64>>>,
+}
+
+impl PjrtService {
+    /// Start the service over a manifest. The engine (and its PJRT client)
+    /// is created on the service thread.
+    pub fn start(manifest: ArtifactManifest) -> Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let thread_manifest = manifest.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".to_string())
+            .spawn(move || {
+                let mut engine = match PjrtEngine::new(thread_manifest) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let inputs: Vec<(&[f32], &[usize])> = req
+                        .inputs
+                        .iter()
+                        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                        .collect();
+                    let result = engine.execute_f32(&req.name, &inputs);
+                    let _ = req.reply.send(result);
+                }
+            })
+            .map_err(|e| HfpmError::Runtime(format!("spawn pjrt service: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| HfpmError::Runtime("pjrt service died during startup".into()))??;
+        Ok(Self {
+            tx,
+            manifest,
+            rates: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// Start over the default artifacts directory.
+    pub fn start_default() -> Result<Self> {
+        Self::start(ArtifactManifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact; blocks until the service replies. Returns the
+    /// flat f32 output and the kernel wall time.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<(Vec<f32>, f64)> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request {
+                name: name.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| HfpmError::Runtime("pjrt service is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| HfpmError::Runtime("pjrt service dropped the reply".into()))?
+    }
+
+    /// Fold a rate observation (units/s) for `name` into the shared cache;
+    /// returns the best rate seen so far.
+    pub fn observe_rate(&self, name: &str, observed: f64) -> f64 {
+        let mut map = self.rates.lock().expect("rates mutex poisoned");
+        let entry = map.entry(name.to_string()).or_insert(observed);
+        if observed > *entry {
+            *entry = observed;
+        }
+        *entry
+    }
+
+    /// Best known rate for `name`, if any observation exists.
+    pub fn known_rate(&self, name: &str) -> Option<f64> {
+        self.rates.lock().expect("rates mutex poisoned").get(name).copied()
+    }
+
+    /// Calibration pass: run every rank-1 bucket `reps` times and fold the
+    /// best rates into the shared cache. Making the rate estimates
+    /// stationary *before* DFPA starts matters: DFPA assumes the platform's
+    /// speeds don't drift, and a cold executable warming up mid-run looks
+    /// exactly like drift (stale model points then stall convergence).
+    pub fn calibrate_rank1(&self, reps: usize) -> Result<()> {
+        let metas: Vec<_> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == super::artifact::ArtifactKind::Rank1)
+            .cloned()
+            .collect();
+        for meta in metas {
+            let (nb, n) = (meta.dims[0] as usize, meta.dims[1] as usize);
+            let mut best = f64::INFINITY;
+            for _ in 0..reps.max(1) {
+                let c = vec![1.0f32; nb * n];
+                let a = vec![0.5f32; nb];
+                let b = vec![2.0f32; n];
+                let (_, wall) = self.execute_f32(
+                    &meta.name,
+                    vec![(c, vec![nb, n]), (a, vec![nb, 1]), (b, vec![1, n])],
+                )?;
+                best = best.min(wall);
+            }
+            self.observe_rate(&meta.name, meta.units() as f64 / best.max(1e-9));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn service() -> Option<PjrtService> {
+        if !Path::new("artifacts/manifest.txt").exists() {
+            eprintln!("skipping service test: artifacts not built");
+            return None;
+        }
+        Some(PjrtService::start(ArtifactManifest::load(Path::new("artifacts")).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn service_executes_from_other_threads() {
+        let Some(svc) = service() else { return };
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    let nb = 64usize;
+                    let n = 512usize;
+                    let c = vec![0.0f32; nb * n];
+                    let a = vec![1.0f32; nb];
+                    let b = vec![1.0f32; n];
+                    let (out, dt) = svc
+                        .execute_f32(
+                            "update_nb64_n512",
+                            vec![(c, vec![nb, n]), (a, vec![nb, 1]), (b, vec![1, n])],
+                        )
+                        .unwrap();
+                    assert!(out.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+                    assert!(dt > 0.0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors_through_service() {
+        let Some(svc) = service() else { return };
+        assert!(svc.execute_f32("bogus", vec![]).is_err());
+    }
+}

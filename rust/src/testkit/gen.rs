@@ -1,0 +1,146 @@
+//! Value generators for `testkit` properties.
+
+use crate::util::rng::Pcg32;
+
+/// A seeded generator with a size `scale` in (0, 1]. Shrinking lowers the
+/// scale, which proportionally lowers the *upper bounds* of sized draws, so
+/// re-running a failing property tends to produce smaller inputs.
+pub struct Gen {
+    rng: Pcg32,
+    scale: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, scale: f64) -> Self {
+        Self {
+            rng: Pcg32::seeded(seed),
+            scale: scale.clamp(1.0 / 4096.0, 1.0),
+        }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    pub(crate) fn rng_mut_internal(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// Scaled upper bound: lo + (hi-lo)*scale, at least lo.
+    fn scaled_hi_usize(&self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.scale).round() as usize;
+        lo + span
+    }
+
+    /// usize in [lo, hi], upper bound shrunk by scale.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let h = self.scaled_hi_usize(lo, hi);
+        self.rng.range_usize(lo, h.max(lo))
+    }
+
+    /// u64 in [lo, hi], upper bound shrunk by scale.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.scale).round() as u64;
+        self.rng.range_u64(lo, lo + span)
+    }
+
+    /// f64 uniform in [lo, hi) — not scaled (magnitudes usually matter less
+    /// than counts for shrinking).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// f64 uniform in [lo, lo + (hi-lo)*scale) — scaled variant.
+    pub fn f64_in_scaled(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, lo + (hi - lo) * self.scale)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one of the options.
+    pub fn pick<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        assert!(!options.is_empty());
+        let i = self.rng.below(options.len() as u64) as usize;
+        &options[i]
+    }
+
+    /// Vec of f64s with length in [min_len, max_len] (scaled).
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Vec of usizes with length in [min_len, max_len] (scaled).
+    pub fn vec_usize(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Vec<usize> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Strictly increasing sorted vec of distinct usizes in [lo, hi].
+    pub fn sorted_distinct_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        assert!(hi - lo + 1 >= len, "range too small for distinct draw");
+        let mut out = std::collections::BTreeSet::new();
+        while out.len() < len {
+            out.insert(self.rng.range_usize(lo, hi));
+        }
+        out.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..1000 {
+            let x = g.usize_in(3, 17);
+            assert!((3..=17).contains(&x));
+        }
+    }
+
+    #[test]
+    fn scale_shrinks_upper_bound() {
+        let mut g = Gen::new(1, 0.1);
+        for _ in 0..1000 {
+            let x = g.usize_in(0, 100);
+            assert!(x <= 10, "x={x} exceeds scaled bound");
+        }
+    }
+
+    #[test]
+    fn scale_never_below_lower_bound() {
+        let mut g = Gen::new(1, 0.001);
+        for _ in 0..100 {
+            assert!(g.usize_in(5, 1000) >= 5);
+        }
+    }
+
+    #[test]
+    fn sorted_distinct_is_sorted_distinct() {
+        let mut g = Gen::new(2, 1.0);
+        let v = g.sorted_distinct_usize(10, 0, 100);
+        assert_eq!(v.len(), 10);
+        assert!(v.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(42, 1.0);
+        let mut b = Gen::new(42, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.usize_in(0, 1 << 20), b.usize_in(0, 1 << 20));
+        }
+    }
+}

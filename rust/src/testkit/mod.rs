@@ -1,0 +1,181 @@
+//! `testkit` — a small property-based testing harness (the offline build has
+//! no `proptest`).
+//!
+//! Model: a property is a closure `Fn(&mut Pcg32) -> Result<(), String>` run
+//! for `cases` deterministic seeds. On failure the harness re-runs the
+//! failing seed with progressively simpler generator bounds ("shrink-lite"):
+//! generators draw sizes through [`Gen`], which exposes a `scale` in (0, 1]
+//! that the harness lowers on failure to look for a smaller counterexample.
+//! The minimal failing seed/scale pair is reported in the panic message so a
+//! failure is always reproducible with [`replay`].
+
+use crate::util::rng::Pcg32;
+
+pub mod gen;
+pub use gen::Gen;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u64,
+    /// Base seed; each case uses `seed + case_index`.
+    pub seed: u64,
+    /// Shrink attempts (scale reductions) after a failure.
+    pub shrink_steps: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0xC0FFEE,
+            shrink_steps: 8,
+        }
+    }
+}
+
+/// Run a property for `cfg.cases` seeds; panic with a replayable report on
+/// the first failure (after attempting to shrink).
+pub fn check_with<F>(cfg: &Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // try to find a *smaller* failure by lowering the size scale
+            let mut best: (f64, String) = (1.0, msg);
+            let mut scale = 1.0f64;
+            for _ in 0..cfg.shrink_steps {
+                scale *= 0.5;
+                let mut g2 = Gen::new(seed, scale);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (scale, m2);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={seed}, scale={:.4}):\n  {}\n  replay: testkit::replay({seed}, {:.4}, prop)",
+                best.0, best.1, best.0
+            );
+        }
+    }
+}
+
+/// Run a property with the default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_with(&Config::default(), name, prop);
+}
+
+/// Re-run a single failing case (used when diagnosing a reported failure).
+pub fn replay<F>(seed: u64, scale: f64, prop: F) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(seed, scale);
+    prop(&mut g)
+}
+
+/// Assert inside a property, returning `Err` with a formatted message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Assert approximate equality inside a property.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} ≈ {} failed: {a} vs {b} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                $tol
+            ));
+        }
+    }};
+}
+
+/// Direct access to the underlying RNG for custom draws.
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        self.rng_mut_internal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", |g| {
+            let a = g.f64_in(0.0, 100.0);
+            let b = g.f64_in(0.0, 100.0);
+            prop_assert_close!(a + b, b + a, 1e-12);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn shrink_finds_smaller_scale() {
+        // property failing whenever vec len > 0: shrink reduces scale but
+        // len stays ≥1 because usize_in(1, ..) keeps the lower bound — the
+        // report must still fire.
+        let result = std::panic::catch_unwind(|| {
+            check("len>0-fails", |g| {
+                let n = g.usize_in(1, 100);
+                prop_assert!(n == 0, "len was {n}");
+                Ok(())
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let prop = |g: &mut Gen| -> Result<(), String> {
+            let x = g.usize_in(0, 1000);
+            if x % 2 == 0 {
+                Err(format!("even {x}"))
+            } else {
+                Ok(())
+            }
+        };
+        // find a failing seed first
+        let mut failing = None;
+        for seed in 0..100 {
+            if replay(seed, 1.0, prop).is_err() {
+                failing = Some(seed);
+                break;
+            }
+        }
+        let seed = failing.expect("some seed fails");
+        // replay must fail deterministically, twice
+        assert!(replay(seed, 1.0, prop).is_err());
+        assert!(replay(seed, 1.0, prop).is_err());
+    }
+}

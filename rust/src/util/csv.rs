@@ -1,0 +1,140 @@
+//! Tiny CSV writer/reader for experiment traces (figures are emitted as CSV
+//! series that plot 1:1 against the paper's figures).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Incremental CSV writer.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    ncol: usize,
+}
+
+impl CsvWriter {
+    /// Open a CSV file, writing the header row. Parent dirs are created.
+    pub fn create(path: &Path, headers: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path)?;
+        let mut w = Self {
+            out: Box::new(std::io::BufWriter::new(file)),
+            ncol: headers.len(),
+        };
+        w.write_raw(headers)?;
+        Ok(w)
+    }
+
+    /// In-memory writer (testing).
+    pub fn sink(headers: &[&str]) -> Self {
+        Self {
+            out: Box::new(std::io::sink()),
+            ncol: headers.len(),
+        }
+    }
+
+    fn write_raw(&mut self, cells: &[&str]) -> std::io::Result<()> {
+        let quoted: Vec<String> = cells.iter().map(|c| quote(c)).collect();
+        writeln!(self.out, "{}", quoted.join(","))
+    }
+
+    /// Write a row of stringified cells; panics on column-count mismatch.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.ncol, "csv row width mismatch");
+        let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
+        self.write_raw(&refs)
+    }
+
+    /// Write a row of f64s with given precision.
+    pub fn row_f64(&mut self, cells: &[f64], prec: usize) -> std::io::Result<()> {
+        let strs: Vec<String> = cells.iter().map(|x| format!("{x:.prec$}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn quote(c: &str) -> String {
+    if c.contains(',') || c.contains('"') || c.contains('\n') {
+        format!("\"{}\"", c.replace('"', "\"\""))
+    } else {
+        c.to_string()
+    }
+}
+
+/// Parse a simple CSV string (no embedded newlines in fields) into rows.
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    text.lines()
+        .filter(|l| !l.is_empty())
+        .map(parse_line)
+        .collect()
+}
+
+fn parse_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let rows = parse("a,b\n1,2\n3,4\n");
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1], vec!["1", "2"]);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let rows = parse("\"x,y\",\"he said \"\"hi\"\"\"\n");
+        assert_eq!(rows[0][0], "x,y");
+        assert_eq!(rows[0][1], "he said \"hi\"");
+    }
+
+    #[test]
+    fn writer_to_file() {
+        let dir = std::env::temp_dir().join("hfpm_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["n", "t"]).unwrap();
+            w.row_f64(&[1.0, 2.5], 2).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("n,t\n"));
+        assert!(text.contains("1.00,2.50"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::sink(&["a", "b"]);
+        let _ = w.row(&["only".to_string()]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic RNG, statistics, timing (real + virtual),
+//! CSV and table output, and a minimal leveled logger.
+
+pub mod csv;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use stats::{max_relative_imbalance, Accumulator, Summary};
+pub use table::{fdur, fnum, Align, Table};
+pub use timer::{time, Stopwatch, VirtualClock};

@@ -1,0 +1,207 @@
+//! Summary statistics used by the bench harness and the metrics recorder.
+
+/// Online accumulator (Welford) for mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Full-sample summary with percentiles; used for bench reports.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::from_samples on empty slice");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut acc = Accumulator::new();
+        for &s in samples {
+            acc.push(s);
+        }
+        Self {
+            count: samples.len(),
+            mean: acc.mean(),
+            stddev: acc.stddev(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+            max: *sorted.last().unwrap(),
+        }
+    }
+
+    /// Relative stddev (coefficient of variation), for convergence checks.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Maximum pairwise relative imbalance of a time vector — the paper's
+/// termination criterion: `max_{i,j} |t_i - t_j| / t_i`.
+pub fn max_relative_imbalance(times: &[f64]) -> f64 {
+    let mut worst = 0.0f64;
+    for (i, &ti) in times.iter().enumerate() {
+        if ti <= 0.0 {
+            continue;
+        }
+        for (j, &tj) in times.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let r = (ti - tj).abs() / ti;
+            if r > worst {
+                worst = r;
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_basic() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let s = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 0.5), 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = vec![0.0, 10.0];
+        assert!((percentile_sorted(&s, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_from_samples() {
+        let s = Summary::from_samples(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(s.count, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_zero() {
+        assert_eq!(max_relative_imbalance(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn imbalance_matches_paper_formula() {
+        // t = [1, 2]: max over (i,j) of |ti-tj|/ti = max(1/1, 1/2) = 1.
+        assert!((max_relative_imbalance(&[1.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_ignores_nonpositive_reference() {
+        // zero entries can't be a reference denominator
+        let v = max_relative_imbalance(&[0.0, 2.0]);
+        assert!((v - 1.0).abs() < 1e-12); // only i=2.0 counts: |2-0|/2 = 1
+    }
+}

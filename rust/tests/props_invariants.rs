@@ -1,0 +1,267 @@
+//! Property-based invariants (testkit): randomized checks of the core
+//! algorithms' contracts.
+
+use hfpm::dfpa::algorithm::{even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport};
+use hfpm::error::Result;
+use hfpm::fpm::{PiecewiseModel, SpeedFunction};
+use hfpm::partition::{self, hsp};
+use hfpm::testkit::{check, check_with, Config, Gen};
+use hfpm::util::stats::max_relative_imbalance;
+use hfpm::util::timer::VirtualClock;
+use hfpm::{prop_assert, prop_assert_close};
+
+/// Random piecewise model with decreasing-ish speeds (canonical shape).
+fn random_model(g: &mut Gen) -> PiecewiseModel {
+    let mut m = PiecewiseModel::new();
+    let k = g.usize_in(1, 6);
+    let mut x = g.f64_in(1.0, 50.0);
+    let mut s = g.f64_in(100.0, 1000.0);
+    for _ in 0..k {
+        m.insert(x, s);
+        x *= g.f64_in(1.5, 4.0);
+        s *= g.f64_in(0.4, 1.0); // non-increasing speeds
+    }
+    m
+}
+
+#[test]
+fn prop_partition_sums_and_nonneg() {
+    check("partition: Σd = n, d ≥ 0", |g| {
+        let p = g.usize_in(1, 12);
+        let models: Vec<PiecewiseModel> = (0..p).map(|_| random_model(g)).collect();
+        let n = g.u64_in(1, 100_000);
+        let part = partition::partition(n, &models).map_err(|e| e.to_string())?;
+        prop_assert!(part.d.len() == p, "wrong length");
+        prop_assert!(
+            part.d.iter().sum::<u64>() == n,
+            "sum {} != {n}",
+            part.d.iter().sum::<u64>()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_locally_optimal() {
+    // no single-unit move improves the makespan (within float slack)
+    check_with(
+        &Config {
+            cases: 64,
+            ..Default::default()
+        },
+        "partition: local optimality",
+        |g| {
+            let p = g.usize_in(2, 6);
+            let models: Vec<PiecewiseModel> = (0..p).map(|_| random_model(g)).collect();
+            let n = g.u64_in(p as u64, 20_000);
+            let part = partition::partition(n, &models).map_err(|e| e.to_string())?;
+            let makespan = |d: &[u64]| -> f64 {
+                d.iter()
+                    .zip(&models)
+                    .map(|(&x, m)| if x == 0 { 0.0 } else { m.time(x as f64) })
+                    .fold(0.0f64, f64::max)
+            };
+            let base = makespan(&part.d);
+            for src in 0..p {
+                if part.d[src] == 0 {
+                    continue;
+                }
+                for dst in 0..p {
+                    if src == dst {
+                        continue;
+                    }
+                    let mut alt = part.d.clone();
+                    alt[src] -= 1;
+                    alt[dst] += 1;
+                    prop_assert!(
+                        makespan(&alt) >= base * (1.0 - 1e-9),
+                        "move {src}->{dst}: {} < {base}",
+                        makespan(&alt)
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_to_sum_within_one_unit() {
+    check("hsp: rounding stays within 1 of the reals", |g| {
+        let p = g.usize_in(1, 16);
+        let reals: Vec<f64> = (0..p).map(|_| g.f64_in(0.0, 1e5)).collect();
+        let total: f64 = reals.iter().sum();
+        let n = total.round() as u64;
+        let d = hsp::round_to_sum(&reals, n);
+        prop_assert!(d.iter().sum::<u64>() == n, "sum mismatch");
+        for (i, (&di, &ri)) in d.iter().zip(&reals).enumerate() {
+            // largest-remainder keeps each within ~1 of its real (plus the
+            // global overshoot correction, ≤ p extra in pathological cases)
+            prop_assert!(
+                (di as f64 - ri).abs() <= 1.0 + p as f64,
+                "entry {i}: {di} vs {ri}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_even_distribution_within_one() {
+    check("even distribution: |d_i − n/p| < 1", |g| {
+        let p = g.usize_in(1, 40);
+        let n = g.u64_in(0, 1_000_000);
+        let d = even_distribution(n, p);
+        prop_assert!(d.iter().sum::<u64>() == n, "sum");
+        let lo = n / p as u64;
+        for &x in &d {
+            prop_assert!(x == lo || x == lo + 1, "{x} not in {{{lo}, {}}}", lo + 1);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_piecewise_eval_bounded_by_observations() {
+    check("piecewise: eval within [min_s, max_s]", |g| {
+        let m = random_model(g);
+        let (min_s, max_s) = m
+            .points()
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+                (lo.min(p.s), hi.max(p.s))
+            });
+        for _ in 0..50 {
+            let x = g.f64_in(0.1, 1e6);
+            let s = m.speed(x);
+            prop_assert!(
+                s >= min_s - 1e-9 && s <= max_s + 1e-9,
+                "speed({x}) = {s} outside [{min_s}, {max_s}]"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_virtual_clock_monotone() {
+    check("virtual clock: monotone under any op sequence", |g| {
+        let mut c = VirtualClock::new();
+        let mut last = 0.0;
+        for _ in 0..g.usize_in(1, 100) {
+            match g.usize_in(0, 2) {
+                0 => c.advance(g.f64_in(0.0, 10.0)),
+                1 => {
+                    let durs = g.vec_f64(0, 5, 0.0, 10.0);
+                    c.join_parallel(&durs);
+                }
+                _ => c.sync_to(g.f64_in(0.0, 500.0)),
+            }
+            prop_assert!(c.now() >= last, "clock went backwards");
+            last = c.now();
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic analytic benchmarker for DFPA properties.
+struct PropBench {
+    models: Vec<PiecewiseModel>,
+}
+
+impl Benchmarker for PropBench {
+    fn processors(&self) -> usize {
+        self.models.len()
+    }
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        let times: Vec<f64> = d
+            .iter()
+            .zip(&self.models)
+            .map(|(&x, m)| if x == 0 { 0.0 } else { m.time(x as f64) })
+            .collect();
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        Ok(StepReport {
+            times,
+            virtual_cost_s: max,
+        })
+    }
+}
+
+#[test]
+fn prop_dfpa_exit_criterion_holds() {
+    // whenever DFPA reports converged, the returned times satisfy ε
+    check_with(
+        &Config {
+            cases: 48,
+            ..Default::default()
+        },
+        "dfpa: ε holds at exit",
+        |g| {
+            let p = g.usize_in(2, 8);
+            let models: Vec<PiecewiseModel> = (0..p).map(|_| random_model(g)).collect();
+            let n = g.u64_in(100 * p as u64, 200_000);
+            let eps = g.f64_in(0.02, 0.2);
+            let mut bench = PropBench { models };
+            let r = run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(eps))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(r.d.iter().sum::<u64>() == n, "sum");
+            if r.converged {
+                let active: Vec<f64> = r
+                    .times
+                    .iter()
+                    .zip(&r.d)
+                    .filter(|(_, &d)| d > 0)
+                    .map(|(&t, _)| t)
+                    .collect();
+                let imb = max_relative_imbalance(&active);
+                prop_assert!(imb <= eps + 1e-9, "imbalance {imb} > ε {eps}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dfpa_gather_heard_every_worker_once() {
+    // routing/batching invariant: every iteration's record has exactly one
+    // observation per processor and distributions always sum to n
+    check_with(
+        &Config {
+            cases: 32,
+            ..Default::default()
+        },
+        "dfpa: per-iteration records complete",
+        |g| {
+            let p = g.usize_in(2, 6);
+            let models: Vec<PiecewiseModel> = (0..p).map(|_| random_model(g)).collect();
+            let n = g.u64_in(10 * p as u64, 50_000);
+            let mut bench = PropBench { models };
+            let r = run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(0.05))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(!r.records.is_empty(), "no records");
+            for rec in &r.records {
+                prop_assert!(rec.d.len() == p, "d width");
+                prop_assert!(rec.times.len() == p, "times width");
+                prop_assert!(rec.d.iter().sum::<u64>() == n, "iteration sum");
+            }
+            // virtual accounting consistency
+            let total: f64 = r.records.iter().map(|rec| rec.virtual_cost_s).sum();
+            prop_assert_close!(total, r.total_virtual_s, 1e-9);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scaled_model_time_invariant() {
+    check("scaled model: time is unit-change invariant", |g| {
+        let m = random_model(g);
+        let scale = g.f64_in(2.0, 1000.0);
+        let view = hfpm::fpm::ScaledModel::new(&m, scale);
+        for _ in 0..20 {
+            let rows = g.f64_in(0.5, 1e4);
+            prop_assert_close!(view.time(rows), m.time(rows * scale), 1e-6 * m.time(rows * scale).max(1.0));
+        }
+        Ok(())
+    });
+}

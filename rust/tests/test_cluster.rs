@@ -1,0 +1,98 @@
+//! Integration tests: the virtual cluster runtime (protocol, accounting,
+//! determinism).
+
+use hfpm::cluster::comm::CommModel;
+use hfpm::cluster::executor::NodeExecutor;
+use hfpm::cluster::faults::FaultPlan;
+use hfpm::cluster::node::build_nodes;
+use hfpm::cluster::presets;
+use hfpm::cluster::virtual_cluster::VirtualCluster;
+use hfpm::fpm::analytic::Footprint;
+
+fn spawn(preset: &str) -> VirtualCluster {
+    let spec = presets::by_name(preset).unwrap();
+    let nodes = build_nodes(&spec, Footprint::matmul_1d(2048), 32);
+    let execs: Vec<Box<dyn NodeExecutor>> = nodes
+        .into_iter()
+        .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+        .collect();
+    VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+}
+
+#[test]
+fn full_hcl_superstep() {
+    let mut c = spawn("hcl");
+    let d = vec![100_000u64; 16];
+    let r = c.run_1d(&d).unwrap();
+    assert_eq!(r.times.len(), 16);
+    assert!(r.times.iter().all(|&t| t > 0.0));
+    // step cost ≥ slowest worker
+    let max = r.times.iter().cloned().fold(0.0f64, f64::max);
+    assert!(r.virtual_cost_s >= max);
+}
+
+#[test]
+fn heterogeneity_visible_in_times() {
+    let mut c = spawn("hcl");
+    let d = vec![500_000u64; 16];
+    let r = c.run_1d(&d).unwrap();
+    let min = r.times.iter().cloned().fold(f64::MAX, f64::min);
+    let max = r.times.iter().cloned().fold(0.0f64, f64::max);
+    // peak heterogeneity ≈ 2 on HCL
+    assert!(max / min > 1.3, "ratio {}", max / min);
+    assert!(max / min < 4.0, "ratio {}", max / min);
+}
+
+#[test]
+fn virtual_time_is_deterministic_across_runs() {
+    let run = || {
+        let mut c = spawn("mini4");
+        c.run_1d(&[10_000, 20_000, 30_000, 40_000]).unwrap();
+        c.run_1d(&[40_000, 30_000, 20_000, 10_000]).unwrap();
+        c.now()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "virtual clock must be reproducible");
+}
+
+#[test]
+fn steps_counted() {
+    let mut c = spawn("mini4");
+    assert_eq!(c.steps_run, 0);
+    c.run_1d(&[1, 1, 1, 1]).unwrap();
+    c.run_1d(&[1, 1, 1, 1]).unwrap();
+    assert_eq!(c.steps_run, 2);
+}
+
+#[test]
+fn grid5000_wan_collectives_cost_more() {
+    let g5k = presets::grid5000();
+    let hcl = presets::hcl();
+    let m_g5k = CommModel::new(g5k);
+    let m_hcl = CommModel::new(hcl);
+    // control traffic crossing sites costs much more than LAN-only
+    assert!(m_g5k.dfpa_iteration_cost(0) > 5.0 * m_hcl.dfpa_iteration_cost(0));
+}
+
+#[test]
+fn charge_accumulates_into_clock() {
+    let mut c = spawn("mini4");
+    let t0 = c.now();
+    c.charge(12.5);
+    assert!((c.now() - t0 - 12.5).abs() < 1e-12);
+}
+
+#[test]
+fn many_supersteps_stay_consistent() {
+    // stress the leader/worker protocol: 200 supersteps with varying work
+    let mut c = spawn("mini4");
+    let mut last = 0.0;
+    for k in 1..=200u64 {
+        let r = c.run_1d(&[k * 10, k * 20, k * 5, k * 15]).unwrap();
+        assert_eq!(r.times.len(), 4);
+        assert!(c.now() > last);
+        last = c.now();
+    }
+    assert_eq!(c.steps_run, 200);
+}

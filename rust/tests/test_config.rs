@@ -1,0 +1,51 @@
+//! Config-file integration: the shipped configs/ parse into the same
+//! clusters as the presets.
+
+use hfpm::config::{ClusterSpec, Document};
+use std::path::Path;
+
+#[test]
+fn shipped_hcl_config_parses() {
+    let path = Path::new("configs/hcl.toml");
+    assert!(path.exists(), "configs/hcl.toml missing from the repo");
+    let spec = ClusterSpec::load(path).unwrap();
+    assert_eq!(spec.size(), 16);
+    assert_eq!(spec.name, "hcl");
+    // must agree with the in-code preset
+    let preset = hfpm::cluster::presets::hcl();
+    for (a, b) in spec.nodes.iter().zip(&preset.nodes) {
+        assert_eq!(a.host, b.host);
+        assert_eq!(a.ram_mib, b.ram_mib);
+        assert_eq!(a.l2_kib, b.l2_kib);
+        assert!((a.clock_ghz - b.clock_ghz).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn shipped_mini4_config_parses() {
+    let spec = ClusterSpec::load(Path::new("configs/mini4.toml")).unwrap();
+    assert_eq!(spec.size(), 4);
+}
+
+#[test]
+fn config_roundtrip_through_document() {
+    let text = std::fs::read_to_string("configs/hcl.toml").unwrap();
+    let doc = Document::parse(&text).unwrap();
+    assert!(doc.table_arrays.contains_key("node"));
+    assert_eq!(doc.table_arrays["node"].len(), 16);
+}
+
+#[test]
+fn malformed_configs_rejected() {
+    for bad in [
+        "name = \"x\"\n",                        // no nodes
+        "[[node]]\nhost = \"a\"\n",              // missing required keys
+        "[[node]]\nclock_ghz = 3.0\n",           // missing host
+    ] {
+        let doc = Document::parse(bad).unwrap();
+        assert!(
+            ClusterSpec::from_document(&doc).is_err(),
+            "accepted bad config: {bad}"
+        );
+    }
+}

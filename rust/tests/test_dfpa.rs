@@ -1,0 +1,155 @@
+//! Integration tests: DFPA on the full cluster runtime (the paper's §2
+//! algorithm end to end on the simulated testbeds).
+
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
+use hfpm::cluster::presets;
+use hfpm::dfpa::{run_dfpa, DfpaOptions};
+
+fn dfpa_on(preset: &str, n: u64, eps: f64) -> hfpm::dfpa::DfpaResult {
+    let spec = presets::by_name(preset).unwrap();
+    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+    let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+    let mut bench = RowBench {
+        cluster: &mut cluster,
+        n,
+    };
+    run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(eps)).unwrap()
+}
+
+#[test]
+fn converges_on_hcl15_mid_sizes() {
+    for n in [2048u64, 3072, 4096] {
+        let r = dfpa_on("hcl15", n, 0.025);
+        assert!(r.converged, "n={n}: imbalance {}", r.imbalance);
+        assert_eq!(r.d.iter().sum::<u64>(), n);
+        assert!(
+            r.iterations <= 15,
+            "n={n}: too many iterations ({})",
+            r.iterations
+        );
+    }
+}
+
+#[test]
+fn paging_borderline_needs_more_iterations() {
+    // the paper's n=5120 case: several nodes sit at the paging borderline
+    // and DFPA needs extra iterations to discover the cliff
+    let easy = dfpa_on("hcl15", 4096, 0.025);
+    let hard = dfpa_on("hcl15", 5120, 0.025);
+    assert!(hard.converged);
+    assert!(
+        hard.iterations >= easy.iterations,
+        "paging case ({}) should need at least as many iterations as the easy case ({})",
+        hard.iterations,
+        easy.iterations
+    );
+}
+
+#[test]
+fn paging_nodes_protected_at_5120() {
+    let spec = presets::hcl15();
+    let r = dfpa_on("hcl15", 5120, 0.025);
+    // the 256 MiB nodes (hcl05, hcl06, hcl08 in the 15-node subset) must
+    // receive fewer rows than the 1 GiB nodes
+    let small: Vec<usize> = spec
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, nd)| nd.ram_mib == 256)
+        .map(|(i, _)| i)
+        .collect();
+    let big: Vec<usize> = spec
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, nd)| nd.ram_mib == 1024)
+        .map(|(i, _)| i)
+        .collect();
+    let avg = |idx: &[usize]| idx.iter().map(|&i| r.d[i]).sum::<u64>() as f64 / idx.len() as f64;
+    assert!(
+        avg(&small) < avg(&big),
+        "small-RAM nodes got {} rows on average vs {} for big-RAM",
+        avg(&small),
+        avg(&big)
+    );
+}
+
+#[test]
+fn epsilon_controls_accuracy() {
+    let loose = dfpa_on("hcl15", 5120, 0.10);
+    let tight = dfpa_on("hcl15", 5120, 0.025);
+    assert!(loose.converged && tight.converged);
+    assert!(loose.imbalance <= 0.10);
+    assert!(tight.imbalance <= 0.025);
+    // the paper's Table 3: tighter ε needs at least as many iterations
+    assert!(tight.iterations >= loose.iterations);
+}
+
+#[test]
+fn grid5000_converges_fast() {
+    // paper Table 4: ≤ 3 iterations at ε=10%
+    let r = dfpa_on("grid5000", 10240, 0.10);
+    assert!(r.converged);
+    assert!(r.iterations <= 4, "iterations {}", r.iterations);
+}
+
+#[test]
+fn dfpa_cost_minor_vs_app() {
+    // the headline claim: DFPA's cost is a small fraction of the app
+    let spec = presets::hcl15();
+    let mut cfg = Matmul1dConfig::new(6144, Strategy::Dfpa);
+    cfg.epsilon = 0.025;
+    let r = hfpm::apps::matmul1d::run(&spec, &cfg).unwrap();
+    let frac = r.partition_s / r.total_s;
+    assert!(
+        frac < 0.15,
+        "DFPA cost fraction {frac:.3} exceeds the paper's ≤10% band"
+    );
+}
+
+#[test]
+fn partial_models_far_cheaper_than_full() {
+    // Table 2's model-cost comparison: DFPA uses ≤ ~11 points; the full
+    // model grid uses 160
+    let r = dfpa_on("hcl15", 5120, 0.025);
+    assert!(
+        r.points_per_processor() <= 20,
+        "DFPA used {} points",
+        r.points_per_processor()
+    );
+    let spec = presets::hcl15();
+    let nodes = hfpm::cluster::node::build_nodes(
+        &spec,
+        hfpm::fpm::analytic::Footprint::matmul_1d(5120),
+        32,
+    );
+    let full = hfpm::baselines::ffmpa::full_grid_build_cost(&nodes, 8192);
+    assert_eq!(full.points_per_proc, 160);
+    assert!(
+        full.parallel_s > 10.0 * r.total_virtual_s,
+        "full build {} vs DFPA {}",
+        full.parallel_s,
+        r.total_virtual_s
+    );
+}
+
+#[test]
+fn dfpa_matches_ffmpa_distribution() {
+    // "In all our experiments, the DFPA returned almost the same data
+    // distribution as the FFMPA."
+    let spec = presets::hcl15();
+    let n = 4096u64;
+    let r = dfpa_on("hcl15", n, 0.025);
+    let nodes = hfpm::cluster::node::build_nodes(
+        &spec,
+        hfpm::fpm::analytic::Footprint::matmul_1d(n as usize),
+        32,
+    );
+    let (models, _) = hfpm::baselines::ffmpa::build_full_models_for_n(&nodes, n, 0.0, 1);
+    let d_ffmpa = hfpm::baselines::ffmpa::partition_rows(&models, n, n).unwrap();
+    for (i, (a, b)) in r.d.iter().zip(&d_ffmpa).enumerate() {
+        let diff = a.abs_diff(*b) as f64;
+        let tol = (n as f64 / 15.0) * 0.25; // within 25% of a fair share
+        assert!(diff <= tol, "node {i}: DFPA {a} vs FFMPA {b}");
+    }
+}

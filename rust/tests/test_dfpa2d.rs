@@ -1,0 +1,88 @@
+//! Integration tests: nested 2D DFPA on the cluster runtime.
+
+use hfpm::apps::matmul2d::{grid_shape, run, Matmul2dConfig};
+use hfpm::apps::Strategy;
+use hfpm::cluster::presets;
+use hfpm::dfpa2d::nested::Dfpa2dOptions;
+
+#[test]
+fn hcl_16node_4x4_converges() {
+    let spec = presets::hcl();
+    let mut cfg = Matmul2dConfig::new(8192, Strategy::Dfpa);
+    cfg.epsilon = 0.1;
+    let r = run(&spec, &cfg).unwrap();
+    assert_eq!((r.p, r.q), (4, 4));
+    assert!(r.imbalance < 0.35, "imbalance {}", r.imbalance);
+    assert!(r.iterations > 0);
+}
+
+#[test]
+fn table5_shape_overhead_grows_with_n() {
+    // Table 5: the DFPA cost % grows once paging territory is reached
+    let spec = presets::hcl();
+    let small = run(&spec, &Matmul2dConfig::new(8192, Strategy::Dfpa)).unwrap();
+    let large = run(&spec, &Matmul2dConfig::new(16384, Strategy::Dfpa)).unwrap();
+    assert!(
+        large.iterations >= small.iterations,
+        "iterations: {} vs {}",
+        large.iterations,
+        small.iterations
+    );
+    // both stay under the paper's worst observed 17%... with margin
+    assert!(small.overhead_pct < 25.0);
+    assert!(large.overhead_pct < 35.0);
+}
+
+#[test]
+fn widths_track_column_strength() {
+    // put all the fast nodes in one column: that column must end wider
+    let spec = presets::mini4(); // p1 fast, p2 slower, p3 small-RAM, p4 slow
+    let mut cfg = Matmul2dConfig::new(4096, Strategy::Dfpa);
+    cfg.epsilon = 0.1;
+    let r = run(&spec, &cfg).unwrap();
+    // grid 2×2: column 0 = {p1, p2}, column 1 = {p3, p4} (column-major)
+    assert_eq!((r.p, r.q), (2, 2));
+    assert!(
+        r.widths[0] > r.widths[1],
+        "strong column not wider: {:?}",
+        r.widths
+    );
+}
+
+#[test]
+fn optimization_flags_affect_iterations() {
+    // disabling warm starts/freezing must not break convergence (sanity on
+    // the ablation knobs used by bench_micro)
+    let spec = presets::mini4();
+    let nodes = hfpm::cluster::node::build_nodes(
+        &spec,
+        hfpm::fpm::analytic::Footprint::matmul_2d(32, 64),
+        32,
+    );
+    let execs: Vec<Box<dyn hfpm::cluster::executor::NodeExecutor>> = nodes
+        .into_iter()
+        .map(|n| Box::new(n) as Box<dyn hfpm::cluster::executor::NodeExecutor>)
+        .collect();
+    let cluster = hfpm::cluster::virtual_cluster::VirtualCluster::spawn(
+        execs,
+        hfpm::cluster::comm::CommModel::new(spec),
+        Default::default(),
+    );
+    let mut grid = hfpm::cluster::virtual_cluster::VirtualCluster2d::new(cluster, 2, 2).unwrap();
+    let opts = Dfpa2dOptions {
+        epsilon: 0.15,
+        epsilon_inner: 0.15,
+        width_freeze_rel: 0.0,  // freezing off
+        time_cap_mult: None,    // capping off
+        ..Default::default()
+    };
+    let r = hfpm::dfpa2d::run_dfpa2d(128, 128, &mut grid, opts).unwrap();
+    assert_eq!(r.widths.iter().sum::<u64>(), 128);
+    assert!(r.inner_iterations > 0);
+}
+
+#[test]
+fn grid_shape_covers_paper_sizes() {
+    assert_eq!(grid_shape(16), (4, 4)); // HCL
+    assert_eq!(grid_shape(28), (7, 4)); // Grid5000
+}

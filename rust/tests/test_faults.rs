@@ -1,0 +1,72 @@
+//! Failure-injection integration tests: dead workers and stragglers.
+
+use hfpm::apps::matmul1d::{run_with_faults, Matmul1dConfig, Strategy};
+use hfpm::cluster::faults::FaultPlan;
+use hfpm::cluster::presets;
+use hfpm::error::HfpmError;
+
+#[test]
+fn dead_worker_fails_the_run_cleanly() {
+    let spec = presets::mini4();
+    let cfg = Matmul1dConfig::new(2048, Strategy::Dfpa);
+    let faults = FaultPlan::none().with_death(1, 1);
+    let err = run_with_faults(&spec, &cfg, faults).unwrap_err();
+    match err {
+        HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 1),
+        other => panic!("expected WorkerFailed, got {other}"),
+    }
+}
+
+#[test]
+fn death_at_step_zero_fails_immediately() {
+    let spec = presets::mini4();
+    let cfg = Matmul1dConfig::new(2048, Strategy::Even);
+    // Even runs exactly one superstep (the final matmul benchmark)
+    let faults = FaultPlan::none().with_death(3, 0);
+    assert!(run_with_faults(&spec, &cfg, faults).is_err());
+}
+
+#[test]
+fn straggler_is_absorbed_by_dfpa() {
+    // a 3× straggler is not a failure — DFPA simply gives it less work
+    let spec = presets::mini4();
+    let mut cfg = Matmul1dConfig::new(4096, Strategy::Dfpa);
+    cfg.epsilon = 0.05;
+    let healthy = run_with_faults(&spec, &cfg, FaultPlan::none()).unwrap();
+    let faults = FaultPlan::none().with_straggler(0, 3.0, 0);
+    let strag = run_with_faults(&spec, &cfg, faults).unwrap();
+    assert!(
+        strag.d[0] < healthy.d[0],
+        "straggler rows {} !< healthy rows {}",
+        strag.d[0],
+        healthy.d[0]
+    );
+    // and the app still balances
+    assert!(strag.imbalance < 0.10, "imbalance {}", strag.imbalance);
+}
+
+#[test]
+fn late_straggler_does_not_break_convergence() {
+    // the platform changes mid-run (a node slows down after step 2): DFPA
+    // re-measures every iteration, so it adapts or at worst uses more
+    // iterations — it must not error out
+    let spec = presets::mini4();
+    let mut cfg = Matmul1dConfig::new(4096, Strategy::Dfpa);
+    cfg.epsilon = 0.10;
+    let faults = FaultPlan::none().with_straggler(2, 2.0, 2);
+    let r = run_with_faults(&spec, &cfg, faults).unwrap();
+    assert_eq!(r.d.iter().sum::<u64>(), 4096);
+}
+
+#[test]
+fn even_strategy_ignores_stragglers() {
+    // Even doesn't adapt: a straggler slows the app but the distribution
+    // stays uniform — the contrast DFPA exists to fix
+    let spec = presets::mini4();
+    let cfg = Matmul1dConfig::new(2048, Strategy::Even);
+    let healthy = run_with_faults(&spec, &cfg, FaultPlan::none()).unwrap();
+    let faults = FaultPlan::none().with_straggler(1, 4.0, 0);
+    let strag = run_with_faults(&spec, &cfg, faults).unwrap();
+    assert_eq!(healthy.d, strag.d);
+    assert!(strag.matmul_s > 2.0 * healthy.matmul_s);
+}

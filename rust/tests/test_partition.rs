@@ -1,0 +1,170 @@
+//! Integration tests: partitioning algorithms against realistic models.
+
+use hfpm::config::MachineSpec;
+use hfpm::fpm::analytic::{AnalyticModel, Footprint};
+use hfpm::fpm::{ConstantModel, PiecewiseModel, ScaledModel, SpeedFunction};
+use hfpm::partition::{self, cpm, grid2d, hsp};
+
+fn hcl_like_models(n: usize) -> Vec<AnalyticModel> {
+    let fp = Footprint::matmul_1d(n);
+    [
+        (3.4, 800.0, 0.30, 1024, 1024),
+        (1.8, 1000.0, 0.55, 1024, 1024),
+        (3.6, 800.0, 0.30, 2048, 256),
+        (2.9, 533.0, 0.22, 256, 512),
+    ]
+    .iter()
+    .map(|&(ghz, bus, upc, l2, ram)| {
+        AnalyticModel::from_spec(&MachineSpec::new("x", "", ghz, bus, upc, l2, ram), fp)
+    })
+    .collect()
+}
+
+#[test]
+fn geometric_balances_analytic_cluster() {
+    let models = hcl_like_models(4096);
+    let rows = 4096u64;
+    let views: Vec<ScaledModel<&AnalyticModel>> = models
+        .iter()
+        .map(|m| ScaledModel::new(m, 4096.0))
+        .collect();
+    let part = partition::partition(rows, &views).unwrap();
+    assert_eq!(part.d.iter().sum::<u64>(), rows);
+    let times: Vec<f64> = part
+        .d
+        .iter()
+        .zip(&views)
+        .map(|(&d, m)| m.time(d as f64))
+        .collect();
+    let imb = hfpm::util::stats::max_relative_imbalance(&times);
+    assert!(imb < 0.02, "imbalance {imb} for d={:?}", part.d);
+}
+
+#[test]
+fn geometric_protects_paging_node() {
+    // at n=5120 the 256 MiB node pages if given an even share
+    let models = hcl_like_models(5120);
+    let views: Vec<ScaledModel<&AnalyticModel>> = models
+        .iter()
+        .map(|m| ScaledModel::new(m, 5120.0))
+        .collect();
+    let part = partition::partition(5120, &views).unwrap();
+    // node 2 (256 MiB) must get far fewer rows than the even share — the
+    // equal-time optimum may sit slightly inside its paging region, but
+    // never anywhere near an even split
+    assert!(
+        part.d[2] < (5120 / 4) * 6 / 10,
+        "paging node got {} rows (even share is {})",
+        part.d[2],
+        5120 / 4
+    );
+    // and the resulting times must still be balanced
+    let times: Vec<f64> = part
+        .d
+        .iter()
+        .zip(&views)
+        .map(|(&d, m)| m.time(d as f64))
+        .collect();
+    let imb = hfpm::util::stats::max_relative_imbalance(&times);
+    assert!(imb < 0.05, "imbalance {imb}");
+}
+
+#[test]
+fn geometric_scales_to_many_processors() {
+    // 128 processors with random-ish constant speeds: O(p log n) must be fast
+    let models: Vec<ConstantModel> = (0..128)
+        .map(|i| ConstantModel(50.0 + (i * 37 % 100) as f64))
+        .collect();
+    let sw = std::time::Instant::now();
+    let part = partition::partition(1_000_000, &models).unwrap();
+    assert_eq!(part.d.iter().sum::<u64>(), 1_000_000);
+    assert!(sw.elapsed().as_millis() < 500, "too slow: {:?}", sw.elapsed());
+    // proportionality sanity: fastest gets ~3x the slowest
+    let (min_s, max_s) = (50.0, 149.0);
+    let min_d = *part.d.iter().min().unwrap() as f64;
+    let max_d = *part.d.iter().max().unwrap() as f64;
+    let ratio = max_d / min_d;
+    assert!((ratio - max_s / min_s).abs() < 0.3, "ratio {ratio}");
+}
+
+#[test]
+fn cpm_vs_geometric_agree_for_constant_models() {
+    let speeds = [13.0, 29.0, 58.0];
+    let cpm_d = cpm::partition_proportional(10_000, &speeds).unwrap();
+    let models: Vec<ConstantModel> = speeds.iter().map(|&s| ConstantModel(s)).collect();
+    let geo = partition::partition(10_000, &models).unwrap();
+    assert_eq!(cpm_d, geo.d);
+}
+
+#[test]
+fn refinement_never_worsens_and_usually_improves() {
+    // refine is move-bounded (4p), so from a *distant* start it may not
+    // reach the local optimum — but it must never worsen the makespan,
+    // and from this imbalanced start it must strictly improve.
+    // (Full local optimality from the partitioner's own output is covered
+    // by props_invariants::prop_partition_locally_optimal.)
+    let models = hcl_like_models(2048);
+    let views: Vec<ScaledModel<&AnalyticModel>> = models
+        .iter()
+        .map(|m| ScaledModel::new(m, 2048.0))
+        .collect();
+    let start = hsp::round_to_sum(&[600.0, 700.0, 400.0, 348.0], 2048);
+    let makespan = |d: &[u64]| -> f64 {
+        d.iter()
+            .zip(&views)
+            .map(|(&x, m)| if x == 0 { 0.0 } else { m.time(x as f64) })
+            .fold(0.0f64, f64::max)
+    };
+    let before = makespan(&start);
+    let mut d = start.clone();
+    hsp::refine(&mut d, &views);
+    let after = makespan(&d);
+    assert!(after <= before + 1e-12, "refine worsened: {after} > {before}");
+    assert!(after < before, "refine made no progress from a bad start");
+    assert_eq!(d.iter().sum::<u64>(), 2048);
+}
+
+#[test]
+fn two_step_matches_manual_computation() {
+    // independent check of the Fig 8 example with exact fractions
+    let speeds = vec![
+        vec![0.11, 0.25, 0.05],
+        vec![0.17, 0.09, 0.08],
+        vec![0.05, 0.17, 0.03],
+    ];
+    let g = grid2d::two_step(6, 6, &speeds).unwrap();
+    assert_eq!(g.total_area(), 36);
+    // every processor owns a contiguous rectangle; areas roughly ∝ speed
+    let total_speed: f64 = speeds.iter().flatten().sum();
+    for i in 0..3 {
+        for j in 0..3 {
+            let area = g.area(i, j) as f64 / 36.0;
+            let frac = speeds[i][j] / total_speed;
+            assert!(
+                (area - frac).abs() < 0.12,
+                "P{i}{j}: area {area:.2} vs speed {frac:.2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn piecewise_estimate_converges_to_truth_partition() {
+    // a dense piecewise estimate of an analytic model partitions (almost)
+    // identically to the analytic model itself
+    let models = hcl_like_models(3072);
+    let grid = hfpm::fpm::builder::log_grid(1e4, 4e7, 60);
+    let (estimates, _) = hfpm::fpm::builder::build_exact_models(&models, &grid);
+    let views_t: Vec<ScaledModel<&AnalyticModel>> =
+        models.iter().map(|m| ScaledModel::new(m, 3072.0)).collect();
+    let views_e: Vec<ScaledModel<&PiecewiseModel>> = estimates
+        .iter()
+        .map(|m| ScaledModel::new(m, 3072.0))
+        .collect();
+    let dt = partition::partition(3072, &views_t).unwrap().d;
+    let de = partition::partition(3072, &views_e).unwrap().d;
+    for (a, b) in dt.iter().zip(&de) {
+        let diff = a.abs_diff(*b);
+        assert!(diff <= 3072 / 50, "truth {a} vs estimate {b}");
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime integration tests — gated on `make artifacts` having run
+//! (they skip, loudly, otherwise; `make test` always builds artifacts
+//! first).
+
+use hfpm::apps::workload::{matmul_ref, max_abs_diff, Matrix};
+use hfpm::runtime::{ArtifactManifest, PjrtEngine, PjrtService};
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactManifest::load(dir).unwrap())
+}
+
+#[test]
+fn every_artifact_compiles_and_runs() {
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m.clone()).unwrap();
+    for a in &m.artifacts {
+        // build correctly-shaped dummy inputs per kind
+        let inputs: Vec<(Vec<f32>, Vec<usize>)> = match a.kind {
+            hfpm::runtime::ArtifactKind::Matmul1d => {
+                let (nb, n) = (a.dims[0] as usize, a.dims[1] as usize);
+                vec![
+                    (vec![0.5; nb * n], vec![nb, n]),
+                    (vec![0.5; n * n], vec![n, n]),
+                ]
+            }
+            hfpm::runtime::ArtifactKind::Rank1 => {
+                let (nb, n) = (a.dims[0] as usize, a.dims[1] as usize);
+                vec![
+                    (vec![0.0; nb * n], vec![nb, n]),
+                    (vec![1.0; nb], vec![nb, 1]),
+                    (vec![1.0; n], vec![1, n]),
+                ]
+            }
+            hfpm::runtime::ArtifactKind::Block2d => {
+                let (mb, nb, t) = (
+                    a.dims[0] as usize,
+                    a.dims[1] as usize,
+                    a.dims[2] as usize,
+                );
+                vec![
+                    (vec![0.0; mb * nb], vec![mb, nb]),
+                    (vec![1.0; mb * t], vec![mb, t]),
+                    (vec![1.0; t * nb], vec![t, nb]),
+                ]
+            }
+        };
+        let refs: Vec<(&[f32], &[usize])> = inputs
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let (out, dt) = engine
+            .execute_f32(&a.name, &refs)
+            .unwrap_or_else(|e| panic!("artifact {} failed: {e}", a.name));
+        assert!(!out.is_empty(), "{}: empty output", a.name);
+        assert!(dt > 0.0);
+    }
+    assert_eq!(engine.cached(), m.artifacts.len());
+}
+
+#[test]
+fn pjrt_matmul_matches_naive_oracle() {
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let nb = 128usize;
+    let n = 256usize;
+    let a = Matrix::random(nb, n, 21);
+    let b = Matrix::random(n, n, 22);
+    let (out, _) = engine
+        .execute_f32(
+            "matmul_nb128_n256",
+            &[(&a.data, &[nb, n]), (&b.data, &[n, n])],
+        )
+        .unwrap();
+    let got = Matrix {
+        rows: nb,
+        cols: n,
+        data: out,
+    };
+    let want = matmul_ref(&a, &b);
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-3, "PJRT vs naive oracle: max err {err}");
+}
+
+#[test]
+fn rank1_chain_equals_matmul() {
+    // n rank-1 updates through PJRT == one matmul: the identity the 1D
+    // app is built on, verified through the real runtime
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let nb = 64usize;
+    let n = 512usize;
+    let k = 16usize; // chain length (full n would be slow in a unit test)
+    let a = Matrix::random(nb, k, 31);
+    let b = Matrix::random(k, n, 32);
+    let mut c = vec![0.0f32; nb * n];
+    for t in 0..k {
+        let a_col: Vec<f32> = (0..nb).map(|r| a.data[r * k + t]).collect();
+        let b_row: Vec<f32> = b.data[t * n..(t + 1) * n].to_vec();
+        let (out, _) = engine
+            .execute_f32(
+                "update_nb64_n512",
+                &[(&c, &[nb, n]), (&a_col, &[nb, 1]), (&b_row, &[1, n])],
+            )
+            .unwrap();
+        c = out;
+    }
+    let got = Matrix {
+        rows: nb,
+        cols: n,
+        data: c,
+    };
+    let want = matmul_ref(&a, &Matrix { rows: k, cols: n, data: b.data.clone() });
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-3, "rank-1 chain vs matmul: max err {err}");
+}
+
+#[test]
+fn service_calibration_produces_rates() {
+    let Some(m) = manifest() else { return };
+    let svc = PjrtService::start(m.clone()).unwrap();
+    svc.calibrate_rank1(2).unwrap();
+    for a in m
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == hfpm::runtime::ArtifactKind::Rank1)
+    {
+        let rate = svc.known_rate(&a.name);
+        assert!(rate.is_some(), "no rate for {}", a.name);
+        assert!(rate.unwrap() > 1e6, "implausible rate {:?}", rate);
+    }
+}
+
+#[test]
+fn manifest_covers_required_kinds() {
+    let Some(m) = manifest() else { return };
+    use hfpm::runtime::ArtifactKind::*;
+    for kind in [Matmul1d, Rank1, Block2d] {
+        assert!(
+            m.artifacts.iter().any(|a| a.kind == kind),
+            "manifest missing {kind:?} artifacts"
+        );
+    }
+}
