@@ -1,0 +1,94 @@
+//! Cold vs warm DFPA: the self-adaptable-application scenario.
+//!
+//! The paper's target use case is an application invoked repeatedly on the
+//! same platform. This bench simulates a sequence of invocations of the 1D
+//! matmul app on the 15-node HCL testbed, once without a model store
+//! (every invocation rediscovers the platform) and once with a persistent
+//! store warm-starting every invocation after the first. Reported per
+//! invocation: DFPA benchmark iterations and the partition-phase virtual
+//! cost — the quantity the store amortizes toward the single validation
+//! step.
+//!
+//! Run: `cargo bench --bench bench_warmstart`
+
+use hfpm::apps::matmul1d::{run, Matmul1dConfig, Strategy};
+use hfpm::cluster::presets;
+use hfpm::modelstore::ModelStore;
+use hfpm::util::table::{fdur, fnum, Table};
+
+fn main() {
+    let spec = presets::hcl15();
+    let n = 5120u64;
+    let invocations = 6usize;
+
+    let store_dir = std::env::temp_dir().join(format!(
+        "hfpm-bench-warmstart-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let mut t = Table::new(
+        &format!("cold vs warm-started DFPA (1D matmul, `{}`, n = {n}, ε = 2.5%)", spec.name),
+        &[
+            "invocation",
+            "cold iters",
+            "cold partition (s)",
+            "warm iters",
+            "warm partition (s)",
+            "warm/cold cost %",
+        ],
+    );
+
+    let mut cold_total = 0.0f64;
+    let mut warm_total = 0.0f64;
+    for k in 0..invocations {
+        // cold: no store — every invocation starts from the even split
+        let mut cold_cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+        cold_cfg.epsilon = 0.025;
+        let cold = run(&spec, &cold_cfg).expect("cold run");
+        assert!(!cold.warm_started);
+
+        // warm: persistent store shared across invocations
+        let mut warm_cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+        warm_cfg.epsilon = 0.025;
+        warm_cfg.model_store = Some(store_dir.clone());
+        let warm = run(&spec, &warm_cfg).expect("warm run");
+        assert_eq!(warm.warm_started, k > 0, "store warms every run after the first");
+        if k > 0 {
+            assert!(
+                warm.iterations < cold.iterations,
+                "invocation {k}: warm {} !< cold {}",
+                warm.iterations,
+                cold.iterations
+            );
+        }
+
+        cold_total += cold.partition_s;
+        warm_total += warm.partition_s;
+        t.add_row(vec![
+            format!("{}", k + 1),
+            cold.iterations.to_string(),
+            fdur(cold.partition_s),
+            warm.iterations.to_string(),
+            fdur(warm.partition_s),
+            fnum(100.0 * warm.partition_s / cold.partition_s.max(1e-12), 1),
+        ]);
+    }
+    t.add_row(vec![
+        "Σ".into(),
+        String::new(),
+        fdur(cold_total),
+        String::new(),
+        fdur(warm_total),
+        fnum(100.0 * warm_total / cold_total.max(1e-12), 1),
+    ]);
+    t.emit(Some(std::path::Path::new("results/bench/warmstart.csv")));
+
+    let store = ModelStore::open(&store_dir).expect("store exists");
+    println!(
+        "store: {} models in {}",
+        store.entries().map(|e| e.len()).unwrap_or(0),
+        store.dir().display()
+    );
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

@@ -26,9 +26,12 @@ use crate::cluster::faults::FaultPlan;
 use crate::cluster::node::{build_nodes, SimNode};
 use crate::cluster::virtual_cluster::VirtualCluster;
 use crate::config::ClusterSpec;
-use crate::dfpa::algorithm::{even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport};
+use crate::dfpa::algorithm::{
+    even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport, WarmStart,
+};
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
+use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
 use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
 use crate::util::stats::max_relative_imbalance;
 
@@ -74,6 +77,11 @@ pub struct Matmul1dConfig {
     /// Element size in bytes for footprint/comm (the paper used doubles).
     pub elem_bytes: u64,
     pub max_iters: usize,
+    /// Directory of the persistent FPM model store. When set, a DFPA run
+    /// warm-starts from the models previous invocations stored for this
+    /// cluster's hosts (keyed per host, kernel shape and execution mode)
+    /// and merges its own observations back afterwards.
+    pub model_store: Option<std::path::PathBuf>,
 }
 
 impl Matmul1dConfig {
@@ -85,7 +93,13 @@ impl Matmul1dConfig {
             mode: ExecutionMode::Simulated,
             elem_bytes: 8,
             max_iters: 100,
+            model_store: None,
         }
+    }
+
+    /// Model-store key for one host of the cluster under this config.
+    pub fn store_key(&self, host: &str) -> ModelKey {
+        ModelKey::new(host, &format!("matmul1d_n{}", self.n), self.mode.name())
     }
 }
 
@@ -117,6 +131,8 @@ pub struct Matmul1dReport {
     pub iterations: usize,
     /// Load imbalance of the final distribution.
     pub imbalance: f64,
+    /// Whether DFPA warm-started from a persistent model store.
+    pub warm_started: bool,
 }
 
 /// Row-granularity benchmarker: DFPA distributes rows, the cluster kernel
@@ -200,6 +216,7 @@ pub fn run_with_faults(
     let mut model_build_s = None;
     let mut iterations = 0usize;
     let mut partition_wall = 0.0f64;
+    let mut warm_started = false;
     let before_partition = cluster.now();
     let d: Vec<u64> = match cfg.strategy {
         Strategy::Even => even_distribution(cfg.n, p),
@@ -222,6 +239,19 @@ pub fn run_with_faults(
             d
         }
         Strategy::Dfpa => {
+            let store = match &cfg.model_store {
+                Some(dir) => Some(ModelStore::open(dir)?),
+                None => None,
+            };
+            let keys: Vec<ModelKey> = cluster
+                .hosts()
+                .iter()
+                .map(|h| cfg.store_key(h))
+                .collect();
+            let warm_start = match &store {
+                Some(s) => s.warm_models(&keys)?.map(WarmStart::new),
+                None => None,
+            };
             let mut bench = RowBench {
                 cluster: &mut cluster,
                 n: cfg.n,
@@ -229,11 +259,19 @@ pub fn run_with_faults(
             let opts = DfpaOptions {
                 epsilon: cfg.epsilon,
                 max_iters: cfg.max_iters,
+                warm_start,
                 ..Default::default()
             };
             let r = run_dfpa(cfg.n, &mut bench, opts)?;
+            if let Some(s) = &store {
+                // persist only this run's measurements: echoing the seeded
+                // models back would refresh stored points' weights and
+                // defeat staleness decay
+                s.record_run(&keys, &r.observations, &MergePolicy::default())?;
+            }
             iterations = r.iterations;
             partition_wall += r.partition_wall_s;
+            warm_started = r.warm_started;
             r.d
         }
     };
@@ -284,6 +322,7 @@ pub fn run_with_faults(
         total_s: partition_s + comm_s + matmul_s,
         iterations,
         imbalance,
+        warm_started,
     })
 }
 
@@ -391,6 +430,34 @@ mod tests {
             r_dfpa.matmul_s,
             r_even.matmul_s
         );
+    }
+
+    #[test]
+    fn repeated_runs_amortize_through_the_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "hfpm-matmul1d-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = presets::mini4();
+        let mut cfg = Matmul1dConfig::new(2048, Strategy::Dfpa);
+        cfg.model_store = Some(dir.clone());
+
+        let first = run(&spec, &cfg).unwrap();
+        assert!(!first.warm_started, "empty store must cold-start");
+        let second = run(&spec, &cfg).unwrap();
+        assert!(second.warm_started);
+        assert_eq!(second.d.iter().sum::<u64>(), 2048);
+        assert!(
+            second.iterations <= first.iterations,
+            "warm {} vs cold {}",
+            second.iterations,
+            first.iterations
+        );
+        // the store must actually hold one model per host
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.entries().unwrap().len(), spec.size());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

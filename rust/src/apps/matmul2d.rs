@@ -19,10 +19,11 @@ use crate::cluster::node::{build_nodes, SimNode};
 use crate::cluster::virtual_cluster::{VirtualCluster, VirtualCluster2d};
 use crate::config::ClusterSpec;
 use crate::dfpa::algorithm::{even_distribution, StepReport};
-use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions};
+use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, WarmStart2d};
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::fpm::SpeedSurface;
+use crate::fpm::{PiecewiseModel, SpeedSurface};
+use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
 use crate::partition::grid2d;
 use crate::util::stats::max_relative_imbalance;
 
@@ -38,6 +39,8 @@ pub struct Matmul2dConfig {
     pub strategy: Strategy,
     pub epsilon: f64,
     pub elem_bytes: u64,
+    /// Persistent FPM model store directory (see `Matmul1dConfig`).
+    pub model_store: Option<std::path::PathBuf>,
 }
 
 impl Matmul2dConfig {
@@ -48,12 +51,24 @@ impl Matmul2dConfig {
             strategy,
             epsilon: 0.1,
             elem_bytes: 8,
+            model_store: None,
         }
     }
 
     /// Blocks per matrix side.
     pub fn m_blocks(&self) -> u64 {
         self.n_elems / self.block
+    }
+
+    /// Model-store key for one host under this config. The kernel id pins
+    /// the block size and per-column panel shape the speeds were measured
+    /// under (the 2D models live in the units = blocks² domain).
+    pub fn store_key(&self, host: &str) -> ModelKey {
+        ModelKey::new(
+            host,
+            &format!("matmul2d_b{}_m{}", self.block, self.m_blocks()),
+            "sim",
+        )
     }
 }
 
@@ -77,6 +92,8 @@ pub struct Matmul2dReport {
     pub imbalance: f64,
     /// partition_s / total_s in percent ("DFPA cost %").
     pub overhead_pct: f64,
+    /// Whether DFPA warm-started from a persistent model store.
+    pub warm_started: bool,
 }
 
 /// Near-square factorization of the cluster size into p×q, p ≥ q.
@@ -159,6 +176,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     // --- partition phase ---
     let before = grid.cluster.now();
     let mut iterations = 0usize;
+    let mut warm_started = false;
     let (widths, heights) = match cfg.strategy {
         Strategy::Even => {
             let w = even_distribution(m, q);
@@ -200,8 +218,45 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
             (r.widths, r.heights)
         }
         Strategy::Dfpa => {
-            let r = run_dfpa2d(m, m, &mut grid, Dfpa2dOptions::with_epsilon(cfg.epsilon))?;
+            let store = match &cfg.model_store {
+                Some(dir) => Some(ModelStore::open(dir)?),
+                None => None,
+            };
+            // keys indexed [j][i], matching the algorithm's model layout
+            let keys: Vec<Vec<ModelKey>> = (0..q)
+                .map(|j| {
+                    (0..p)
+                        .map(|i| cfg.store_key(&grid.cluster.hosts()[grid.rank(i, j)]))
+                        .collect()
+                })
+                .collect();
+            // same "store holds nothing → cold start" policy as the 1D
+            // app: warm_models over the flat [j][i] key list, reshaped
+            // back into columns
+            let warm_start = match &store {
+                Some(s) => {
+                    let flat: Vec<ModelKey> = keys.iter().flatten().cloned().collect();
+                    s.warm_models(&flat)?.map(|models| {
+                        let cols: Vec<Vec<PiecewiseModel>> =
+                            models.chunks(p).map(|c| c.to_vec()).collect();
+                        WarmStart2d::new(cols)
+                    })
+                }
+                None => None,
+            };
+            let opts = Dfpa2dOptions {
+                warm_start,
+                ..Dfpa2dOptions::with_epsilon(cfg.epsilon)
+            };
+            let r = run_dfpa2d(m, m, &mut grid, opts)?;
+            if let Some(s) = &store {
+                // persist only this run's measurements (see matmul1d)
+                for (col_keys, col_obs) in keys.iter().zip(&r.observations) {
+                    s.record_run(col_keys, col_obs, &MergePolicy::default())?;
+                }
+            }
             iterations = r.inner_iterations;
+            warm_started = r.warm_started;
             (r.widths, r.heights)
         }
     };
@@ -253,6 +308,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
         total_s,
         imbalance,
         overhead_pct: 100.0 * partition_s / total_s.max(1e-12),
+        warm_started,
     })
 }
 
@@ -281,6 +337,36 @@ mod tests {
         assert!(r.partition_s > 0.0);
         assert!(r.matmul_s > 0.0);
         assert!(r.overhead_pct < 100.0);
+    }
+
+    #[test]
+    fn store_round_trips_across_2d_runs() {
+        let dir = std::env::temp_dir().join(format!(
+            "hfpm-matmul2d-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = presets::mini4();
+        let mut cfg = Matmul2dConfig::new(4096, Strategy::Dfpa);
+        cfg.model_store = Some(dir.clone());
+
+        let first = run(&spec, &cfg).unwrap();
+        assert!(!first.warm_started, "empty store must cold-start");
+        let second = run(&spec, &cfg).unwrap();
+        assert!(second.warm_started, "populated store must warm-start");
+        assert_eq!(second.widths.iter().sum::<u64>(), cfg.m_blocks());
+        for hs in &second.heights {
+            assert_eq!(hs.iter().sum::<u64>(), cfg.m_blocks());
+        }
+        assert!(
+            second.iterations <= first.iterations,
+            "warm {} vs cold {}",
+            second.iterations,
+            first.iterations
+        );
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.entries().unwrap().len(), spec.size());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

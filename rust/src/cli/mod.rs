@@ -30,8 +30,18 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
-                    out.flags.insert(name.to_string(), v);
+                    // the peek above proves a value follows; no unwrap that
+                    // could turn a refactor into a trailing-flag panic
+                    match it.next() {
+                        Some(v) => {
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        None => {
+                            return Err(HfpmError::InvalidArg(format!(
+                                "--{name} expects a value"
+                            )))
+                        }
+                    }
                 } else {
                     out.switches.push(name.to_string());
                 }
@@ -58,9 +68,36 @@ impl Args {
         self.get(flag).unwrap_or(default).to_string()
     }
 
+    /// A value flag written bare (`--eps` with nothing after it) parses as
+    /// a switch; the typed getters below reject that instead of silently
+    /// using the default.
+    fn reject_bare(&self, flag: &str) -> Result<()> {
+        if self.has(flag) {
+            return Err(HfpmError::InvalidArg(format!(
+                "--{flag} expects a value, got a bare flag"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Like [`Args::get`], but a bare value-flag (`--cluster` with nothing
+    /// after it) is an error instead of a silent `None`.
+    pub fn get_checked(&self, flag: &str) -> Result<Option<&str>> {
+        self.reject_bare(flag)?;
+        Ok(self.get(flag))
+    }
+
+    /// Like [`Args::get_or`], but rejects a bare value-flag.
+    pub fn get_or_checked(&self, flag: &str, default: &str) -> Result<String> {
+        Ok(self.get_checked(flag)?.unwrap_or(default).to_string())
+    }
+
     pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
         match self.get(flag) {
-            None => Ok(default),
+            None => {
+                self.reject_bare(flag)?;
+                Ok(default)
+            }
             Some(v) => v.parse().map_err(|_| {
                 HfpmError::InvalidArg(format!("--{flag} expects an integer, got `{v}`"))
             }),
@@ -69,7 +106,10 @@ impl Args {
 
     pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
         match self.get(flag) {
-            None => Ok(default),
+            None => {
+                self.reject_bare(flag)?;
+                Ok(default)
+            }
             Some(v) => v.parse().map_err(|_| {
                 HfpmError::InvalidArg(format!("--{flag} expects a number, got `{v}`"))
             }),
@@ -113,5 +153,44 @@ mod tests {
         let a = parse("x --quick --n 7");
         assert!(a.has("quick"));
         assert_eq!(a.get_u64("n", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bare_value_flag_is_invalid_arg_not_a_panic() {
+        // regression: `repro run1d --eps` must report a clean error
+        let a = parse("run1d --eps");
+        let err = a.get_f64("eps", 0.025).unwrap_err();
+        assert!(
+            err.to_string().contains("--eps expects a value"),
+            "got: {err}"
+        );
+        let a = parse("run1d --n");
+        assert!(a.get_u64("n", 4096).is_err());
+    }
+
+    #[test]
+    fn bare_flag_followed_by_another_flag_also_rejected() {
+        let a = parse("run1d --eps --mode sim");
+        assert!(a.get_f64("eps", 0.025).is_err());
+        assert_eq!(a.get_or("mode", "x"), "sim");
+    }
+
+    #[test]
+    fn bare_string_flag_rejected_by_checked_getters() {
+        // regression: `repro run1d --model-store` (value forgotten) must
+        // error instead of silently running without persistence
+        let a = parse("run1d --model-store");
+        assert!(a.get_checked("model-store").is_err());
+        assert!(a.get_or_checked("model-store", "x").is_err());
+        let a = parse("run1d --model-store /tmp/store");
+        assert_eq!(a.get_checked("model-store").unwrap(), Some("/tmp/store"));
+        assert_eq!(a.get_or_checked("cluster", "hcl").unwrap(), "hcl");
+    }
+
+    #[test]
+    fn genuine_switches_still_work() {
+        let a = parse("run1d --compare --n 64");
+        assert!(a.has("compare"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 64);
     }
 }

@@ -48,6 +48,15 @@ impl ExecutionMode {
             _ => None,
         }
     }
+
+    /// Canonical short name; also the model-store key component (simulated
+    /// and real speeds live on different time scales and must not merge).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Simulated => "sim",
+            Self::Real => "real",
+        }
+    }
 }
 
 /// Apply the paper's optimization (4): cap a benchmark's duration. Returns

@@ -61,6 +61,10 @@ struct WorkerHandle {
 /// The cluster runtime. Rank 0 is the leader-side root for collectives.
 pub struct VirtualCluster {
     comm: CommModel,
+    /// Host identity of each rank, captured from the executors before they
+    /// move to their worker threads — the stable key the model store files
+    /// partial FPMs under (see `modelstore::ModelKey`).
+    hosts: Vec<String>,
     workers: Vec<WorkerHandle>,
     reply_rx: Receiver<WorkerMsg>,
     clock: VirtualClock,
@@ -82,6 +86,7 @@ impl VirtualCluster {
     ) -> Self {
         let (reply_tx, reply_rx) = channel::<WorkerMsg>();
         let faults = Arc::new(faults);
+        let hosts: Vec<String> = executors.iter().map(|e| e.host().to_string()).collect();
         let workers = executors
             .into_iter()
             .enumerate()
@@ -140,6 +145,7 @@ impl VirtualCluster {
             .collect();
         Self {
             comm,
+            hosts,
             workers,
             reply_rx,
             clock: VirtualClock::new(),
@@ -156,6 +162,11 @@ impl VirtualCluster {
 
     pub fn comm(&self) -> &CommModel {
         &self.comm
+    }
+
+    /// Host identity per rank (model-store keys, diagnostics).
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
     }
 
     /// Virtual time elapsed so far.
@@ -366,6 +377,14 @@ mod tests {
             .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
             .collect();
         VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+    }
+
+    #[test]
+    fn hosts_captured_per_rank() {
+        let c = mini_cluster(0.0);
+        let hosts = c.hosts().to_vec();
+        assert_eq!(hosts.len(), 4);
+        assert_eq!(hosts, presets::mini4().nodes.iter().map(|n| n.host.clone()).collect::<Vec<_>>());
     }
 
     #[test]

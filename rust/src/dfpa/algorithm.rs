@@ -32,8 +32,36 @@ pub trait Benchmarker {
     fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport>;
 }
 
+/// Models carried over from previous invocations (e.g. loaded from a
+/// [`crate::modelstore::ModelStore`]) that seed a DFPA run.
+///
+/// With a warm start the run skips the even-distribution step 1: the
+/// partial models are seeded from `models` and the *initial* distribution
+/// comes from `partition_with` over them — the algorithm effectively
+/// resumes at step 3 of the paper's loop. The first parallel benchmark
+/// validates the stored speeds, so stale or mismatched stores cost at most
+/// a few extra refinement iterations, never correctness.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStart {
+    /// One stored model per processor, positionally aligned with the
+    /// benchmarker's ranks. Empty models are allowed (that processor is
+    /// seeded pessimistically from the slowest stored speed).
+    pub models: Vec<PiecewiseModel>,
+}
+
+impl WarmStart {
+    pub fn new(models: Vec<PiecewiseModel>) -> Self {
+        Self { models }
+    }
+
+    /// Does any processor actually carry stored evidence?
+    pub fn has_evidence(&self) -> bool {
+        self.models.iter().any(|m| !m.is_empty())
+    }
+}
+
 /// DFPA tuning knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct DfpaOptions {
     /// Termination accuracy ε (paper: 10% and 2.5% in the experiments).
     pub epsilon: f64,
@@ -41,6 +69,8 @@ pub struct DfpaOptions {
     pub max_iters: usize,
     /// Geometric partitioner options.
     pub geometric: GeometricOptions,
+    /// Stored models from previous invocations; `None` is a cold start.
+    pub warm_start: Option<WarmStart>,
 }
 
 impl Default for DfpaOptions {
@@ -49,6 +79,7 @@ impl Default for DfpaOptions {
             epsilon: 0.025,
             max_iters: 100,
             geometric: GeometricOptions::default(),
+            warm_start: None,
         }
     }
 }
@@ -75,8 +106,16 @@ pub struct DfpaResult {
     pub converged: bool,
     /// Final imbalance.
     pub imbalance: f64,
-    /// The partial FPM estimate built for each processor.
+    /// Whether the run was seeded from stored models (and therefore
+    /// skipped the even-distribution step).
+    pub warm_started: bool,
+    /// The partial FPM estimate built for each processor. On a warm start
+    /// this includes the seeded (stored + synthetic pessimistic) points.
     pub models: Vec<PiecewiseModel>,
+    /// Only the points actually *measured this run*, per processor — what
+    /// a model store should persist (echoing `models` back would re-write
+    /// stored points as fresh and defeat staleness decay).
+    pub observations: Vec<PiecewiseModel>,
     /// Total virtual cost of all benchmark steps + collectives — the
     /// "DFPA execution time" column of the paper's Tables 2–4.
     pub total_virtual_s: f64,
@@ -105,8 +144,54 @@ pub fn even_distribution(n: u64, p: usize) -> Vec<u64> {
         .collect()
 }
 
+/// Seed the starting state from a warm start: models from the store, and —
+/// when the stored evidence covers the sizes the partitioner proposes —
+/// the initial distribution from `partition_with` instead of the even
+/// split (the paper loop's step 3, skipping step 1).
+fn warm_initial_state(
+    n: u64,
+    p: usize,
+    warm: WarmStart,
+    geometric: GeometricOptions,
+) -> Result<(Vec<PiecewiseModel>, Vec<u64>)> {
+    let mut models = warm.models;
+    // processors with no stored evidence get a pessimistic constant at the
+    // slowest stored speed, exactly like the in-loop gap handling
+    let min_speed = models
+        .iter()
+        .flat_map(|m| m.points().iter().map(|pt| pt.s))
+        .fold(f64::INFINITY, f64::min);
+    for m in models.iter_mut() {
+        if m.is_empty() {
+            m.insert((n as f64 / p as f64).max(1.0), min_speed);
+        }
+    }
+    let d = match partition_with(n, &models, geometric) {
+        Ok(part) => {
+            // coverage test: trust the stored distribution only where the
+            // proposal stays within a modest extrapolation of the observed
+            // range; far outside it, the constant extensions are guesses
+            // and the even split is the honest start for discovery.
+            let covered = part.d.iter().zip(&models).all(|(&di, m)| {
+                let (lo, hi) = m.observed_range().expect("seeded above");
+                di == 0 || (di as f64 >= lo / 4.0 && di as f64 <= hi * 4.0)
+            });
+            if covered {
+                part.d
+            } else {
+                even_distribution(n, p)
+            }
+        }
+        // a degenerate store (e.g. absurd stored speeds) must never kill
+        // the run — fall back to the cold-start distribution
+        Err(_) => even_distribution(n, p),
+    };
+    Ok((models, d))
+}
+
 /// Run DFPA: balance `n` units over the benchmarker's processors.
 pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Result<DfpaResult> {
+    let mut opts = opts;
     let p = bench.processors();
     if p == 0 {
         return Err(HfpmError::Partition("no processors".into()));
@@ -120,8 +205,19 @@ pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Res
             opts.epsilon
         )));
     }
+    let warm = match opts.warm_start.take() {
+        Some(w) if w.has_evidence() => {
+            if w.models.len() != p {
+                return Err(HfpmError::InvalidArg(format!(
+                    "warm start carries {} models for {p} processors",
+                    w.models.len()
+                )));
+            }
+            Some(w)
+        }
+        _ => None,
+    };
 
-    let mut models: Vec<PiecewiseModel> = vec![PiecewiseModel::new(); p];
     let mut records: Vec<IterationRecord> = Vec::new();
     let mut total_virtual = 0.0f64;
     let mut partition_wall = 0.0f64;
@@ -130,8 +226,14 @@ pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Res
     let mut stagnant = 0usize;
     let mut since_best = 0usize;
 
-    // step 1: even distribution
-    let mut d = even_distribution(n, p);
+    // step 1: even distribution — unless stored models warm-start the run
+    let warm_started = warm.is_some();
+    let (mut models, mut d) = match warm {
+        Some(w) => warm_initial_state(n, p, w, opts.geometric)?,
+        None => (vec![PiecewiseModel::new(); p], even_distribution(n, p)),
+    };
+    // this run's own measurements, kept apart from the seeded models
+    let mut observations: Vec<PiecewiseModel> = vec![PiecewiseModel::new(); p];
 
     for iter in 0..opts.max_iters {
         // parallel benchmark + gather (steps 1/4)
@@ -168,6 +270,7 @@ pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Res
         for i in 0..p {
             if d[i] > 0 && speeds[i] > 0.0 {
                 models[i].insert(d[i] as f64, speeds[i]);
+                observations[i].insert(d[i] as f64, speeds[i]);
             }
         }
 
@@ -190,7 +293,9 @@ pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Res
                 iterations: iter + 1,
                 converged: true,
                 imbalance,
+                warm_started,
                 models,
+                observations,
                 total_virtual_s: total_virtual,
                 partition_wall_s: partition_wall,
                 records,
@@ -262,7 +367,9 @@ pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Res
         iterations: records.len(),
         converged: false,
         imbalance,
+        warm_started,
         models,
+        observations,
         total_virtual_s: total_virtual,
         partition_wall_s: partition_wall,
         records,
@@ -431,6 +538,80 @@ mod tests {
         assert!(!r.converged);
         assert_eq!(r.iterations, 5);
         assert_eq!(r.d.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn warm_start_skips_discovery() {
+        let truths = vec![ConstantModel(10.0), ConstantModel(30.0), ConstantModel(20.0)];
+        let mut cold_bench = ModelBench::new(truths.clone(), 0.0);
+        let cold = run_dfpa(6000, &mut cold_bench, DfpaOptions::with_epsilon(0.01)).unwrap();
+        assert!(!cold.warm_started);
+        assert!(cold.iterations > 1);
+
+        // seed from the *observations* — what a model store would persist
+        let mut warm_bench = ModelBench::new(truths, 0.0);
+        let opts = DfpaOptions {
+            epsilon: 0.01,
+            warm_start: Some(WarmStart::new(cold.observations.clone())),
+            ..Default::default()
+        };
+        let warm = run_dfpa(6000, &mut warm_bench, opts).unwrap();
+        assert!(warm.warm_started);
+        assert!(warm.converged);
+        assert_eq!(warm.d.iter().sum::<u64>(), 6000);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_with_garbage_models_still_correct() {
+        // stored speeds an order of magnitude off and inverted: the run
+        // must still converge and conserve Σd = n
+        let mut bad = Vec::new();
+        for s in [1.0, 2.0] {
+            let mut m = PiecewiseModel::new();
+            m.insert(10.0, 300.0 / s);
+            bad.push(m);
+        }
+        let mut bench = ModelBench::new(vec![ConstantModel(10.0), ConstantModel(30.0)], 0.0);
+        let opts = DfpaOptions {
+            epsilon: 0.02,
+            warm_start: Some(WarmStart::new(bad)),
+            ..Default::default()
+        };
+        let r = run_dfpa(400, &mut bench, opts).unwrap();
+        assert!(r.warm_started);
+        assert!(r.converged, "imbalance {}", r.imbalance);
+        assert_eq!(r.d.iter().sum::<u64>(), 400);
+        // within ε of the optimum (100, 300) despite the poisoned store
+        assert!(r.d[0].abs_diff(100) <= 4, "d = {:?}", r.d);
+    }
+
+    #[test]
+    fn warm_start_length_mismatch_is_error() {
+        let mut bench = ModelBench::new(vec![ConstantModel(1.0); 3], 0.0);
+        let opts = DfpaOptions {
+            warm_start: Some(WarmStart::new(vec![PiecewiseModel::constant(1.0, 1.0)])),
+            ..Default::default()
+        };
+        assert!(run_dfpa(30, &mut bench, opts).is_err());
+    }
+
+    #[test]
+    fn empty_warm_start_is_a_cold_start() {
+        let mut bench = ModelBench::new(vec![ConstantModel(5.0); 2], 0.0);
+        let opts = DfpaOptions {
+            epsilon: 0.05,
+            warm_start: Some(WarmStart::default()),
+            ..Default::default()
+        };
+        let r = run_dfpa(100, &mut bench, opts).unwrap();
+        assert!(!r.warm_started);
+        assert!(r.converged);
     }
 
     #[test]

@@ -22,5 +22,5 @@
 pub mod algorithm;
 pub mod trace;
 
-pub use algorithm::{run_dfpa, Benchmarker, DfpaOptions, DfpaResult, StepReport};
+pub use algorithm::{run_dfpa, Benchmarker, DfpaOptions, DfpaResult, StepReport, WarmStart};
 pub use trace::IterationRecord;

@@ -16,4 +16,4 @@
 
 pub mod nested;
 
-pub use nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, Dfpa2dResult};
+pub use nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, Dfpa2dResult, WarmStart2d};

@@ -28,8 +28,29 @@ pub trait Benchmarker2d {
     ) -> Result<StepReport>;
 }
 
+/// Stored per-processor models (units domain, indexed `[j][i]` like the
+/// grid) carried over from previous invocations — the 2D analogue of
+/// [`crate::dfpa::WarmStart`]. Columns whose processors all carry evidence
+/// seed their initial row heights from `partition_with` on the stored
+/// models; everything else starts even, and the first benchmark of each
+/// column validates the stored speeds.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStart2d {
+    pub models: Vec<Vec<PiecewiseModel>>,
+}
+
+impl WarmStart2d {
+    pub fn new(models: Vec<Vec<PiecewiseModel>>) -> Self {
+        Self { models }
+    }
+
+    pub fn has_evidence(&self) -> bool {
+        self.models.iter().flatten().any(|m| !m.is_empty())
+    }
+}
+
 /// Options for the nested algorithm.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Dfpa2dOptions {
     /// Global termination accuracy ε over all p·q processors.
     pub epsilon: f64,
@@ -47,6 +68,8 @@ pub struct Dfpa2dOptions {
     /// fastest time observed in the previous step (None disables).
     pub time_cap_mult: Option<f64>,
     pub geometric: GeometricOptions,
+    /// Stored models from previous invocations; `None` is a cold start.
+    pub warm_start: Option<WarmStart2d>,
 }
 
 impl Default for Dfpa2dOptions {
@@ -59,6 +82,7 @@ impl Default for Dfpa2dOptions {
             width_freeze_rel: 0.03,
             time_cap_mult: Some(8.0),
             geometric: GeometricOptions::default(),
+            warm_start: None,
         }
     }
 }
@@ -90,13 +114,19 @@ pub struct Dfpa2dResult {
     /// Global imbalance at exit.
     pub imbalance: f64,
     pub converged: bool,
+    /// Whether stored models seeded the run.
+    pub warm_started: bool,
     /// Virtual cost of all partitioning-related benchmarks (Table 5's
     /// "DFPA time").
     pub total_virtual_s: f64,
     /// Leader wall time spent in model updates + re-partitioning.
     pub partition_wall_s: f64,
-    /// Per-processor partial model estimates (units domain), `[j][i]`.
+    /// Per-processor partial model estimates (units domain), `[j][i]`. On
+    /// a warm start this includes the seeded stored points.
     pub models: Vec<Vec<PiecewiseModel>>,
+    /// Only the points *measured this run*, `[j][i]` — what a model store
+    /// should persist.
+    pub observations: Vec<Vec<PiecewiseModel>>,
 }
 
 /// Run the nested 2D DFPA over an `m×n` block grid on a `p×q` processor
@@ -113,6 +143,7 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
     bench: &mut B,
     opts: Dfpa2dOptions,
 ) -> Result<Dfpa2dResult> {
+    let mut opts = opts;
     let (p, q) = bench.grid();
     if p == 0 || q == 0 {
         return Err(HfpmError::Partition("empty processor grid".into()));
@@ -122,14 +153,49 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
             "grid {m}×{n} too small for {p}×{q} processors"
         )));
     }
+    let warm = match opts.warm_start.take() {
+        Some(w) if w.has_evidence() => {
+            if w.models.len() != q || w.models.iter().any(|col| col.len() != p) {
+                return Err(HfpmError::InvalidArg(format!(
+                    "warm start shape mismatch for a {p}×{q} grid"
+                )));
+            }
+            Some(w)
+        }
+        _ => None,
+    };
 
     // step 1: even initial partitioning
     let mut widths = crate::dfpa::algorithm::even_distribution(n, q);
     let mut heights: Vec<Vec<u64>> =
         vec![crate::dfpa::algorithm::even_distribution(m, p); q];
 
-    // persistent per-processor models (units domain), [j][i]
-    let mut models: Vec<Vec<PiecewiseModel>> = vec![vec![PiecewiseModel::new(); p]; q];
+    // persistent per-processor models (units domain), [j][i] — seeded from
+    // the store on a warm start
+    let warm_started = warm.is_some();
+    let mut models: Vec<Vec<PiecewiseModel>> = match warm {
+        Some(w) => w.models,
+        None => vec![vec![PiecewiseModel::new(); p]; q],
+    };
+    if warm_started {
+        // columns whose processors all carry evidence start from the
+        // stored-model partitioning instead of the even heights; the first
+        // inner benchmark validates (and corrects) the stored speeds
+        for j in 0..q {
+            if models[j].iter().all(|mm| !mm.is_empty()) {
+                let views: Vec<ScaledModel<&PiecewiseModel>> = models[j]
+                    .iter()
+                    .map(|mm| ScaledModel::new(mm, widths[j] as f64))
+                    .collect();
+                if let Ok(part) = partition_with(m, &views, opts.geometric) {
+                    heights[j] = part.d;
+                }
+            }
+        }
+    }
+
+    // this run's own measurements, kept apart from the seeded models
+    let mut observations: Vec<Vec<PiecewiseModel>> = vec![vec![PiecewiseModel::new(); p]; q];
 
     let mut total_virtual = 0.0f64;
     let mut partition_wall = 0.0f64;
@@ -171,7 +237,9 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
                 for i in 0..p {
                     let units = d[i] * width;
                     if units > 0 && report.times[i] > 0.0 {
-                        models[j][i].insert(units as f64, units as f64 / report.times[i]);
+                        let speed = units as f64 / report.times[i];
+                        models[j][i].insert(units as f64, speed);
+                        observations[j][i].insert(units as f64, speed);
                     }
                 }
                 last_times[j] = report.times.clone();
@@ -268,9 +336,11 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
                 inner_iterations: inner_total,
                 imbalance,
                 converged: true,
+                warm_started,
                 total_virtual_s: total_virtual,
                 partition_wall_s: partition_wall,
                 models,
+                observations,
             });
         }
 
@@ -306,7 +376,10 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
             .map(|j| {
                 let w = widths[j].max(1) as f64;
                 let pw = proposed[j].max(1) as f64;
-                let dir: i8 = match pw.partial_cmp(&w).unwrap() {
+                // total_cmp: a NaN proposal (from a degenerate speed) must
+                // not panic mid-run — it sorts above every real width and
+                // the damping then treats it as a grow step
+                let dir: i8 = match pw.total_cmp(&w) {
                     std::cmp::Ordering::Greater => 1,
                     std::cmp::Ordering::Less => -1,
                     std::cmp::Ordering::Equal => 0,
@@ -361,9 +434,11 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
                     inner_iterations: inner_total,
                     imbalance: bi,
                     converged: bi <= opts.epsilon,
+                    warm_started,
                     total_virtual_s: total_virtual,
                     partition_wall_s: partition_wall,
                     models,
+                    observations,
                 });
             }
         }
@@ -380,9 +455,11 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
         inner_iterations: inner_total,
         imbalance: bi,
         converged: false,
+        warm_started,
         total_virtual_s: total_virtual,
         partition_wall_s: partition_wall,
         models,
+        observations,
     })
 }
 
@@ -496,6 +573,44 @@ mod tests {
     fn too_small_grid_is_error() {
         let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
         assert!(run_dfpa2d(2, 256, &mut bench, Dfpa2dOptions::default()).is_err());
+    }
+
+    #[test]
+    fn warm_start_reduces_inner_iterations() {
+        let mut cold_bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let cold = run_dfpa2d(256, 256, &mut cold_bench, Dfpa2dOptions::with_epsilon(0.1)).unwrap();
+        assert!(!cold.warm_started);
+
+        let mut warm_bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let opts = Dfpa2dOptions {
+            warm_start: Some(WarmStart2d::new(cold.observations.clone())),
+            ..Dfpa2dOptions::with_epsilon(0.1)
+        };
+        let warm = run_dfpa2d(256, 256, &mut warm_bench, opts).unwrap();
+        assert!(warm.warm_started);
+        assert!(warm.converged, "imbalance {}", warm.imbalance);
+        assert_eq!(warm.widths.iter().sum::<u64>(), 256);
+        for j in 0..3 {
+            assert_eq!(warm.heights[j].iter().sum::<u64>(), 256, "column {j}");
+        }
+        assert!(
+            warm.inner_iterations <= cold.inner_iterations,
+            "warm {} vs cold {}",
+            warm.inner_iterations,
+            cold.inner_iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_shape_mismatch_is_error() {
+        let mut bench = SurfBench::new(grid_3x3(), 32, 0.0);
+        let opts = Dfpa2dOptions {
+            warm_start: Some(WarmStart2d::new(vec![vec![PiecewiseModel::constant(
+                10.0, 5.0,
+            )]])),
+            ..Default::default()
+        };
+        assert!(run_dfpa2d(256, 256, &mut bench, opts).is_err());
     }
 
     #[test]

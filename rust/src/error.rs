@@ -1,41 +1,72 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default build
+//! is dependency-free so it compiles on fully offline machines.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum HfpmError {
-    #[error("configuration error: {0}")]
     Config(String),
-
-    #[error("partitioning failed: {0}")]
     Partition(String),
-
-    #[error("DFPA did not converge after {iterations} iterations (imbalance {imbalance:.4}, ε={epsilon:.4})")]
     NoConvergence {
         iterations: usize,
         imbalance: f64,
         epsilon: f64,
     },
-
-    #[error("cluster runtime error: {0}")]
     Cluster(String),
-
-    #[error("worker {rank} failed: {reason}")]
-    WorkerFailed { rank: usize, reason: String },
-
-    #[error("artifact error: {0}")]
+    WorkerFailed {
+        rank: usize,
+        reason: String,
+    },
     Artifact(String),
-
-    #[error("PJRT runtime error: {0}")]
     Runtime(String),
-
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for HfpmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HfpmError::Config(m) => write!(f, "configuration error: {m}"),
+            HfpmError::Partition(m) => write!(f, "partitioning failed: {m}"),
+            HfpmError::NoConvergence {
+                iterations,
+                imbalance,
+                epsilon,
+            } => write!(
+                f,
+                "DFPA did not converge after {iterations} iterations \
+                 (imbalance {imbalance:.4}, ε={epsilon:.4})"
+            ),
+            HfpmError::Cluster(m) => write!(f, "cluster runtime error: {m}"),
+            HfpmError::WorkerFailed { rank, reason } => {
+                write!(f, "worker {rank} failed: {reason}")
+            }
+            HfpmError::Artifact(m) => write!(f, "artifact error: {m}"),
+            HfpmError::Runtime(m) => write!(f, "PJRT runtime error: {m}"),
+            HfpmError::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            HfpmError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for HfpmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HfpmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HfpmError {
+    fn from(e: std::io::Error) -> Self {
+        HfpmError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for HfpmError {
     fn from(e: xla::Error) -> Self {
         HfpmError::Runtime(e.to_string())
@@ -65,5 +96,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: HfpmError = io.into();
         assert!(matches!(e, HfpmError::Io(_)));
+    }
+
+    #[test]
+    fn io_source_chains() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: HfpmError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&HfpmError::Config("x".into())).is_none());
     }
 }

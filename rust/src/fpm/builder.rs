@@ -72,7 +72,7 @@ pub fn paper_grid_1d(n_max: usize) -> Vec<f64> {
         }
         n += 1024;
     }
-    grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.sort_by(f64::total_cmp);
     grid.dedup();
     grid
 }

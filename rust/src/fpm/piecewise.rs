@@ -69,10 +69,7 @@ impl PiecewiseModel {
     pub fn insert(&mut self, x: f64, s: f64) {
         assert!(x > 0.0, "problem size must be positive, got {x}");
         assert!(s > 0.0, "speed must be positive, got {s}");
-        match self
-            .points
-            .binary_search_by(|p| p.x.partial_cmp(&x).unwrap())
-        {
+        match self.points.binary_search_by(|p| p.x.total_cmp(&x)) {
             Ok(i) => self.points[i].s = s,
             Err(i) => self.points.insert(i, SpeedPoint { x, s }),
         }
@@ -120,7 +117,7 @@ impl SpeedFunction for PiecewiseModel {
             return pts[pts.len() - 1].s; // constant right extension
         }
         // interior: find the segment [i, i+1] with pts[i].x <= x < pts[i+1].x
-        let i = match pts.binary_search_by(|p| p.x.partial_cmp(&x).unwrap()) {
+        let i = match pts.binary_search_by(|p| p.x.total_cmp(&x)) {
             Ok(i) => return pts[i].s,
             Err(i) => i - 1,
         };

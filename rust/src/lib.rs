@@ -25,7 +25,10 @@
 //!   or real (PJRT-backed) execution mode.
 //! - **A PJRT runtime** ([`runtime`]) — loads the AOT-compiled JAX/Pallas
 //!   matmul kernels (`artifacts/*.hlo.txt`) and executes them from the
-//!   coordinator hot path via the `xla` crate.
+//!   coordinator hot path via the `xla` crate (optional `pjrt` feature).
+//! - **A persistent model store** ([`modelstore`]) — serializes the partial
+//!   FPM estimates per (host, kernel, mode) so repeated invocations warm-
+//!   start DFPA instead of rediscovering the platform from scratch.
 //!
 //! Support modules: [`config`] (mini-TOML), [`bench_harness`]
 //! (criterion-lite), [`testkit`] (proptest-lite), [`util`].
@@ -38,6 +41,7 @@ pub mod testkit;
 pub mod util;
 
 pub mod fpm;
+pub mod modelstore;
 pub mod partition;
 
 pub mod cluster;

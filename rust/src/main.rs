@@ -5,9 +5,10 @@
 //! ```text
 //! repro info                                  platform + artifact status
 //! repro run1d  --cluster hcl15 --n 4096 --strategy dfpa [--eps 0.025]
-//!              [--mode sim|real] [--compare]  the §3.1 application
+//!              [--mode sim|real] [--compare] [--model-store DIR]
+//!              the §3.1 application
 //! repro run2d  --cluster hcl --n 8192 --strategy dfpa [--eps 0.1]
-//!              the §3.2 application
+//!              [--model-store DIR]           the §3.2 application
 //! repro verify --n 512 [--cluster mini4]      real PJRT end-to-end + check
 //! repro trace  --cluster hcl15 --n 5120 [--eps 0.025] [--out f.csv]
 //!              per-iteration DFPA trace (Figs 2/6)
@@ -42,7 +43,7 @@ fn main() {
 }
 
 fn cluster_arg(args: &Args, default: &str) -> Result<ClusterSpec> {
-    let name = args.get_or("cluster", default);
+    let name = args.get_or_checked("cluster", default)?;
     if let Some(spec) = presets::by_name(&name) {
         return Ok(spec);
     }
@@ -84,7 +85,9 @@ COMMANDS:
   cluster   print a cluster preset      --name hcl
   run1d     1D matmul app (§3.1)        --cluster hcl15 --n 4096 --strategy
             dfpa|ffmpa|cpm|even [--eps 0.025] [--mode sim|real] [--compare]
+            [--model-store DIR]  persist partial FPMs; later runs warm-start
   run2d     2D matmul app (§3.2)        --cluster hcl --n 8192 --strategy ...
+            [--model-store DIR]
   verify    real PJRT e2e + correctness --n 512 [--cluster mini4] [--eps 0.1]
   trace     DFPA iteration trace        --cluster hcl15 --n 5120 [--out f.csv]
 ";
@@ -102,16 +105,13 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("artifacts: NOT BUILT ({e}) — run `make artifacts`"),
     }
-    match xla::PjRtClient::cpu() {
-        Ok(c) => println!("pjrt: {} ({} devices)", c.platform_name(), c.device_count()),
-        Err(e) => println!("pjrt: unavailable ({e})"),
-    }
+    println!("pjrt: {}", hfpm::runtime::pjrt_status());
     println!("presets: hcl (16 nodes), hcl15, grid5000 (28 nodes), mini4");
     Ok(())
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
-    let spec = presets::by_name(&args.get_or("name", "hcl"))
+    let spec = presets::by_name(&args.get_or_checked("name", "hcl")?)
         .ok_or_else(|| HfpmError::InvalidArg("unknown preset".into()))?;
     let mut t = Table::new(
         &format!("cluster `{}` ({} nodes)", spec.name, spec.size()),
@@ -151,7 +151,7 @@ fn cmd_run1d(args: &Args) -> Result<()> {
     let spec = cluster_arg(args, "hcl15")?;
     let n = args.get_u64("n", 4096)?;
     let eps = args.get_f64("eps", 0.025)?;
-    let mode = ExecutionMode::parse(&args.get_or("mode", "sim"))
+    let mode = ExecutionMode::parse(&args.get_or_checked("mode", "sim")?)
         .ok_or_else(|| HfpmError::InvalidArg("--mode sim|real".into()))?;
     let strategies: Vec<matmul1d::Strategy> = if args.has("compare") {
         vec![
@@ -161,7 +161,7 @@ fn cmd_run1d(args: &Args) -> Result<()> {
             matmul1d::Strategy::Dfpa,
         ]
     } else {
-        let s = args.get_or("strategy", "dfpa");
+        let s = args.get_or_checked("strategy", "dfpa")?;
         vec![matmul1d::Strategy::parse(&s)
             .ok_or_else(|| HfpmError::InvalidArg(format!("bad strategy `{s}`")))?]
     };
@@ -169,13 +169,16 @@ fn cmd_run1d(args: &Args) -> Result<()> {
         &format!("1D matmul on `{}` (n={n}, ε={eps})", spec.name),
         &["strategy", "n", "partition", "matmul", "comm", "total", "iters", "imb %", "model build"],
     );
+    let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
     for s in strategies {
         let mut cfg = matmul1d::Matmul1dConfig::new(n, s);
         cfg.epsilon = eps;
         cfg.mode = mode;
+        cfg.model_store = model_store.clone();
         let r = matmul1d::run(&spec, &cfg)?;
         report_row_1d(&mut t, &r);
-        println!("{}: d = {:?}", s.name(), compact(&r.d));
+        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        println!("{}: d = {}{warm}", s.name(), compact(&r.d));
     }
     print!("{}", t.render());
     Ok(())
@@ -185,7 +188,7 @@ fn cmd_run2d(args: &Args) -> Result<()> {
     let spec = cluster_arg(args, "hcl")?;
     let n = args.get_u64("n", 8192)?;
     let eps = args.get_f64("eps", 0.1)?;
-    let s = args.get_or("strategy", "dfpa");
+    let s = args.get_or_checked("strategy", "dfpa")?;
     let strategies: Vec<matmul2d::Strategy> = if args.has("compare") {
         vec![
             matmul2d::Strategy::Cpm,
@@ -200,9 +203,11 @@ fn cmd_run2d(args: &Args) -> Result<()> {
         &format!("2D matmul on `{}` (N={n}, ε={eps})", spec.name),
         &["strategy", "grid", "partition", "matmul", "total", "iters", "cost %", "imb %"],
     );
+    let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
     for st in strategies {
         let mut cfg = matmul2d::Matmul2dConfig::new(n, st);
         cfg.epsilon = eps;
+        cfg.model_store = model_store.clone();
         let r = matmul2d::run(&spec, &cfg)?;
         t.add_row(vec![
             st.name().to_string(),
@@ -214,7 +219,8 @@ fn cmd_run2d(args: &Args) -> Result<()> {
             fnum(r.overhead_pct, 2),
             fnum(100.0 * r.imbalance, 1),
         ]);
-        println!("{}: widths = {:?}", st.name(), r.widths);
+        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        println!("{}: widths = {:?}{warm}", st.name(), r.widths);
     }
     print!("{}", t.render());
     Ok(())
@@ -250,7 +256,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let spec = cluster_arg(args, "hcl15")?;
     let n = args.get_u64("n", 5120)?;
     let eps = args.get_f64("eps", 0.025)?;
-    let out = args.get_or("out", "results/dfpa_trace.csv");
+    let out = args.get_or_checked("out", "results/dfpa_trace.csv")?;
     let cfg = matmul1d::Matmul1dConfig::new(n, matmul1d::Strategy::Dfpa);
     let (mut cluster, _) = matmul1d::build_cluster(&spec, &cfg, Default::default())?;
     let mut bench = matmul1d::RowBench {

@@ -1,0 +1,583 @@
+//! Persistent FPM model store — warm starts across application invocations.
+//!
+//! The paper's motivating scenario is a *self-adaptable application*: the
+//! same code invoked again and again on the same platform. DFPA makes each
+//! invocation cheap, but the seed implementation still rebuilt every
+//! partial [`PiecewiseModel`] from nothing on every run. This module
+//! persists the partial estimates to disk so invocation `k+1` starts from
+//! everything invocations `1..k` learned:
+//!
+//! - one JSON file per **(host, kernel, mode)** key (see [`ModelKey`]) in a
+//!   store directory, written atomically (`tmp` + rename);
+//! - each stored point carries a **freshness weight** `w ∈ (0, 1]`; every
+//!   merge decays existing weights by [`MergePolicy::decay`] and inserts
+//!   the new observations at weight 1, so a drifting platform gradually
+//!   forgets stale speeds instead of trusting them forever;
+//! - points whose weight decays below [`MergePolicy::min_weight`] are
+//!   evicted, which bounds file size over unbounded run counts.
+//!
+//! The store knows nothing about DFPA; `dfpa`/`dfpa2d` accept a
+//! `WarmStart` of plain [`PiecewiseModel`]s and the apps glue the two
+//! together (see `apps::matmul1d` and DESIGN.md §3).
+
+pub mod json;
+
+use crate::error::{HfpmError, Result};
+use crate::fpm::PiecewiseModel;
+use json::Value;
+use std::path::{Path, PathBuf};
+
+/// Identity of one stored model: which machine ran which kernel, how.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    /// Host identity (see `VirtualCluster::hosts`).
+    pub host: String,
+    /// Kernel identity including the problem shape the speeds were
+    /// measured under (e.g. `matmul1d_n4096`): speed functions are only
+    /// comparable at the same fixed footprint.
+    pub kernel: String,
+    /// Execution mode (`sim` or `real`): simulated and measured speeds
+    /// live on different time scales and must never be merged.
+    pub mode: String,
+}
+
+impl ModelKey {
+    pub fn new(host: &str, kernel: &str, mode: &str) -> Self {
+        Self {
+            host: host.to_string(),
+            kernel: kernel.to_string(),
+            mode: mode.to_string(),
+        }
+    }
+
+    /// File name for this key: sanitized components joined with `__`.
+    pub fn file_name(&self) -> String {
+        fn clean(s: &str) -> String {
+            s.chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || matches!(c, '.' | '-' | '_') {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect()
+        }
+        format!(
+            "{}__{}__{}.json",
+            clean(&self.host),
+            clean(&self.kernel),
+            clean(&self.mode)
+        )
+    }
+}
+
+/// One persisted observation: a speed-function point plus its freshness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoredPoint {
+    /// Problem size (same unit domain the producing algorithm used).
+    pub x: f64,
+    /// Speed, units/second.
+    pub s: f64,
+    /// Freshness weight in `(0, 1]`; decays by [`MergePolicy::decay`] per
+    /// merged run.
+    pub w: f64,
+}
+
+/// How merges weigh new observations against stored history.
+#[derive(Debug, Clone, Copy)]
+pub struct MergePolicy {
+    /// Multiplier applied to every stored weight per merged run.
+    pub decay: f64,
+    /// Points below this weight are evicted.
+    pub min_weight: f64,
+    /// Hard cap on points per model (lowest-weight points evicted first).
+    pub max_points: usize,
+    /// Two points whose sizes differ by less than this relative tolerance
+    /// are treated as re-measurements of the same size and blended.
+    pub blend_tol_rel: f64,
+}
+
+impl Default for MergePolicy {
+    fn default() -> Self {
+        Self {
+            decay: 0.7,
+            min_weight: 0.05,
+            max_points: 64,
+            blend_tol_rel: 1e-9,
+        }
+    }
+}
+
+/// A persisted partial FPM: the points plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct StoredModel {
+    pub key: ModelKey,
+    /// Sorted by `x`, strictly increasing.
+    pub points: Vec<StoredPoint>,
+    /// Number of runs merged into this model.
+    pub runs: u64,
+}
+
+impl StoredModel {
+    pub fn new(key: ModelKey) -> Self {
+        Self {
+            key,
+            points: Vec::new(),
+            runs: 0,
+        }
+    }
+
+    /// View as the piecewise model DFPA consumes (weights only steer
+    /// merging/eviction, not evaluation).
+    pub fn to_model(&self) -> PiecewiseModel {
+        let mut m = PiecewiseModel::new();
+        for p in &self.points {
+            if p.x > 0.0 && p.s > 0.0 && p.x.is_finite() && p.s.is_finite() {
+                m.insert(p.x, p.s);
+            }
+        }
+        m
+    }
+
+    /// Does the stored evidence bracket problem size `x`?
+    pub fn covers(&self, x: f64) -> bool {
+        match (self.points.first(), self.points.last()) {
+            (Some(a), Some(b)) => a.x <= x && x <= b.x,
+            _ => false,
+        }
+    }
+
+    /// Fold one run's observed partial model into the stored history.
+    ///
+    /// Existing weights decay first, then each fresh point either blends
+    /// into a stored point at (relatively) the same size — weighted by the
+    /// decayed old weight against 1.0 for the new observation — or is
+    /// inserted at weight 1. Finally, under-weight and over-cap points are
+    /// evicted.
+    pub fn merge(&mut self, observed: &PiecewiseModel, policy: &MergePolicy) {
+        for p in &mut self.points {
+            p.w *= policy.decay;
+        }
+        for op in observed.points() {
+            if !(op.x > 0.0 && op.s > 0.0 && op.x.is_finite() && op.s.is_finite()) {
+                continue;
+            }
+            let tol = policy.blend_tol_rel * op.x.abs();
+            match self.points.iter().position(|sp| (sp.x - op.x).abs() <= tol) {
+                Some(i) => {
+                    let sp = &mut self.points[i];
+                    sp.s = (sp.w * sp.s + op.s) / (sp.w + 1.0);
+                    sp.w = 1.0;
+                }
+                None => {
+                    let at = self.points.partition_point(|sp| sp.x < op.x);
+                    self.points.insert(
+                        at,
+                        StoredPoint {
+                            x: op.x,
+                            s: op.s,
+                            w: 1.0,
+                        },
+                    );
+                }
+            }
+        }
+        self.points.retain(|p| p.w >= policy.min_weight);
+        while self.points.len() > policy.max_points {
+            let (evict, _) = self
+                .points
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.w.total_cmp(&b.w))
+                .expect("non-empty: len > max_points >= 1");
+            self.points.remove(evict);
+        }
+        self.runs += 1;
+    }
+
+    fn to_json(&self) -> Value {
+        Value::Obj(vec![
+            ("version".into(), Value::Num(1.0)),
+            ("host".into(), Value::Str(self.key.host.clone())),
+            ("kernel".into(), Value::Str(self.key.kernel.clone())),
+            ("mode".into(), Value::Str(self.key.mode.clone())),
+            ("runs".into(), Value::Num(self.runs as f64)),
+            (
+                "points".into(),
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Value::Obj(vec![
+                                ("x".into(), Value::Num(p.x)),
+                                ("s".into(), Value::Num(p.s)),
+                                ("w".into(), Value::Num(p.w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value, fallback_key: &ModelKey) -> Result<Self> {
+        let bad = |what: &str| HfpmError::Config(format!("model store file: {what}"));
+        let version = v.get("version").and_then(Value::as_f64).unwrap_or(0.0);
+        if version != 1.0 {
+            return Err(bad(&format!("unsupported version {version}")));
+        }
+        let key = ModelKey::new(
+            v.get("host").and_then(Value::as_str).unwrap_or(&fallback_key.host),
+            v.get("kernel")
+                .and_then(Value::as_str)
+                .unwrap_or(&fallback_key.kernel),
+            v.get("mode").and_then(Value::as_str).unwrap_or(&fallback_key.mode),
+        );
+        let runs = v.get("runs").and_then(Value::as_f64).unwrap_or(0.0).max(0.0) as u64;
+        let mut points = Vec::new();
+        for pv in v
+            .get("points")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| bad("missing `points` array"))?
+        {
+            let x = pv.get("x").and_then(Value::as_f64).ok_or_else(|| bad("point without x"))?;
+            let s = pv.get("s").and_then(Value::as_f64).ok_or_else(|| bad("point without s"))?;
+            let w = pv.get("w").and_then(Value::as_f64).unwrap_or(1.0);
+            // zero-weight points are fully stale — merge() would have
+            // evicted them, so don't resurrect them into warm starts
+            if x > 0.0 && s > 0.0 && w > 0.0 && x.is_finite() && s.is_finite() {
+                points.push(StoredPoint {
+                    x,
+                    s,
+                    w: w.min(1.0),
+                });
+            }
+        }
+        points.sort_by(|a, b| a.x.total_cmp(&b.x));
+        points.dedup_by(|a, b| a.x == b.x);
+        Ok(Self { key, points, runs })
+    }
+}
+
+/// A directory of [`StoredModel`] files.
+#[derive(Debug, Clone)]
+pub struct ModelStore {
+    dir: PathBuf,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a store directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, key: &ModelKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Load one stored model, `Ok(None)` if the key has no file yet.
+    pub fn load(&self, key: &ModelKey) -> Result<Option<StoredModel>> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let v = json::parse(&text).map_err(|e| {
+            HfpmError::Config(format!("corrupt model store file {}: {e}", path.display()))
+        })?;
+        let stored = StoredModel::from_json(&v, key)?;
+        // file names are sanitized, so distinct keys can collide on one
+        // file (host "node/1" vs "node_1"); the JSON carries the true key —
+        // refuse to hand one host's speeds to another
+        if stored.key != *key {
+            return Err(HfpmError::Config(format!(
+                "model store key collision at {}: file belongs to \
+                 ({}, {}, {}), requested ({}, {}, {})",
+                path.display(),
+                stored.key.host,
+                stored.key.kernel,
+                stored.key.mode,
+                key.host,
+                key.kernel,
+                key.mode
+            )));
+        }
+        Ok(Some(stored))
+    }
+
+    /// Load just the piecewise model for a key (empty model if absent).
+    pub fn load_model(&self, key: &ModelKey) -> Result<PiecewiseModel> {
+        Ok(self
+            .load(key)?
+            .map(|sm| sm.to_model())
+            .unwrap_or_default())
+    }
+
+    /// Atomically persist a stored model (write temp file, then rename).
+    pub fn save(&self, model: &StoredModel) -> Result<()> {
+        let path = self.path_for(&model.key);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, model.to_json().render())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Merge one run's observed models into the store: for each key,
+    /// `load → merge(observed) → save`. Empty observations are skipped (a
+    /// processor that never benchmarked teaches nothing).
+    pub fn record_run(
+        &self,
+        keys: &[ModelKey],
+        observed: &[PiecewiseModel],
+        policy: &MergePolicy,
+    ) -> Result<()> {
+        if keys.len() != observed.len() {
+            return Err(HfpmError::InvalidArg(format!(
+                "record_run: {} keys vs {} models",
+                keys.len(),
+                observed.len()
+            )));
+        }
+        for (key, model) in keys.iter().zip(observed) {
+            if model.is_empty() {
+                continue;
+            }
+            let mut stored = self
+                .load(key)?
+                .unwrap_or_else(|| StoredModel::new(key.clone()));
+            stored.merge(model, policy);
+            self.save(&stored)?;
+        }
+        Ok(())
+    }
+
+    /// Load the warm-start models for a key set. Returns `None` when the
+    /// store holds nothing for *any* of the keys; otherwise a vector with
+    /// one (possibly empty) model per key, positionally aligned.
+    pub fn warm_models(&self, keys: &[ModelKey]) -> Result<Option<Vec<PiecewiseModel>>> {
+        let mut models = Vec::with_capacity(keys.len());
+        let mut any = false;
+        for key in keys {
+            let m = self.load_model(key)?;
+            any |= !m.is_empty();
+            models.push(m);
+        }
+        Ok(if any { Some(models) } else { None })
+    }
+
+    /// Keys of every model currently persisted in the store.
+    pub fn entries(&self) -> Result<Vec<ModelKey>> {
+        let mut keys = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path)?;
+            if let Ok(v) = json::parse(&text) {
+                let host = v.get("host").and_then(Value::as_str);
+                let kernel = v.get("kernel").and_then(Value::as_str);
+                let mode = v.get("mode").and_then(Value::as_str);
+                if let (Some(h), Some(k), Some(m)) = (host, kernel, mode) {
+                    keys.push(ModelKey::new(h, k, m));
+                }
+            }
+        }
+        keys.sort_by(|a, b| a.file_name().cmp(&b.file_name()));
+        Ok(keys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_store(tag: &str) -> ModelStore {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "hfpm-modelstore-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ModelStore::open(&dir).unwrap()
+    }
+
+    fn sample_model() -> PiecewiseModel {
+        let mut m = PiecewiseModel::new();
+        m.insert(1024.0, 3.0e8);
+        m.insert(4096.0, 2.5e8);
+        m.insert(16384.0, 1.0e8);
+        m
+    }
+
+    #[test]
+    fn key_file_names_are_sanitized_and_stable() {
+        let k = ModelKey::new("hcl/01", "matmul1d n=4096", "sim");
+        assert_eq!(k.file_name(), "hcl_01__matmul1d_n_4096__sim.json");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let store = tmp_store("roundtrip");
+        let key = ModelKey::new("hcl01", "matmul1d_n4096", "sim");
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        store.save(&sm).unwrap();
+
+        let back = store.load(&key).unwrap().expect("file exists");
+        assert_eq!(back.key, key);
+        assert_eq!(back.runs, 1);
+        assert_eq!(back.points.len(), 3);
+        let m = back.to_model();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.speed(1024.0), 3.0e8);
+    }
+
+    #[test]
+    fn missing_key_is_none_and_empty_model() {
+        let store = tmp_store("missing");
+        let key = ModelKey::new("nowhere", "k", "sim");
+        assert!(store.load(&key).unwrap().is_none());
+        assert!(store.load_model(&key).unwrap().is_empty());
+        assert!(store.warm_models(&[key]).unwrap().is_none());
+    }
+
+    #[test]
+    fn merge_decays_and_blends() {
+        let policy = MergePolicy {
+            decay: 0.5,
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        let mut first = PiecewiseModel::new();
+        first.insert(100.0, 10.0);
+        sm.merge(&first, &policy);
+        assert_eq!(sm.points[0].w, 1.0);
+
+        // re-measuring the same size blends: decayed old weight 0.5 against
+        // fresh 1.0 → s = (0.5·10 + 20) / 1.5
+        let mut second = PiecewiseModel::new();
+        second.insert(100.0, 20.0);
+        sm.merge(&second, &policy);
+        assert_eq!(sm.points.len(), 1);
+        assert!((sm.points[0].s - 25.0 / 1.5).abs() < 1e-12);
+        assert_eq!(sm.points[0].w, 1.0);
+        assert_eq!(sm.runs, 2);
+    }
+
+    #[test]
+    fn stale_points_evicted() {
+        let policy = MergePolicy {
+            decay: 0.5,
+            min_weight: 0.3,
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        let mut old = PiecewiseModel::new();
+        old.insert(100.0, 10.0);
+        sm.merge(&old, &policy);
+        // two runs that never re-measure x=100: weight 1 → 0.5 → 0.25 < 0.3
+        let mut other = PiecewiseModel::new();
+        other.insert(200.0, 5.0);
+        sm.merge(&other, &policy);
+        assert!(sm.covers(150.0));
+        sm.merge(&other, &policy);
+        assert_eq!(sm.points.len(), 1, "stale x=100 evicted: {:?}", sm.points);
+        assert_eq!(sm.points[0].x, 200.0);
+    }
+
+    #[test]
+    fn point_cap_enforced() {
+        let policy = MergePolicy {
+            max_points: 4,
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        for run in 0..3 {
+            let mut m = PiecewiseModel::new();
+            for i in 0..4 {
+                m.insert(100.0 * (1 + i + 4 * run) as f64, 10.0);
+            }
+            sm.merge(&m, &policy);
+        }
+        assert_eq!(sm.points.len(), 4);
+        // survivors are the freshest (last run's) sizes
+        assert!(sm.points.iter().all(|p| p.w == 1.0));
+        assert_eq!(sm.points[0].x, 900.0);
+    }
+
+    #[test]
+    fn record_run_accumulates_and_lists() {
+        let store = tmp_store("record");
+        let keys = vec![
+            ModelKey::new("a", "k1", "sim"),
+            ModelKey::new("b", "k1", "sim"),
+        ];
+        let models = vec![sample_model(), PiecewiseModel::new()];
+        store
+            .record_run(&keys, &models, &MergePolicy::default())
+            .unwrap();
+        // empty model for "b" writes nothing
+        assert!(store.load(&keys[1]).unwrap().is_none());
+        let warm = store.warm_models(&keys).unwrap().expect("a is stored");
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm[0].len(), 3);
+        assert!(warm[1].is_empty());
+        assert_eq!(store.entries().unwrap(), vec![keys[0].clone()]);
+    }
+
+    #[test]
+    fn sanitization_collision_is_detected() {
+        let store = tmp_store("collision");
+        let a = ModelKey::new("node/1", "k", "sim");
+        let b = ModelKey::new("node_1", "k", "sim");
+        assert_eq!(a.file_name(), b.file_name(), "keys collide by design here");
+        let mut sm = StoredModel::new(a.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        store.save(&sm).unwrap();
+        // the true owner loads fine; the colliding key is refused
+        assert!(store.load(&a).unwrap().is_some());
+        assert!(store.load(&b).is_err());
+    }
+
+    #[test]
+    fn zero_weight_points_not_resurrected() {
+        let store = tmp_store("zeroweight");
+        let key = ModelKey::new("h", "k", "sim");
+        std::fs::write(
+            store.path_for(&key),
+            r#"{"version": 1, "host": "h", "kernel": "k", "mode": "sim", "runs": 3,
+                "points": [{"x": 10.0, "s": 5.0, "w": 0.0}, {"x": 20.0, "s": 4.0, "w": 0.5}]}"#,
+        )
+        .unwrap();
+        let m = store.load_model(&key).unwrap();
+        assert_eq!(m.len(), 1, "w=0 point must not feed warm starts");
+        assert_eq!(m.speed(20.0), 4.0);
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error_not_a_panic() {
+        let store = tmp_store("corrupt");
+        let key = ModelKey::new("h", "k", "sim");
+        std::fs::write(store.path_for(&key), "{not json").unwrap();
+        assert!(store.load(&key).is_err());
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let store = tmp_store("mismatch");
+        let keys = vec![ModelKey::new("a", "k", "sim")];
+        assert!(store
+            .record_run(&keys, &[], &MergePolicy::default())
+            .is_err());
+    }
+}

@@ -29,7 +29,7 @@ pub fn round_to_sum(xs: &[f64], n: u64) -> Vec<u64> {
         order.sort_by(|&a, &b| {
             let fa = xs[a] - xs[a].floor();
             let fb = xs[b] - xs[b].floor();
-            fa.partial_cmp(&fb).unwrap()
+            fa.total_cmp(&fb)
         });
         let mut i = 0;
         while assigned > n {
@@ -48,7 +48,7 @@ pub fn round_to_sum(xs: &[f64], n: u64) -> Vec<u64> {
     order.sort_by(|&a, &b| {
         let fa = xs[a] - xs[a].floor();
         let fb = xs[b] - xs[b].floor();
-        fb.partial_cmp(&fa).unwrap()
+        fb.total_cmp(&fa)
     });
     let mut i = 0;
     while assigned < n {

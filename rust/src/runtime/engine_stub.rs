@@ -1,0 +1,89 @@
+//! API-compatible stand-in for [`engine`](super::engine) used when the
+//! `pjrt` cargo feature is off.
+//!
+//! Presents the exact public surface of the real `PjrtEngine` so that
+//! `service.rs`, the apps' real execution mode and `run_real_verified` all
+//! compile unchanged; construction fails with a descriptive runtime error
+//! instead of a build failure on machines without the XLA bindings.
+
+use super::artifact::{ArtifactManifest, ArtifactMeta};
+use crate::error::{HfpmError, Result};
+
+/// A compiled, executable kernel plus its metadata (stub: never holds a
+/// real executable because [`PjrtEngine::new`] cannot succeed).
+pub struct LoadedKernel {
+    pub meta: ArtifactMeta,
+}
+
+/// Stub engine: same fields and methods as the real one, but `new` always
+/// returns [`HfpmError::Runtime`].
+pub struct PjrtEngine {
+    manifest: ArtifactManifest,
+    /// Cumulative kernel wall time (profiling).
+    pub total_exec_s: f64,
+    /// Number of kernel executions.
+    pub exec_count: u64,
+}
+
+fn unavailable() -> HfpmError {
+    HfpmError::Runtime(
+        "PJRT is unavailable: hfpm was built without the `pjrt` feature \
+         (rebuild with `cargo build --features pjrt` and a real `xla` binding)"
+            .into(),
+    )
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over a manifest. Always fails in the stub.
+    pub fn new(_manifest: ArtifactManifest) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Engine over the default artifacts directory. Always fails in the stub.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(ArtifactManifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Compile (or fetch from cache) the artifact `name`.
+    pub fn load(&mut self, _name: &str) -> Result<&LoadedKernel> {
+        Err(unavailable())
+    }
+
+    /// Execute artifact `name` on f32 input buffers.
+    pub fn execute_f32(
+        &mut self,
+        _name: &str,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<(Vec<f32>, f64)> {
+        Err(unavailable())
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn construction_fails_cleanly() {
+        let manifest = ArtifactManifest {
+            dir: PathBuf::from("artifacts"),
+            artifacts: Vec::new(),
+        };
+        let err = PjrtEngine::new(manifest).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

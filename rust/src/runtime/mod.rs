@@ -6,9 +6,21 @@
 //! interchange format xla_extension 0.5.1 accepts — see python/compile/
 //! aot.py), compiles each artifact on the PJRT CPU client, caches the
 //! executables, and runs them with concrete buffers.
+//!
+//! The engine needs the `xla` bindings, which are gated behind the optional
+//! `pjrt` cargo feature so the default build stays dependency-free. Without
+//! the feature, [`engine`] is a stub with the identical API whose
+//! constructors return [`crate::HfpmError::Runtime`] — every caller (the
+//! apps' real mode, `repro verify`) still compiles and reports a clean
+//! "unavailable" error instead of failing to build.
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
 
 pub mod artifact;
-pub mod engine;
 pub mod real_exec;
 pub mod service;
 
@@ -16,3 +28,18 @@ pub use artifact::{ArtifactKind, ArtifactManifest, ArtifactMeta};
 pub use engine::PjrtEngine;
 pub use real_exec::RealScaledExecutor;
 pub use service::PjrtService;
+
+/// One-line PJRT availability report for `repro info`.
+pub fn pjrt_status() -> String {
+    #[cfg(feature = "pjrt")]
+    {
+        match xla::PjRtClient::cpu() {
+            Ok(c) => format!("{} ({} devices)", c.platform_name(), c.device_count()),
+            Err(e) => format!("unavailable ({e})"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+}

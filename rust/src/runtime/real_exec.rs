@@ -110,7 +110,7 @@ impl RealScaledExecutor {
                     .map(|r| (a.dims[0] as f64, 1.0 / r))
             })
             .collect();
-        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
         if pts.is_empty() {
             // no calibration yet: fall back to the bucket rate measured in
             // host_time's own observation (registered just above)

@@ -85,7 +85,10 @@ impl Summary {
     pub fn from_samples(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "Summary::from_samples on empty slice");
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): one NaN from a noisy
+        // benchmark reading must not panic the whole report (NaNs sort
+        // after +inf and surface in `max`, where they are visible)
+        sorted.sort_by(f64::total_cmp);
         let mut acc = Accumulator::new();
         for &s in samples {
             acc.push(s);
@@ -185,6 +188,18 @@ mod tests {
         assert!((s.mean - 5.0).abs() < 1e-12);
         assert_eq!(s.min, 2.0);
         assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_sample() {
+        // regression: a NaN reading used to panic in the sort
+        let s = Summary::from_samples(&[1.0, f64::NAN, 2.0, 3.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, 1.0);
+        // NaN totally-orders above +inf, so it lands in `max` where a
+        // human (or the cv check) can see something went wrong
+        assert!(s.max.is_nan());
+        assert!(s.p50.is_finite());
     }
 
     #[test]

@@ -3,7 +3,9 @@
 
 use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
 use hfpm::cluster::presets;
-use hfpm::dfpa::{run_dfpa, DfpaOptions};
+use hfpm::dfpa::{run_dfpa, DfpaOptions, WarmStart};
+use hfpm::fpm::PiecewiseModel;
+use hfpm::modelstore::{MergePolicy, ModelKey, ModelStore, StoredModel};
 
 fn dfpa_on(preset: &str, n: u64, eps: f64) -> hfpm::dfpa::DfpaResult {
     let spec = presets::by_name(preset).unwrap();
@@ -91,6 +93,123 @@ fn grid5000_converges_fast() {
     let r = dfpa_on("grid5000", 10240, 0.10);
     assert!(r.converged);
     assert!(r.iterations <= 4, "iterations {}", r.iterations);
+}
+
+fn tmp_store(tag: &str) -> (ModelStore, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!("hfpm-test-dfpa-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ModelStore::open(&dir).unwrap(), dir)
+}
+
+/// The acceptance scenario: a cold DFPA run, its models round-tripped
+/// through the on-disk store (save → load → merge), then a warm-started
+/// run on the same simulated cluster converging in strictly fewer parallel
+/// benchmark steps.
+#[test]
+fn warm_start_beats_cold_start_through_the_disk_store() {
+    let spec = presets::hcl15();
+    let n = 5120u64;
+    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+    let (store, dir) = tmp_store("warmcold");
+    let keys: Vec<ModelKey> = spec.nodes.iter().map(|nd| cfg.store_key(&nd.host)).collect();
+
+    // cold run
+    let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+    let mut bench = RowBench {
+        cluster: &mut cluster,
+        n,
+    };
+    let cold = run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(0.025)).unwrap();
+    assert!(cold.converged && !cold.warm_started);
+    assert!(cold.iterations >= 2, "cold start cannot converge in one step");
+
+    // round-trip: save → (re-open) load → merge a second observation set
+    store
+        .record_run(&keys, &cold.observations, &MergePolicy::default())
+        .unwrap();
+    drop(store);
+    let store = ModelStore::open(&dir).unwrap();
+    store
+        .record_run(&keys, &cold.observations, &MergePolicy::default())
+        .unwrap();
+    let loaded = store.load(&keys[0]).unwrap().expect("persisted");
+    assert_eq!(loaded.runs, 2, "merge across store generations");
+    let warm_models = store.warm_models(&keys).unwrap().expect("stored");
+
+    // warm run on a fresh cluster of the same spec
+    let (mut cluster2, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+    let mut bench2 = RowBench {
+        cluster: &mut cluster2,
+        n,
+    };
+    let opts = DfpaOptions {
+        epsilon: 0.025,
+        warm_start: Some(WarmStart::new(warm_models)),
+        ..Default::default()
+    };
+    let warm = run_dfpa(n, &mut bench2, opts).unwrap();
+    assert!(warm.warm_started);
+    assert!(warm.converged, "imbalance {}", warm.imbalance);
+    assert_eq!(warm.d.iter().sum::<u64>(), n);
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm {} vs cold {} iterations",
+        warm.iterations,
+        cold.iterations
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Warm-start invariants under a hostile store: stale, mismatched points
+/// (wrong sizes and wrong speed scale) must never break Σd = n or the
+/// convergence flags.
+#[test]
+fn warm_start_invariants_hold_with_stale_store() {
+    let spec = presets::hcl15();
+    let n = 4096u64;
+    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+    let (store, dir) = tmp_store("stale");
+
+    // fabricate a store measured on a "different" platform: tiny sizes,
+    // inverted speed ordering, three orders of magnitude off
+    for (rank, nd) in spec.nodes.iter().enumerate() {
+        let mut sm = StoredModel::new(cfg.store_key(&nd.host));
+        let mut fake = PiecewiseModel::new();
+        fake.insert(2.0 + rank as f64, 1e3 * (rank + 1) as f64);
+        fake.insert(40.0 + rank as f64, 5e2 * (rank + 1) as f64);
+        sm.merge(&fake, &MergePolicy::default());
+        store.save(&sm).unwrap();
+    }
+    let warm_models = store.warm_models(
+        &spec
+            .nodes
+            .iter()
+            .map(|nd| cfg.store_key(&nd.host))
+            .collect::<Vec<_>>(),
+    )
+    .unwrap()
+    .expect("fabricated store is non-empty");
+
+    let (mut cluster, _) = build_cluster(&spec, &cfg, Default::default()).unwrap();
+    let mut bench = RowBench {
+        cluster: &mut cluster,
+        n,
+    };
+    let opts = DfpaOptions {
+        epsilon: 0.025,
+        warm_start: Some(WarmStart::new(warm_models)),
+        ..Default::default()
+    };
+    let r = run_dfpa(n, &mut bench, opts).unwrap();
+    assert!(r.warm_started);
+    assert_eq!(r.d.iter().sum::<u64>(), n, "Σd = n must hold");
+    assert!(r.converged, "imbalance {}", r.imbalance);
+    assert!(r.imbalance <= 0.025);
+    // convergence flag consistency: every recorded iteration conserves n
+    for rec in &r.records {
+        assert_eq!(rec.d.iter().sum::<u64>(), n);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,130 @@
+//! Compile-time stand-in for the `xla` (xla_extension) bindings.
+//!
+//! Mirrors exactly the slice of the binding API that
+//! `hfpm::runtime::engine` touches. Every constructor that would need the
+//! XLA shared library returns [`Error::Unavailable`]; methods that can only
+//! be reached through such a constructor are therefore unreachable at run
+//! time and exist purely to satisfy the type checker.
+
+use std::fmt;
+
+/// Error type matching the shape of the real binding's `xla::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub is linked instead of a real xla_extension build.
+    Unavailable,
+    /// Anything a real binding would report (parse failure, OOM, ...).
+    Message(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable => write!(
+                f,
+                "xla_extension is not linked (hfpm built with the `xla-stub` shim; \
+                 point the `xla` dependency at a real binding to execute artifacts)"
+            ),
+            Error::Message(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Parsed HLO module. Construction requires the real parser, so it fails.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A compiled executable; only obtainable through [`PjRtClient::compile`].
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A device buffer returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not linked"));
+    }
+
+    #[test]
+    fn literal_construction_is_cheap() {
+        let l = Literal::vec1(&[1.0, 2.0]);
+        assert!(l.reshape(&[2]).is_err());
+    }
+}
