@@ -5,13 +5,34 @@
 //!
 //! `cargo bench --bench bench_micro [filter] [--quick]`
 
-use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, RowBench, Strategy};
+use hfpm::adapt::{Dfpa, Distributor, SessionCtx};
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, Strategy};
 use hfpm::bench_harness::main_with;
 use hfpm::cluster::presets;
-use hfpm::dfpa::{run_dfpa, DfpaOptions};
+use hfpm::cluster::virtual_cluster::VirtualCluster;
+use hfpm::dfpa::{Benchmarker, StepReport};
 use hfpm::fpm::{PiecewiseModel, SpeedFunction};
 use hfpm::partition::{self, hsp};
 use hfpm::util::rng::Pcg32;
+
+/// Row-granularity benchmarker that owns its cluster (the bench harness's
+/// `bench_distribute` builds a fresh owned pair per sample, so the
+/// borrowed `matmul1d::RowBench` won't do here).
+struct OwnedRowBench {
+    cluster: VirtualCluster,
+    n: u64,
+}
+
+impl Benchmarker for OwnedRowBench {
+    fn processors(&self) -> usize {
+        self.cluster.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> hfpm::Result<StepReport> {
+        let units: Vec<u64> = d.iter().map(|&r| r * self.n).collect();
+        self.cluster.run_1d(&units)
+    }
+}
 
 fn random_models(p: usize, points: usize, seed: u64) -> Vec<PiecewiseModel> {
     let mut rng = Pcg32::seeded(seed);
@@ -85,21 +106,24 @@ fn main() {
             b.iter(|| cluster.run_1d(&d).unwrap());
         });
 
-        // --- whole DFPA runs (wall cost of the algorithm itself) ---
+        // --- whole DFPA runs (wall cost of the algorithm itself), driven
+        // through the adapt layer's Distributor API ---
         for n in [4096u64, 8192] {
-            g.bench(&format!("dfpa/full run hcl15 n={n}"), |b| {
-                let spec = presets::hcl15();
-                b.iter(|| {
+            let spec = presets::hcl15();
+            g.bench_distribute(
+                &format!("dfpa/full run hcl15 n={n}"),
+                n,
+                &SessionCtx::with_epsilon(0.025),
+                || {
                     let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
-                    let (mut cluster, _) =
+                    let (cluster, _) =
                         build_cluster(&spec, &cfg, Default::default()).unwrap();
-                    let mut bench = RowBench {
-                        cluster: &mut cluster,
-                        n,
-                    };
-                    run_dfpa(n, &mut bench, DfpaOptions::with_epsilon(0.025)).unwrap()
-                });
-            });
+                    (
+                        Box::new(Dfpa::default()) as Box<dyn Distributor>,
+                        OwnedRowBench { cluster, n },
+                    )
+                },
+            );
         }
 
         // --- comm model arithmetic ---

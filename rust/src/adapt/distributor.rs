@@ -1,0 +1,598 @@
+//! The [`Distributor`] / [`Distributor2d`] traits and the strategy
+//! implementations behind the registry.
+//!
+//! A distributor turns "balance `n` units over this benchmarker" into an
+//! [`Outcome`], given the cross-cutting knobs in [`SessionCtx`]. The
+//! algorithm kernels stay in `dfpa`, `dfpa2d` and `baselines`; this module
+//! adapts each of them to the one trait the apps and CLI program against.
+
+use super::outcome::{Distribution, Observations, Outcome};
+use crate::baselines::{cpm_app, factoring};
+use crate::dfpa::algorithm::{
+    even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport, WarmStart,
+};
+use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, WarmStart2d};
+use crate::error::{HfpmError, Result};
+use crate::fpm::{PiecewiseModel, ScaledModel, SpeedSurface};
+use crate::partition::{self, grid2d, GeometricOptions};
+use crate::util::timer::Stopwatch;
+
+/// Cross-cutting run parameters, owned by
+/// [`AdaptiveSession`](super::session::AdaptiveSession) and handed to every
+/// distributor. Strategies ignore the fields they have no use for.
+#[derive(Debug, Clone)]
+pub struct SessionCtx {
+    /// Termination accuracy ε for the iterative strategies.
+    pub epsilon: f64,
+    /// Hard iteration bound for the iterative strategies. 1D DFPA uses it
+    /// directly; 2D DFPA caps its (smaller) outer/inner defaults by it.
+    pub max_iters: usize,
+    /// Stored 1D models seeded from a model store; `None` is a cold start.
+    pub warm_start: Option<WarmStart>,
+    /// Stored 2D models (`[j][i]`), the 2D analogue.
+    pub warm_start_2d: Option<WarmStart2d>,
+}
+
+impl Default for SessionCtx {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.025,
+            max_iters: 100,
+            warm_start: None,
+            warm_start_2d: None,
+        }
+    }
+}
+
+impl SessionCtx {
+    pub fn with_epsilon(epsilon: f64) -> Self {
+        Self {
+            epsilon,
+            ..Default::default()
+        }
+    }
+}
+
+/// A 1D distribution strategy: balance `n` units over the benchmarker's
+/// processors.
+pub trait Distributor {
+    /// Registry name of the strategy.
+    fn name(&self) -> &'static str;
+
+    /// Does this strategy consume warm starts / produce observations? When
+    /// false the session neither opens the model store (no warm-model
+    /// parsing, no advisory writer lock taken away from a concurrent run
+    /// that needs it) nor attempts a flush.
+    fn uses_model_store(&self) -> bool {
+        false
+    }
+
+    /// Produce a distribution of `n` units.
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome>;
+}
+
+/// A 2D distribution strategy: balance an `m×n` block grid over the
+/// benchmarker's `p×q` processor grid.
+pub trait Distributor2d {
+    fn name(&self) -> &'static str;
+
+    /// See [`Distributor::uses_model_store`].
+    fn uses_model_store(&self) -> bool {
+        false
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome>;
+}
+
+// --------------------------------------------------------------------------
+// 1D strategies
+// --------------------------------------------------------------------------
+
+/// Homogeneous `n/p` split — zero benchmarks, the paper's strawman.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Even;
+
+impl Distributor for Even {
+    fn name(&self) -> &'static str {
+        "even"
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let p = bench.processors();
+        if p == 0 {
+            return Err(HfpmError::Partition("no processors".into()));
+        }
+        Ok(Outcome::immediate(
+            self.name(),
+            Distribution::OneD(even_distribution(n, p)),
+        ))
+    }
+}
+
+/// Constant performance models from a single benchmark (refs [1, 13]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cpm;
+
+impl Distributor for Cpm {
+    fn name(&self) -> &'static str {
+        "cpm"
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let out = cpm_app::partition_cpm(n, bench)?;
+        let mut o = Outcome::immediate(self.name(), Distribution::OneD(out.d));
+        o.benchmark_steps = 1;
+        o.total_virtual_s = out.benchmark_cost_s;
+        Ok(o)
+    }
+}
+
+/// Dynamic weighted factoring (refs [11]/[2]): the distribution reported
+/// is the units each processor ended up executing across the scheduling
+/// rounds, and `total_virtual_s` covers the *whole* dynamically-scheduled
+/// execution (factoring has no separate partition phase).
+#[derive(Debug, Clone, Copy)]
+pub struct Factoring {
+    pub factor: f64,
+    pub weighting: factoring::Weighting,
+}
+
+impl Default for Factoring {
+    fn default() -> Self {
+        Self {
+            factor: 0.5,
+            weighting: factoring::Weighting::Adaptive,
+        }
+    }
+}
+
+impl Distributor for Factoring {
+    fn name(&self) -> &'static str {
+        "factoring"
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let out = factoring::run_factoring(n, bench, self.factor, self.weighting)?;
+        let mut o = Outcome::immediate(self.name(), Distribution::OneD(out.executed));
+        o.benchmark_steps = out.rounds;
+        o.total_virtual_s = out.total_s;
+        // the factoring rounds WERE the computation — flag it so apps don't
+        // charge a second execution phase on top
+        o.executes_workload = true;
+        Ok(o)
+    }
+}
+
+/// Partitioning over pre-built full FPMs (the paper's FFMPA reference
+/// point). The models are supplied at construction — typically by the
+/// registry factory, which builds them from the simulated nodes' ground
+/// truths and records the (virtual) construction cost.
+#[derive(Debug, Clone)]
+pub struct Ffmpa {
+    /// One full model per processor, in the computation-units domain.
+    pub models: Vec<PiecewiseModel>,
+    /// Units per distributed item (rows of `n` units each for the 1D app).
+    pub unit_scale: f64,
+    /// Model construction cost to surface in the outcome.
+    pub model_build_s: Option<f64>,
+}
+
+impl Distributor for Ffmpa {
+    fn name(&self) -> &'static str {
+        "ffmpa"
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let p = bench.processors();
+        if self.models.len() != p {
+            return Err(HfpmError::InvalidArg(format!(
+                "ffmpa carries {} models for {p} processors",
+                self.models.len()
+            )));
+        }
+        let sw = Stopwatch::start();
+        let views: Vec<ScaledModel<&PiecewiseModel>> = self
+            .models
+            .iter()
+            .map(|m| ScaledModel::new(m, self.unit_scale))
+            .collect();
+        let d = partition::partition(n, &views)?.d;
+        let mut o = Outcome::immediate(self.name(), Distribution::OneD(d));
+        o.partition_wall_s = sw.elapsed_s();
+        o.model_build_s = self.model_build_s;
+        Ok(o)
+    }
+}
+
+/// The paper's DFPA, with warm starts from the session's model store.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dfpa {
+    pub geometric: GeometricOptions,
+}
+
+impl Distributor for Dfpa {
+    fn name(&self) -> &'static str {
+        "dfpa"
+    }
+
+    fn uses_model_store(&self) -> bool {
+        true
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let opts = DfpaOptions {
+            epsilon: ctx.epsilon,
+            max_iters: ctx.max_iters,
+            geometric: self.geometric,
+            warm_start: ctx.warm_start.clone(),
+        };
+        let r = run_dfpa(n, bench, opts)?;
+        Ok(Outcome {
+            strategy: self.name(),
+            distribution: Distribution::OneD(r.d),
+            benchmark_steps: r.iterations,
+            converged: r.converged,
+            imbalance: r.imbalance,
+            warm_started: r.warm_started,
+            observations: Observations::OneD(r.observations),
+            records: r.records,
+            total_virtual_s: r.total_virtual_s,
+            partition_wall_s: r.partition_wall_s,
+            model_build_s: None,
+            executes_workload: false,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// 2D strategies
+// --------------------------------------------------------------------------
+
+/// Homogeneous 2D split: even column widths, even row heights.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Even2d;
+
+impl Distributor2d for Even2d {
+    fn name(&self) -> &'static str {
+        "even"
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let (p, q) = bench.grid();
+        if p == 0 || q == 0 {
+            return Err(HfpmError::Partition("empty processor grid".into()));
+        }
+        Ok(Outcome::immediate(
+            self.name(),
+            Distribution::TwoD {
+                widths: even_distribution(n, q),
+                heights: vec![even_distribution(m, p); q],
+            },
+        ))
+    }
+}
+
+/// 2D CPM: one benchmark per column at the even distribution, then the
+/// two-step distribution of ref. [13] (the paper's Fig 8).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cpm2d;
+
+impl Distributor2d for Cpm2d {
+    fn name(&self) -> &'static str {
+        "cpm"
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let (p, q) = bench.grid();
+        if p == 0 || q == 0 {
+            return Err(HfpmError::Partition("empty processor grid".into()));
+        }
+        let w0 = even_distribution(n, q);
+        let h0 = even_distribution(m, p);
+        let mut speeds = vec![vec![0.0f64; q]; p];
+        let mut virt = 0.0f64;
+        for j in 0..q {
+            let report = bench.run_column(j, w0[j], &h0, None)?;
+            virt += report.virtual_cost_s;
+            for i in 0..p {
+                let units = (h0[i] * w0[j]) as f64;
+                speeds[i][j] = if report.times[i] > 0.0 {
+                    units / report.times[i]
+                } else {
+                    1.0
+                };
+            }
+        }
+        let gp = grid2d::two_step(m, n, &speeds)?;
+        let mut o = Outcome::immediate(
+            self.name(),
+            Distribution::TwoD {
+                widths: gp.col_widths,
+                heights: gp.row_heights,
+            },
+        );
+        o.benchmark_steps = q;
+        o.total_virtual_s = virt;
+        Ok(o)
+    }
+}
+
+/// FFMPA oracle: answers column benchmarks straight from pre-built speed
+/// surfaces with zero virtual cost (the models already exist).
+struct SurfaceOracle {
+    surfaces: Vec<Vec<SpeedSurface>>, // [j][i]
+}
+
+impl Benchmarker2d for SurfaceOracle {
+    fn grid(&self) -> (usize, usize) {
+        (self.surfaces[0].len(), self.surfaces.len())
+    }
+
+    fn run_column(
+        &mut self,
+        j: usize,
+        width: u64,
+        heights: &[u64],
+        _cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let times: Vec<f64> = heights
+            .iter()
+            .zip(&self.surfaces[j])
+            .map(|(&h, s)| {
+                if h == 0 {
+                    0.0
+                } else {
+                    s.time(h as f64, width as f64)
+                }
+            })
+            .collect();
+        Ok(StepReport {
+            times,
+            virtual_cost_s: 0.0, // model queries, not benchmarks
+        })
+    }
+}
+
+/// 2D FFMPA: the iterative algorithm of ref. [18] over pre-built full
+/// models (the processors' speed surfaces, queried cost-free). The passed
+/// benchmarker is ignored; no real benchmarks run.
+#[derive(Debug, Clone)]
+pub struct Ffmpa2d {
+    /// Full speed surfaces indexed `[j][i]` like the grid.
+    pub surfaces: Vec<Vec<SpeedSurface>>,
+}
+
+impl Distributor2d for Ffmpa2d {
+    fn name(&self) -> &'static str {
+        "ffmpa"
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        _bench: &mut dyn Benchmarker2d,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        if self.surfaces.is_empty() || self.surfaces[0].is_empty() {
+            return Err(HfpmError::InvalidArg("ffmpa2d carries no surfaces".into()));
+        }
+        let mut oracle = SurfaceOracle {
+            surfaces: self.surfaces.clone(),
+        };
+        let r = run_dfpa2d(m, n, &mut oracle, Dfpa2dOptions::with_epsilon(ctx.epsilon))?;
+        let mut o = Outcome::immediate(
+            self.name(),
+            Distribution::TwoD {
+                widths: r.widths,
+                heights: r.heights,
+            },
+        );
+        // model queries are not benchmark steps — the paper reports the
+        // FFMPA app column with zero on-line measurement cost
+        o.benchmark_steps = 0;
+        o.converged = r.converged;
+        o.imbalance = r.imbalance;
+        o.partition_wall_s = r.partition_wall_s;
+        Ok(o)
+    }
+}
+
+/// The paper's nested 2D DFPA, with warm starts from the session store.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dfpa2d;
+
+impl Distributor2d for Dfpa2d {
+    fn name(&self) -> &'static str {
+        "dfpa"
+    }
+
+    fn uses_model_store(&self) -> bool {
+        true
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let mut opts = Dfpa2dOptions {
+            warm_start: ctx.warm_start_2d.clone(),
+            ..Dfpa2dOptions::with_epsilon(ctx.epsilon)
+        };
+        // honor the session's iteration bound without *raising* the 2D
+        // defaults (max_outer/max_inner stay 20 under the session's
+        // 1D-oriented default of 100)
+        opts.max_outer = opts.max_outer.min(ctx.max_iters.max(1));
+        opts.max_inner = opts.max_inner.min(ctx.max_iters.max(1));
+        let r = run_dfpa2d(m, n, bench, opts)?;
+        Ok(Outcome {
+            strategy: self.name(),
+            distribution: Distribution::TwoD {
+                widths: r.widths,
+                heights: r.heights,
+            },
+            benchmark_steps: r.inner_iterations,
+            converged: r.converged,
+            imbalance: r.imbalance,
+            warm_started: r.warm_started,
+            observations: Observations::TwoD(r.observations),
+            records: Vec::new(),
+            total_virtual_s: r.total_virtual_s,
+            partition_wall_s: r.partition_wall_s,
+            model_build_s: None,
+            executes_workload: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpm::{ConstantModel, SpeedFunction};
+
+    /// Deterministic benchmarker over constant ground-truth speeds.
+    struct ConstBench {
+        speeds: Vec<f64>,
+        steps: usize,
+    }
+
+    impl ConstBench {
+        fn new(speeds: &[f64]) -> Self {
+            Self {
+                speeds: speeds.to_vec(),
+                steps: 0,
+            }
+        }
+    }
+
+    impl Benchmarker for ConstBench {
+        fn processors(&self) -> usize {
+            self.speeds.len()
+        }
+
+        fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+            self.steps += 1;
+            let times: Vec<f64> = d
+                .iter()
+                .zip(&self.speeds)
+                .map(|(&di, &s)| if di == 0 { 0.0 } else { ConstantModel(s).time(di as f64) })
+                .collect();
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            Ok(StepReport {
+                times,
+                virtual_cost_s: max,
+            })
+        }
+    }
+
+    #[test]
+    fn even_is_benchmark_free() {
+        let mut bench = ConstBench::new(&[10.0, 30.0]);
+        let out = Even
+            .distribute(10, &mut bench, &SessionCtx::default())
+            .unwrap();
+        assert_eq!(out.distribution.as_1d(), Some(&[5u64, 5][..]));
+        assert_eq!(out.benchmark_steps, 0);
+        assert_eq!(bench.steps, 0);
+    }
+
+    #[test]
+    fn cpm_runs_exactly_one_step() {
+        let mut bench = ConstBench::new(&[10.0, 30.0]);
+        let out = Cpm
+            .distribute(400, &mut bench, &SessionCtx::default())
+            .unwrap();
+        assert_eq!(out.distribution.as_1d(), Some(&[100u64, 300][..]));
+        assert_eq!(out.benchmark_steps, 1);
+        assert_eq!(bench.steps, 1);
+        assert!(out.total_virtual_s > 0.0);
+    }
+
+    #[test]
+    fn dfpa_converges_and_reports_observations() {
+        let mut bench = ConstBench::new(&[10.0, 30.0]);
+        let out = Dfpa::default()
+            .distribute(400, &mut bench, &SessionCtx::with_epsilon(0.02))
+            .unwrap();
+        assert!(out.converged);
+        assert_eq!(out.distribution.as_1d().unwrap().iter().sum::<u64>(), 400);
+        assert_eq!(out.benchmark_steps, bench.steps);
+        match &out.observations {
+            Observations::OneD(obs) => assert!(obs.iter().any(|m| !m.is_empty())),
+            other => panic!("expected 1D observations, got {other:?}"),
+        }
+        assert_eq!(out.records.len(), out.benchmark_steps);
+    }
+
+    #[test]
+    fn factoring_executes_everything() {
+        let mut bench = ConstBench::new(&[10.0, 30.0]);
+        let out = Factoring::default()
+            .distribute(1000, &mut bench, &SessionCtx::default())
+            .unwrap();
+        assert_eq!(out.distribution.as_1d().unwrap().iter().sum::<u64>(), 1000);
+        assert!(out.benchmark_steps >= 2);
+    }
+
+    #[test]
+    fn ffmpa_rejects_model_count_mismatch() {
+        let mut bench = ConstBench::new(&[10.0, 30.0]);
+        let mut f = Ffmpa {
+            models: vec![PiecewiseModel::constant(10.0, 5.0)],
+            unit_scale: 1.0,
+            model_build_s: None,
+        };
+        assert!(f.distribute(10, &mut bench, &SessionCtx::default()).is_err());
+    }
+}

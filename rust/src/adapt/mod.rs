@@ -1,0 +1,37 @@
+//! `adapt` — the strategy-agnostic runtime layer over the partitioning
+//! kernels.
+//!
+//! The paper contributes a *class* of self-adaptable algorithms: DFPA next
+//! to the constant-performance (CPM), full-FPM (FFMPA), even and factoring
+//! baselines, in 1D and 2D. The kernels live in [`crate::dfpa`],
+//! [`crate::dfpa2d`] and [`crate::baselines`]; this module gives them one
+//! face:
+//!
+//! - [`Distributor`] / [`Distributor2d`] — the trait every strategy
+//!   implements: `distribute(n, benchmarker, ctx) -> Outcome`;
+//! - [`Outcome`] — the unified report (distribution, per-step trace,
+//!   observations, warm-start flag, benchmark-step count) replacing the
+//!   per-strategy result structs at the app boundary;
+//! - [`AdaptiveSession`] — the builder that owns the cross-cutting
+//!   concerns exactly once: accuracy, model-store open + warm-start
+//!   seeding + post-run observation flush, fault policy, trace sink;
+//! - [`registry`] — the name-keyed strategy table behind
+//!   [`Strategy::parse`] and the CLI.
+//!
+//! The apps (`apps::matmul1d`, `apps::matmul2d`) and the `repro` CLI are
+//! written against this layer only; a new strategy (e.g. a bi-objective
+//! distributor à la Khaleghzadeh et al.) plugs in by adding one registry
+//! entry, without touching any app.
+
+pub mod distributor;
+pub mod outcome;
+pub mod registry;
+pub mod session;
+
+pub use distributor::{
+    Cpm, Cpm2d, Dfpa, Dfpa2d, Distributor, Distributor2d, Even, Even2d, Factoring, Ffmpa,
+    Ffmpa2d, SessionCtx,
+};
+pub use outcome::{Distribution, Observations, Outcome};
+pub use registry::{AppResources, AppResources2d, Strategy, StrategyEntry};
+pub use session::AdaptiveSession;

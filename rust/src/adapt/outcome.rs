@@ -1,0 +1,165 @@
+//! The unified distribution report shared by every strategy.
+//!
+//! Before the `adapt` layer each strategy returned its own struct
+//! (`DfpaResult`, `CpmOutcome`, `FactoringOutcome`, `Dfpa2dResult`, a bare
+//! `Vec<u64>` for Even, a `(models, cost)` tuple for FFMPA) and every app
+//! re-interpreted all six. [`Outcome`] is the one shape the apps, CLI and
+//! benches consume; the per-strategy structs survive only behind the
+//! legacy entry points.
+
+use crate::dfpa::trace::IterationRecord;
+use crate::error::{HfpmError, Result};
+use crate::fpm::PiecewiseModel;
+
+/// The distribution a strategy produced, in the dimensionality it runs in.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Distribution {
+    /// 1D: units per processor, `Σ = n`.
+    OneD(Vec<u64>),
+    /// 2D: column widths (`Σ = n`) and per-column row heights
+    /// (`heights[j][i]`, `Σ_i = m`).
+    TwoD {
+        widths: Vec<u64>,
+        heights: Vec<Vec<u64>>,
+    },
+}
+
+impl Distribution {
+    /// Borrow the 1D distribution, if this is one.
+    pub fn as_1d(&self) -> Option<&[u64]> {
+        match self {
+            Distribution::OneD(d) => Some(d),
+            Distribution::TwoD { .. } => None,
+        }
+    }
+
+    /// Take the 1D distribution; error if the strategy produced a 2D one.
+    pub fn into_1d(self) -> Result<Vec<u64>> {
+        match self {
+            Distribution::OneD(d) => Ok(d),
+            Distribution::TwoD { .. } => Err(HfpmError::InvalidArg(
+                "expected a 1D distribution, got a 2D one".into(),
+            )),
+        }
+    }
+
+    /// Take the 2D distribution; error if the strategy produced a 1D one.
+    pub fn into_2d(self) -> Result<(Vec<u64>, Vec<Vec<u64>>)> {
+        match self {
+            Distribution::TwoD { widths, heights } => Ok((widths, heights)),
+            Distribution::OneD(_) => Err(HfpmError::InvalidArg(
+                "expected a 2D distribution, got a 1D one".into(),
+            )),
+        }
+    }
+}
+
+/// The speed points a strategy actually *measured* during partitioning —
+/// what a model store should persist. Strategies that only query pre-built
+/// models (Even, FFMPA) measure nothing.
+#[derive(Debug, Clone, Default)]
+pub enum Observations {
+    /// No benchmark-backed measurements were taken.
+    #[default]
+    None,
+    /// One partial model per processor, positionally aligned.
+    OneD(Vec<PiecewiseModel>),
+    /// One partial model per processor, indexed `[j][i]` like the grid.
+    TwoD(Vec<Vec<PiecewiseModel>>),
+}
+
+impl Observations {
+    pub fn is_none(&self) -> bool {
+        matches!(self, Observations::None)
+    }
+}
+
+/// Unified report of one partitioning run, whatever the strategy.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Registry name of the strategy that produced this outcome.
+    pub strategy: &'static str,
+    /// The final distribution.
+    pub distribution: Distribution,
+    /// Parallel benchmark steps executed: DFPA iterations, CPM's single
+    /// benchmark (per column in 2D), factoring rounds; 0 for strategies
+    /// that never benchmark (Even, FFMPA over pre-built models).
+    pub benchmark_steps: usize,
+    /// Whether the strategy's own termination criterion was met (trivially
+    /// true for single-shot strategies).
+    pub converged: bool,
+    /// Imbalance observed *during partitioning* (0 when the strategy does
+    /// not measure one — the apps re-measure the final distribution).
+    pub imbalance: f64,
+    /// Whether stored models from a persistent store seeded the run.
+    pub warm_started: bool,
+    /// This run's own measurements, for the model store.
+    pub observations: Observations,
+    /// Per-step trace (DFPA; empty for the others).
+    pub records: Vec<IterationRecord>,
+    /// Virtual cluster time the partitioning benchmarks cost.
+    pub total_virtual_s: f64,
+    /// Leader wall time spent in model refinement + re-partitioning.
+    pub partition_wall_s: f64,
+    /// Offline model-construction cost (FFMPA only), reported separately
+    /// from the partitioning cost exactly as the paper does.
+    pub model_build_s: Option<f64>,
+    /// True for dynamic strategies (factoring) whose "partitioning" already
+    /// executed the whole workload: `total_virtual_s` then covers the full
+    /// computation and an app must not charge a separate execution phase on
+    /// top, or it would count the work twice.
+    pub executes_workload: bool,
+}
+
+impl Outcome {
+    /// An outcome for a single-shot strategy that paid no benchmark cost;
+    /// callers fill in whatever they did measure.
+    pub fn immediate(strategy: &'static str, distribution: Distribution) -> Self {
+        Self {
+            strategy,
+            distribution,
+            benchmark_steps: 0,
+            converged: true,
+            imbalance: 0.0,
+            warm_started: false,
+            observations: Observations::None,
+            records: Vec::new(),
+            total_virtual_s: 0.0,
+            partition_wall_s: 0.0,
+            model_build_s: None,
+            executes_workload: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribution_accessors() {
+        let d = Distribution::OneD(vec![3, 4]);
+        assert_eq!(d.as_1d(), Some(&[3u64, 4][..]));
+        assert_eq!(d.clone().into_1d().unwrap(), vec![3, 4]);
+        assert!(d.into_2d().is_err());
+
+        let d2 = Distribution::TwoD {
+            widths: vec![2],
+            heights: vec![vec![1, 1]],
+        };
+        assert!(d2.as_1d().is_none());
+        let (w, h) = d2.into_2d().unwrap();
+        assert_eq!(w, vec![2]);
+        assert_eq!(h, vec![vec![1, 1]]);
+    }
+
+    #[test]
+    fn immediate_outcome_defaults() {
+        let o = Outcome::immediate("even", Distribution::OneD(vec![1]));
+        assert_eq!(o.benchmark_steps, 0);
+        assert!(o.converged);
+        assert!(!o.warm_started);
+        assert!(o.observations.is_none());
+        assert!(o.records.is_empty());
+    }
+}

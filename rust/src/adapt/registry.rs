@@ -1,0 +1,305 @@
+//! Name-keyed strategy registry.
+//!
+//! One table maps every strategy name to its [`Distributor`] /
+//! [`Distributor2d`] factories; [`Strategy::parse`], the CLI's
+//! `--strategy` flag and the `--compare` sets are all lookups into it.
+//! Adding a strategy means adding one [`StrategyEntry`] — no app or CLI
+//! code changes.
+
+use super::distributor::{
+    Cpm, Cpm2d, Dfpa, Dfpa2d, Distributor, Distributor2d, Even, Even2d, Factoring, Ffmpa, Ffmpa2d,
+};
+use crate::baselines::ffmpa;
+use crate::cluster::node::SimNode;
+use crate::error::{HfpmError, Result};
+use crate::fpm::SpeedSurface;
+
+/// Partitioning strategy tag. The set of variants mirrors the registry;
+/// parsing and naming go through the registry so the CLI and the apps
+/// never enumerate strategies themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Even,
+    Cpm,
+    Ffmpa,
+    Dfpa,
+    Factoring,
+}
+
+impl Strategy {
+    /// Case-insensitive registry lookup.
+    pub fn parse(s: &str) -> Option<Self> {
+        find(s).map(|e| e.strategy)
+    }
+
+    /// Registry name of this strategy.
+    pub fn name(&self) -> &'static str {
+        self.entry().name
+    }
+
+    /// The registry entry for this strategy.
+    pub fn entry(&self) -> &'static StrategyEntry {
+        ENTRIES
+            .iter()
+            .find(|e| e.strategy == *self)
+            .expect("every Strategy variant has a registry entry")
+    }
+}
+
+/// What a 1D strategy factory may need from the application.
+pub struct AppResources<'a> {
+    /// The simulated nodes backing the cluster (ground truths for FFMPA).
+    pub nodes: &'a [SimNode],
+    /// Problem size (the 1D matmul's `n`): pins the FFMPA model grid.
+    pub n: u64,
+    /// Computation units per distributed item (rows are `n` units each).
+    pub unit_scale: f64,
+    /// Measurement-noise level for synthetic model construction.
+    pub noise_rel: f64,
+    /// RNG seed for synthetic model construction.
+    pub seed: u64,
+}
+
+/// What a 2D strategy factory may need: the nodes plus the grid shape.
+/// Processor `(i, j)` of the `p×q` grid is node `j·p + i` (column-major,
+/// matching `VirtualCluster2d::rank`).
+pub struct AppResources2d<'a> {
+    pub nodes: &'a [SimNode],
+    pub p: usize,
+    pub q: usize,
+}
+
+impl AppResources2d<'_> {
+    /// The nodes' ground-truth speed surfaces, indexed `[j][i]`.
+    pub fn surface_grid(&self) -> Result<Vec<Vec<SpeedSurface>>> {
+        if self.nodes.len() != self.p * self.q {
+            return Err(HfpmError::InvalidArg(format!(
+                "{} nodes do not fill a {}×{} grid",
+                self.nodes.len(),
+                self.p,
+                self.q
+            )));
+        }
+        Ok((0..self.q)
+            .map(|j| {
+                (0..self.p)
+                    .map(|i| self.nodes[j * self.p + i].surface().clone())
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+type Make1d = fn(&AppResources<'_>) -> Result<Box<dyn Distributor>>;
+type Make2d = fn(&AppResources2d<'_>) -> Result<Box<dyn Distributor2d>>;
+
+/// One registry row: a strategy, its name, and its factories.
+pub struct StrategyEntry {
+    pub strategy: Strategy,
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Included in the CLI's 1D `--compare` sweep.
+    pub compare_1d: bool,
+    /// Included in the CLI's 2D `--compare` sweep.
+    pub compare_2d: bool,
+    build_1d: Option<Make1d>,
+    build_2d: Option<Make2d>,
+}
+
+impl StrategyEntry {
+    pub fn supports_1d(&self) -> bool {
+        self.build_1d.is_some()
+    }
+
+    pub fn supports_2d(&self) -> bool {
+        self.build_2d.is_some()
+    }
+
+    /// Build the 1D distributor, or a clean error when unsupported.
+    pub fn make_1d(&self, res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+        match self.build_1d {
+            Some(make) => make(res),
+            None => Err(HfpmError::InvalidArg(format!(
+                "strategy `{}` has no 1D distributor",
+                self.name
+            ))),
+        }
+    }
+
+    /// Build the 2D distributor, or a clean error when unsupported.
+    pub fn make_2d(&self, res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+        match self.build_2d {
+            Some(make) => make(res),
+            None => Err(HfpmError::InvalidArg(format!(
+                "strategy `{}` has no 2D distributor",
+                self.name
+            ))),
+        }
+    }
+}
+
+fn make_even_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    Ok(Box::new(Even))
+}
+
+fn make_cpm_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    Ok(Box::new(Cpm))
+}
+
+fn make_ffmpa_1d(res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    let (models, cost) =
+        ffmpa::build_full_models_for_n(res.nodes, res.n, res.noise_rel, res.seed);
+    Ok(Box::new(Ffmpa {
+        models,
+        unit_scale: res.unit_scale,
+        model_build_s: Some(cost.parallel_s),
+    }))
+}
+
+fn make_dfpa_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    Ok(Box::new(Dfpa::default()))
+}
+
+fn make_factoring_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    Ok(Box::new(Factoring::default()))
+}
+
+fn make_even_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+    Ok(Box::new(Even2d))
+}
+
+fn make_cpm_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+    Ok(Box::new(Cpm2d))
+}
+
+fn make_ffmpa_2d(res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+    Ok(Box::new(Ffmpa2d {
+        surfaces: res.surface_grid()?,
+    }))
+}
+
+fn make_dfpa_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+    Ok(Box::new(Dfpa2d))
+}
+
+static ENTRIES: &[StrategyEntry] = &[
+    StrategyEntry {
+        strategy: Strategy::Even,
+        name: "even",
+        summary: "homogeneous n/p split, zero benchmarks",
+        compare_1d: true,
+        compare_2d: false,
+        build_1d: Some(make_even_1d as Make1d),
+        build_2d: Some(make_even_2d as Make2d),
+    },
+    StrategyEntry {
+        strategy: Strategy::Cpm,
+        name: "cpm",
+        summary: "constant models from a single benchmark",
+        compare_1d: true,
+        compare_2d: true,
+        build_1d: Some(make_cpm_1d as Make1d),
+        build_2d: Some(make_cpm_2d as Make2d),
+    },
+    StrategyEntry {
+        strategy: Strategy::Ffmpa,
+        name: "ffmpa",
+        summary: "partition on pre-built full FPMs",
+        compare_1d: true,
+        compare_2d: true,
+        build_1d: Some(make_ffmpa_1d as Make1d),
+        build_2d: Some(make_ffmpa_2d as Make2d),
+    },
+    StrategyEntry {
+        strategy: Strategy::Dfpa,
+        name: "dfpa",
+        summary: "on-line partial FPMs, the paper's contribution",
+        compare_1d: true,
+        compare_2d: true,
+        build_1d: Some(make_dfpa_1d as Make1d),
+        build_2d: Some(make_dfpa_2d as Make2d),
+    },
+    StrategyEntry {
+        strategy: Strategy::Factoring,
+        name: "factoring",
+        summary: "dynamic weighted factoring task queue",
+        compare_1d: false,
+        compare_2d: false,
+        build_1d: Some(make_factoring_1d as Make1d),
+        build_2d: None,
+    },
+];
+
+/// Every registered strategy, in display order.
+pub fn entries() -> &'static [StrategyEntry] {
+    ENTRIES
+}
+
+/// Case-insensitive lookup by name.
+pub fn find(name: &str) -> Option<&'static StrategyEntry> {
+    let lower = name.to_ascii_lowercase();
+    ENTRIES.iter().find(|e| e.name == lower)
+}
+
+/// All registered names, for help text and error messages.
+pub fn names() -> Vec<&'static str> {
+    ENTRIES.iter().map(|e| e.name).collect()
+}
+
+/// Strategies swept by the 1D `--compare` flag.
+pub fn compare_1d() -> Vec<Strategy> {
+    ENTRIES
+        .iter()
+        .filter(|e| e.compare_1d && e.supports_1d())
+        .map(|e| e.strategy)
+        .collect()
+}
+
+/// Strategies swept by the 2D `--compare` flag.
+pub fn compare_2d() -> Vec<Strategy> {
+    ENTRIES
+        .iter()
+        .filter(|e| e.compare_2d && e.supports_2d())
+        .map(|e| e.strategy)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_a_registry_lookup() {
+        assert_eq!(Strategy::parse("DFPA"), Some(Strategy::Dfpa));
+        assert_eq!(Strategy::parse("factoring"), Some(Strategy::Factoring));
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_variant_round_trips_through_its_name() {
+        for e in entries() {
+            assert_eq!(Strategy::parse(e.name), Some(e.strategy));
+            assert_eq!(e.strategy.name(), e.name);
+        }
+    }
+
+    #[test]
+    fn compare_sets_match_legacy_cli() {
+        use Strategy::*;
+        assert_eq!(compare_1d(), vec![Even, Cpm, Ffmpa, Dfpa]);
+        assert_eq!(compare_2d(), vec![Cpm, Ffmpa, Dfpa]);
+    }
+
+    #[test]
+    fn factoring_has_no_2d_distributor() {
+        let e = Strategy::Factoring.entry();
+        assert!(e.supports_1d());
+        assert!(!e.supports_2d());
+        let res = AppResources2d {
+            nodes: &[],
+            p: 1,
+            q: 1,
+        };
+        assert!(e.make_2d(&res).is_err());
+    }
+}

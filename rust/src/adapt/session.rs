@@ -1,0 +1,198 @@
+//! [`AdaptiveSession`] — the one owner of every cross-cutting concern of a
+//! partitioning run.
+//!
+//! Before this type, each app duplicated the same plumbing per strategy:
+//! open the model store, load warm-start models, shape them for the
+//! algorithm, run, flush the run's observations back, maybe dump a trace.
+//! A session does each of those exactly once, for whatever
+//! [`Distributor`]/[`Distributor2d`] it is handed.
+
+use super::distributor::{Distributor, Distributor2d, SessionCtx};
+use super::outcome::{Observations, Outcome};
+use crate::cluster::faults::FaultPlan;
+use crate::dfpa::algorithm::{Benchmarker, WarmStart};
+use crate::dfpa::trace::IterationRecord;
+use crate::dfpa2d::nested::{Benchmarker2d, WarmStart2d};
+use crate::error::{HfpmError, Result};
+use crate::fpm::PiecewiseModel;
+use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
+use std::path::PathBuf;
+
+/// Builder-style owner of a run's cross-cutting configuration. Construct
+/// with [`AdaptiveSession::new`], chain the `with`-style setters, then call
+/// [`run_1d`](Self::run_1d) / [`run_2d`](Self::run_2d) with a distributor.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSession {
+    epsilon: f64,
+    max_iters: usize,
+    store_dir: Option<PathBuf>,
+    merge_policy: MergePolicy,
+    faults: FaultPlan,
+    trace_sink: Option<PathBuf>,
+}
+
+impl Default for AdaptiveSession {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.025,
+            max_iters: 100,
+            store_dir: None,
+            merge_policy: MergePolicy::default(),
+            faults: FaultPlan::none(),
+            trace_sink: None,
+        }
+    }
+}
+
+impl AdaptiveSession {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Termination accuracy ε for iterative strategies.
+    pub fn epsilon(mut self, epsilon: f64) -> Self {
+        self.epsilon = epsilon;
+        self
+    }
+
+    /// Hard iteration bound for iterative strategies.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Persistent model store directory: warm-start from it before the run
+    /// and flush the run's observations back after. `None` disables.
+    pub fn model_store(mut self, dir: Option<PathBuf>) -> Self {
+        self.store_dir = dir;
+        self
+    }
+
+    /// How flushed observations merge into stored history.
+    pub fn merge_policy(mut self, policy: MergePolicy) -> Self {
+        self.merge_policy = policy;
+        self
+    }
+
+    /// Fault-injection plan the application should build its cluster with.
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Write the run's per-step trace to this CSV path.
+    pub fn trace_to(mut self, path: PathBuf) -> Self {
+        self.trace_sink = Some(path);
+        self
+    }
+
+    /// The fault plan this session was configured with.
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    fn open_store(&self) -> Result<Option<ModelStore>> {
+        match &self.store_dir {
+            Some(dir) => Ok(Some(ModelStore::open(dir)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn write_trace(&self, out: &Outcome) -> Result<()> {
+        if let Some(path) = &self.trace_sink {
+            IterationRecord::write_csv(&out.records, path)?;
+        }
+        Ok(())
+    }
+
+    /// Run a 1D distributor: seed it from the store (keyed per processor by
+    /// `keys`, positionally aligned with the benchmarker's ranks), run it,
+    /// flush its observations, dump the trace.
+    pub fn run_1d(
+        &self,
+        dist: &mut dyn Distributor,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        keys: &[ModelKey],
+    ) -> Result<Outcome> {
+        // strategies that neither warm-start nor observe skip the store
+        // entirely — no warm-model parsing, and no advisory writer lock
+        // taken away from a concurrent run that actually needs it
+        let store = if dist.uses_model_store() {
+            self.open_store()?
+        } else {
+            None
+        };
+        let warm_start = match &store {
+            Some(s) if !keys.is_empty() => s.warm_models(keys)?.map(WarmStart::new),
+            _ => None,
+        };
+        let ctx = SessionCtx {
+            epsilon: self.epsilon,
+            max_iters: self.max_iters,
+            warm_start,
+            warm_start_2d: None,
+        };
+        let out = dist.distribute(n, bench, &ctx)?;
+        if let Some(s) = &store {
+            if let Observations::OneD(obs) = &out.observations {
+                // persist only this run's measurements: echoing seeded
+                // models back would refresh stored points' weights and
+                // defeat staleness decay
+                s.record_run(keys, obs, &self.merge_policy)?;
+            }
+        }
+        self.write_trace(&out)?;
+        Ok(out)
+    }
+
+    /// Run a 2D distributor over an `m×n` block grid. `keys[j][i]` follows
+    /// the algorithms' `[column][row]` model layout.
+    pub fn run_2d(
+        &self,
+        dist: &mut dyn Distributor2d,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        keys: &[Vec<ModelKey>],
+    ) -> Result<Outcome> {
+        let rows = keys.first().map(|col| col.len()).unwrap_or(0);
+        if keys.iter().any(|col| col.len() != rows) {
+            return Err(HfpmError::InvalidArg(
+                "ragged 2D model-key grid".into(),
+            ));
+        }
+        let store = if dist.uses_model_store() {
+            self.open_store()?
+        } else {
+            None
+        };
+        let warm_start_2d = match &store {
+            Some(s) if rows > 0 => {
+                let flat: Vec<ModelKey> = keys.iter().flatten().cloned().collect();
+                s.warm_models(&flat)?.map(|models| {
+                    let cols: Vec<Vec<PiecewiseModel>> =
+                        models.chunks(rows).map(|c| c.to_vec()).collect();
+                    WarmStart2d::new(cols)
+                })
+            }
+            _ => None,
+        };
+        let ctx = SessionCtx {
+            epsilon: self.epsilon,
+            max_iters: self.max_iters,
+            warm_start: None,
+            warm_start_2d,
+        };
+        let out = dist.distribute(m, n, bench, &ctx)?;
+        if let Some(s) = &store {
+            if let Observations::TwoD(obs) = &out.observations {
+                for (col_keys, col_obs) in keys.iter().zip(obs) {
+                    s.record_run(col_keys, col_obs, &self.merge_policy)?;
+                }
+            }
+        }
+        self.write_trace(&out)?;
+        Ok(out)
+    }
+}

@@ -19,51 +19,23 @@
 //! checks `C == A·B` against a naive rust oracle.
 
 use super::workload::{matmul_ref, max_abs_diff, row_ranges, Matrix};
-use crate::baselines::{cpm_app, ffmpa};
+use crate::adapt::{registry::AppResources, AdaptiveSession};
 use crate::cluster::comm::CommModel;
 use crate::cluster::executor::{ExecutionMode, NodeExecutor};
 use crate::cluster::faults::FaultPlan;
 use crate::cluster::node::{build_nodes, SimNode};
 use crate::cluster::virtual_cluster::VirtualCluster;
 use crate::config::ClusterSpec;
-use crate::dfpa::algorithm::{
-    even_distribution, run_dfpa, Benchmarker, DfpaOptions, StepReport, WarmStart,
-};
+use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
+use crate::modelstore::ModelKey;
 use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
 use crate::util::stats::max_relative_imbalance;
 
-/// Partitioning strategy for the run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Strategy {
-    Even,
-    Cpm,
-    Ffmpa,
-    Dfpa,
-}
-
-impl Strategy {
-    pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "even" => Some(Self::Even),
-            "cpm" => Some(Self::Cpm),
-            "ffmpa" => Some(Self::Ffmpa),
-            "dfpa" => Some(Self::Dfpa),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Even => "even",
-            Self::Cpm => "cpm",
-            Self::Ffmpa => "ffmpa",
-            Self::Dfpa => "dfpa",
-        }
-    }
-}
+/// Partitioning strategy tag — now a registry lookup in the adapt layer
+/// (kept re-exported here so `apps::matmul1d::Strategy` keeps working).
+pub use crate::adapt::Strategy;
 
 /// Configuration of one application run.
 #[derive(Debug, Clone)]
@@ -122,7 +94,8 @@ pub struct Matmul1dReport {
     pub model_build_s: Option<f64>,
     /// Data distribution (B bcast + A scatter) + C gather.
     pub comm_s: f64,
-    /// The matrix multiplication itself.
+    /// The matrix multiplication itself. Zero for dynamic strategies
+    /// (factoring), whose execution is already inside `partition_s`.
     pub matmul_s: f64,
     /// partition_s + comm_s + matmul_s — the paper's "application,
     /// including DFPA" column.
@@ -210,72 +183,42 @@ pub fn run_with_faults(
             cfg.n
         )));
     }
-    let (mut cluster, nodes) = build_cluster(spec, cfg, faults)?;
+    // the session owns every cross-cutting concern once: accuracy, model
+    // store (open + warm-start seed + observation flush) and fault policy
+    let session = AdaptiveSession::new()
+        .epsilon(cfg.epsilon)
+        .max_iters(cfg.max_iters)
+        .model_store(cfg.model_store.clone())
+        .faults(faults);
+    let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone())?;
 
-    // --- phase 1: partition -------------------------------------------------
-    let mut model_build_s = None;
-    let mut iterations = 0usize;
-    let mut partition_wall = 0.0f64;
-    let mut warm_started = false;
+    // --- phase 1: partition (strategy-agnostic via the adapt layer) ---------
+    let mut dist = cfg.strategy.entry().make_1d(&AppResources {
+        nodes: &nodes,
+        n: cfg.n,
+        unit_scale: cfg.n as f64, // a row is n mul+add units
+        noise_rel: spec.noise_rel,
+        seed: spec.seed,
+    })?;
+    let keys: Vec<ModelKey> = cluster
+        .hosts()
+        .iter()
+        .map(|h| cfg.store_key(h))
+        .collect();
     let before_partition = cluster.now();
-    let d: Vec<u64> = match cfg.strategy {
-        Strategy::Even => even_distribution(cfg.n, p),
-        Strategy::Cpm => {
-            let mut bench = RowBench {
-                cluster: &mut cluster,
-                n: cfg.n,
-            };
-            let out = cpm_app::partition_cpm(cfg.n, &mut bench)?;
-            iterations = 1;
-            out.d
-        }
-        Strategy::Ffmpa => {
-            let (models, cost) =
-                ffmpa::build_full_models_for_n(&nodes, cfg.n, spec.noise_rel, spec.seed);
-            model_build_s = Some(cost.parallel_s);
-            let sw = crate::util::timer::Stopwatch::start();
-            let d = ffmpa::partition_rows(&models, cfg.n, cfg.n)?;
-            partition_wall += sw.elapsed_s();
-            d
-        }
-        Strategy::Dfpa => {
-            let store = match &cfg.model_store {
-                Some(dir) => Some(ModelStore::open(dir)?),
-                None => None,
-            };
-            let keys: Vec<ModelKey> = cluster
-                .hosts()
-                .iter()
-                .map(|h| cfg.store_key(h))
-                .collect();
-            let warm_start = match &store {
-                Some(s) => s.warm_models(&keys)?.map(WarmStart::new),
-                None => None,
-            };
-            let mut bench = RowBench {
-                cluster: &mut cluster,
-                n: cfg.n,
-            };
-            let opts = DfpaOptions {
-                epsilon: cfg.epsilon,
-                max_iters: cfg.max_iters,
-                warm_start,
-                ..Default::default()
-            };
-            let r = run_dfpa(cfg.n, &mut bench, opts)?;
-            if let Some(s) = &store {
-                // persist only this run's measurements: echoing the seeded
-                // models back would refresh stored points' weights and
-                // defeat staleness decay
-                s.record_run(&keys, &r.observations, &MergePolicy::default())?;
-            }
-            iterations = r.iterations;
-            partition_wall += r.partition_wall_s;
-            warm_started = r.warm_started;
-            r.d
-        }
+    let outcome = {
+        let mut bench = RowBench {
+            cluster: &mut cluster,
+            n: cfg.n,
+        };
+        session.run_1d(dist.as_mut(), cfg.n, &mut bench, &keys)?
     };
     let partition_s = cluster.now() - before_partition;
+    let iterations = outcome.benchmark_steps;
+    let partition_wall = outcome.partition_wall_s;
+    let model_build_s = outcome.model_build_s;
+    let warm_started = outcome.warm_started;
+    let d: Vec<u64> = outcome.distribution.into_1d()?;
 
     // --- phase 2: data distribution ------------------------------------------
     let comm = cluster.comm().clone();
@@ -296,7 +239,15 @@ pub fn run_with_faults(
         .iter()
         .cloned()
         .fold(0.0f64, f64::max);
-    let matmul_s = step_max * cfg.n as f64;
+    // a dynamic strategy (factoring) already executed the whole workload
+    // inside the partition phase — charging a second execution here would
+    // count the computation twice, so its matmul phase is zero and the
+    // probe step above only feeds the imbalance metric
+    let matmul_s = if outcome.executes_workload {
+        0.0
+    } else {
+        step_max * cfg.n as f64
+    };
     // charge the remaining n-1 steps (the first is already on the clock)
     cluster.charge(matmul_s - step.virtual_cost_s.min(matmul_s));
 
@@ -402,6 +353,7 @@ pub fn run_real_verified(spec: &ClusterSpec, n: u64, epsilon: f64) -> Result<Rea
 mod tests {
     use super::*;
     use crate::cluster::presets;
+    use crate::modelstore::ModelStore;
 
     #[test]
     fn dfpa_run_reports_consistent_totals() {

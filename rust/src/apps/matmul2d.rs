@@ -12,19 +12,17 @@
 //! - **DFPA** — the nested algorithm of §3.2 with on-line partial
 //!   estimates ([`crate::dfpa2d`]).
 
+use crate::adapt::{registry::AppResources2d, AdaptiveSession};
 use crate::cluster::comm::{Collective, CommModel};
 use crate::cluster::executor::NodeExecutor;
 use crate::cluster::faults::FaultPlan;
 use crate::cluster::node::{build_nodes, SimNode};
 use crate::cluster::virtual_cluster::{VirtualCluster, VirtualCluster2d};
 use crate::config::ClusterSpec;
-use crate::dfpa::algorithm::{even_distribution, StepReport};
-use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, WarmStart2d};
+use crate::dfpa2d::nested::Benchmarker2d;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::fpm::{PiecewiseModel, SpeedSurface};
-use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
-use crate::partition::grid2d;
+use crate::modelstore::ModelKey;
 use crate::util::stats::max_relative_imbalance;
 
 pub use super::matmul1d::Strategy;
@@ -109,42 +107,6 @@ pub fn grid_shape(nprocs: usize) -> (usize, usize) {
     best
 }
 
-/// FFMPA oracle: answers column benchmarks straight from the pre-built
-/// surfaces with zero virtual cost (the models already exist).
-struct SurfaceOracle {
-    surfaces: Vec<Vec<SpeedSurface>>, // [j][i]
-}
-
-impl Benchmarker2d for SurfaceOracle {
-    fn grid(&self) -> (usize, usize) {
-        (self.surfaces[0].len(), self.surfaces.len())
-    }
-
-    fn run_column(
-        &mut self,
-        j: usize,
-        width: u64,
-        heights: &[u64],
-        _cap: Option<f64>,
-    ) -> Result<StepReport> {
-        let times: Vec<f64> = heights
-            .iter()
-            .zip(&self.surfaces[j])
-            .map(|(&h, s)| {
-                if h == 0 {
-                    0.0
-                } else {
-                    s.time(h as f64, width as f64)
-                }
-            })
-            .collect();
-        Ok(StepReport {
-            times,
-            virtual_cost_s: 0.0, // model queries, not benchmarks
-        })
-    }
-}
-
 fn build_cluster_2d(
     spec: &ClusterSpec,
     cfg: &Matmul2dConfig,
@@ -173,94 +135,29 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     }
     let (mut grid, nodes) = build_cluster_2d(spec, cfg, p, q)?;
 
-    // --- partition phase ---
+    // --- partition phase (strategy-agnostic via the adapt layer) ---
+    let session = AdaptiveSession::new()
+        .epsilon(cfg.epsilon)
+        .model_store(cfg.model_store.clone());
+    let mut dist = cfg.strategy.entry().make_2d(&AppResources2d {
+        nodes: &nodes,
+        p,
+        q,
+    })?;
+    // keys indexed [j][i], matching the algorithms' model layout
+    let keys: Vec<Vec<ModelKey>> = (0..q)
+        .map(|j| {
+            (0..p)
+                .map(|i| cfg.store_key(&grid.cluster.hosts()[grid.rank(i, j)]))
+                .collect()
+        })
+        .collect();
     let before = grid.cluster.now();
-    let mut iterations = 0usize;
-    let mut warm_started = false;
-    let (widths, heights) = match cfg.strategy {
-        Strategy::Even => {
-            let w = even_distribution(m, q);
-            let h = vec![even_distribution(m, p); q];
-            (w, h)
-        }
-        Strategy::Cpm => {
-            // single benchmark at the even distribution, then two-step
-            let w0 = even_distribution(m, q);
-            let h0 = even_distribution(m, p);
-            let mut speeds = vec![vec![0.0f64; q]; p];
-            for j in 0..q {
-                let report = grid.run_column(j, w0[j], &h0, None)?;
-                for i in 0..p {
-                    let units = (h0[i] * w0[j]) as f64;
-                    speeds[i][j] = if report.times[i] > 0.0 {
-                        units / report.times[i]
-                    } else {
-                        1.0
-                    };
-                }
-            }
-            iterations = q;
-            let gp = grid2d::two_step(m, m, &speeds)?;
-            (gp.col_widths, gp.row_heights)
-        }
-        Strategy::Ffmpa => {
-            // iterative algorithm [18] over pre-built full models
-            let mut oracle = SurfaceOracle {
-                surfaces: (0..q)
-                    .map(|j| {
-                        (0..p)
-                            .map(|i| nodes[grid.rank(i, j)].surface().clone())
-                            .collect()
-                    })
-                    .collect(),
-            };
-            let r = run_dfpa2d(m, m, &mut oracle, Dfpa2dOptions::with_epsilon(cfg.epsilon))?;
-            (r.widths, r.heights)
-        }
-        Strategy::Dfpa => {
-            let store = match &cfg.model_store {
-                Some(dir) => Some(ModelStore::open(dir)?),
-                None => None,
-            };
-            // keys indexed [j][i], matching the algorithm's model layout
-            let keys: Vec<Vec<ModelKey>> = (0..q)
-                .map(|j| {
-                    (0..p)
-                        .map(|i| cfg.store_key(&grid.cluster.hosts()[grid.rank(i, j)]))
-                        .collect()
-                })
-                .collect();
-            // same "store holds nothing → cold start" policy as the 1D
-            // app: warm_models over the flat [j][i] key list, reshaped
-            // back into columns
-            let warm_start = match &store {
-                Some(s) => {
-                    let flat: Vec<ModelKey> = keys.iter().flatten().cloned().collect();
-                    s.warm_models(&flat)?.map(|models| {
-                        let cols: Vec<Vec<PiecewiseModel>> =
-                            models.chunks(p).map(|c| c.to_vec()).collect();
-                        WarmStart2d::new(cols)
-                    })
-                }
-                None => None,
-            };
-            let opts = Dfpa2dOptions {
-                warm_start,
-                ..Dfpa2dOptions::with_epsilon(cfg.epsilon)
-            };
-            let r = run_dfpa2d(m, m, &mut grid, opts)?;
-            if let Some(s) = &store {
-                // persist only this run's measurements (see matmul1d)
-                for (col_keys, col_obs) in keys.iter().zip(&r.observations) {
-                    s.record_run(col_keys, col_obs, &MergePolicy::default())?;
-                }
-            }
-            iterations = r.inner_iterations;
-            warm_started = r.warm_started;
-            (r.widths, r.heights)
-        }
-    };
+    let outcome = session.run_2d(dist.as_mut(), m, m, &mut grid, &keys)?;
     let partition_s = grid.cluster.now() - before;
+    let iterations = outcome.benchmark_steps;
+    let warm_started = outcome.warm_started;
+    let (widths, heights) = outcome.distribution.into_2d()?;
 
     // --- evaluate the final distribution: one pivot step per column ---
     let mut times = vec![vec![0.0f64; p]; q];
@@ -316,6 +213,8 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
 mod tests {
     use super::*;
     use crate::cluster::presets;
+
+    use crate::modelstore::ModelStore;
 
     #[test]
     fn grid_shape_factorizations() {

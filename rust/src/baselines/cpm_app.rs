@@ -22,7 +22,8 @@ pub struct CpmOutcome {
 }
 
 /// Benchmark once at the even distribution and distribute proportionally.
-pub fn partition_cpm<B: Benchmarker>(n: u64, bench: &mut B) -> Result<CpmOutcome> {
+/// (`?Sized` so the adapt layer can pass `&mut dyn Benchmarker`.)
+pub fn partition_cpm<B: Benchmarker + ?Sized>(n: u64, bench: &mut B) -> Result<CpmOutcome> {
     let p = bench.processors();
     let d0 = even_distribution(n, p);
     let report = bench.run_parallel(&d0)?;

@@ -43,7 +43,7 @@ pub enum Weighting {
 
 /// Run weighted factoring over `n` units with the given chunk factor
 /// (classically 0.5) until everything is executed.
-pub fn run_factoring<B: Benchmarker>(
+pub fn run_factoring<B: Benchmarker + ?Sized>(
     n: u64,
     bench: &mut B,
     factor: f64,

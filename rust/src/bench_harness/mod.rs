@@ -13,6 +13,29 @@ pub mod runner;
 
 pub use runner::{BenchGroup, BenchResult, Bencher};
 
+use crate::adapt::{Distributor, SessionCtx};
+use crate::dfpa::Benchmarker;
+
+impl BenchGroup {
+    /// Bench an adapt-layer strategy end-to-end: every sample builds a
+    /// fresh `(distributor, benchmarker)` pair via `make` and times one
+    /// `distribute` call — partitioning only, no app phases. This is the
+    /// one way the bench suite drives strategies, so a new registry entry
+    /// is benchable without bespoke wiring.
+    pub fn bench_distribute<B, F>(&mut self, name: &str, n: u64, ctx: &SessionCtx, mut make: F)
+    where
+        B: Benchmarker,
+        F: FnMut() -> (Box<dyn Distributor>, B),
+    {
+        self.bench(name, |b| {
+            b.iter(|| {
+                let (mut dist, mut bench) = make();
+                dist.distribute(n, &mut bench, ctx).expect("distribute failed")
+            })
+        });
+    }
+}
+
 /// Entry point used by each `harness = false` bench target.
 ///
 /// Parses CLI args (a filter pattern and `--quick`), builds a group, runs

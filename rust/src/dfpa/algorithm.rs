@@ -190,7 +190,12 @@ fn warm_initial_state(
 }
 
 /// Run DFPA: balance `n` units over the benchmarker's processors.
-pub fn run_dfpa<B: Benchmarker>(n: u64, bench: &mut B, opts: DfpaOptions) -> Result<DfpaResult> {
+/// (`?Sized` so the adapt layer can pass `&mut dyn Benchmarker`.)
+pub fn run_dfpa<B: Benchmarker + ?Sized>(
+    n: u64,
+    bench: &mut B,
+    opts: DfpaOptions,
+) -> Result<DfpaResult> {
     let mut opts = opts;
     let p = bench.processors();
     if p == 0 {

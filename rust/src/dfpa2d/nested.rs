@@ -2,7 +2,7 @@
 
 use crate::dfpa::algorithm::StepReport;
 use crate::error::{HfpmError, Result};
-use crate::fpm::{PiecewiseModel, ScaledModel};
+use crate::fpm::{PiecewiseModel, ScaledModel, SpeedFunction};
 use crate::partition::column::{freeze_small_changes, rebalance_widths};
 use crate::partition::{partition_with, GeometricOptions};
 use crate::util::stats::max_relative_imbalance;
@@ -129,6 +129,57 @@ pub struct Dfpa2dResult {
     pub observations: Vec<Vec<PiecewiseModel>>,
 }
 
+/// Propose warm-start column widths from stored models, or `None` when the
+/// evidence is missing or does not cover the probe size. The probe is the
+/// even-split task area (`(m/p)·(n/q)` units); a store whose observed
+/// range is more than a 4× extrapolation away from it is a guess, not
+/// evidence, and the even widths are the honest start for discovery.
+fn warm_widths(
+    n: u64,
+    p: usize,
+    q: usize,
+    m: u64,
+    models: &[Vec<PiecewiseModel>],
+) -> Option<Vec<u64>> {
+    let full = models.iter().all(|col| col.iter().all(|mm| !mm.is_empty()));
+    if !full {
+        return None;
+    }
+    let probe = ((m / p as u64).max(1) * (n / q as u64).max(1)) as f64;
+    let covered = models.iter().flatten().all(|mm| match mm.observed_range() {
+        Some((lo, hi)) => probe >= lo / 4.0 && probe <= hi * 4.0,
+        None => false,
+    });
+    if !covered {
+        return None;
+    }
+    let speeds: Vec<Vec<f64>> = models
+        .iter()
+        .map(|col| {
+            col.iter()
+                .map(|mm| mm.speed(probe))
+                .filter(|&s| s > 0.0 && s.is_finite())
+                .collect()
+        })
+        .collect();
+    if speeds.iter().any(|col: &Vec<f64>| col.is_empty()) {
+        return None;
+    }
+    let mut w = rebalance_widths(n, &speeds).ok()?;
+    // every column keeps at least one block (same rule as the outer loop)
+    for j in 0..q {
+        if w[j] == 0 {
+            let donor = (0..q).max_by_key(|&k| w[k])?;
+            if w[donor] <= 1 {
+                return None;
+            }
+            w[donor] -= 1;
+            w[j] = 1;
+        }
+    }
+    (w.iter().sum::<u64>() == n && w.iter().all(|&x| x > 0)).then_some(w)
+}
+
 /// Run the nested 2D DFPA over an `m×n` block grid on a `p×q` processor
 /// grid.
 ///
@@ -137,7 +188,7 @@ pub struct Dfpa2dResult {
 /// processor's single persistent model, so observations made at one column
 /// width inform partitioning at another (footprint, and therefore speed, is
 /// dominated by the task area — see `fpm::surface`).
-pub fn run_dfpa2d<B: Benchmarker2d>(
+pub fn run_dfpa2d<B: Benchmarker2d + ?Sized>(
     m: u64,
     n: u64,
     bench: &mut B,
@@ -178,6 +229,15 @@ pub fn run_dfpa2d<B: Benchmarker2d>(
         None => vec![vec![PiecewiseModel::new(); p]; q],
     };
     if warm_started {
+        // seed the *width map* from stored evidence too: when every
+        // processor carries a model, propose widths proportional to the
+        // stored speeds at the even-area probe point. Same coverage guard
+        // as the 1D warm start — trust the store only within a modest
+        // extrapolation of its observed range — with the even widths as
+        // the fallback; the first outer rebalance corrects any residue.
+        if let Some(w) = warm_widths(n, p, q, m, &models) {
+            widths = w;
+        }
         // columns whose processors all carry evidence start from the
         // stored-model partitioning instead of the even heights; the first
         // inner benchmark validates (and corrects) the stored speeds
@@ -599,6 +659,26 @@ mod tests {
             warm.inner_iterations,
             cold.inner_iterations
         );
+    }
+
+    #[test]
+    fn warm_widths_follow_stored_column_speeds() {
+        // 2×2 grid: column 1's processors are 3× faster → widths 2:6
+        let col = |s: f64| vec![PiecewiseModel::constant(16.0, s); 2];
+        let models = vec![col(1.0), col(3.0)];
+        assert_eq!(warm_widths(8, 2, 2, 8, &models), Some(vec![2, 6]));
+    }
+
+    #[test]
+    fn warm_widths_refused_outside_coverage() {
+        // stored evidence at x=1000 is a >4× extrapolation from the probe
+        // area (16) — the even widths must stay
+        let col = |s: f64| vec![PiecewiseModel::constant(1000.0, s); 2];
+        let models = vec![col(1.0), col(3.0)];
+        assert_eq!(warm_widths(8, 2, 2, 8, &models), None);
+        // and partial evidence is no evidence
+        let ragged = vec![col(1.0), vec![PiecewiseModel::new(); 2]];
+        assert_eq!(warm_widths(8, 2, 2, 8, &ragged), None);
     }
 
     #[test]

@@ -29,6 +29,10 @@
 //! - **A persistent model store** ([`modelstore`]) — serializes the partial
 //!   FPM estimates per (host, kernel, mode) so repeated invocations warm-
 //!   start DFPA instead of rediscovering the platform from scratch.
+//! - **The adapt layer** ([`adapt`]) — the strategy-agnostic API: every
+//!   partitioning strategy behind one `Distributor` trait, a unified
+//!   `Outcome` report, an `AdaptiveSession` builder owning the model-store
+//!   and fault-policy plumbing, and a name-keyed strategy registry.
 //!
 //! Support modules: [`config`] (mini-TOML), [`bench_harness`]
 //! (criterion-lite), [`testkit`] (proptest-lite), [`util`].
@@ -47,6 +51,8 @@ pub mod partition;
 pub mod cluster;
 pub mod dfpa;
 pub mod dfpa2d;
+
+pub mod adapt;
 
 pub mod apps;
 pub mod baselines;

@@ -15,12 +15,12 @@
 //! repro cluster --name hcl                    print a preset's node table
 //! ```
 
+use hfpm::adapt::{registry, AdaptiveSession, Strategy};
 use hfpm::apps::{matmul1d, matmul2d};
 use hfpm::cli::Args;
 use hfpm::cluster::executor::ExecutionMode;
 use hfpm::cluster::presets;
 use hfpm::config::ClusterSpec;
-use hfpm::dfpa::IterationRecord;
 use hfpm::error::{HfpmError, Result};
 use hfpm::util::table::{fdur, fnum, Table};
 
@@ -40,6 +40,15 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    Strategy::parse(s).ok_or_else(|| {
+        HfpmError::InvalidArg(format!(
+            "bad strategy `{s}` (known: {})",
+            registry::names().join(", ")
+        ))
+    })
 }
 
 fn cluster_arg(args: &Args, default: &str) -> Result<ClusterSpec> {
@@ -84,8 +93,9 @@ COMMANDS:
   info      platform and artifact status
   cluster   print a cluster preset      --name hcl
   run1d     1D matmul app (§3.1)        --cluster hcl15 --n 4096 --strategy
-            dfpa|ffmpa|cpm|even [--eps 0.025] [--mode sim|real] [--compare]
-            [--model-store DIR]  persist partial FPMs; later runs warm-start
+            dfpa|ffmpa|cpm|even|factoring [--eps 0.025] [--mode sim|real]
+            [--compare] [--model-store DIR]  persist partial FPMs; later
+            runs warm-start
   run2d     2D matmul app (§3.2)        --cluster hcl --n 8192 --strategy ...
             [--model-store DIR]
   verify    real PJRT e2e + correctness --n 512 [--cluster mini4] [--eps 0.1]
@@ -107,6 +117,16 @@ fn cmd_info() -> Result<()> {
     }
     println!("pjrt: {}", hfpm::runtime::pjrt_status());
     println!("presets: hcl (16 nodes), hcl15, grid5000 (28 nodes), mini4");
+    println!("strategies:");
+    for e in registry::entries() {
+        let dims = match (e.supports_1d(), e.supports_2d()) {
+            (true, true) => "1D+2D",
+            (true, false) => "1D",
+            (false, true) => "2D",
+            (false, false) => "-",
+        };
+        println!("  {:<10} {:<6} {}", e.name, dims, e.summary);
+    }
     Ok(())
 }
 
@@ -153,17 +173,11 @@ fn cmd_run1d(args: &Args) -> Result<()> {
     let eps = args.get_f64("eps", 0.025)?;
     let mode = ExecutionMode::parse(&args.get_or_checked("mode", "sim")?)
         .ok_or_else(|| HfpmError::InvalidArg("--mode sim|real".into()))?;
-    let strategies: Vec<matmul1d::Strategy> = if args.has("compare") {
-        vec![
-            matmul1d::Strategy::Even,
-            matmul1d::Strategy::Cpm,
-            matmul1d::Strategy::Ffmpa,
-            matmul1d::Strategy::Dfpa,
-        ]
+    let strategies: Vec<Strategy> = if args.has("compare") {
+        registry::compare_1d()
     } else {
         let s = args.get_or_checked("strategy", "dfpa")?;
-        vec![matmul1d::Strategy::parse(&s)
-            .ok_or_else(|| HfpmError::InvalidArg(format!("bad strategy `{s}`")))?]
+        vec![parse_strategy(&s)?]
     };
     let mut t = Table::new(
         &format!("1D matmul on `{}` (n={n}, ε={eps})", spec.name),
@@ -189,15 +203,10 @@ fn cmd_run2d(args: &Args) -> Result<()> {
     let n = args.get_u64("n", 8192)?;
     let eps = args.get_f64("eps", 0.1)?;
     let s = args.get_or_checked("strategy", "dfpa")?;
-    let strategies: Vec<matmul2d::Strategy> = if args.has("compare") {
-        vec![
-            matmul2d::Strategy::Cpm,
-            matmul2d::Strategy::Ffmpa,
-            matmul2d::Strategy::Dfpa,
-        ]
+    let strategies: Vec<Strategy> = if args.has("compare") {
+        registry::compare_2d()
     } else {
-        vec![matmul2d::Strategy::parse(&s)
-            .ok_or_else(|| HfpmError::InvalidArg(format!("bad strategy `{s}`")))?]
+        vec![parse_strategy(&s)?]
     };
     let mut t = Table::new(
         &format!("2D matmul on `{}` (N={n}, ε={eps})", spec.name),
@@ -257,21 +266,23 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let n = args.get_u64("n", 5120)?;
     let eps = args.get_f64("eps", 0.025)?;
     let out = args.get_or_checked("out", "results/dfpa_trace.csv")?;
-    let cfg = matmul1d::Matmul1dConfig::new(n, matmul1d::Strategy::Dfpa);
+    let cfg = matmul1d::Matmul1dConfig::new(n, Strategy::Dfpa);
     let (mut cluster, _) = matmul1d::build_cluster(&spec, &cfg, Default::default())?;
-    let mut bench = matmul1d::RowBench {
-        cluster: &mut cluster,
-        n,
+    // the session's trace sink dumps the per-iteration records as CSV
+    let session = AdaptiveSession::new()
+        .epsilon(eps)
+        .trace_to(std::path::PathBuf::from(&out));
+    let mut dist = hfpm::adapt::Dfpa::default();
+    let r = {
+        let mut bench = matmul1d::RowBench {
+            cluster: &mut cluster,
+            n,
+        };
+        session.run_1d(&mut dist, n, &mut bench, &[])?
     };
-    let opts = hfpm::dfpa::DfpaOptions {
-        epsilon: eps,
-        ..Default::default()
-    };
-    let r = hfpm::dfpa::run_dfpa(n, &mut bench, opts)?;
-    IterationRecord::write_csv(&r.records, std::path::Path::new(&out))?;
     println!(
         "DFPA on `{}` n={n}: {} iterations, imbalance {:.3}, converged: {}",
-        spec.name, r.iterations, r.imbalance, r.converged
+        spec.name, r.benchmark_steps, r.imbalance, r.converged
     );
     println!("trace written to {out}");
     Ok(())

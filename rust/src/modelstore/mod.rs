@@ -13,12 +13,21 @@
 //!   merge decays existing weights by [`MergePolicy::decay`] and inserts
 //!   the new observations at weight 1, so a drifting platform gradually
 //!   forgets stale speeds instead of trusting them forever;
+//! - each point also carries the **wall-clock time** it was last
+//!   refreshed; with [`MergePolicy::half_life_s`] set, weights additionally
+//!   halve per elapsed half-life, so a platform that drifts while *idle*
+//!   (no runs, hence no per-run decay) still forgets;
 //! - points whose weight decays below [`MergePolicy::min_weight`] are
-//!   evicted, which bounds file size over unbounded run counts.
+//!   evicted, which bounds file size over unbounded run counts;
+//! - an **advisory lock file** (`.hfpm.lock`) guards each store directory
+//!   against concurrent writers: the first opener holds the lock, later
+//!   concurrent openers downgrade their saves to a warn-and-skip instead
+//!   of silently racing last-writer-wins.
 //!
 //! The store knows nothing about DFPA; `dfpa`/`dfpa2d` accept a
-//! `WarmStart` of plain [`PiecewiseModel`]s and the apps glue the two
-//! together (see `apps::matmul1d` and DESIGN.md §3).
+//! `WarmStart` of plain [`PiecewiseModel`]s and `adapt::AdaptiveSession`
+//! glues the two together — seeding before the run, flushing observations
+//! after (see DESIGN.md §3/§3.5).
 
 pub mod json;
 
@@ -72,6 +81,15 @@ impl ModelKey {
     }
 }
 
+/// Current wall-clock time as unix seconds (0.0 on a pre-epoch clock —
+/// which merge treats as "age unknown", never as evidence of staleness).
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 /// One persisted observation: a speed-function point plus its freshness.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StoredPoint {
@@ -80,8 +98,11 @@ pub struct StoredPoint {
     /// Speed, units/second.
     pub s: f64,
     /// Freshness weight in `(0, 1]`; decays by [`MergePolicy::decay`] per
-    /// merged run.
+    /// merged run and by [`MergePolicy::half_life_s`] per wall-clock age.
     pub w: f64,
+    /// Unix seconds when this point was last measured/refreshed; 0 when
+    /// unknown (files written before the age field existed).
+    pub t: f64,
 }
 
 /// How merges weigh new observations against stored history.
@@ -96,6 +117,11 @@ pub struct MergePolicy {
     /// Two points whose sizes differ by less than this relative tolerance
     /// are treated as re-measurements of the same size and blended.
     pub blend_tol_rel: f64,
+    /// Wall-clock half-life of a stored point's weight, in seconds: at
+    /// merge time a point last refreshed `Δt` ago is additionally decayed
+    /// by `0.5^(Δt / half_life_s)`. `None` disables time-based decay.
+    /// Points with an unknown age (`t = 0`, legacy files) are exempt.
+    pub half_life_s: Option<f64>,
 }
 
 impl Default for MergePolicy {
@@ -105,6 +131,7 @@ impl Default for MergePolicy {
             min_weight: 0.05,
             max_points: 64,
             blend_tol_rel: 1e-9,
+            half_life_s: None,
         }
     }
 }
@@ -150,14 +177,27 @@ impl StoredModel {
 
     /// Fold one run's observed partial model into the stored history.
     ///
-    /// Existing weights decay first, then each fresh point either blends
+    /// Existing weights decay first — by [`MergePolicy::decay`] per run
+    /// and, when [`MergePolicy::half_life_s`] is set, by the elapsed
+    /// wall-clock age of each point — then each fresh point either blends
     /// into a stored point at (relatively) the same size — weighted by the
     /// decayed old weight against 1.0 for the new observation — or is
     /// inserted at weight 1. Finally, under-weight and over-cap points are
     /// evicted.
     pub fn merge(&mut self, observed: &PiecewiseModel, policy: &MergePolicy) {
+        self.merge_at(observed, policy, unix_now());
+    }
+
+    /// [`StoredModel::merge`] with an explicit "now" (unix seconds), so
+    /// time-based decay is testable without a real clock.
+    pub fn merge_at(&mut self, observed: &PiecewiseModel, policy: &MergePolicy, now_s: f64) {
         for p in &mut self.points {
             p.w *= policy.decay;
+            if let Some(hl) = policy.half_life_s {
+                if hl > 0.0 && p.t > 0.0 && now_s > p.t {
+                    p.w *= 0.5f64.powf((now_s - p.t) / hl);
+                }
+            }
         }
         for op in observed.points() {
             if !(op.x > 0.0 && op.s > 0.0 && op.x.is_finite() && op.s.is_finite()) {
@@ -169,6 +209,7 @@ impl StoredModel {
                     let sp = &mut self.points[i];
                     sp.s = (sp.w * sp.s + op.s) / (sp.w + 1.0);
                     sp.w = 1.0;
+                    sp.t = now_s;
                 }
                 None => {
                     let at = self.points.partition_point(|sp| sp.x < op.x);
@@ -178,6 +219,7 @@ impl StoredModel {
                             x: op.x,
                             s: op.s,
                             w: 1.0,
+                            t: now_s,
                         },
                     );
                 }
@@ -213,6 +255,7 @@ impl StoredModel {
                                 ("x".into(), Value::Num(p.x)),
                                 ("s".into(), Value::Num(p.s)),
                                 ("w".into(), Value::Num(p.w)),
+                                ("t".into(), Value::Num(p.t)),
                             ])
                         })
                         .collect(),
@@ -244,6 +287,9 @@ impl StoredModel {
             let x = pv.get("x").and_then(Value::as_f64).ok_or_else(|| bad("point without x"))?;
             let s = pv.get("s").and_then(Value::as_f64).ok_or_else(|| bad("point without s"))?;
             let w = pv.get("w").and_then(Value::as_f64).unwrap_or(1.0);
+            // pre-age files carry no `t`: 0 marks the age as unknown, which
+            // exempts the point from wall-clock decay
+            let t = pv.get("t").and_then(Value::as_f64).unwrap_or(0.0).max(0.0);
             // zero-weight points are fully stale — merge() would have
             // evicted them, so don't resurrect them into warm starts
             if x > 0.0 && s > 0.0 && w > 0.0 && x.is_finite() && s.is_finite() {
@@ -251,6 +297,7 @@ impl StoredModel {
                     x,
                     s,
                     w: w.min(1.0),
+                    t,
                 });
             }
         }
@@ -260,18 +307,121 @@ impl StoredModel {
     }
 }
 
+/// Advisory lock on a store directory; the file is removed on drop — but
+/// only while it still carries this lock's token. After a stale-lock steal
+/// the original holder's token no longer matches, so its drop must not
+/// delete the thief's fresh lock (which would cascade into a third opener
+/// acquiring while the thief still writes).
+#[derive(Debug)]
+struct StoreLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        if let Ok(content) = std::fs::read_to_string(&self.path) {
+            if content.trim() == self.token {
+                let _ = std::fs::remove_file(&self.path);
+            }
+        }
+    }
+}
+
+/// Name of the advisory lock file inside a store directory.
+const LOCK_FILE: &str = ".hfpm.lock";
+
+/// A lock file untouched for this long belongs to a crashed writer and may
+/// be stolen (a live writer re-creates its lock only at open, but a run
+/// that outlives this is a pathology, not a normal save pattern).
+const STALE_LOCK_S: u64 = 600;
+
 /// A directory of [`StoredModel`] files.
 #[derive(Debug, Clone)]
 pub struct ModelStore {
     dir: PathBuf,
+    /// `Some` while this instance holds the directory's advisory lock
+    /// (shared across clones; released when the last clone drops).
+    lock: Option<std::sync::Arc<StoreLock>>,
 }
 
 impl ModelStore {
-    /// Open (creating if needed) a store directory.
+    /// Open (creating if needed) a store directory and try to acquire its
+    /// advisory writer lock. Opening never fails on lock contention: a
+    /// store that lost the race still reads normally, but its saves
+    /// downgrade to a warn-and-skip (see [`ModelStore::save`]) instead of
+    /// silently racing the holder last-writer-wins.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
-        Ok(Self { dir })
+        let lock = Self::acquire_lock(&dir);
+        Ok(Self { dir, lock })
+    }
+
+    fn lock_path(dir: &Path) -> PathBuf {
+        dir.join(LOCK_FILE)
+    }
+
+    fn acquire_lock(dir: &Path) -> Option<std::sync::Arc<StoreLock>> {
+        use std::io::Write as _;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        // pid + per-process counter: a unique ownership token so releases
+        // only ever delete a lock this instance actually wrote
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let token = format!(
+            "{}:{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = Self::lock_path(dir);
+        for _ in 0..2 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{token}");
+                    return Some(std::sync::Arc::new(StoreLock { path, token }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .ok()
+                        .and_then(|mtime| mtime.elapsed().ok())
+                        .map(|age| age.as_secs() > STALE_LOCK_S)
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = std::fs::remove_file(&path);
+                        continue; // one retry after stealing a dead lock
+                    }
+                    return None;
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+
+    /// Does this instance hold the directory's advisory writer lock?
+    pub fn holds_lock(&self) -> bool {
+        self.lock.is_some()
+    }
+
+    /// May this instance write right now? True when it holds the lock —
+    /// re-verified against the file's token, so a holder whose stale lock
+    /// was stolen stops writing — or when nobody holds one at all (the
+    /// lock is advisory — an unlocked directory keeps the historical
+    /// last-writer-wins behavior).
+    fn can_write(&self) -> bool {
+        match &self.lock {
+            Some(lock) => std::fs::read_to_string(&lock.path)
+                .map(|content| content.trim() == lock.token)
+                // unreadable/deleted lock file: nobody else claims the
+                // directory, writing is safe
+                .unwrap_or(true),
+            None => !Self::lock_path(&self.dir).exists(),
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -321,7 +471,20 @@ impl ModelStore {
     }
 
     /// Atomically persist a stored model (write temp file, then rename).
+    ///
+    /// When another writer holds the directory's advisory lock the save is
+    /// skipped with a warning — losing one run's observations to a warn is
+    /// recoverable, two writers interleaving load→merge→save is not.
     pub fn save(&self, model: &StoredModel) -> Result<()> {
+        if !self.can_write() {
+            eprintln!(
+                "warn: model store `{}` is locked by another writer; \
+                 skipping save of {}",
+                self.dir.display(),
+                model.key.file_name()
+            );
+            return Ok(());
+        }
         let path = self.path_for(&model.key);
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, model.to_json().render())?;
@@ -513,6 +676,122 @@ mod tests {
         // survivors are the freshest (last run's) sizes
         assert!(sm.points.iter().all(|p| p.w == 1.0));
         assert_eq!(sm.points[0].x, 900.0);
+    }
+
+    #[test]
+    fn wall_clock_decay_evicts_idle_points() {
+        let policy = MergePolicy {
+            decay: 1.0, // isolate the time-based decay
+            min_weight: 0.3,
+            half_life_s: Some(3600.0),
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        let mut old = PiecewiseModel::new();
+        old.insert(100.0, 10.0);
+        sm.merge_at(&old, &policy, 1_000_000.0);
+        assert_eq!(sm.points[0].t, 1_000_000.0);
+
+        // two half-lives later, a merge that never re-measures x=100
+        // decays its weight 1 → 0.25 < 0.3 and evicts it
+        let mut other = PiecewiseModel::new();
+        other.insert(200.0, 5.0);
+        sm.merge_at(&other, &policy, 1_000_000.0 + 2.0 * 3600.0);
+        assert_eq!(sm.points.len(), 1, "idle x=100 evicted: {:?}", sm.points);
+        assert_eq!(sm.points[0].x, 200.0);
+    }
+
+    #[test]
+    fn unknown_age_points_exempt_from_wall_clock_decay() {
+        let policy = MergePolicy {
+            decay: 1.0,
+            min_weight: 0.3,
+            half_life_s: Some(1.0), // brutal half-life
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        sm.points.push(StoredPoint {
+            x: 100.0,
+            s: 10.0,
+            w: 1.0,
+            t: 0.0, // legacy file: age unknown
+        });
+        let mut other = PiecewiseModel::new();
+        other.insert(200.0, 5.0);
+        sm.merge_at(&other, &policy, 2_000_000.0);
+        assert_eq!(sm.points.len(), 2, "legacy point must survive");
+    }
+
+    #[test]
+    fn point_age_round_trips_through_json() {
+        let store = tmp_store("age");
+        let key = ModelKey::new("h", "k", "sim");
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge_at(&sample_model(), &MergePolicy::default(), 123_456.0);
+        store.save(&sm).unwrap();
+        let back = store.load(&key).unwrap().unwrap();
+        assert!(back.points.iter().all(|p| p.t == 123_456.0));
+    }
+
+    #[test]
+    fn concurrent_writer_downgrades_to_warn_and_skip() {
+        let holder = tmp_store("lock");
+        assert!(holder.holds_lock());
+        let dir = holder.dir().to_path_buf();
+
+        let loser = ModelStore::open(&dir).unwrap();
+        assert!(!loser.holds_lock(), "second opener must not get the lock");
+
+        let key = ModelKey::new("h", "k", "sim");
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        loser.save(&sm).unwrap(); // warn-and-skip, not an error
+        assert!(loser.load(&key).unwrap().is_none(), "skipped save wrote");
+        holder.save(&sm).unwrap();
+        assert!(holder.load(&key).unwrap().is_some());
+
+        // the loser still *reads* everything
+        assert_eq!(loser.entries().unwrap().len(), 1);
+
+        drop(loser); // releases nothing — it never held the lock
+        drop(holder); // releases the lock file
+        let next = ModelStore::open(&dir).unwrap();
+        assert!(next.holds_lock(), "lock must be reacquirable after drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stolen_lock_is_neither_written_nor_deleted_by_the_old_holder() {
+        let holder = tmp_store("steal");
+        let dir = holder.dir().to_path_buf();
+        let lock_path = ModelStore::lock_path(&dir);
+        // simulate a stale-lock steal: another writer replaced the token
+        std::fs::write(&lock_path, "999999:42\n").unwrap();
+
+        let key = ModelKey::new("h", "k", "sim");
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        holder.save(&sm).unwrap(); // warn-and-skip: we no longer own it
+        assert!(holder.load(&key).unwrap().is_none());
+
+        drop(holder); // must NOT delete the thief's lock
+        assert!(lock_path.exists(), "thief's lock deleted by old holder");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clones_share_one_lock() {
+        let store = tmp_store("clone-lock");
+        let dir = store.dir().to_path_buf();
+        let twin = store.clone();
+        assert!(twin.holds_lock());
+        drop(store);
+        // the twin still holds the shared lock: a new opener must lose
+        assert!(twin.holds_lock());
+        assert!(!ModelStore::open(&dir).unwrap().holds_lock());
+        drop(twin);
+        assert!(ModelStore::open(&dir).unwrap().holds_lock());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

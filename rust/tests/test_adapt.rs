@@ -1,0 +1,336 @@
+//! The adapt layer: registry/`Distributor` parity with the legacy entry
+//! points, and `AdaptiveSession` store round-trips.
+
+use hfpm::adapt::{
+    registry, AdaptiveSession, Distribution, Dfpa, Distributor, Observations, SessionCtx,
+    Strategy,
+};
+use hfpm::baselines::{cpm_app, factoring};
+use hfpm::dfpa::{run_dfpa, Benchmarker, DfpaOptions, StepReport, WarmStart};
+use hfpm::dfpa2d::Benchmarker2d;
+use hfpm::fpm::{ConstantModel, PiecewiseModel, ScaledModel, SpeedFunction};
+use hfpm::modelstore::{ModelKey, ModelStore};
+use hfpm::Result;
+
+/// Deterministic benchmarker over constant ground-truth speeds — the
+/// `ModelBench` fixture of the dfpa unit tests, reachable from an
+/// integration test.
+struct ModelBench {
+    speeds: Vec<f64>,
+    steps: usize,
+}
+
+impl ModelBench {
+    fn new(speeds: &[f64]) -> Self {
+        Self {
+            speeds: speeds.to_vec(),
+            steps: 0,
+        }
+    }
+}
+
+impl Benchmarker for ModelBench {
+    fn processors(&self) -> usize {
+        self.speeds.len()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        self.steps += 1;
+        let times: Vec<f64> = d
+            .iter()
+            .zip(&self.speeds)
+            .map(|(&di, &s)| {
+                if di == 0 {
+                    0.0
+                } else {
+                    ConstantModel(s).time(di as f64)
+                }
+            })
+            .collect();
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        Ok(StepReport {
+            times,
+            virtual_cost_s: max,
+        })
+    }
+}
+
+const SPEEDS: [f64; 3] = [10.0, 30.0, 20.0];
+
+fn make_1d(strategy: Strategy) -> Box<dyn Distributor> {
+    // none of the parity strategies need app resources
+    strategy
+        .entry()
+        .make_1d(&registry::AppResources {
+            nodes: &[],
+            n: 0,
+            unit_scale: 1.0,
+            noise_rel: 0.0,
+            seed: 0,
+        })
+        .unwrap()
+}
+
+fn distribute(strategy: Strategy, n: u64, eps: f64) -> Vec<u64> {
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = make_1d(strategy)
+        .distribute(n, &mut bench, &SessionCtx::with_epsilon(eps))
+        .unwrap();
+    out.distribution.into_1d().unwrap()
+}
+
+#[test]
+fn even_registry_matches_legacy() {
+    assert_eq!(
+        distribute(Strategy::Even, 100, 0.05),
+        hfpm::baselines::even::even_distribution(100, SPEEDS.len())
+    );
+}
+
+#[test]
+fn cpm_registry_matches_legacy() {
+    let mut legacy_bench = ModelBench::new(&SPEEDS);
+    let legacy = cpm_app::partition_cpm(600, &mut legacy_bench).unwrap();
+    assert_eq!(distribute(Strategy::Cpm, 600, 0.05), legacy.d);
+}
+
+#[test]
+fn dfpa_registry_matches_legacy() {
+    let mut legacy_bench = ModelBench::new(&SPEEDS);
+    let legacy = run_dfpa(600, &mut legacy_bench, DfpaOptions::with_epsilon(0.02)).unwrap();
+    assert_eq!(distribute(Strategy::Dfpa, 600, 0.02), legacy.d);
+}
+
+#[test]
+fn factoring_registry_matches_legacy() {
+    let mut legacy_bench = ModelBench::new(&SPEEDS);
+    let legacy = factoring::run_factoring(
+        1000,
+        &mut legacy_bench,
+        0.5,
+        factoring::Weighting::Adaptive,
+    )
+    .unwrap();
+    assert_eq!(distribute(Strategy::Factoring, 1000, 0.05), legacy.executed);
+}
+
+#[test]
+fn ffmpa_registry_matches_legacy() {
+    // pre-built constant models; the registry factory path needs nodes, so
+    // drive the Ffmpa distributor directly with the same models
+    let models: Vec<PiecewiseModel> = SPEEDS
+        .iter()
+        .map(|&s| PiecewiseModel::constant(100.0, s))
+        .collect();
+    let views: Vec<ScaledModel<&PiecewiseModel>> =
+        models.iter().map(|m| ScaledModel::new(m, 1.0)).collect();
+    let legacy = hfpm::partition::partition(600, &views).unwrap().d;
+
+    let mut dist = hfpm::adapt::Ffmpa {
+        models,
+        unit_scale: 1.0,
+        model_build_s: Some(1.0),
+    };
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = dist
+        .distribute(600, &mut bench, &SessionCtx::default())
+        .unwrap();
+    assert_eq!(out.distribution.into_1d().unwrap(), legacy);
+    assert_eq!(out.model_build_s, Some(1.0));
+    assert_eq!(bench.steps, 0, "ffmpa must not benchmark");
+}
+
+#[test]
+fn dfpa_warm_start_flows_through_session_ctx() {
+    let mut cold_bench = ModelBench::new(&SPEEDS);
+    let cold = run_dfpa(6000, &mut cold_bench, DfpaOptions::with_epsilon(0.01)).unwrap();
+
+    let ctx = SessionCtx {
+        epsilon: 0.01,
+        warm_start: Some(WarmStart::new(cold.observations.clone())),
+        ..Default::default()
+    };
+    let mut bench = ModelBench::new(&SPEEDS);
+    let warm = Dfpa::default().distribute(6000, &mut bench, &ctx).unwrap();
+    assert!(warm.warm_started);
+    assert!(warm.benchmark_steps <= cold.iterations);
+}
+
+#[test]
+fn session_flushes_observations_and_warm_starts() {
+    let dir = std::env::temp_dir().join(format!("hfpm-adapt-session-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let keys: Vec<ModelKey> = (0..SPEEDS.len())
+        .map(|i| ModelKey::new(&format!("node{i}"), "adapt_test", "sim"))
+        .collect();
+    let session = AdaptiveSession::new()
+        .epsilon(0.01)
+        .model_store(Some(dir.clone()));
+
+    let mut dist = Dfpa::default();
+    let cold = {
+        let mut bench = ModelBench::new(&SPEEDS);
+        session.run_1d(&mut dist, 6000, &mut bench, &keys).unwrap()
+    };
+    assert!(!cold.warm_started, "empty store must cold-start");
+
+    // the flush must have written one model per measured processor
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.entries().unwrap().len(), SPEEDS.len());
+    drop(store); // release the advisory lock before the next session run
+
+    let warm = {
+        let mut bench = ModelBench::new(&SPEEDS);
+        session.run_1d(&mut dist, 6000, &mut bench, &keys).unwrap()
+    };
+    assert!(warm.warm_started, "populated store must warm-start");
+    assert!(warm.benchmark_steps <= cold.benchmark_steps);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn non_store_strategies_leave_the_store_untouched() {
+    // even/cpm/ffmpa/factoring neither warm-start nor observe: the session
+    // must not open (or even create) the store, nor take its writer lock
+    let dir = std::env::temp_dir().join(format!("hfpm-adapt-nostore-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let keys: Vec<ModelKey> = (0..SPEEDS.len())
+        .map(|i| ModelKey::new(&format!("node{i}"), "adapt_test", "sim"))
+        .collect();
+    let session = AdaptiveSession::new().model_store(Some(dir.clone()));
+    for strategy in [Strategy::Even, Strategy::Cpm, Strategy::Factoring] {
+        let mut bench = ModelBench::new(&SPEEDS);
+        let mut dist = make_1d(strategy);
+        session
+            .run_1d(dist.as_mut(), 600, &mut bench, &keys)
+            .unwrap();
+    }
+    assert!(!dir.exists(), "non-store strategies created the store dir");
+}
+
+#[test]
+fn factoring_outcome_is_flagged_as_executing_the_workload() {
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = make_1d(Strategy::Factoring)
+        .distribute(1000, &mut bench, &SessionCtx::default())
+        .unwrap();
+    assert!(out.executes_workload);
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = make_1d(Strategy::Dfpa)
+        .distribute(1000, &mut bench, &SessionCtx::with_epsilon(0.05))
+        .unwrap();
+    assert!(!out.executes_workload);
+}
+
+#[test]
+fn session_trace_sink_writes_csv() {
+    let dir = std::env::temp_dir().join(format!("hfpm-adapt-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("trace.csv");
+    let session = AdaptiveSession::new().epsilon(0.02).trace_to(path.clone());
+    let mut dist = Dfpa::default();
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = session.run_1d(&mut dist, 600, &mut bench, &[]).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("iter,proc,d,time_s,speed,imbalance"));
+    // one row per (iteration, processor) plus the header
+    assert_eq!(
+        text.lines().count(),
+        1 + out.benchmark_steps * SPEEDS.len()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn outcome_reports_observations_for_dfpa_only() {
+    for (strategy, expect_obs) in [
+        (Strategy::Even, false),
+        (Strategy::Cpm, false),
+        (Strategy::Dfpa, true),
+        (Strategy::Factoring, false),
+    ] {
+        let mut bench = ModelBench::new(&SPEEDS);
+        let out = make_1d(strategy)
+            .distribute(600, &mut bench, &SessionCtx::with_epsilon(0.05))
+            .unwrap();
+        assert_eq!(
+            !matches!(out.observations, Observations::None),
+            expect_obs,
+            "strategy {strategy:?}"
+        );
+        assert_eq!(out.strategy, strategy.name());
+    }
+}
+
+/// Column-structured benchmarker over constant per-cell speeds, `[j][i]`.
+struct GridBench {
+    speeds: Vec<Vec<f64>>,
+}
+
+impl Benchmarker2d for GridBench {
+    fn grid(&self) -> (usize, usize) {
+        (self.speeds[0].len(), self.speeds.len())
+    }
+
+    fn run_column(
+        &mut self,
+        j: usize,
+        width: u64,
+        heights: &[u64],
+        _cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let times: Vec<f64> = heights
+            .iter()
+            .zip(&self.speeds[j])
+            .map(|(&h, &s)| {
+                if h == 0 {
+                    0.0
+                } else {
+                    (h * width) as f64 / s
+                }
+            })
+            .collect();
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        Ok(StepReport {
+            times,
+            virtual_cost_s: max,
+        })
+    }
+}
+
+#[test]
+fn dfpa2d_distributor_balances_the_grid() {
+    let mut bench = GridBench {
+        speeds: vec![vec![10.0, 20.0], vec![30.0, 40.0]],
+    };
+    let mut dist = hfpm::adapt::Dfpa2d;
+    let out = dist
+        .distribute(64, 64, &mut bench, &SessionCtx::with_epsilon(0.1))
+        .unwrap();
+    match out.distribution {
+        Distribution::TwoD { widths, heights } => {
+            assert_eq!(widths.iter().sum::<u64>(), 64);
+            for hs in &heights {
+                assert_eq!(hs.iter().sum::<u64>(), 64);
+            }
+        }
+        other => panic!("expected a 2D distribution, got {other:?}"),
+    }
+    assert!(matches!(out.observations, Observations::TwoD(_)));
+}
+
+#[test]
+fn even2d_distributor_matches_even_splits() {
+    let mut bench = GridBench {
+        speeds: vec![vec![10.0, 20.0], vec![30.0, 40.0]],
+    };
+    let mut dist = hfpm::adapt::Even2d;
+    let out = dist
+        .distribute(10, 7, &mut bench, &SessionCtx::default())
+        .unwrap();
+    let (widths, heights) = out.distribution.into_2d().unwrap();
+    assert_eq!(widths, hfpm::baselines::even::even_distribution(7, 2));
+    for hs in heights {
+        assert_eq!(hs, hfpm::baselines::even::even_distribution(10, 2));
+    }
+}
