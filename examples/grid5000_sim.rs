@@ -31,7 +31,7 @@ fn main() -> hfpm::Result<()> {
             t.add_row(vec![
                 n.to_string(),
                 fnum(100.0 * eps, 1),
-                fdur(r.matmul_s),
+                fdur(r.compute_s),
                 fdur(r.partition_s),
                 r.iterations.to_string(),
                 fnum(100.0 * r.partition_s / r.total_s, 2),

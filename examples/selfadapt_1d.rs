@@ -42,7 +42,7 @@ fn main() -> hfpm::Result<()> {
         t.add_row(vec![
             strategy.name().to_string(),
             fdur(r.partition_s),
-            fdur(r.matmul_s),
+            fdur(r.compute_s),
             fdur(r.total_s),
             r.iterations.to_string(),
             fnum(100.0 * r.imbalance, 1),

@@ -126,6 +126,24 @@ fn main() {
             );
         }
 
+        // --- iterative workloads over the session (coordinator wall cost
+        // of a whole rebalanced run, cluster spawn included) ---
+        g.bench("jacobi/app mini4 n=512 (12 sweeps, rebal 4)", |b| {
+            let spec = presets::mini4();
+            b.iter(|| {
+                let cfg = hfpm::apps::JacobiConfig::new(512, Strategy::Dfpa);
+                hfpm::apps::jacobi::run(&spec, &cfg).unwrap()
+            });
+        });
+        g.bench("lu/app mini4 n=512 b=32 (16 panels)", |b| {
+            let spec = presets::mini4();
+            b.iter(|| {
+                let mut cfg = hfpm::apps::LuConfig::new(512, Strategy::Dfpa);
+                cfg.block = 32;
+                hfpm::apps::lu::run(&spec, &cfg).unwrap()
+            });
+        });
+
         // --- comm model arithmetic ---
         g.bench("comm/dfpa_iteration_cost grid5000", |b| {
             let m = hfpm::cluster::comm::CommModel::new(presets::grid5000());

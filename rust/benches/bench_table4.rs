@@ -38,7 +38,7 @@ fn main() {
             let mut cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
             cfg.epsilon = eps;
             let r = run(&spec, &cfg).expect("run");
-            row.push(fnum(r.matmul_s, 2));
+            row.push(fnum(r.compute_s, 2));
             row.push(fnum(r.partition_s, 3));
             row.push(r.iterations.to_string());
             // the headline claims of Table 4. (ε = 2.5% sits near the

@@ -15,6 +15,7 @@ use crate::dfpa2d::nested::{run_dfpa2d, Benchmarker2d, Dfpa2dOptions, WarmStart2
 use crate::error::{HfpmError, Result};
 use crate::fpm::{PiecewiseModel, ScaledModel, SpeedSurface};
 use crate::partition::{self, grid2d, GeometricOptions};
+use crate::util::stats::max_relative_imbalance;
 use crate::util::timer::Stopwatch;
 
 /// Cross-cutting run parameters, owned by
@@ -179,9 +180,21 @@ impl Distributor for Factoring {
         _ctx: &SessionCtx,
     ) -> Result<Outcome> {
         let out = factoring::run_factoring(n, bench, self.factor, self.weighting)?;
+        // imbalance of the dynamic schedule: per-processor total busy time
+        // over the ranks that executed anything — apps consume this instead
+        // of probing the workload a second time
+        let active: Vec<f64> = out
+            .busy
+            .iter()
+            .zip(&out.executed)
+            .filter(|(_, &e)| e > 0)
+            .map(|(&t, _)| t)
+            .collect();
+        let imbalance = max_relative_imbalance(&active);
         let mut o = Outcome::immediate(self.name(), Distribution::OneD(out.executed));
         o.benchmark_steps = out.rounds;
         o.total_virtual_s = out.total_s;
+        o.imbalance = imbalance;
         // the factoring rounds WERE the computation — flag it so apps don't
         // charge a second execution phase on top
         o.executes_workload = true;
@@ -583,6 +596,10 @@ mod tests {
             .unwrap();
         assert_eq!(out.distribution.as_1d().unwrap().iter().sum::<u64>(), 1000);
         assert!(out.benchmark_steps >= 2);
+        assert!(out.executes_workload);
+        // the dynamic schedule's own busy-time imbalance is reported, so
+        // apps don't have to probe the workload a second time to get one
+        assert!(out.imbalance.is_finite() && out.imbalance >= 0.0);
     }
 
     #[test]

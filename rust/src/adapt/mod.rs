@@ -15,6 +15,8 @@
 //! - [`AdaptiveSession`] — the builder that owns the cross-cutting
 //!   concerns exactly once: accuracy, model-store open + warm-start
 //!   seeding + post-run observation flush, fault policy, trace sink;
+//! - [`WorkloadReport`] — the partition/comm/compute cost breakdown every
+//!   workload app reports, with the shared probe-phase accounting;
 //! - [`registry`] — the name-keyed strategy table behind
 //!   [`Strategy::parse`] and the CLI.
 //!
@@ -26,6 +28,7 @@
 pub mod distributor;
 pub mod outcome;
 pub mod registry;
+pub mod report;
 pub mod session;
 
 pub use distributor::{
@@ -34,4 +37,5 @@ pub use distributor::{
 };
 pub use outcome::{Distribution, Observations, Outcome};
 pub use registry::{AppResources, AppResources2d, Strategy, StrategyEntry};
+pub use report::{probe_compute, ComputePhase, PartitionRounds, WorkloadReport};
 pub use session::AdaptiveSession;

@@ -1,0 +1,255 @@
+//! [`WorkloadReport`] — the cost breakdown every workload application
+//! reports, plus the shared compute-phase accounting.
+//!
+//! Before this module each app assembled its own report struct from the
+//! same ingredients (partition cost off the virtual clock, comm charges,
+//! a probed compute phase, imbalance of the final distribution). The
+//! matmul, Jacobi and LU apps now share one shape and one probe helper;
+//! app-specific extras (the row distribution, sweep counts, panel counts)
+//! wrap a `WorkloadReport` and `Deref` to it.
+
+use super::outcome::{Observations, Outcome};
+use super::registry::Strategy;
+use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::error::Result;
+use crate::fpm::PiecewiseModel;
+use crate::util::stats::max_relative_imbalance;
+
+/// Timing breakdown of one application run. All times are virtual seconds
+/// on the modeled cluster (wall-derived in real execution mode).
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub strategy: Strategy,
+    /// Problem size (matrix side, grid side — the app's `n`).
+    pub n: u64,
+    /// Processor count.
+    pub p: usize,
+    /// Partitioning cost (benchmark steps + collectives). Zero for Even;
+    /// for FFMPA the partitioning itself (model building is reported
+    /// separately, as in the paper). For iterative workloads this sums
+    /// every repartitioning round.
+    pub partition_s: f64,
+    /// Leader wall time spent in partitioning compute (real seconds).
+    pub partition_wall_s: f64,
+    /// FFMPA model construction cost (virtual, parallel), if applicable.
+    pub model_build_s: Option<f64>,
+    /// Data distribution + per-phase exchanges (halos, panel broadcasts).
+    pub comm_s: f64,
+    /// The computation itself. Zero for dynamic strategies (factoring),
+    /// whose execution is already inside `partition_s`.
+    pub compute_s: f64,
+    /// partition_s + comm_s + compute_s — the paper's "application,
+    /// including DFPA" column.
+    pub total_s: f64,
+    /// Parallel benchmark steps across all partitioning rounds (DFPA
+    /// iterations, CPM's single benchmark, 0 for Even/FFMPA).
+    pub iterations: usize,
+    /// Load imbalance of the final distribution.
+    pub imbalance: f64,
+    /// Whether the run was seeded from a persistent model store.
+    pub warm_started: bool,
+    /// Whether every partitioning round met its termination criterion.
+    pub converged: bool,
+}
+
+/// The per-round partition bookkeeping every iterative workload repeats:
+/// partition time off the virtual clock, benchmark-step and wall totals,
+/// the round-0-only store flags, and the carry models that warm-start the
+/// run's later repartitioning rounds.
+#[derive(Debug, Clone)]
+pub struct PartitionRounds {
+    pub partition_s: f64,
+    pub partition_wall_s: f64,
+    /// Benchmark steps summed over all rounds.
+    pub iterations: usize,
+    /// Whether the *store* seeded round 0 (later rounds are always warm
+    /// through the carry, which says nothing about the store).
+    pub warm_started: bool,
+    pub model_build_s: Option<f64>,
+    pub converged: bool,
+    /// Rounds absorbed so far.
+    pub rounds: usize,
+    /// Everything measured this run, per processor.
+    pub carry: Vec<PiecewiseModel>,
+}
+
+impl PartitionRounds {
+    pub fn new(p: usize) -> Self {
+        Self {
+            partition_s: 0.0,
+            partition_wall_s: 0.0,
+            iterations: 0,
+            warm_started: false,
+            model_build_s: None,
+            converged: true,
+            rounds: 0,
+            carry: vec![PiecewiseModel::new(); p],
+        }
+    }
+
+    /// The carry seed for the next `run_1d_seeded` call: `None` on the
+    /// first round (the store alone seeds it), the accumulated
+    /// observations after.
+    pub fn seed(&self) -> Option<&[PiecewiseModel]> {
+        if self.rounds == 0 {
+            None
+        } else {
+            Some(&self.carry)
+        }
+    }
+
+    /// Fold one round's outcome in; `elapsed_s` is the virtual-clock delta
+    /// the partition phase cost.
+    pub fn absorb(&mut self, outcome: &Outcome, elapsed_s: f64) {
+        self.partition_s += elapsed_s;
+        self.partition_wall_s += outcome.partition_wall_s;
+        self.iterations += outcome.benchmark_steps;
+        self.converged &= outcome.converged;
+        if self.rounds == 0 {
+            self.warm_started = outcome.warm_started;
+            self.model_build_s = outcome.model_build_s;
+        }
+        if let Observations::OneD(obs) = &outcome.observations {
+            for (c, o) in self.carry.iter_mut().zip(obs) {
+                c.absorb(o);
+            }
+        }
+        self.rounds += 1;
+    }
+}
+
+/// What one probed compute phase cost, and how balanced it ran.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputePhase {
+    pub compute_s: f64,
+    pub imbalance: f64,
+}
+
+impl ComputePhase {
+    /// The compute phase of a workload-executing strategy (factoring): the
+    /// computation already happened inside the partition phase, so nothing
+    /// more may be charged — re-running the workload as a probe would put
+    /// a second full execution on the virtual clock that a `compute_s = 0`
+    /// refund never undoes. Imbalance comes from the outcome's own
+    /// per-processor execution times.
+    pub fn already_executed(outcome: &Outcome) -> Self {
+        Self {
+            compute_s: 0.0,
+            imbalance: outcome.imbalance,
+        }
+    }
+}
+
+/// Run one probe step of `units` on the cluster, scale it to `steps`
+/// kernel steps, and charge the remainder to the virtual clock (the probe
+/// itself is already on it). Returns the phase cost and the imbalance over
+/// the processors that participated.
+pub fn probe_compute(
+    cluster: &mut VirtualCluster,
+    units: &[u64],
+    steps: f64,
+) -> Result<ComputePhase> {
+    let step = cluster.run_1d(units)?;
+    let step_max = step.times.iter().cloned().fold(0.0f64, f64::max);
+    let compute_s = step_max * steps;
+    cluster.charge(compute_s - step.virtual_cost_s.min(compute_s));
+    let active: Vec<f64> = step
+        .times
+        .iter()
+        .zip(units)
+        .filter(|(_, &u)| u > 0)
+        .map(|(&t, _)| t)
+        .collect();
+    Ok(ComputePhase {
+        compute_s,
+        imbalance: max_relative_imbalance(&active),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::comm::CommModel;
+    use crate::cluster::executor::NodeExecutor;
+    use crate::cluster::faults::FaultPlan;
+    use crate::cluster::node::build_nodes;
+    use crate::cluster::presets;
+    use crate::fpm::analytic::Footprint;
+
+    fn mini_cluster() -> VirtualCluster {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+    }
+
+    #[test]
+    fn probe_scales_and_charges_the_clock() {
+        let mut c = mini_cluster();
+        let t0 = c.now();
+        let phase = probe_compute(&mut c, &[100_000, 100_000, 100_000, 100_000], 10.0).unwrap();
+        assert!(phase.compute_s > 0.0);
+        // the clock advanced by at least the whole scaled phase
+        assert!(c.now() - t0 >= phase.compute_s - 1e-12);
+        assert!(phase.imbalance >= 0.0);
+    }
+
+    #[test]
+    fn idle_processors_do_not_skew_imbalance() {
+        let mut c = mini_cluster();
+        let phase = probe_compute(&mut c, &[200_000, 0, 200_000, 0], 1.0).unwrap();
+        // only the two active processors participate in the imbalance
+        assert!(phase.imbalance.is_finite());
+    }
+
+    #[test]
+    fn already_executed_charges_nothing() {
+        use crate::adapt::{Distribution, Outcome};
+        let mut o = Outcome::immediate("factoring", Distribution::OneD(vec![1]));
+        o.imbalance = 0.25;
+        let phase = ComputePhase::already_executed(&o);
+        assert_eq!(phase.compute_s, 0.0);
+        assert_eq!(phase.imbalance, 0.25);
+    }
+
+    #[test]
+    fn partition_rounds_accumulate_and_carry() {
+        use crate::adapt::{Distribution, Outcome};
+        let mut rounds = PartitionRounds::new(2);
+        assert!(rounds.seed().is_none(), "round 0 seeds from the store alone");
+
+        let mut first = Outcome::immediate("dfpa", Distribution::OneD(vec![3, 7]));
+        first.benchmark_steps = 5;
+        first.warm_started = true;
+        first.observations = Observations::OneD(vec![
+            PiecewiseModel::constant(3.0, 10.0),
+            PiecewiseModel::constant(7.0, 30.0),
+        ]);
+        rounds.absorb(&first, 1.5);
+        // round-0 flags captured; carry holds the observations
+        assert!(rounds.warm_started);
+        assert_eq!(rounds.iterations, 5);
+        assert_eq!(rounds.seed().unwrap()[1].len(), 1);
+
+        let mut second = Outcome::immediate("dfpa", Distribution::OneD(vec![4, 6]));
+        second.benchmark_steps = 2;
+        second.converged = false;
+        second.observations = Observations::OneD(vec![
+            PiecewiseModel::constant(4.0, 11.0),
+            PiecewiseModel::new(),
+        ]);
+        rounds.absorb(&second, 0.5);
+        // warm_started stays the round-0 value; everything else accumulates
+        assert!(rounds.warm_started);
+        assert!(!rounds.converged);
+        assert_eq!(rounds.rounds, 2);
+        assert_eq!(rounds.iterations, 7);
+        assert!((rounds.partition_s - 2.0).abs() < 1e-12);
+        assert_eq!(rounds.carry[0].len(), 2, "carry accumulates across rounds");
+        assert_eq!(rounds.carry[1].len(), 1);
+    }
+}

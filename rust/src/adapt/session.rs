@@ -115,6 +115,22 @@ impl AdaptiveSession {
         bench: &mut dyn Benchmarker,
         keys: &[ModelKey],
     ) -> Result<Outcome> {
+        self.run_1d_seeded(dist, n, bench, keys, None)
+    }
+
+    /// [`run_1d`](Self::run_1d), additionally seeded with models learned
+    /// *earlier in the same application run* — what an iterative workload
+    /// (Jacobi sweeps, LU panel steps) carries between its repartitioning
+    /// rounds. Carry models merge into the stored ones per processor, the
+    /// carry winning on re-measured sizes (it is fresher than the store).
+    pub fn run_1d_seeded(
+        &self,
+        dist: &mut dyn Distributor,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        keys: &[ModelKey],
+        carry: Option<&[PiecewiseModel]>,
+    ) -> Result<Outcome> {
         // strategies that neither warm-start nor observe skip the store
         // entirely — no warm-model parsing, and no advisory writer lock
         // taken away from a concurrent run that actually needs it
@@ -123,9 +139,28 @@ impl AdaptiveSession {
         } else {
             None
         };
-        let warm_start = match &store {
-            Some(s) if !keys.is_empty() => s.warm_models(keys)?.map(WarmStart::new),
+        let stored = match &store {
+            Some(s) if !keys.is_empty() => s.warm_models(keys)?,
             _ => None,
+        };
+        let carry = carry.filter(|ms| ms.iter().any(|m| !m.is_empty()));
+        let warm_start = match (stored, carry) {
+            (Some(mut stored), Some(carry)) => {
+                if stored.len() != carry.len() {
+                    return Err(HfpmError::InvalidArg(format!(
+                        "carry seeds {} models for {} store keys",
+                        carry.len(),
+                        stored.len()
+                    )));
+                }
+                for (s, c) in stored.iter_mut().zip(carry) {
+                    s.absorb(c);
+                }
+                Some(WarmStart::new(stored))
+            }
+            (Some(stored), None) => Some(WarmStart::new(stored)),
+            (None, Some(carry)) => Some(WarmStart::new(carry.to_vec())),
+            (None, None) => None,
         };
         let ctx = SessionCtx {
             epsilon: self.epsilon,
@@ -187,6 +222,22 @@ impl AdaptiveSession {
         let out = dist.distribute(m, n, bench, &ctx)?;
         if let Some(s) = &store {
             if let Observations::TwoD(obs) = &out.observations {
+                // a shape mismatch between the observation grid and the key
+                // grid must surface, not silently zip-truncate away columns
+                // of measurements (record_run already rejects row
+                // mismatches the same way)
+                if !keys.is_empty()
+                    && (obs.len() != keys.len()
+                        || obs.iter().any(|col| col.len() != rows))
+                {
+                    return Err(HfpmError::InvalidArg(format!(
+                        "2D observations ({} columns of {:?} rows) do not \
+                         match the model-key grid ({} columns of {rows} rows)",
+                        obs.len(),
+                        obs.iter().map(|c| c.len()).collect::<Vec<_>>(),
+                        keys.len()
+                    )));
+                }
                 for (col_keys, col_obs) in keys.iter().zip(obs) {
                     s.record_run(col_keys, col_obs, &self.merge_policy)?;
                 }

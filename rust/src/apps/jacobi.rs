@@ -1,0 +1,396 @@
+//! The iteratively-rebalanced 2D Jacobi stencil application.
+//!
+//! A five-point Jacobi relaxation over an `n × n` grid, rows sliced over p
+//! heterogeneous processors. Unlike the one-shot matmul apps, the workload
+//! is *iterative*: the same sweep kernel runs `sweeps` times, and every
+//! `rebalance_every` sweeps the row distribution is recomputed from the
+//! speed functions learned so far — the paper's self-adaptable scenario
+//! where the partitioning algorithm amortizes across phases of one run,
+//! not only across invocations:
+//!
+//! 1. partition the rows through the [`AdaptiveSession`] (DFPA benchmark
+//!    steps run the stencil kernel itself);
+//! 2. move the rows that changed owner (scatter deltas, accounted by the
+//!    comm model) — the first round distributes the whole grid;
+//! 3. run `rebalance_every` sweeps: each costs the slowest processor's
+//!    sweep time plus a boundary-row halo exchange with its neighbors;
+//! 4. repeat from 1, seeding the partitioner with everything earlier
+//!    rounds observed (*within-run* warm start) on top of whatever a
+//!    persistent model store holds from previous invocations (keyed
+//!    `jacobi_n{n}` per host, so runs warm-start across processes too);
+//! 5. gather the converged grid.
+//!
+//! [`verify_sweeps`] checks the row-sliced sweep against a naive
+//! whole-grid oracle, so the decomposition arithmetic is trusted the same
+//! way the matmul apps trust `matmul_ref`.
+
+use super::matmul1d::RowBench;
+use crate::adapt::{
+    probe_compute, registry::AppResources, AdaptiveSession, ComputePhase, PartitionRounds,
+    WorkloadReport,
+};
+use crate::cluster::comm::CommModel;
+use crate::cluster::executor::NodeExecutor;
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::node::{build_nodes, SimNode};
+use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::config::ClusterSpec;
+use crate::error::{HfpmError, Result};
+use crate::fpm::analytic::Footprint;
+use crate::modelstore::ModelKey;
+
+pub use crate::adapt::Strategy;
+
+/// Configuration of one Jacobi run.
+#[derive(Debug, Clone)]
+pub struct JacobiConfig {
+    /// Grid side (n × n points); rows are the distribution unit.
+    pub n: u64,
+    /// Total relaxation sweeps.
+    pub sweeps: usize,
+    /// Repartition the rows every this many sweeps.
+    pub rebalance_every: usize,
+    /// Termination accuracy for the iterative strategies.
+    pub epsilon: f64,
+    pub strategy: Strategy,
+    /// Element size in bytes for footprint/comm (doubles, as in the paper).
+    pub elem_bytes: u64,
+    pub max_iters: usize,
+    /// Persistent FPM model store directory (see `Matmul1dConfig`).
+    pub model_store: Option<std::path::PathBuf>,
+}
+
+impl JacobiConfig {
+    pub fn new(n: u64, strategy: Strategy) -> Self {
+        Self {
+            n,
+            sweeps: 12,
+            rebalance_every: 4,
+            epsilon: 0.05,
+            strategy,
+            elem_bytes: 8,
+            max_iters: 100,
+            model_store: None,
+        }
+    }
+
+    /// Model-store key for one host of the cluster under this config.
+    pub fn store_key(&self, host: &str) -> ModelKey {
+        ModelKey::new(host, &format!("jacobi_n{}", self.n), "sim")
+    }
+}
+
+/// Report of one Jacobi run: the shared breakdown plus stencil-specific
+/// counters. `compute_s` covers the sweeps, `comm_s` the row movement plus
+/// the per-sweep halo exchanges.
+#[derive(Debug, Clone)]
+pub struct JacobiReport {
+    /// Shared partition/comm/compute breakdown.
+    pub core: WorkloadReport,
+    /// Final row distribution.
+    pub d: Vec<u64>,
+    /// Sweeps executed.
+    pub sweeps: usize,
+    /// Partitioning rounds executed (≥ 1).
+    pub rebalances: usize,
+}
+
+impl std::ops::Deref for JacobiReport {
+    type Target = WorkloadReport;
+
+    fn deref(&self) -> &WorkloadReport {
+        &self.core
+    }
+}
+
+fn build_cluster(
+    spec: &ClusterSpec,
+    cfg: &JacobiConfig,
+    faults: FaultPlan,
+) -> (VirtualCluster, Vec<SimNode>) {
+    // two n-point row slabs per unit (u and u_next) plus the halo rows
+    let fp = Footprint {
+        per_unit: 2.0 * cfg.elem_bytes as f64,
+        fixed: (2 * cfg.n * cfg.elem_bytes) as f64,
+    };
+    let nodes = build_nodes(spec, fp, 32);
+    let execs: Vec<Box<dyn NodeExecutor>> = nodes
+        .iter()
+        .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
+        .collect();
+    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), faults);
+    (cluster, nodes)
+}
+
+/// Per-sweep halo exchange cost: neighboring active ranks swap one
+/// boundary row each way; the exchanges run pairwise in parallel, so a
+/// sweep pays the slowest link twice (send down, send up).
+fn halo_cost(comm: &CommModel, d: &[u64], row_bytes: u64) -> f64 {
+    let active: Vec<usize> = d
+        .iter()
+        .enumerate()
+        .filter(|(_, &r)| r > 0)
+        .map(|(i, _)| i)
+        .collect();
+    let worst = active
+        .windows(2)
+        .map(|w| comm.p2p(w[0], w[1], row_bytes))
+        .fold(0.0f64, f64::max);
+    2.0 * worst
+}
+
+/// Row-movement cost of adopting a new distribution: every row that
+/// changes owner transits the leader (scatter semantics, like the matmul
+/// apps' slice distribution). The first round moves the whole grid.
+fn redistribution_cost(comm: &CommModel, old: &[u64], new: &[u64], row_bytes: u64) -> f64 {
+    let moved: Vec<u64> = old
+        .iter()
+        .zip(new)
+        .map(|(&a, &b)| a.abs_diff(b) * row_bytes)
+        .collect();
+    comm.distribute_slices(0, &moved)
+}
+
+/// Run the application and report its cost breakdown.
+pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
+    let p = spec.size();
+    if cfg.n < p as u64 {
+        return Err(HfpmError::InvalidArg(format!(
+            "grid side {} smaller than processor count {p}",
+            cfg.n
+        )));
+    }
+    if cfg.sweeps == 0 || cfg.rebalance_every == 0 {
+        return Err(HfpmError::InvalidArg(
+            "jacobi needs at least one sweep and a positive rebalance period".into(),
+        ));
+    }
+    let session = AdaptiveSession::new()
+        .epsilon(cfg.epsilon)
+        .max_iters(cfg.max_iters)
+        .model_store(cfg.model_store.clone());
+    let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone());
+    let mut dist = cfg.strategy.entry().make_1d(&AppResources {
+        nodes: &nodes,
+        n: cfg.n,
+        unit_scale: cfg.n as f64, // a row is n point-updates
+        noise_rel: spec.noise_rel,
+        seed: spec.seed,
+    })?;
+    let keys: Vec<ModelKey> = cluster.hosts().iter().map(|h| cfg.store_key(h)).collect();
+    let comm = cluster.comm().clone();
+    let row_bytes = cfg.n * cfg.elem_bytes;
+
+    let mut rounds = PartitionRounds::new(p);
+    let mut d: Vec<u64> = vec![0; p];
+    let mut comm_s = 0.0f64;
+    let mut compute_s = 0.0f64;
+    let mut imbalance = 0.0f64;
+    let mut sweeps_done = 0usize;
+
+    while sweeps_done < cfg.sweeps {
+        let round = (cfg.sweeps - sweeps_done).min(cfg.rebalance_every);
+
+        // --- partition: benchmark steps run the stencil kernel ---
+        let before = cluster.now();
+        let outcome = {
+            let mut bench = RowBench {
+                cluster: &mut cluster,
+                n: cfg.n,
+            };
+            session.run_1d_seeded(dist.as_mut(), cfg.n, &mut bench, &keys, rounds.seed())?
+        };
+        rounds.absorb(&outcome, cluster.now() - before);
+        let new_d = outcome.distribution.clone().into_1d()?;
+
+        // --- move the rows that changed owner ---
+        let move_s = redistribution_cost(&comm, &d, &new_d, row_bytes);
+        cluster.charge(move_s);
+        comm_s += move_s;
+        d = new_d;
+
+        // --- the sweeps of this round ---
+        let units: Vec<u64> = d.iter().map(|&r| r * cfg.n).collect();
+        // a workload-executing strategy (factoring) ran one full sweep
+        // while scheduling; only the rest of the round remains
+        let remaining = if outcome.executes_workload {
+            round - 1
+        } else {
+            round
+        };
+        let phase = if remaining > 0 {
+            probe_compute(&mut cluster, &units, remaining as f64)?
+        } else {
+            ComputePhase::already_executed(&outcome)
+        };
+        compute_s += phase.compute_s;
+        imbalance = phase.imbalance;
+
+        let halo_s = halo_cost(&comm, &d, row_bytes) * round as f64;
+        cluster.charge(halo_s);
+        comm_s += halo_s;
+        sweeps_done += round;
+    }
+
+    // --- gather the converged grid ---
+    let gather_bytes: Vec<u64> = d.iter().map(|&r| r * row_bytes).collect();
+    let gather_s = comm.distribute_slices(0, &gather_bytes);
+    cluster.charge(gather_s);
+    comm_s += gather_s;
+
+    Ok(JacobiReport {
+        core: WorkloadReport {
+            strategy: cfg.strategy,
+            n: cfg.n,
+            p,
+            partition_s: rounds.partition_s,
+            partition_wall_s: rounds.partition_wall_s,
+            model_build_s: rounds.model_build_s,
+            comm_s,
+            compute_s,
+            total_s: rounds.partition_s + comm_s + compute_s,
+            iterations: rounds.iterations,
+            imbalance,
+            warm_started: rounds.warm_started,
+            converged: rounds.converged,
+        },
+        d,
+        sweeps: sweeps_done,
+        rebalances: rounds.rounds,
+    })
+}
+
+// --------------------------------------------------------------------------
+// Numerics: the actual stencil, verified against a naive oracle
+// --------------------------------------------------------------------------
+
+/// One five-point Jacobi sweep over the whole grid (Dirichlet borders kept
+/// fixed) — the naive oracle.
+pub fn sweep_ref(u: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(u.len(), n * n);
+    let mut out = u.to_vec();
+    for i in 1..n.saturating_sub(1) {
+        for j in 1..n - 1 {
+            out[i * n + j] = 0.25
+                * (u[(i - 1) * n + j] + u[(i + 1) * n + j] + u[i * n + j - 1] + u[i * n + j + 1]);
+        }
+    }
+    out
+}
+
+/// One sweep computed the way the distributed app does: each processor
+/// updates its row slice using its neighbors' boundary rows (the halo),
+/// and the slices are stitched back together.
+pub fn sweep_sliced(u: &[f64], n: usize, d: &[u64]) -> Vec<f64> {
+    assert_eq!(u.len(), n * n);
+    assert_eq!(d.iter().sum::<u64>() as usize, n);
+    let mut out = u.to_vec();
+    let mut lo = 0usize;
+    for &rows in d {
+        let hi = lo + rows as usize;
+        for i in lo.max(1)..hi.min(n.saturating_sub(1)) {
+            for j in 1..n - 1 {
+                // rows i-1 / i+1 may live on the neighboring slice — in the
+                // real exchange they arrive as halo rows; here they are
+                // reads outside [lo, hi), which is exactly what the halo
+                // carries
+                out[i * n + j] = 0.25
+                    * (u[(i - 1) * n + j]
+                        + u[(i + 1) * n + j]
+                        + u[i * n + j - 1]
+                        + u[i * n + j + 1]);
+            }
+        }
+        lo = hi;
+    }
+    out
+}
+
+/// Run `sweeps` sliced sweeps and compare against the oracle; returns the
+/// maximum absolute divergence (0 when the decomposition is exact).
+pub fn verify_sweeps(n: usize, d: &[u64], sweeps: usize, seed: u64) -> f64 {
+    let mut rng = crate::util::rng::Pcg32::seeded(seed);
+    let mut reference: Vec<f64> = (0..n * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let mut sliced = reference.clone();
+    for _ in 0..sweeps {
+        reference = sweep_ref(&reference, n);
+        sliced = sweep_sliced(&sliced, n, d);
+    }
+    reference
+        .iter()
+        .zip(&sliced)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::testkit::unique_temp_dir;
+
+    #[test]
+    fn sliced_sweep_matches_oracle() {
+        // the distributed decomposition is numerically identical to the
+        // whole-grid sweep, including uneven and zero-row slices
+        assert_eq!(verify_sweeps(24, &[6, 6, 6, 6], 5, 1), 0.0);
+        assert_eq!(verify_sweeps(24, &[1, 11, 0, 12], 5, 2), 0.0);
+    }
+
+    #[test]
+    fn report_totals_are_consistent() {
+        let spec = presets::mini4();
+        let cfg = JacobiConfig::new(512, Strategy::Dfpa);
+        let r = run(&spec, &cfg).unwrap();
+        assert_eq!(r.d.iter().sum::<u64>(), 512);
+        assert_eq!(r.sweeps, cfg.sweeps);
+        assert_eq!(r.rebalances, 3); // 12 sweeps / rebalance every 4
+        assert!((r.total_s - (r.partition_s + r.comm_s + r.compute_s)).abs() < 1e-9);
+        assert!(r.compute_s > 0.0);
+        assert!(r.iterations >= 1);
+    }
+
+    #[test]
+    fn dfpa_beats_even_on_heterogeneous_cluster() {
+        let spec = presets::mini4();
+        let r_even = run(&spec, &JacobiConfig::new(1024, Strategy::Even)).unwrap();
+        let r_dfpa = run(&spec, &JacobiConfig::new(1024, Strategy::Dfpa)).unwrap();
+        assert!(
+            r_dfpa.compute_s < r_even.compute_s,
+            "dfpa {} vs even {}",
+            r_dfpa.compute_s,
+            r_even.compute_s
+        );
+    }
+
+    #[test]
+    fn store_round_trip_warm_starts() {
+        let dir = unique_temp_dir("jacobi-store");
+        let spec = presets::mini4();
+        let mut cfg = JacobiConfig::new(1024, Strategy::Dfpa);
+        cfg.model_store = Some(dir.clone());
+        let cold = run(&spec, &cfg).unwrap();
+        assert!(!cold.warm_started, "empty store must cold-start");
+        let warm = run(&spec, &cfg).unwrap();
+        assert!(warm.warm_started, "populated store must warm-start");
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let spec = presets::mini4();
+        let mut cfg = JacobiConfig::new(1024, Strategy::Even);
+        cfg.sweeps = 0;
+        assert!(run(&spec, &cfg).is_err());
+        let mut cfg = JacobiConfig::new(1024, Strategy::Even);
+        cfg.rebalance_every = 0;
+        assert!(run(&spec, &cfg).is_err());
+        assert!(run(&spec, &JacobiConfig::new(2, Strategy::Even)).is_err());
+    }
+}

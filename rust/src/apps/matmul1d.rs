@@ -19,7 +19,9 @@
 //! checks `C == A·B` against a naive rust oracle.
 
 use super::workload::{matmul_ref, max_abs_diff, row_ranges, Matrix};
-use crate::adapt::{registry::AppResources, AdaptiveSession};
+use crate::adapt::{
+    probe_compute, registry::AppResources, AdaptiveSession, ComputePhase, WorkloadReport,
+};
 use crate::cluster::comm::CommModel;
 use crate::cluster::executor::{ExecutionMode, NodeExecutor};
 use crate::cluster::faults::FaultPlan;
@@ -31,7 +33,6 @@ use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
 use crate::modelstore::ModelKey;
 use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
-use crate::util::stats::max_relative_imbalance;
 
 /// Partitioning strategy tag — now a registry lookup in the adapt layer
 /// (kept re-exported here so `apps::matmul1d::Strategy` keeps working).
@@ -75,37 +76,24 @@ impl Matmul1dConfig {
     }
 }
 
-/// Timing report of one run. All times are virtual seconds on the modeled
-/// cluster (wall-derived in real mode).
+/// Timing report of one run: the shared [`WorkloadReport`] breakdown
+/// (deref'd, so `r.partition_s`, `r.compute_s`, `r.total_s`, … read
+/// directly) plus the final row distribution. `compute_s` is the matrix
+/// multiplication itself; `comm_s` is the B bcast + A scatter + C gather.
 #[derive(Debug, Clone)]
 pub struct Matmul1dReport {
-    pub strategy: Strategy,
-    pub n: u64,
-    pub p: usize,
+    /// Shared partition/comm/compute breakdown.
+    pub core: WorkloadReport,
     /// Final row distribution.
     pub d: Vec<u64>,
-    /// Partitioning cost (DFPA/CPM benchmark steps + collectives). Zero
-    /// for Even; for FFMPA the partitioning itself (model building is
-    /// reported separately, as in the paper).
-    pub partition_s: f64,
-    /// Leader wall time spent in partitioning compute (real seconds).
-    pub partition_wall_s: f64,
-    /// FFMPA model construction cost (virtual, parallel), if applicable.
-    pub model_build_s: Option<f64>,
-    /// Data distribution (B bcast + A scatter) + C gather.
-    pub comm_s: f64,
-    /// The matrix multiplication itself. Zero for dynamic strategies
-    /// (factoring), whose execution is already inside `partition_s`.
-    pub matmul_s: f64,
-    /// partition_s + comm_s + matmul_s — the paper's "application,
-    /// including DFPA" column.
-    pub total_s: f64,
-    /// DFPA iterations (1 for CPM's single benchmark, 0 for Even/FFMPA).
-    pub iterations: usize,
-    /// Load imbalance of the final distribution.
-    pub imbalance: f64,
-    /// Whether DFPA warm-started from a persistent model store.
-    pub warm_started: bool,
+}
+
+impl std::ops::Deref for Matmul1dReport {
+    type Target = WorkloadReport;
+
+    fn deref(&self) -> &WorkloadReport {
+        &self.core
+    }
 }
 
 /// Row-granularity benchmarker: DFPA distributes rows, the cluster kernel
@@ -214,11 +202,7 @@ pub fn run_with_faults(
         session.run_1d(dist.as_mut(), cfg.n, &mut bench, &keys)?
     };
     let partition_s = cluster.now() - before_partition;
-    let iterations = outcome.benchmark_steps;
-    let partition_wall = outcome.partition_wall_s;
-    let model_build_s = outcome.model_build_s;
-    let warm_started = outcome.warm_started;
-    let d: Vec<u64> = outcome.distribution.into_1d()?;
+    let d: Vec<u64> = outcome.distribution.clone().into_1d()?;
 
     // --- phase 2: data distribution ------------------------------------------
     let comm = cluster.comm().clone();
@@ -231,49 +215,36 @@ pub fn run_with_faults(
     cluster.charge(comm_s);
 
     // --- phase 3: the multiplication -----------------------------------------
-    // one kernel step per pivot column: n × (rank-1 update at rows_i·n units)
-    let units: Vec<u64> = d.iter().map(|&r| r * cfg.n).collect();
-    let step = cluster.run_1d(&units)?;
-    let step_max = step
-        .times
-        .iter()
-        .cloned()
-        .fold(0.0f64, f64::max);
-    // a dynamic strategy (factoring) already executed the whole workload
-    // inside the partition phase — charging a second execution here would
-    // count the computation twice, so its matmul phase is zero and the
-    // probe step above only feeds the imbalance metric
-    let matmul_s = if outcome.executes_workload {
-        0.0
+    // one kernel step per pivot column: n × (rank-1 update at rows_i·n
+    // units). A dynamic strategy (factoring) already executed the whole
+    // workload inside the partition phase: probing it again would put a
+    // second full execution on the virtual clock that the compute_s = 0
+    // refund never undoes, so the phase is skipped outright and the
+    // imbalance comes from the schedule's own per-processor busy times.
+    let phase = if outcome.executes_workload {
+        ComputePhase::already_executed(&outcome)
     } else {
-        step_max * cfg.n as f64
+        let units: Vec<u64> = d.iter().map(|&r| r * cfg.n).collect();
+        probe_compute(&mut cluster, &units, cfg.n as f64)?
     };
-    // charge the remaining n-1 steps (the first is already on the clock)
-    cluster.charge(matmul_s - step.virtual_cost_s.min(matmul_s));
-
-    let active: Vec<f64> = step
-        .times
-        .iter()
-        .zip(&d)
-        .filter(|(_, &r)| r > 0)
-        .map(|(&t, _)| t)
-        .collect();
-    let imbalance = max_relative_imbalance(&active);
 
     Ok(Matmul1dReport {
-        strategy: cfg.strategy,
-        n: cfg.n,
-        p,
+        core: WorkloadReport {
+            strategy: cfg.strategy,
+            n: cfg.n,
+            p,
+            partition_s,
+            partition_wall_s: outcome.partition_wall_s,
+            model_build_s: outcome.model_build_s,
+            comm_s,
+            compute_s: phase.compute_s,
+            total_s: partition_s + comm_s + phase.compute_s,
+            iterations: outcome.benchmark_steps,
+            imbalance: phase.imbalance,
+            warm_started: outcome.warm_started,
+            converged: outcome.converged,
+        },
         d,
-        partition_s,
-        partition_wall_s: partition_wall,
-        model_build_s,
-        comm_s,
-        matmul_s,
-        total_s: partition_s + comm_s + matmul_s,
-        iterations,
-        imbalance,
-        warm_started,
     })
 }
 
@@ -361,9 +332,9 @@ mod tests {
         let cfg = Matmul1dConfig::new(1024, Strategy::Dfpa);
         let r = run(&spec, &cfg).unwrap();
         assert_eq!(r.d.iter().sum::<u64>(), 1024);
-        assert!((r.total_s - (r.partition_s + r.comm_s + r.matmul_s)).abs() < 1e-9);
+        assert!((r.total_s - (r.partition_s + r.comm_s + r.compute_s)).abs() < 1e-9);
         assert!(r.iterations >= 1);
-        assert!(r.matmul_s > 0.0);
+        assert!(r.compute_s > 0.0);
     }
 
     #[test]
@@ -377,20 +348,31 @@ mod tests {
         let r_even = run(&spec, &c_even).unwrap();
         let r_dfpa = run(&spec, &c_dfpa).unwrap();
         assert!(
-            r_dfpa.matmul_s < r_even.matmul_s,
+            r_dfpa.compute_s < r_even.compute_s,
             "dfpa {} vs even {}",
-            r_dfpa.matmul_s,
-            r_even.matmul_s
+            r_dfpa.compute_s,
+            r_even.compute_s
         );
     }
 
     #[test]
+    fn factoring_app_skips_the_second_execution() {
+        // regression: the probe step used to run the full workload again
+        // for workload-executing strategies, drifting the virtual clock
+        // away from the reported totals
+        let spec = presets::mini4();
+        let cfg = Matmul1dConfig::new(1024, Strategy::Factoring);
+        let r = run(&spec, &cfg).unwrap();
+        assert_eq!(r.d.iter().sum::<u64>(), 1024);
+        assert_eq!(r.compute_s, 0.0, "factoring executed inside partition_s");
+        assert!((r.total_s - (r.partition_s + r.comm_s)).abs() < 1e-9);
+        // imbalance comes from the schedule's busy times, not a re-probe
+        assert!(r.imbalance.is_finite() && r.imbalance >= 0.0);
+    }
+
+    #[test]
     fn repeated_runs_amortize_through_the_store() {
-        let dir = std::env::temp_dir().join(format!(
-            "hfpm-matmul1d-store-{}",
-            std::process::id()
-        ));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = crate::testkit::unique_temp_dir("matmul1d-store");
         let spec = presets::mini4();
         let mut cfg = Matmul1dConfig::new(2048, Strategy::Dfpa);
         cfg.model_store = Some(dir.clone());

@@ -240,11 +240,7 @@ mod tests {
 
     #[test]
     fn store_round_trips_across_2d_runs() {
-        let dir = std::env::temp_dir().join(format!(
-            "hfpm-matmul2d-store-{}",
-            std::process::id()
-        ));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = crate::testkit::unique_temp_dir("matmul2d-store");
         let spec = presets::mini4();
         let mut cfg = Matmul2dConfig::new(4096, Strategy::Dfpa);
         cfg.model_store = Some(dir.clone());

@@ -1,9 +1,15 @@
-//! The paper's applications: 1D (§3.1) and 2D (§3.2) heterogeneous
-//! parallel matrix multiplication, plus workload helpers.
+//! The workload applications over the adapt layer: the paper's 1D (§3.1)
+//! and 2D (§3.2) heterogeneous matrix multiplications, the iteratively
+//! rebalanced Jacobi stencil, right-looking block LU with a sliding active
+//! submatrix, plus workload helpers.
 
+pub mod jacobi;
+pub mod lu;
 pub mod matmul1d;
 pub mod matmul2d;
 pub mod workload;
 
+pub use jacobi::{JacobiConfig, JacobiReport};
+pub use lu::{LuConfig, LuReport};
 pub use matmul1d::{Matmul1dConfig, Matmul1dReport, Strategy};
 pub use matmul2d::{Matmul2dConfig, Matmul2dReport};

@@ -30,6 +30,9 @@ pub struct FactoringOutcome {
     pub total_s: f64,
     /// Per-round makespans.
     pub round_times: Vec<f64>,
+    /// Total busy time of each processor across all rounds — how evenly
+    /// the dynamic schedule actually loaded the machines.
+    pub busy: Vec<f64>,
 }
 
 /// Scheduling policy.
@@ -60,6 +63,7 @@ pub fn run_factoring<B: Benchmarker + ?Sized>(
     }
     let mut weights = vec![1.0f64; p]; // first round: even
     let mut executed = vec![0u64; p];
+    let mut busy = vec![0.0f64; p];
     let mut remaining = n;
     let mut total_s = 0.0;
     let mut round_times = Vec::new();
@@ -76,6 +80,7 @@ pub fn run_factoring<B: Benchmarker + ?Sized>(
         round_times.push(report.virtual_cost_s);
         for i in 0..p {
             executed[i] += d[i];
+            busy[i] += report.times[i];
         }
         remaining -= batch;
 
@@ -95,6 +100,7 @@ pub fn run_factoring<B: Benchmarker + ?Sized>(
         rounds: round_times.len(),
         total_s,
         round_times,
+        busy,
     })
 }
 
@@ -149,6 +155,16 @@ mod tests {
         let even_makespan = ConstantModel(10.0).time(500.0);
         let out = run_factoring(1000, &mut b, 0.5, Weighting::Adaptive).unwrap();
         assert!(out.total_s < even_makespan, "{} vs {even_makespan}", out.total_s);
+    }
+
+    #[test]
+    fn busy_times_accumulate_per_processor() {
+        let mut b = Stub(vec![ConstantModel(10.0), ConstantModel(30.0)]);
+        let out = run_factoring(1000, &mut b, 0.5, Weighting::Adaptive).unwrap();
+        assert_eq!(out.busy.len(), 2);
+        assert!(out.busy.iter().all(|&t| t > 0.0));
+        // every processor's busy time is bounded by the whole schedule
+        assert!(out.busy.iter().all(|&t| t <= out.total_s + 1e-12));
     }
 
     #[test]

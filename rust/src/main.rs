@@ -16,7 +16,7 @@
 //! ```
 
 use hfpm::adapt::{registry, AdaptiveSession, Strategy};
-use hfpm::apps::{matmul1d, matmul2d};
+use hfpm::apps::{jacobi, lu, matmul1d, matmul2d};
 use hfpm::cli::Args;
 use hfpm::cluster::executor::ExecutionMode;
 use hfpm::cluster::presets;
@@ -76,6 +76,8 @@ fn run(args: &Args) -> Result<()> {
         "cluster" => cmd_cluster(args),
         "run1d" => cmd_run1d(args),
         "run2d" => cmd_run2d(args),
+        "jacobi" => cmd_jacobi(args),
+        "lu" => cmd_lu(args),
         "verify" => cmd_verify(args),
         "trace" => cmd_trace(args),
         other => Err(HfpmError::InvalidArg(format!(
@@ -98,6 +100,14 @@ COMMANDS:
             runs warm-start
   run2d     2D matmul app (§3.2)        --cluster hcl --n 8192 --strategy ...
             [--model-store DIR]
+  jacobi    iterative 2D stencil        --cluster hcl15 --n 2048 [--sweeps 12]
+            [--rebalance-every 4] [--strategy dfpa|...] [--compare]
+            [--eps 0.05] [--model-store DIR]  rows repartitioned every k
+            sweeps from the models learned in earlier sweeps
+  lu        right-looking block LU      --cluster hcl15 --n 2048 [--block 64]
+            [--repartition-every 8] [--strategy dfpa|...] [--compare]
+            [--eps 0.05] [--model-store DIR]  the active submatrix shrinks
+            every panel step (speed functions queried at sliding sizes)
   verify    real PJRT e2e + correctness --n 512 [--cluster mini4] [--eps 0.1]
   trace     DFPA iteration trace        --cluster hcl15 --n 5120 [--out f.csv]
 ";
@@ -158,7 +168,7 @@ fn report_row_1d(t: &mut Table, r: &matmul1d::Matmul1dReport) {
         r.strategy.name().to_string(),
         r.n.to_string(),
         fdur(r.partition_s),
-        fdur(r.matmul_s),
+        fdur(r.compute_s),
         fdur(r.comm_s),
         fdur(r.total_s),
         r.iterations.to_string(),
@@ -173,12 +183,7 @@ fn cmd_run1d(args: &Args) -> Result<()> {
     let eps = args.get_f64("eps", 0.025)?;
     let mode = ExecutionMode::parse(&args.get_or_checked("mode", "sim")?)
         .ok_or_else(|| HfpmError::InvalidArg("--mode sim|real".into()))?;
-    let strategies: Vec<Strategy> = if args.has("compare") {
-        registry::compare_1d()
-    } else {
-        let s = args.get_or_checked("strategy", "dfpa")?;
-        vec![parse_strategy(&s)?]
-    };
+    let strategies = strategies_arg(args)?;
     let mut t = Table::new(
         &format!("1D matmul on `{}` (n={n}, ε={eps})", spec.name),
         &["strategy", "n", "partition", "matmul", "comm", "total", "iters", "imb %", "model build"],
@@ -230,6 +235,104 @@ fn cmd_run2d(args: &Args) -> Result<()> {
         ]);
         let warm = if r.warm_started { " (warm-started)" } else { "" };
         println!("{}: widths = {:?}{warm}", st.name(), r.widths);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn strategies_arg(args: &Args) -> Result<Vec<Strategy>> {
+    if args.has("compare") {
+        Ok(registry::compare_1d())
+    } else {
+        let s = args.get_or_checked("strategy", "dfpa")?;
+        Ok(vec![parse_strategy(&s)?])
+    }
+}
+
+fn cmd_jacobi(args: &Args) -> Result<()> {
+    let spec = cluster_arg(args, "hcl15")?;
+    let n = args.get_u64("n", 2048)?;
+    let sweeps = args.get_u64("sweeps", 12)? as usize;
+    let every = args.get_u64("rebalance-every", 4)? as usize;
+    let eps = args.get_f64("eps", 0.05)?;
+    let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let mut t = Table::new(
+        &format!(
+            "jacobi on `{}` (n={n}, {sweeps} sweeps, rebalance every {every}, ε={eps})",
+            spec.name
+        ),
+        &["strategy", "partition", "compute", "comm", "total", "bench steps", "rebal", "imb %"],
+    );
+    for s in strategies_arg(args)? {
+        let mut cfg = jacobi::JacobiConfig::new(n, s);
+        cfg.sweeps = sweeps;
+        cfg.rebalance_every = every;
+        cfg.epsilon = eps;
+        cfg.model_store = model_store.clone();
+        let r = jacobi::run(&spec, &cfg)?;
+        t.add_row(vec![
+            s.name().to_string(),
+            fdur(r.partition_s),
+            fdur(r.compute_s),
+            fdur(r.comm_s),
+            fdur(r.total_s),
+            r.iterations.to_string(),
+            r.rebalances.to_string(),
+            fnum(100.0 * r.imbalance, 1),
+        ]);
+        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        println!(
+            "{}: {} benchmark steps over {} rebalances, d = {}{warm}",
+            s.name(),
+            r.iterations,
+            r.rebalances,
+            compact(&r.d)
+        );
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_lu(args: &Args) -> Result<()> {
+    let spec = cluster_arg(args, "hcl15")?;
+    let n = args.get_u64("n", 2048)?;
+    let block = args.get_u64("block", 64)?;
+    let every = args.get_u64("repartition-every", 8)? as usize;
+    let eps = args.get_f64("eps", 0.05)?;
+    let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let mut t = Table::new(
+        &format!(
+            "block LU on `{}` (n={n}, b={block}, repartition every {every}, ε={eps})",
+            spec.name
+        ),
+        &["strategy", "partition", "compute", "comm", "total", "bench steps", "repart", "imb %"],
+    );
+    for s in strategies_arg(args)? {
+        let mut cfg = lu::LuConfig::new(n, s);
+        cfg.block = block;
+        cfg.repartition_every = every;
+        cfg.epsilon = eps;
+        cfg.model_store = model_store.clone();
+        let r = lu::run(&spec, &cfg)?;
+        t.add_row(vec![
+            s.name().to_string(),
+            fdur(r.partition_s),
+            fdur(r.compute_s),
+            fdur(r.comm_s),
+            fdur(r.total_s),
+            r.iterations.to_string(),
+            r.repartitions.to_string(),
+            fnum(100.0 * r.imbalance, 1),
+        ]);
+        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        println!(
+            "{}: {} panels, {} benchmark steps over {} repartitions, d₀ = {}{warm}",
+            s.name(),
+            r.panels,
+            r.iterations,
+            r.repartitions,
+            compact(&r.d)
+        );
     }
     print!("{}", t.render());
     Ok(())

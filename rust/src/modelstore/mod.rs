@@ -59,19 +59,25 @@ impl ModelKey {
         }
     }
 
-    /// File name for this key: sanitized components joined with `__`.
+    /// File name for this key: sanitized components joined with `__`, plus
+    /// a short hash of the *raw* key. The sanitizer maps `:`/`/` etc. to
+    /// `_` and the joiner is itself `__`, so distinct keys can share one
+    /// sanitized stem (host `gpu:0` vs `gpu_0`, or host `a__b` + kernel `c`
+    /// vs host `a` + kernel `b__c`); the hash keeps their files — and
+    /// therefore their speed histories — apart.
     pub fn file_name(&self) -> String {
-        fn clean(s: &str) -> String {
-            s.chars()
-                .map(|c| {
-                    if c.is_ascii_alphanumeric() || matches!(c, '.' | '-' | '_') {
-                        c
-                    } else {
-                        '_'
-                    }
-                })
-                .collect()
-        }
+        format!(
+            "{}__{}__{}-{:08x}.json",
+            clean(&self.host),
+            clean(&self.kernel),
+            clean(&self.mode),
+            self.raw_hash() as u32
+        )
+    }
+
+    /// The pre-hash file name older stores used. Still read as a fallback
+    /// (see [`ModelStore::load`]), never written.
+    pub fn legacy_file_name(&self) -> String {
         format!(
             "{}__{}__{}.json",
             clean(&self.host),
@@ -79,6 +85,35 @@ impl ModelKey {
             clean(&self.mode)
         )
     }
+
+    /// FNV-1a over the raw components with a separator byte no component
+    /// can contain ambiguously — two keys hash equal only if all three
+    /// components match.
+    fn raw_hash(&self) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h: u64 = 0xcbf29ce484222325;
+        for part in [&self.host, &self.kernel, &self.mode] {
+            for &b in part.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+            h ^= 0x1f;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
+}
+
+fn clean(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '-' | '_') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 /// Current wall-clock time as unix seconds (0.0 on a pre-epoch clock —
@@ -433,20 +468,35 @@ impl ModelStore {
     }
 
     /// Load one stored model, `Ok(None)` if the key has no file yet.
+    /// Stores written before file names carried a key hash are still read:
+    /// when the hashed name is absent the legacy name is tried (and the
+    /// embedded-key check below still refuses a legacy file that actually
+    /// belongs to a colliding key).
     pub fn load(&self, key: &ModelKey) -> Result<Option<StoredModel>> {
-        let path = self.path_for(key);
+        let mut path = self.path_for(key);
+        let mut from_legacy = false;
         if !path.exists() {
-            return Ok(None);
+            path = self.dir.join(key.legacy_file_name());
+            from_legacy = true;
+            if !path.exists() {
+                return Ok(None);
+            }
         }
         let text = std::fs::read_to_string(&path)?;
         let v = json::parse(&text).map_err(|e| {
             HfpmError::Config(format!("corrupt model store file {}: {e}", path.display()))
         })?;
         let stored = StoredModel::from_json(&v, key)?;
-        // file names are sanitized, so distinct keys can collide on one
-        // file (host "node/1" vs "node_1"); the JSON carries the true key —
-        // refuse to hand one host's speeds to another
         if stored.key != *key {
+            // legacy (pre-hash) file names sanitize distinct keys onto one
+            // file (host "node/1" vs "node_1"): a legacy file owned by a
+            // colliding key simply is not ours — this key has no history
+            // yet and will get its own hashed file on first save
+            if from_legacy {
+                return Ok(None);
+            }
+            // at the hashed path a mismatch means corruption or a misplaced
+            // file — never hand one host's speeds to another
             return Err(HfpmError::Config(format!(
                 "model store key collision at {}: file belongs to \
                  ({}, {}, {}), requested ({}, {}, {})",
@@ -489,6 +539,25 @@ impl ModelStore {
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, model.to_json().render())?;
         std::fs::rename(&tmp, &path)?;
+        // migration: a pre-hash file for this same key is now superseded.
+        // Remove it only when its embedded key matches — a legacy file that
+        // belongs to a *colliding* key is someone else's history.
+        let legacy = self.dir.join(model.key.legacy_file_name());
+        if legacy.exists() {
+            let owns = std::fs::read_to_string(&legacy)
+                .ok()
+                .and_then(|t| json::parse(&t).ok())
+                .map(|v| {
+                    v.get("host").and_then(Value::as_str) == Some(model.key.host.as_str())
+                        && v.get("kernel").and_then(Value::as_str)
+                            == Some(model.key.kernel.as_str())
+                        && v.get("mode").and_then(Value::as_str) == Some(model.key.mode.as_str())
+                })
+                .unwrap_or(false);
+            if owns {
+                let _ = std::fs::remove_file(&legacy);
+            }
+        }
         Ok(())
     }
 
@@ -554,6 +623,9 @@ impl ModelStore {
             }
         }
         keys.sort_by(|a, b| a.file_name().cmp(&b.file_name()));
+        // a legacy file awaiting migration can coexist with its hashed
+        // replacement for one save cycle; list the key once
+        keys.dedup();
         Ok(keys)
     }
 }
@@ -561,17 +633,10 @@ impl ModelStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use crate::testkit::unique_temp_dir;
 
     fn tmp_store(tag: &str) -> ModelStore {
-        static COUNTER: AtomicU64 = AtomicU64::new(0);
-        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
-        let dir = std::env::temp_dir().join(format!(
-            "hfpm-modelstore-{tag}-{}-{n}",
-            std::process::id()
-        ));
-        let _ = std::fs::remove_dir_all(&dir);
-        ModelStore::open(&dir).unwrap()
+        ModelStore::open(unique_temp_dir(&format!("modelstore-{tag}"))).unwrap()
     }
 
     fn sample_model() -> PiecewiseModel {
@@ -585,7 +650,87 @@ mod tests {
     #[test]
     fn key_file_names_are_sanitized_and_stable() {
         let k = ModelKey::new("hcl/01", "matmul1d n=4096", "sim");
-        assert_eq!(k.file_name(), "hcl_01__matmul1d_n_4096__sim.json");
+        let name = k.file_name();
+        assert!(
+            name.starts_with("hcl_01__matmul1d_n_4096__sim-"),
+            "got {name}"
+        );
+        assert!(name.ends_with(".json"));
+        // deterministic: the same key always maps to the same file
+        assert_eq!(name, ModelKey::new("hcl/01", "matmul1d n=4096", "sim").file_name());
+        assert_eq!(k.legacy_file_name(), "hcl_01__matmul1d_n_4096__sim.json");
+    }
+
+    #[test]
+    fn sanitization_collisions_get_distinct_files() {
+        // regression: these pairs share a sanitized stem, and pre-hash file
+        // names silently merged their speed histories into one file
+        let pairs = [
+            (
+                ModelKey::new("gpu:0", "k", "sim"),
+                ModelKey::new("gpu_0", "k", "sim"),
+            ),
+            (
+                ModelKey::new("node/1", "k", "sim"),
+                ModelKey::new("node_1", "k", "sim"),
+            ),
+            (
+                ModelKey::new("a__b", "c", "sim"),
+                ModelKey::new("a", "b__c", "sim"),
+            ),
+        ];
+        for (a, b) in &pairs {
+            assert_eq!(
+                a.legacy_file_name(),
+                b.legacy_file_name(),
+                "pair must collide pre-hash to be a meaningful regression"
+            );
+            assert_ne!(a.file_name(), b.file_name(), "{a:?} vs {b:?}");
+        }
+
+        // both keys of a colliding pair round-trip independently
+        let store = tmp_store("distinct");
+        let (a, b) = &pairs[0];
+        let mut sm_a = StoredModel::new(a.clone());
+        sm_a.merge(&sample_model(), &MergePolicy::default());
+        store.save(&sm_a).unwrap();
+        let mut sm_b = StoredModel::new(b.clone());
+        let mut other = PiecewiseModel::new();
+        other.insert(512.0, 7.0e8);
+        sm_b.merge(&other, &MergePolicy::default());
+        store.save(&sm_b).unwrap();
+
+        assert_eq!(store.load(a).unwrap().unwrap().points.len(), 3);
+        assert_eq!(store.load(b).unwrap().unwrap().points.len(), 1);
+        assert_eq!(store.entries().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn legacy_file_names_still_load_and_migrate() {
+        let store = tmp_store("legacy");
+        let key = ModelKey::new("h", "k", "sim");
+        std::fs::write(
+            store.dir().join(key.legacy_file_name()),
+            r#"{"version": 1, "host": "h", "kernel": "k", "mode": "sim", "runs": 2,
+                "points": [{"x": 10.0, "s": 5.0, "w": 1.0}]}"#,
+        )
+        .unwrap();
+        // a pre-hash store is read through the legacy name
+        let back = store.load(&key).unwrap().expect("legacy file readable");
+        assert_eq!(back.runs, 2);
+        assert_eq!(store.entries().unwrap(), vec![key.clone()]);
+
+        // the next write migrates it onto the hashed name
+        store
+            .record_run(&[key.clone()], &[sample_model()], &MergePolicy::default())
+            .unwrap();
+        assert!(store.path_for(&key).exists(), "hashed file written");
+        assert!(
+            !store.dir().join(key.legacy_file_name()).exists(),
+            "legacy file retired after migration"
+        );
+        assert_eq!(store.entries().unwrap(), vec![key.clone()]);
+        assert_eq!(store.load(&key).unwrap().unwrap().runs, 3);
     }
 
     #[test]
@@ -815,17 +960,42 @@ mod tests {
     }
 
     #[test]
-    fn sanitization_collision_is_detected() {
+    fn colliding_legacy_file_is_not_anothers_history() {
+        // a PR-2-era store holds a's model under the shared sanitized stem;
+        // the colliding key b must read "no history" (not a's speeds, and
+        // not an error), write its own hashed file, and leave a's alone
         let store = tmp_store("collision");
         let a = ModelKey::new("node/1", "k", "sim");
         let b = ModelKey::new("node_1", "k", "sim");
-        assert_eq!(a.file_name(), b.file_name(), "keys collide by design here");
         let mut sm = StoredModel::new(a.clone());
         sm.merge(&sample_model(), &MergePolicy::default());
-        store.save(&sm).unwrap();
-        // the true owner loads fine; the colliding key is refused
+        std::fs::write(
+            store.dir().join(a.legacy_file_name()),
+            sm.to_json().render(),
+        )
+        .unwrap();
         assert!(store.load(&a).unwrap().is_some());
-        assert!(store.load(&b).is_err());
+        assert!(store.load(&b).unwrap().is_none(), "a's legacy file is not b's");
+
+        let mut sm_b = StoredModel::new(b.clone());
+        sm_b.merge(&sample_model(), &MergePolicy::default());
+        store.save(&sm_b).unwrap();
+        assert!(store.dir().join(a.legacy_file_name()).exists());
+        assert!(store.load(&a).unwrap().is_some());
+        assert!(store.load(&b).unwrap().is_some());
+    }
+
+    #[test]
+    fn foreign_file_at_a_hashed_path_is_refused() {
+        // at the hashed path a key mismatch is corruption, not a legacy
+        // collision — never hand one host's speeds to another
+        let store = tmp_store("foreign");
+        let a = ModelKey::new("ha", "k", "sim");
+        let b = ModelKey::new("hb", "k", "sim");
+        let mut sm = StoredModel::new(a.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        std::fs::write(store.path_for(&b), sm.to_json().render()).unwrap();
+        assert!(store.load(&b).is_err(), "a's model misplaced at b's path");
     }
 
     #[test]

@@ -120,6 +120,25 @@ impl Gen {
     }
 }
 
+/// A process-unique scratch directory under the system temp dir, for tests
+/// that need an on-disk model store. The name keys on the pid *and* a
+/// per-process atomic counter, so two tests sharing a tag — in one binary
+/// or across concurrently-running test binaries — never collide the way
+/// pid-only names could (pid reuse, copy-pasted tags). Any stale leftover
+/// from a previous run is removed; the directory itself is *not* created
+/// (stores create their own).
+pub fn unique_temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hfpm-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +172,15 @@ mod tests {
             });
         });
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn unique_temp_dirs_never_collide() {
+        let a = unique_temp_dir("collide");
+        let b = unique_temp_dir("collide");
+        assert_ne!(a, b, "same tag, same process: counter must differ");
+        let name = a.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.contains(&std::process::id().to_string()));
     }
 
     #[test]

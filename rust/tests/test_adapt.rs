@@ -2,14 +2,15 @@
 //! points, and `AdaptiveSession` store round-trips.
 
 use hfpm::adapt::{
-    registry, AdaptiveSession, Distribution, Dfpa, Distributor, Observations, SessionCtx,
-    Strategy,
+    registry, AdaptiveSession, Distribution, Dfpa, Distributor, Distributor2d, Observations,
+    Outcome, SessionCtx, Strategy,
 };
 use hfpm::baselines::{cpm_app, factoring};
 use hfpm::dfpa::{run_dfpa, Benchmarker, DfpaOptions, StepReport, WarmStart};
 use hfpm::dfpa2d::Benchmarker2d;
 use hfpm::fpm::{ConstantModel, PiecewiseModel, ScaledModel, SpeedFunction};
 use hfpm::modelstore::{ModelKey, ModelStore};
+use hfpm::testkit::unique_temp_dir;
 use hfpm::Result;
 
 /// Deterministic benchmarker over constant ground-truth speeds — the
@@ -158,8 +159,7 @@ fn dfpa_warm_start_flows_through_session_ctx() {
 
 #[test]
 fn session_flushes_observations_and_warm_starts() {
-    let dir = std::env::temp_dir().join(format!("hfpm-adapt-session-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = unique_temp_dir("adapt-session");
     let keys: Vec<ModelKey> = (0..SPEEDS.len())
         .map(|i| ModelKey::new(&format!("node{i}"), "adapt_test", "sim"))
         .collect();
@@ -192,8 +192,7 @@ fn session_flushes_observations_and_warm_starts() {
 fn non_store_strategies_leave_the_store_untouched() {
     // even/cpm/ffmpa/factoring neither warm-start nor observe: the session
     // must not open (or even create) the store, nor take its writer lock
-    let dir = std::env::temp_dir().join(format!("hfpm-adapt-nostore-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = unique_temp_dir("adapt-nostore");
     let keys: Vec<ModelKey> = (0..SPEEDS.len())
         .map(|i| ModelKey::new(&format!("node{i}"), "adapt_test", "sim"))
         .collect();
@@ -224,8 +223,7 @@ fn factoring_outcome_is_flagged_as_executing_the_workload() {
 
 #[test]
 fn session_trace_sink_writes_csv() {
-    let dir = std::env::temp_dir().join(format!("hfpm-adapt-trace-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = unique_temp_dir("adapt-trace");
     let path = dir.join("trace.csv");
     let session = AdaptiveSession::new().epsilon(0.02).trace_to(path.clone());
     let mut dist = Dfpa::default();
@@ -317,6 +315,109 @@ fn dfpa2d_distributor_balances_the_grid() {
         other => panic!("expected a 2D distribution, got {other:?}"),
     }
     assert!(matches!(out.observations, Observations::TwoD(_)));
+}
+
+/// A store-using 2D distributor that reports an observation grid of the
+/// wrong shape — the fixture for the session's shape guard.
+struct MisshapenObserver {
+    obs_cols: usize,
+    obs_rows: usize,
+}
+
+impl Distributor2d for MisshapenObserver {
+    fn name(&self) -> &'static str {
+        "misshapen"
+    }
+
+    fn uses_model_store(&self) -> bool {
+        true
+    }
+
+    fn distribute(
+        &mut self,
+        m: u64,
+        n: u64,
+        bench: &mut dyn Benchmarker2d,
+        _ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let (p, q) = bench.grid();
+        let mut out = Outcome::immediate(
+            self.name(),
+            Distribution::TwoD {
+                widths: hfpm::baselines::even::even_distribution(n, q),
+                heights: vec![hfpm::baselines::even::even_distribution(m, p); q],
+            },
+        );
+        out.observations = Observations::TwoD(vec![
+            vec![PiecewiseModel::constant(8.0, 5.0); self.obs_rows];
+            self.obs_cols
+        ]);
+        Ok(out)
+    }
+}
+
+#[test]
+fn run_2d_rejects_observation_grids_that_mismatch_the_keys() {
+    // regression: the session used to zip-truncate silently, dropping
+    // whole columns of measurements when the shapes disagreed
+    let dir = unique_temp_dir("adapt-2d-mismatch");
+    let session = AdaptiveSession::new().model_store(Some(dir.clone()));
+    let keys: Vec<Vec<ModelKey>> = (0..2)
+        .map(|j| {
+            (0..2)
+                .map(|i| ModelKey::new(&format!("n{j}{i}"), "k", "sim"))
+                .collect()
+        })
+        .collect();
+    let mut bench = GridBench {
+        speeds: vec![vec![10.0, 20.0], vec![30.0, 40.0]],
+    };
+    // wrong column count and wrong row count both error
+    for (cols, rows) in [(1usize, 2usize), (2, 3)] {
+        let mut dist = MisshapenObserver {
+            obs_cols: cols,
+            obs_rows: rows,
+        };
+        let err = session
+            .run_2d(&mut dist, 8, 8, &mut bench, &keys)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("do not match the model-key grid"),
+            "({cols}×{rows}): {err}"
+        );
+    }
+    // the matching shape still records fine
+    let mut dist = MisshapenObserver {
+        obs_cols: 2,
+        obs_rows: 2,
+    };
+    session.run_2d(&mut dist, 8, 8, &mut bench, &keys).unwrap();
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.entries().unwrap().len(), 4);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn seeded_run_warm_starts_without_a_store() {
+    // the within-run carry path iterative workloads use: models learned in
+    // an earlier phase seed the next repartition directly
+    let mut cold_bench = ModelBench::new(&SPEEDS);
+    let session = AdaptiveSession::new().epsilon(0.01);
+    let mut dist = Dfpa::default();
+    let cold = session
+        .run_1d(&mut dist, 6000, &mut cold_bench, &[])
+        .unwrap();
+    assert!(!cold.warm_started);
+    let carry = match &cold.observations {
+        Observations::OneD(obs) => obs.clone(),
+        other => panic!("expected 1D observations, got {other:?}"),
+    };
+    let mut bench = ModelBench::new(&SPEEDS);
+    let warm = session
+        .run_1d_seeded(&mut dist, 6000, &mut bench, &[], Some(&carry[..]))
+        .unwrap();
+    assert!(warm.warm_started, "carry models must warm-start");
+    assert!(warm.benchmark_steps <= cold.benchmark_steps);
 }
 
 #[test]

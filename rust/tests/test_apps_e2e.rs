@@ -1,10 +1,14 @@
-//! End-to-end application tests: the 1D and 2D apps across strategies,
-//! plus the real-PJRT verified path when artifacts are present.
+//! End-to-end application tests: the 1D/2D matmul, Jacobi and LU apps
+//! across strategies, plus the real-PJRT verified path when artifacts are
+//! present.
 
+use hfpm::apps::jacobi::{self, JacobiConfig};
+use hfpm::apps::lu::{self, LuConfig};
 use hfpm::apps::matmul1d::{self, Matmul1dConfig};
 use hfpm::apps::matmul2d::{self, Matmul2dConfig};
 use hfpm::apps::Strategy;
 use hfpm::cluster::presets;
+use hfpm::testkit::unique_temp_dir;
 
 #[test]
 fn table2_shape_dfpa_within_10pct_of_ffmpa() {
@@ -33,8 +37,8 @@ fn app_times_grow_with_n() {
         let mut cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
         cfg.epsilon = 0.1;
         let r = matmul1d::run(&spec, &cfg).unwrap();
-        assert!(r.matmul_s > last, "n={n}: {} !> {last}", r.matmul_s);
-        last = r.matmul_s;
+        assert!(r.compute_s > last, "n={n}: {} !> {last}", r.compute_s);
+        last = r.compute_s;
     }
 }
 
@@ -48,10 +52,10 @@ fn dfpa_app_beats_even_on_heterogeneous_cluster() {
     let re = matmul1d::run(&spec, &c_even).unwrap();
     let rd = matmul1d::run(&spec, &c_dfpa).unwrap();
     assert!(
-        rd.matmul_s < 0.95 * re.matmul_s,
+        rd.compute_s < 0.95 * re.compute_s,
         "dfpa {} vs even {}",
-        rd.matmul_s,
-        re.matmul_s
+        rd.compute_s,
+        re.compute_s
     );
 }
 
@@ -99,6 +103,88 @@ fn matmul2d_partitions_are_complete() {
         .map(|j| r.widths[j] * r.heights[j].iter().sum::<u64>())
         .sum();
     assert_eq!(area, m * m);
+}
+
+#[test]
+fn jacobi_strategies_ordering_on_hcl15() {
+    // on the paper's 15-node cluster DFPA's sweeps beat Even's, and the
+    // self-adaptation overhead stays a small fraction of the application
+    let spec = presets::hcl15();
+    let r_even = jacobi::run(&spec, &JacobiConfig::new(2048, Strategy::Even)).unwrap();
+    let r_dfpa = jacobi::run(&spec, &JacobiConfig::new(2048, Strategy::Dfpa)).unwrap();
+    assert!(
+        r_dfpa.compute_s < r_even.compute_s,
+        "dfpa {} vs even {}",
+        r_dfpa.compute_s,
+        r_even.compute_s
+    );
+    assert!(r_dfpa.partition_s < r_dfpa.total_s);
+    assert_eq!(r_dfpa.d.iter().sum::<u64>(), 2048);
+}
+
+#[test]
+fn jacobi_numerics_match_oracle_at_dfpa_distribution() {
+    // the sliced sweep the app models is numerically the whole-grid sweep
+    let spec = presets::mini4();
+    let r = jacobi::run(&spec, &JacobiConfig::new(128, Strategy::Dfpa)).unwrap();
+    assert_eq!(jacobi::verify_sweeps(128, &r.d, 3, 0xE2E), 0.0);
+}
+
+#[test]
+fn jacobi_cold_then_warm_store_round_trip() {
+    let dir = unique_temp_dir("e2e-jacobi-store");
+    let spec = presets::mini4();
+    let mut cfg = JacobiConfig::new(1024, Strategy::Dfpa);
+    cfg.model_store = Some(dir.clone());
+    let cold = jacobi::run(&spec, &cfg).unwrap();
+    let warm = jacobi::run(&spec, &cfg).unwrap();
+    assert!(!cold.warm_started && warm.warm_started);
+    assert!(
+        warm.iterations <= cold.iterations,
+        "warm {} vs cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lu_strategies_ordering_on_hcl15() {
+    let spec = presets::hcl15();
+    let mk = |s: Strategy| LuConfig::new(2048, s); // b=64 → 32 panels
+    let r_even = lu::run(&spec, &mk(Strategy::Even)).unwrap();
+    let r_dfpa = lu::run(&spec, &mk(Strategy::Dfpa)).unwrap();
+    assert!(
+        r_dfpa.compute_s < r_even.compute_s,
+        "dfpa {} vs even {}",
+        r_dfpa.compute_s,
+        r_even.compute_s
+    );
+    assert_eq!(r_dfpa.panels, 32);
+}
+
+#[test]
+fn lu_cold_then_warm_store_round_trip() {
+    let dir = unique_temp_dir("e2e-lu-store");
+    let spec = presets::mini4();
+    let mut cfg = LuConfig::new(1024, Strategy::Dfpa);
+    cfg.block = 32;
+    cfg.model_store = Some(dir.clone());
+    let cold = lu::run(&spec, &cfg).unwrap();
+    let warm = lu::run(&spec, &cfg).unwrap();
+    assert!(!cold.warm_started && warm.warm_started);
+    assert!(
+        warm.iterations <= cold.iterations,
+        "warm {} vs cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lu_numerics_match_oracle() {
+    assert!(lu::verify_factorization(48, 8, 0xE2E) < 1e-8);
 }
 
 #[test]

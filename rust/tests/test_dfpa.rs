@@ -96,8 +96,7 @@ fn grid5000_converges_fast() {
 }
 
 fn tmp_store(tag: &str) -> (ModelStore, std::path::PathBuf) {
-    let dir = std::env::temp_dir().join(format!("hfpm-test-dfpa-{tag}-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = hfpm::testkit::unique_temp_dir(&format!("test-dfpa-{tag}"));
     (ModelStore::open(&dir).unwrap(), dir)
 }
 

@@ -68,5 +68,5 @@ fn even_strategy_ignores_stragglers() {
     let faults = FaultPlan::none().with_straggler(1, 4.0, 0);
     let strag = run_with_faults(&spec, &cfg, faults).unwrap();
     assert_eq!(healthy.d, strag.d);
-    assert!(strag.matmul_s > 2.0 * healthy.matmul_s);
+    assert!(strag.compute_s > 2.0 * healthy.compute_s);
 }
