@@ -7,48 +7,14 @@
 
 use hfpm::adapt::{Dfpa, Distributor, SessionCtx};
 use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, Strategy};
-use hfpm::bench_harness::main_with;
+use hfpm::bench_harness::{main_with, random_piecewise_models, OwnedRowBench};
 use hfpm::cluster::presets;
-use hfpm::cluster::virtual_cluster::VirtualCluster;
-use hfpm::dfpa::{Benchmarker, StepReport};
 use hfpm::fpm::{PiecewiseModel, SpeedFunction};
 use hfpm::partition::{self, hsp};
 use hfpm::util::rng::Pcg32;
 
-/// Row-granularity benchmarker that owns its cluster (the bench harness's
-/// `bench_distribute` builds a fresh owned pair per sample, so the
-/// borrowed `matmul1d::RowBench` won't do here).
-struct OwnedRowBench {
-    cluster: VirtualCluster,
-    n: u64,
-}
-
-impl Benchmarker for OwnedRowBench {
-    fn processors(&self) -> usize {
-        self.cluster.size()
-    }
-
-    fn run_parallel(&mut self, d: &[u64]) -> hfpm::Result<StepReport> {
-        let units: Vec<u64> = d.iter().map(|&r| r * self.n).collect();
-        self.cluster.run_1d(&units)
-    }
-}
-
 fn random_models(p: usize, points: usize, seed: u64) -> Vec<PiecewiseModel> {
-    let mut rng = Pcg32::seeded(seed);
-    (0..p)
-        .map(|_| {
-            let mut m = PiecewiseModel::new();
-            let mut x = rng.uniform(1.0, 20.0);
-            let mut s = rng.uniform(200.0, 900.0);
-            for _ in 0..points {
-                m.insert(x, s);
-                x *= rng.uniform(1.5, 3.0);
-                s *= rng.uniform(0.5, 0.98);
-            }
-            m
-        })
-        .collect()
+    random_piecewise_models(p, points, seed, 200.0, 900.0)
 }
 
 fn main() {
@@ -120,6 +86,27 @@ fn main() {
                         build_cluster(&spec, &cfg, Default::default()).unwrap();
                     (
                         Box::new(Dfpa::default()) as Box<dyn Distributor>,
+                        OwnedRowBench { cluster, n },
+                    )
+                },
+            );
+        }
+
+        // --- the bi-objective distributor (dual-model learning + front
+        // construction every iteration) against plain DFPA above ---
+        {
+            let n = 4096u64;
+            let spec = presets::hcl15();
+            g.bench_distribute(
+                &format!("biobj/full run hcl15 n={n} w=0.5"),
+                n,
+                &SessionCtx::with_epsilon(0.025),
+                move || {
+                    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+                    let (cluster, _) =
+                        build_cluster(&spec, &cfg, Default::default()).unwrap();
+                    (
+                        Box::new(hfpm::biobj::BiObj::new(0.5)) as Box<dyn Distributor>,
                         OwnedRowBench { cluster, n },
                     )
                 },

@@ -1,0 +1,81 @@
+//! Bi-objective sweep: the wall cost of Pareto-front construction (the
+//! per-iteration overhead `biobj` adds on top of DFPA's partitioning) and
+//! whole `biobj:<w>` runs across the weight range on the preset clusters.
+//!
+//! `cargo bench --bench bench_pareto [filter] [--quick]`
+
+use hfpm::adapt::{Distributor, SessionCtx};
+use hfpm::apps::matmul1d::{build_cluster, Matmul1dConfig, Strategy};
+use hfpm::bench_harness::{main_with, random_piecewise_models as random_models, OwnedRowBench};
+use hfpm::biobj::{build_front, BiObj, ParetoOptions};
+use hfpm::cluster::presets;
+use hfpm::partition::GeometricOptions;
+
+fn main() {
+    main_with("pareto", |g| {
+        // --- front construction: the biobj-specific hot path ---
+        for (p, levels) in [(4usize, 16usize), (15, 8), (15, 16), (15, 32), (28, 16)] {
+            let speed = random_models(p, 8, 42, 200.0, 900.0);
+            let energy = random_models(p, 8, 43, 1e-8, 9e-8);
+            let opts = ParetoOptions {
+                levels,
+                ..Default::default()
+            };
+            g.bench(&format!("front/build p={p} levels={levels}"), |b| {
+                b.throughput(p as u64);
+                b.iter(|| {
+                    build_front(
+                        1_000_000,
+                        &speed,
+                        Some(&energy),
+                        GeometricOptions::default(),
+                        &opts,
+                    )
+                    .unwrap()
+                });
+            });
+        }
+
+        // --- scalarized selection over a built front ---
+        {
+            let speed = random_models(15, 8, 42, 200.0, 900.0);
+            let energy = random_models(15, 8, 43, 1e-8, 9e-8);
+            let front = build_front(
+                1_000_000,
+                &speed,
+                Some(&energy),
+                GeometricOptions::default(),
+                &ParetoOptions::default(),
+            )
+            .unwrap();
+            g.bench("front/scalarized select", |b| {
+                let mut w = 0.0f64;
+                b.iter(|| {
+                    w = (w + 0.37) % 1.0;
+                    std::hint::black_box(front.scalarized(w))
+                });
+            });
+        }
+
+        // --- whole biobj runs across the weight range (hcl15, same shape
+        // as bench_micro's dfpa entry for apples-to-apples reading) ---
+        for w in [0.0f64, 0.5, 1.0] {
+            let n = 4096u64;
+            let spec = presets::hcl15();
+            g.bench_distribute(
+                &format!("biobj/full run hcl15 n={n} w={w:.1}"),
+                n,
+                &SessionCtx::with_epsilon(0.025),
+                move || {
+                    let cfg = Matmul1dConfig::new(n, Strategy::Dfpa);
+                    let (cluster, _) =
+                        build_cluster(&spec, &cfg, Default::default()).unwrap();
+                    (
+                        Box::new(BiObj::new(w)) as Box<dyn Distributor>,
+                        OwnedRowBench { cluster, n },
+                    )
+                },
+            );
+        }
+    });
+}

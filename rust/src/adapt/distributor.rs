@@ -30,6 +30,10 @@ pub struct SessionCtx {
     pub max_iters: usize,
     /// Stored 1D models seeded from a model store; `None` is a cold start.
     pub warm_start: Option<WarmStart>,
+    /// Stored 1D *energy-per-unit* models (same shape as `warm_start`,
+    /// loaded from the `#energy`-suffixed store keys). Only strategies with
+    /// [`Distributor::uses_energy_models`] ever see these populated.
+    pub warm_energy: Option<WarmStart>,
     /// Stored 2D models (`[j][i]`), the 2D analogue.
     pub warm_start_2d: Option<WarmStart2d>,
 }
@@ -40,6 +44,7 @@ impl Default for SessionCtx {
             epsilon: 0.025,
             max_iters: 100,
             warm_start: None,
+            warm_energy: None,
             warm_start_2d: None,
         }
     }
@@ -65,6 +70,14 @@ pub trait Distributor {
     /// parsing, no advisory writer lock taken away from a concurrent run
     /// that needs it) nor attempts a flush.
     fn uses_model_store(&self) -> bool {
+        false
+    }
+
+    /// Does this strategy learn a second, *energy* function family? When
+    /// true the session additionally seeds [`SessionCtx::warm_energy`] from
+    /// the `#energy`-suffixed store keys and flushes
+    /// `Outcome::energy_observations` back under them.
+    fn uses_energy_models(&self) -> bool {
         false
     }
 
@@ -283,12 +296,16 @@ impl Distributor for Dfpa {
             converged: r.converged,
             imbalance: r.imbalance,
             warm_started: r.warm_started,
+            warm_started_energy: false,
             observations: Observations::OneD(r.observations),
+            energy_observations: Observations::None,
             records: r.records,
             total_virtual_s: r.total_virtual_s,
             partition_wall_s: r.partition_wall_s,
             model_build_s: None,
             executes_workload: false,
+            energy_j: 0.0,
+            pareto: None,
         })
     }
 }
@@ -499,12 +516,16 @@ impl Distributor2d for Dfpa2d {
             converged: r.converged,
             imbalance: r.imbalance,
             warm_started: r.warm_started,
+            warm_started_energy: false,
             observations: Observations::TwoD(r.observations),
+            energy_observations: Observations::None,
             records: Vec::new(),
             total_virtual_s: r.total_virtual_s,
             partition_wall_s: r.partition_wall_s,
             model_build_s: None,
             executes_workload: false,
+            energy_j: 0.0,
+            pareto: None,
         })
     }
 }

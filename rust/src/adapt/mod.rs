@@ -20,10 +20,14 @@
 //! - [`registry`] — the name-keyed strategy table behind
 //!   [`Strategy::parse`] and the CLI.
 //!
-//! The apps (`apps::matmul1d`, `apps::matmul2d`) and the `repro` CLI are
-//! written against this layer only; a new strategy (e.g. a bi-objective
-//! distributor à la Khaleghzadeh et al.) plugs in by adding one registry
-//! entry, without touching any app.
+//! The apps (`apps::matmul1d`, `apps::matmul2d`, `apps::jacobi`,
+//! `apps::lu`) and the `repro` CLI are written against this layer only; a
+//! new strategy plugs in by adding one registry entry, without touching
+//! any app — exactly how the bi-objective distributor
+//! ([`crate::biobj::BiObj`], registry name `biobj:<w>`) landed: the
+//! session additionally seeds/flushes its second (energy) function family
+//! under `#energy`-suffixed store keys, and [`Outcome`] carries its
+//! `energy_j` and Pareto summary.
 
 pub mod distributor;
 pub mod outcome;

@@ -7,6 +7,7 @@
 //! benches consume; the per-strategy structs survive only behind the
 //! legacy entry points.
 
+use crate::biobj::ParetoSummary;
 use crate::dfpa::trace::IterationRecord;
 use crate::error::{HfpmError, Result};
 use crate::fpm::PiecewiseModel;
@@ -93,8 +94,16 @@ pub struct Outcome {
     pub imbalance: f64,
     /// Whether stored models from a persistent store seeded the run.
     pub warm_started: bool,
+    /// Whether stored *energy* models additionally seeded the run (always
+    /// false for single-objective strategies).
+    pub warm_started_energy: bool,
     /// This run's own measurements, for the model store.
     pub observations: Observations,
+    /// The run's own *energy-per-unit* measurements — the second function
+    /// family of the bi-objective strategy, persisted by the session under
+    /// `#energy`-suffixed kernel keys. `None` for single-objective
+    /// strategies and unmetered platforms.
+    pub energy_observations: Observations,
     /// Per-step trace (DFPA; empty for the others).
     pub records: Vec<IterationRecord>,
     /// Virtual cluster time the partitioning benchmarks cost.
@@ -109,6 +118,13 @@ pub struct Outcome {
     /// computation and an app must not charge a separate execution phase on
     /// top, or it would count the work twice.
     pub executes_workload: bool,
+    /// Dynamic joules the partitioning benchmarks cost, as metered by the
+    /// strategy (0 when the strategy or platform does not meter energy;
+    /// apps account whole-run energy through the cluster's joule clock).
+    pub energy_j: f64,
+    /// The time/energy Pareto front the bi-objective strategy learned,
+    /// with its selected point. `None` for single-objective strategies.
+    pub pareto: Option<ParetoSummary>,
 }
 
 impl Outcome {
@@ -122,12 +138,16 @@ impl Outcome {
             converged: true,
             imbalance: 0.0,
             warm_started: false,
+            warm_started_energy: false,
             observations: Observations::None,
+            energy_observations: Observations::None,
             records: Vec::new(),
             total_virtual_s: 0.0,
             partition_wall_s: 0.0,
             model_build_s: None,
             executes_workload: false,
+            energy_j: 0.0,
+            pareto: None,
         }
     }
 }
@@ -159,7 +179,11 @@ mod tests {
         assert_eq!(o.benchmark_steps, 0);
         assert!(o.converged);
         assert!(!o.warm_started);
+        assert!(!o.warm_started_energy);
         assert!(o.observations.is_none());
+        assert!(o.energy_observations.is_none());
         assert!(o.records.is_empty());
+        assert_eq!(o.energy_j, 0.0);
+        assert!(o.pareto.is_none());
     }
 }

@@ -16,7 +16,10 @@ use crate::fpm::SpeedSurface;
 
 /// Partitioning strategy tag. The set of variants mirrors the registry;
 /// parsing and naming go through the registry so the CLI and the apps
-/// never enumerate strategies themselves.
+/// never enumerate strategies themselves. `BiObj` is the one
+/// *parametrized* strategy: `biobj:<w>` carries the time/energy
+/// scalarization weight (stored in thousandths so the tag stays `Copy +
+/// Eq`; `biobj` alone means `w = 0.5`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     Even,
@@ -24,25 +27,86 @@ pub enum Strategy {
     Ffmpa,
     Dfpa,
     Factoring,
+    BiObj { w_milli: u16 },
 }
 
 impl Strategy {
-    /// Case-insensitive registry lookup.
+    /// Case-insensitive registry lookup. A `name:arg` form is accepted for
+    /// parametrized strategies (`biobj:0.3`); an argument on a
+    /// non-parametrized strategy, or a weight outside `[0, 1]`, is a parse
+    /// failure.
     pub fn parse(s: &str) -> Option<Self> {
-        find(s).map(|e| e.strategy)
+        let lower = s.to_ascii_lowercase();
+        let (base, arg) = match lower.split_once(':') {
+            Some((b, a)) => (b, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        let entry = find(base)?;
+        match (entry.strategy, arg) {
+            (Strategy::BiObj { .. }, None) => Some(Strategy::BiObj { w_milli: 500 }),
+            (Strategy::BiObj { .. }, Some(a)) => {
+                let w: f64 = a.trim().parse().ok()?;
+                if !(0.0..=1.0).contains(&w) {
+                    return None;
+                }
+                Some(Strategy::BiObj {
+                    w_milli: (w * 1000.0).round() as u16,
+                })
+            }
+            (tag, None) => Some(tag),
+            (_, Some(_)) => None,
+        }
     }
 
-    /// Registry name of this strategy.
+    /// Registry name of this strategy (parameters stripped).
     pub fn name(&self) -> &'static str {
-        self.entry().name
+        match self {
+            Strategy::Even => "even",
+            Strategy::Cpm => "cpm",
+            Strategy::Ffmpa => "ffmpa",
+            Strategy::Dfpa => "dfpa",
+            Strategy::Factoring => "factoring",
+            Strategy::BiObj { .. } => "biobj",
+        }
+    }
+
+    /// Display form including parameters (`biobj:0.5`); round-trips
+    /// through [`Strategy::parse`] exactly (the weight prints at full
+    /// precision — `biobj:0.125` must not re-parse as `0.13`).
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::BiObj { w_milli } => {
+                format!("biobj:{}", *w_milli as f64 / 1000.0)
+            }
+            other => other.name().to_string(),
+        }
+    }
+
+    /// The bi-objective scalarization weight, if this is `biobj`.
+    pub fn biobj_weight(&self) -> Option<f64> {
+        match self {
+            Strategy::BiObj { w_milli } => Some(*w_milli as f64 / 1000.0),
+            _ => None,
+        }
     }
 
     /// The registry entry for this strategy.
     pub fn entry(&self) -> &'static StrategyEntry {
         ENTRIES
             .iter()
-            .find(|e| e.strategy == *self)
+            .find(|e| e.name == self.name())
             .expect("every Strategy variant has a registry entry")
+    }
+
+    /// Build the 1D distributor for this strategy (parameters included),
+    /// or a clean error when it has no 1D form.
+    pub fn make_1d(&self, res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+        self.entry().make_1d(*self, res)
+    }
+
+    /// Build the 2D distributor, or a clean error when unsupported.
+    pub fn make_2d(&self, res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+        self.entry().make_2d(*self, res)
     }
 }
 
@@ -90,8 +154,8 @@ impl AppResources2d<'_> {
     }
 }
 
-type Make1d = fn(&AppResources<'_>) -> Result<Box<dyn Distributor>>;
-type Make2d = fn(&AppResources2d<'_>) -> Result<Box<dyn Distributor2d>>;
+type Make1d = fn(Strategy, &AppResources<'_>) -> Result<Box<dyn Distributor>>;
+type Make2d = fn(Strategy, &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>>;
 
 /// One registry row: a strategy, its name, and its factories.
 pub struct StrategyEntry {
@@ -115,10 +179,16 @@ impl StrategyEntry {
         self.build_2d.is_some()
     }
 
-    /// Build the 1D distributor, or a clean error when unsupported.
-    pub fn make_1d(&self, res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    /// Build the 1D distributor for a strategy value (which carries any
+    /// parameters, e.g. the biobj weight), or a clean error when
+    /// unsupported. Prefer calling through [`Strategy::make_1d`].
+    pub fn make_1d(
+        &self,
+        strategy: Strategy,
+        res: &AppResources<'_>,
+    ) -> Result<Box<dyn Distributor>> {
         match self.build_1d {
-            Some(make) => make(res),
+            Some(make) => make(strategy, res),
             None => Err(HfpmError::InvalidArg(format!(
                 "strategy `{}` has no 1D distributor",
                 self.name
@@ -127,9 +197,14 @@ impl StrategyEntry {
     }
 
     /// Build the 2D distributor, or a clean error when unsupported.
-    pub fn make_2d(&self, res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+    /// Prefer calling through [`Strategy::make_2d`].
+    pub fn make_2d(
+        &self,
+        strategy: Strategy,
+        res: &AppResources2d<'_>,
+    ) -> Result<Box<dyn Distributor2d>> {
         match self.build_2d {
-            Some(make) => make(res),
+            Some(make) => make(strategy, res),
             None => Err(HfpmError::InvalidArg(format!(
                 "strategy `{}` has no 2D distributor",
                 self.name
@@ -138,15 +213,15 @@ impl StrategyEntry {
     }
 }
 
-fn make_even_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+fn make_even_1d(_s: Strategy, _res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     Ok(Box::new(Even))
 }
 
-fn make_cpm_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+fn make_cpm_1d(_s: Strategy, _res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     Ok(Box::new(Cpm))
 }
 
-fn make_ffmpa_1d(res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+fn make_ffmpa_1d(_s: Strategy, res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     let (models, cost) =
         ffmpa::build_full_models_for_n(res.nodes, res.n, res.noise_rel, res.seed);
     Ok(Box::new(Ffmpa {
@@ -156,29 +231,35 @@ fn make_ffmpa_1d(res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     }))
 }
 
-fn make_dfpa_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+fn make_dfpa_1d(_s: Strategy, _res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     Ok(Box::new(Dfpa::default()))
 }
 
-fn make_factoring_1d(_res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+fn make_factoring_1d(_s: Strategy, _res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
     Ok(Box::new(Factoring::default()))
 }
 
-fn make_even_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+fn make_biobj_1d(s: Strategy, _res: &AppResources<'_>) -> Result<Box<dyn Distributor>> {
+    // the default weight mirrors `Strategy::parse("biobj")`
+    let weight = s.biobj_weight().unwrap_or(0.5);
+    Ok(Box::new(crate::biobj::BiObj::new(weight)))
+}
+
+fn make_even_2d(_s: Strategy, _res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
     Ok(Box::new(Even2d))
 }
 
-fn make_cpm_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+fn make_cpm_2d(_s: Strategy, _res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
     Ok(Box::new(Cpm2d))
 }
 
-fn make_ffmpa_2d(res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+fn make_ffmpa_2d(_s: Strategy, res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
     Ok(Box::new(Ffmpa2d {
         surfaces: res.surface_grid()?,
     }))
 }
 
-fn make_dfpa_2d(_res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
+fn make_dfpa_2d(_s: Strategy, _res: &AppResources2d<'_>) -> Result<Box<dyn Distributor2d>> {
     Ok(Box::new(Dfpa2d))
 }
 
@@ -226,6 +307,17 @@ static ENTRIES: &[StrategyEntry] = &[
         compare_1d: false,
         compare_2d: false,
         build_1d: Some(make_factoring_1d as Make1d),
+        build_2d: None,
+    },
+    StrategyEntry {
+        strategy: Strategy::BiObj { w_milli: 500 },
+        name: "biobj",
+        summary: "bi-objective time+energy Pareto scalarization (biobj:<w>)",
+        // not in the default sweep: its value shows against an explicit
+        // baseline (`--strategy biobj:0.5 --compare dfpa`)
+        compare_1d: false,
+        compare_2d: false,
+        build_1d: Some(make_biobj_1d as Make1d),
         build_2d: None,
     },
 ];
@@ -276,6 +368,95 @@ mod tests {
     }
 
     #[test]
+    fn biobj_parses_with_and_without_a_weight() {
+        assert_eq!(
+            Strategy::parse("biobj"),
+            Some(Strategy::BiObj { w_milli: 500 })
+        );
+        assert_eq!(
+            Strategy::parse("BIOBJ:0.25"),
+            Some(Strategy::BiObj { w_milli: 250 })
+        );
+        assert_eq!(
+            Strategy::parse("biobj:1.0"),
+            Some(Strategy::BiObj { w_milli: 1000 })
+        );
+        assert_eq!(
+            Strategy::parse("biobj:0"),
+            Some(Strategy::BiObj { w_milli: 0 })
+        );
+        // out-of-range weights and junk are parse failures
+        assert_eq!(Strategy::parse("biobj:1.5"), None);
+        assert_eq!(Strategy::parse("biobj:-0.1"), None);
+        assert_eq!(Strategy::parse("biobj:x"), None);
+        // arguments on non-parametrized strategies are rejected
+        assert_eq!(Strategy::parse("dfpa:0.5"), None);
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for s in [
+            Strategy::Dfpa,
+            Strategy::BiObj { w_milli: 0 },
+            Strategy::BiObj { w_milli: 125 }, // full precision, not "0.13"
+            Strategy::BiObj { w_milli: 250 },
+            Strategy::BiObj { w_milli: 1000 },
+        ] {
+            assert_eq!(Strategy::parse(&s.label()), Some(s), "label {}", s.label());
+        }
+        assert_eq!(Strategy::BiObj { w_milli: 500 }.label(), "biobj:0.5");
+        assert_eq!(
+            Strategy::BiObj { w_milli: 250 }.biobj_weight(),
+            Some(0.25)
+        );
+        assert_eq!(Strategy::Dfpa.biobj_weight(), None);
+    }
+
+    #[test]
+    fn biobj_factory_carries_the_weight() {
+        let res = AppResources {
+            nodes: &[],
+            n: 0,
+            unit_scale: 1.0,
+            noise_rel: 0.0,
+            seed: 0,
+        };
+        let s = Strategy::parse("biobj:0.25").unwrap();
+        let dist = s.make_1d(&res).unwrap();
+        assert_eq!(dist.name(), "biobj");
+        assert!(dist.uses_model_store());
+        assert!(dist.uses_energy_models());
+        // parametrized strategies stay out of the blanket compare sweep
+        assert!(!s.entry().compare_1d);
+        assert!(!s.entry().supports_2d());
+
+        // the parsed weight must actually reach the distributor: on equal
+        // speeds with a 5× energy gap, w=0 shifts load to the cheap
+        // processor while w=1 splits evenly — a factory that dropped the
+        // weight would make these two runs identical
+        use crate::adapt::SessionCtx;
+        use crate::testkit::ConstEnergyBench;
+        let ctx = SessionCtx::with_epsilon(0.05);
+        let run = |spec: &str| {
+            let mut bench = ConstEnergyBench::new(&[10.0, 10.0], &[5.0, 1.0]);
+            Strategy::parse(spec)
+                .unwrap()
+                .make_1d(&res)
+                .unwrap()
+                .distribute(1000, &mut bench, &ctx)
+                .unwrap()
+                .distribution
+                .into_1d()
+                .unwrap()
+        };
+        let d_time = run("biobj:1.0");
+        let d_energy = run("biobj:0.0");
+        assert_eq!(d_time, vec![500, 500], "w=1 balances");
+        assert!(d_energy[1] > d_energy[0], "w=0 loads the cheap node");
+        assert_ne!(d_time, d_energy);
+    }
+
+    #[test]
     fn every_variant_round_trips_through_its_name() {
         for e in entries() {
             assert_eq!(Strategy::parse(e.name), Some(e.strategy));
@@ -300,6 +481,6 @@ mod tests {
             p: 1,
             q: 1,
         };
-        assert!(e.make_2d(&res).is_err());
+        assert!(Strategy::Factoring.make_2d(&res).is_err());
     }
 }

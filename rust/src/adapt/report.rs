@@ -10,6 +10,7 @@
 
 use super::outcome::{Observations, Outcome};
 use super::registry::Strategy;
+use crate::biobj::ParetoSummary;
 use crate::cluster::virtual_cluster::VirtualCluster;
 use crate::error::Result;
 use crate::fpm::PiecewiseModel;
@@ -48,8 +49,18 @@ pub struct WorkloadReport {
     pub imbalance: f64,
     /// Whether the run was seeded from a persistent model store.
     pub warm_started: bool,
+    /// Whether stored *energy* models additionally seeded the run (only
+    /// ever true for the bi-objective strategy).
+    pub warm_started_energy: bool,
     /// Whether every partitioning round met its termination criterion.
     pub converged: bool,
+    /// Total dynamic energy of the run in joules — benchmarks plus the
+    /// (scaled) compute phases, off the cluster's joule clock. 0 on an
+    /// unmetered platform.
+    pub energy_j: f64,
+    /// The time/energy Pareto front of the last partitioning round, for
+    /// bi-objective runs.
+    pub pareto: Option<ParetoSummary>,
 }
 
 /// The per-round partition bookkeeping every iterative workload repeats:
@@ -65,12 +76,20 @@ pub struct PartitionRounds {
     /// Whether the *store* seeded round 0 (later rounds are always warm
     /// through the carry, which says nothing about the store).
     pub warm_started: bool,
+    /// Whether stored energy models seeded round 0 (bi-objective runs).
+    pub warm_started_energy: bool,
     pub model_build_s: Option<f64>,
     pub converged: bool,
     /// Rounds absorbed so far.
     pub rounds: usize,
     /// Everything measured this run, per processor.
     pub carry: Vec<PiecewiseModel>,
+    /// The *energy-per-unit* measurements accumulated this run — the
+    /// bi-objective second carry family (empty for single-objective
+    /// strategies and unmetered platforms).
+    pub energy_carry: Vec<PiecewiseModel>,
+    /// The latest round's Pareto front, if any round produced one.
+    pub pareto: Option<ParetoSummary>,
 }
 
 impl PartitionRounds {
@@ -80,10 +99,13 @@ impl PartitionRounds {
             partition_wall_s: 0.0,
             iterations: 0,
             warm_started: false,
+            warm_started_energy: false,
             model_build_s: None,
             converged: true,
             rounds: 0,
             carry: vec![PiecewiseModel::new(); p],
+            energy_carry: vec![PiecewiseModel::new(); p],
+            pareto: None,
         }
     }
 
@@ -98,6 +120,16 @@ impl PartitionRounds {
         }
     }
 
+    /// The energy-family analogue of [`PartitionRounds::seed`]: `None` on
+    /// round 0 or when no round measured energy.
+    pub fn seed_energy(&self) -> Option<&[PiecewiseModel]> {
+        if self.rounds == 0 || self.energy_carry.iter().all(|m| m.is_empty()) {
+            None
+        } else {
+            Some(&self.energy_carry)
+        }
+    }
+
     /// Fold one round's outcome in; `elapsed_s` is the virtual-clock delta
     /// the partition phase cost.
     pub fn absorb(&mut self, outcome: &Outcome, elapsed_s: f64) {
@@ -107,10 +139,20 @@ impl PartitionRounds {
         self.converged &= outcome.converged;
         if self.rounds == 0 {
             self.warm_started = outcome.warm_started;
+            self.warm_started_energy = outcome.warm_started_energy;
             self.model_build_s = outcome.model_build_s;
+        }
+        if outcome.pareto.is_some() {
+            // the latest front reflects the most refined models
+            self.pareto = outcome.pareto.clone();
         }
         if let Observations::OneD(obs) = &outcome.observations {
             for (c, o) in self.carry.iter_mut().zip(obs) {
+                c.absorb(o);
+            }
+        }
+        if let Observations::OneD(obs) = &outcome.energy_observations {
+            for (c, o) in self.energy_carry.iter_mut().zip(obs) {
                 c.absorb(o);
             }
         }
@@ -142,8 +184,10 @@ impl ComputePhase {
 
 /// Run one probe step of `units` on the cluster, scale it to `steps`
 /// kernel steps, and charge the remainder to the virtual clock (the probe
-/// itself is already on it). Returns the phase cost and the imbalance over
-/// the processors that participated.
+/// itself is already on it). The probe's joules are scaled the same way
+/// onto the cluster's energy clock, so `VirtualCluster::total_dynamic_j`
+/// covers the whole phase just as `now()` covers its time. Returns the
+/// phase cost and the imbalance over the processors that participated.
 pub fn probe_compute(
     cluster: &mut VirtualCluster,
     units: &[u64],
@@ -153,6 +197,8 @@ pub fn probe_compute(
     let step_max = step.times.iter().cloned().fold(0.0f64, f64::max);
     let compute_s = step_max * steps;
     cluster.charge(compute_s - step.virtual_cost_s.min(compute_s));
+    let step_j: f64 = cluster.last_step_energies().iter().sum();
+    cluster.charge_energy(step_j * (steps - 1.0).max(0.0));
     let active: Vec<f64> = step
         .times
         .iter()
@@ -196,6 +242,10 @@ mod tests {
         // the clock advanced by at least the whole scaled phase
         assert!(c.now() - t0 >= phase.compute_s - 1e-12);
         assert!(phase.imbalance >= 0.0);
+        // the joule clock was scaled to the whole phase too: 10 steps'
+        // worth, not just the probe's
+        let step_j: f64 = c.last_step_energies().iter().sum();
+        assert!((c.total_dynamic_j() - 10.0 * step_j).abs() < 1e-9 * step_j.max(1.0));
     }
 
     #[test]

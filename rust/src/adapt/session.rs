@@ -107,7 +107,15 @@ impl AdaptiveSession {
 
     /// Run a 1D distributor: seed it from the store (keyed per processor by
     /// `keys`, positionally aligned with the benchmarker's ranks), run it,
-    /// flush its observations, dump the trace.
+    /// flush its observations, dump the trace. For a distributor that
+    /// learns energy models too ([`Distributor::uses_energy_models`]), the
+    /// same happens for the second function family under the
+    /// `#energy`-suffixed keys (see [`ModelKey::energy`]).
+    ///
+    /// Contract: an **empty `keys` slice disables persistence** — the run
+    /// executes normally, but any observations it produces are dropped
+    /// with a warning instead of erroring (or silently vanishing). Callers
+    /// that want persistence must supply one key per benchmarker rank.
     pub fn run_1d(
         &self,
         dist: &mut dyn Distributor,
@@ -115,7 +123,7 @@ impl AdaptiveSession {
         bench: &mut dyn Benchmarker,
         keys: &[ModelKey],
     ) -> Result<Outcome> {
-        self.run_1d_seeded(dist, n, bench, keys, None)
+        self.run_1d_seeded(dist, n, bench, keys, None, None)
     }
 
     /// [`run_1d`](Self::run_1d), additionally seeded with models learned
@@ -123,6 +131,10 @@ impl AdaptiveSession {
     /// (Jacobi sweeps, LU panel steps) carries between its repartitioning
     /// rounds. Carry models merge into the stored ones per processor, the
     /// carry winning on re-measured sizes (it is fresher than the store).
+    /// `energy_carry` is the second-family analogue (see
+    /// [`PartitionRounds::seed_energy`](super::report::PartitionRounds));
+    /// it only reaches distributors with
+    /// [`Distributor::uses_energy_models`].
     pub fn run_1d_seeded(
         &self,
         dist: &mut dyn Distributor,
@@ -130,7 +142,27 @@ impl AdaptiveSession {
         bench: &mut dyn Benchmarker,
         keys: &[ModelKey],
         carry: Option<&[PiecewiseModel]>,
+        energy_carry: Option<&[PiecewiseModel]>,
     ) -> Result<Outcome> {
+        let carry = carry.filter(|ms| ms.iter().any(|m| !m.is_empty()));
+        let energy_carry = energy_carry.filter(|ms| ms.iter().any(|m| !m.is_empty()));
+        // a carry misaligned with the keys would warm-start rank k from a
+        // neighbor's speeds and flush observations under the wrong host.
+        // Validate up front, store hit or miss — the old check lived inside
+        // the (stored, carry) match arm and never fired on a cold store,
+        // which let `WarmStart::new(carry)` through positionally misaligned
+        // and only blew up (or silently misattributed models) later.
+        for (what, c) in [("carry", carry), ("energy carry", energy_carry)] {
+            if let Some(c) = c {
+                if !keys.is_empty() && c.len() != keys.len() {
+                    return Err(HfpmError::InvalidArg(format!(
+                        "{what} seeds {} models for {} store keys",
+                        c.len(),
+                        keys.len()
+                    )));
+                }
+            }
+        }
         // strategies that neither warm-start nor observe skip the store
         // entirely — no warm-model parsing, and no advisory writer lock
         // taken away from a concurrent run that actually needs it
@@ -143,16 +175,9 @@ impl AdaptiveSession {
             Some(s) if !keys.is_empty() => s.warm_models(keys)?,
             _ => None,
         };
-        let carry = carry.filter(|ms| ms.iter().any(|m| !m.is_empty()));
         let warm_start = match (stored, carry) {
+            // lengths agree by construction: both equal keys.len() here
             (Some(mut stored), Some(carry)) => {
-                if stored.len() != carry.len() {
-                    return Err(HfpmError::InvalidArg(format!(
-                        "carry seeds {} models for {} store keys",
-                        carry.len(),
-                        stored.len()
-                    )));
-                }
                 for (s, c) in stored.iter_mut().zip(carry) {
                     s.absorb(c);
                 }
@@ -162,27 +187,91 @@ impl AdaptiveSession {
             (None, Some(carry)) => Some(WarmStart::new(carry.to_vec())),
             (None, None) => None,
         };
+        // the second function family (bi-objective energy models), stored
+        // under the `#energy` kernel suffix so both families warm-start —
+        // merged with the within-run energy carry exactly like the speed
+        // family above (carry wins on re-measured sizes)
+        let warm_energy = if dist.uses_energy_models() {
+            let stored_e = match &store {
+                Some(s) if !keys.is_empty() => {
+                    let ekeys: Vec<ModelKey> = keys.iter().map(ModelKey::energy).collect();
+                    s.warm_models(&ekeys)?
+                }
+                _ => None,
+            };
+            match (stored_e, energy_carry) {
+                (Some(mut stored), Some(carry)) => {
+                    for (s, c) in stored.iter_mut().zip(carry) {
+                        s.absorb(c);
+                    }
+                    Some(WarmStart::new(stored))
+                }
+                (Some(stored), None) => Some(WarmStart::new(stored)),
+                (None, Some(carry)) => Some(WarmStart::new(carry.to_vec())),
+                (None, None) => None,
+            }
+        } else {
+            None
+        };
         let ctx = SessionCtx {
             epsilon: self.epsilon,
             max_iters: self.max_iters,
             warm_start,
+            warm_energy,
             warm_start_2d: None,
         };
         let out = dist.distribute(n, bench, &ctx)?;
         if let Some(s) = &store {
-            if let Observations::OneD(obs) = &out.observations {
-                // persist only this run's measurements: echoing seeded
-                // models back would refresh stored points' weights and
-                // defeat staleness decay
-                s.record_run(keys, obs, &self.merge_policy)?;
-            }
+            self.flush_1d(s, keys, &out)?;
         }
         self.write_trace(&out)?;
         Ok(out)
     }
 
+    /// Persist one 1D run's measurements (speed, and for bi-objective
+    /// strategies energy too — under the `#energy` keys). Only this run's
+    /// observations are recorded: echoing seeded models back would refresh
+    /// stored points' weights and defeat staleness decay. With no keys,
+    /// persistence is skipped with a warning (see [`Self::run_1d`]).
+    fn flush_1d(&self, store: &ModelStore, keys: &[ModelKey], out: &Outcome) -> Result<()> {
+        let speed_obs = match &out.observations {
+            Observations::OneD(obs) => Some(obs),
+            _ => None,
+        };
+        let energy_obs = match &out.energy_observations {
+            Observations::OneD(obs) => Some(obs),
+            _ => None,
+        };
+        let any = |obs: Option<&Vec<PiecewiseModel>>| {
+            obs.map(|o| o.iter().any(|m| !m.is_empty())).unwrap_or(false)
+        };
+        if keys.is_empty() {
+            if any(speed_obs) || any(energy_obs) {
+                eprintln!(
+                    "warn: model store `{}` is configured but the run supplied \
+                     no model keys; dropping this run's observations",
+                    store.dir().display()
+                );
+            }
+            return Ok(());
+        }
+        if let Some(obs) = speed_obs {
+            store.record_run(keys, obs, &self.merge_policy)?;
+        }
+        if let Some(obs) = energy_obs {
+            let ekeys: Vec<ModelKey> = keys.iter().map(ModelKey::energy).collect();
+            store.record_run(&ekeys, obs, &self.merge_policy)?;
+        }
+        Ok(())
+    }
+
     /// Run a 2D distributor over an `m×n` block grid. `keys[j][i]` follows
     /// the algorithms' `[column][row]` model layout.
+    ///
+    /// Contract: an **empty `keys` grid disables persistence** — the run
+    /// executes normally, but its observations are dropped with a warning
+    /// (previously they vanished silently in a zip over no columns, while
+    /// the 1D path errored; both paths now behave the same).
     pub fn run_2d(
         &self,
         dist: &mut dyn Distributor2d,
@@ -217,29 +306,42 @@ impl AdaptiveSession {
             epsilon: self.epsilon,
             max_iters: self.max_iters,
             warm_start: None,
+            warm_energy: None,
             warm_start_2d,
         };
         let out = dist.distribute(m, n, bench, &ctx)?;
         if let Some(s) = &store {
             if let Observations::TwoD(obs) = &out.observations {
-                // a shape mismatch between the observation grid and the key
-                // grid must surface, not silently zip-truncate away columns
-                // of measurements (record_run already rejects row
-                // mismatches the same way)
-                if !keys.is_empty()
-                    && (obs.len() != keys.len()
-                        || obs.iter().any(|col| col.len() != rows))
-                {
-                    return Err(HfpmError::InvalidArg(format!(
-                        "2D observations ({} columns of {:?} rows) do not \
-                         match the model-key grid ({} columns of {rows} rows)",
-                        obs.len(),
-                        obs.iter().map(|c| c.len()).collect::<Vec<_>>(),
-                        keys.len()
-                    )));
-                }
-                for (col_keys, col_obs) in keys.iter().zip(obs) {
-                    s.record_run(col_keys, col_obs, &self.merge_policy)?;
+                if keys.is_empty() {
+                    // mirror the 1D contract: no keys means skip-and-warn,
+                    // not a silent zip over zero columns
+                    if obs.iter().any(|col| col.iter().any(|m| !m.is_empty())) {
+                        eprintln!(
+                            "warn: model store `{}` is configured but the 2D \
+                             run supplied no model keys; dropping this run's \
+                             observations",
+                            s.dir().display()
+                        );
+                    }
+                } else {
+                    // a shape mismatch between the observation grid and the
+                    // key grid must surface, not silently zip-truncate away
+                    // columns of measurements (record_run already rejects
+                    // row mismatches the same way)
+                    if obs.len() != keys.len()
+                        || obs.iter().any(|col| col.len() != rows)
+                    {
+                        return Err(HfpmError::InvalidArg(format!(
+                            "2D observations ({} columns of {:?} rows) do not \
+                             match the model-key grid ({} columns of {rows} rows)",
+                            obs.len(),
+                            obs.iter().map(|c| c.len()).collect::<Vec<_>>(),
+                            keys.len()
+                        )));
+                    }
+                    for (col_keys, col_obs) in keys.iter().zip(obs) {
+                        s.record_run(col_keys, col_obs, &self.merge_policy)?;
+                    }
                 }
             }
         }

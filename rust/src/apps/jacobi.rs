@@ -170,7 +170,7 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
         .max_iters(cfg.max_iters)
         .model_store(cfg.model_store.clone());
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone());
-    let mut dist = cfg.strategy.entry().make_1d(&AppResources {
+    let mut dist = cfg.strategy.make_1d(&AppResources {
         nodes: &nodes,
         n: cfg.n,
         unit_scale: cfg.n as f64, // a row is n point-updates
@@ -198,7 +198,14 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
                 cluster: &mut cluster,
                 n: cfg.n,
             };
-            session.run_1d_seeded(dist.as_mut(), cfg.n, &mut bench, &keys, rounds.seed())?
+            session.run_1d_seeded(
+                dist.as_mut(),
+                cfg.n,
+                &mut bench,
+                &keys,
+                rounds.seed(),
+                rounds.seed_energy(),
+            )?
         };
         rounds.absorb(&outcome, cluster.now() - before);
         let new_d = outcome.distribution.clone().into_1d()?;
@@ -252,7 +259,10 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
             iterations: rounds.iterations,
             imbalance,
             warm_started: rounds.warm_started,
+            warm_started_energy: rounds.warm_started_energy,
             converged: rounds.converged,
+            energy_j: cluster.total_dynamic_j(),
+            pareto: rounds.pareto.clone(),
         },
         d,
         sweeps: sweeps_done,

@@ -158,7 +158,7 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
     // columns: a column's work shrinks every panel step, so only the units
     // domain gives a speed function that is stationary across steps — the
     // one thing carry seeding and the persistent store both rely on
-    let mut dist = cfg.strategy.entry().make_1d(&AppResources {
+    let mut dist = cfg.strategy.make_1d(&AppResources {
         nodes: &nodes,
         n: cfg.n,
         unit_scale: 1.0,
@@ -204,6 +204,7 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
                 &mut cluster,
                 &keys,
                 rounds.seed(),
+                rounds.seed_energy(),
             )?;
             rounds.absorb(&outcome, cluster.now() - before);
             // integral block-columns from the unit-domain distribution
@@ -283,7 +284,10 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
             iterations: rounds.iterations,
             imbalance,
             warm_started: rounds.warm_started,
+            warm_started_energy: rounds.warm_started_energy,
             converged: rounds.converged,
+            energy_j: cluster.total_dynamic_j(),
+            pareto: rounds.pareto.clone(),
         },
         d: first_d,
         panels: nb as usize,

@@ -112,6 +112,12 @@ impl Benchmarker for RowBench<'_> {
         let units: Vec<u64> = d.iter().map(|&r| r * self.n).collect();
         self.cluster.run_1d(&units)
     }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        // joules pass through unscaled: they are per-rank totals, not in
+        // the rows domain
+        self.cluster.last_energy_j()
+    }
 }
 
 /// Build the cluster runtime for a config.
@@ -181,7 +187,7 @@ pub fn run_with_faults(
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone())?;
 
     // --- phase 1: partition (strategy-agnostic via the adapt layer) ---------
-    let mut dist = cfg.strategy.entry().make_1d(&AppResources {
+    let mut dist = cfg.strategy.make_1d(&AppResources {
         nodes: &nodes,
         n: cfg.n,
         unit_scale: cfg.n as f64, // a row is n mul+add units
@@ -242,7 +248,12 @@ pub fn run_with_faults(
             iterations: outcome.benchmark_steps,
             imbalance: phase.imbalance,
             warm_started: outcome.warm_started,
+            warm_started_energy: outcome.warm_started_energy,
             converged: outcome.converged,
+            // the cluster's joule clock covers the benchmarks *and* the
+            // scaled compute phase, mirroring the virtual time accounting
+            energy_j: cluster.total_dynamic_j(),
+            pareto: outcome.pareto.clone(),
         },
         d,
     })
@@ -335,6 +346,8 @@ mod tests {
         assert!((r.total_s - (r.partition_s + r.comm_s + r.compute_s)).abs() < 1e-9);
         assert!(r.iterations >= 1);
         assert!(r.compute_s > 0.0);
+        assert!(r.energy_j > 0.0, "simulated nodes meter joules");
+        assert!(r.pareto.is_none(), "dfpa is single-objective");
     }
 
     #[test]

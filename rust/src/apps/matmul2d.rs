@@ -139,7 +139,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     let session = AdaptiveSession::new()
         .epsilon(cfg.epsilon)
         .model_store(cfg.model_store.clone());
-    let mut dist = cfg.strategy.entry().make_2d(&AppResources2d {
+    let mut dist = cfg.strategy.make_2d(&AppResources2d {
         nodes: &nodes,
         p,
         q,

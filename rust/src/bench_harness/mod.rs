@@ -14,7 +14,61 @@ pub mod runner;
 pub use runner::{BenchGroup, BenchResult, Bencher};
 
 use crate::adapt::{Distributor, SessionCtx};
-use crate::dfpa::Benchmarker;
+use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::dfpa::{Benchmarker, StepReport};
+use crate::fpm::PiecewiseModel;
+use crate::util::rng::Pcg32;
+
+/// Synthetic piecewise models for partitioner benchmarks: geometric x
+/// growth, gently decaying values drawn from `[lo, hi)`. One shared recipe
+/// so cross-bench numbers (bench_micro vs bench_pareto) stay comparable.
+pub fn random_piecewise_models(
+    p: usize,
+    points: usize,
+    seed: u64,
+    lo: f64,
+    hi: f64,
+) -> Vec<PiecewiseModel> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..p)
+        .map(|_| {
+            let mut m = PiecewiseModel::new();
+            let mut x = rng.uniform(1.0, 20.0);
+            let mut s = rng.uniform(lo, hi);
+            for _ in 0..points {
+                m.insert(x, s);
+                x *= rng.uniform(1.5, 3.0);
+                s *= rng.uniform(0.5, 0.98);
+            }
+            m
+        })
+        .collect()
+}
+
+/// Row-granularity benchmarker that *owns* its cluster: what
+/// [`BenchGroup::bench_distribute`] factories return (they build a fresh
+/// owned pair per sample, so the apps' borrowed `RowBench` won't do).
+/// Distributes rows, runs `rows · n` kernel units per rank, and passes the
+/// cluster's joule metering through for energy-aware strategies.
+pub struct OwnedRowBench {
+    pub cluster: VirtualCluster,
+    pub n: u64,
+}
+
+impl Benchmarker for OwnedRowBench {
+    fn processors(&self) -> usize {
+        self.cluster.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> crate::error::Result<StepReport> {
+        let units: Vec<u64> = d.iter().map(|&r| r * self.n).collect();
+        self.cluster.run_1d(&units)
+    }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        self.cluster.last_energy_j()
+    }
+}
 
 impl BenchGroup {
     /// Bench an adapt-layer strategy end-to-end: every sample builds a

@@ -1,0 +1,480 @@
+//! `biobj` — the bi-objective (time + energy) distributor.
+//!
+//! Khaleghzadeh, Fahad, Shahid, Reddy & Lastovetsky 2019 ("Bi-objective
+//! Optimization of Data-parallel Applications on Heterogeneous Platforms
+//! for Performance and Energy via Workload Distribution", PAPERS.md)
+//! extend the functional-performance view of this repo's source paper with
+//! a second size-dependent function per processor: dynamic energy. This
+//! module is that extension over the `adapt` layer:
+//!
+//! - during execution it learns **two partial piecewise functions** per
+//!   processor — speed `s_i(x)` and energy-per-unit `e_i(x)` — from the
+//!   same benchmark steps DFPA already runs (the cluster meters joules
+//!   alongside virtual seconds, see [`crate::cluster::energy`]);
+//! - every iteration it rebuilds the **time/energy Pareto front** over 1D
+//!   distributions ([`pareto::build_front`]) and re-partitions onto the
+//!   point a user weight `w` selects by scalarization (`w = 1` pure time —
+//!   provably the same selection DFPA's partitioner makes — `w = 0` pure
+//!   energy);
+//! - it plugs into the strategy registry as `biobj:<w>`, so every 1D
+//!   workload (`repro run1d/jacobi/lu --strategy biobj:0.5`) becomes
+//!   energy-aware without app changes, and its two observation families
+//!   persist in the model store under the plain kernel key and the
+//!   `#energy`-suffixed one (see `adapt::session`), so warm starts cover
+//!   both functions.
+//!
+//! On a platform that does not meter energy (the benchmarker's
+//! `last_energy_j` returns `None`) the front degenerates to the
+//! time-optimal point and the distributor behaves like DFPA regardless of
+//! the weight — correct, just not energy-aware.
+
+pub mod pareto;
+
+pub use pareto::{
+    build_front, eval_energy, eval_time, ParetoFront, ParetoOptions, ParetoPoint, ParetoSummary,
+};
+
+use crate::adapt::{Distribution, Distributor, Observations, Outcome, SessionCtx};
+use crate::dfpa::algorithm::{even_distribution, Benchmarker};
+use crate::dfpa::trace::IterationRecord;
+use crate::error::{HfpmError, Result};
+use crate::fpm::PiecewiseModel;
+use crate::partition::GeometricOptions;
+use crate::util::stats::max_relative_imbalance;
+use crate::util::timer::Stopwatch;
+
+/// The bi-objective distributor. See the module docs; constructed by the
+/// registry from a `biobj:<w>` strategy string.
+#[derive(Debug, Clone)]
+pub struct BiObj {
+    /// Scalarization weight: 1 = pure time (DFPA-equivalent), 0 = pure
+    /// energy.
+    pub weight: f64,
+    pub geometric: GeometricOptions,
+    pub pareto: ParetoOptions,
+}
+
+impl BiObj {
+    pub fn new(weight: f64) -> Self {
+        Self {
+            weight,
+            geometric: GeometricOptions::default(),
+            pareto: ParetoOptions::default(),
+        }
+    }
+}
+
+/// Speed models with gaps filled by the pessimistic constant DFPA uses: an
+/// unmeasured processor is assumed as slow as the slowest evidence seen.
+fn filled_speed(models: &[PiecewiseModel], fallback_x: f64) -> Vec<PiecewiseModel> {
+    let min_speed = models
+        .iter()
+        .flat_map(|m| m.points().iter().map(|pt| pt.s))
+        .fold(f64::INFINITY, f64::min);
+    let guess = if min_speed.is_finite() { min_speed } else { 1.0 };
+    models
+        .iter()
+        .map(|m| {
+            if m.is_empty() {
+                PiecewiseModel::constant(fallback_x.max(1.0), guess)
+            } else {
+                m.clone()
+            }
+        })
+        .collect()
+}
+
+/// Energy models with gaps filled pessimistically the other way round: an
+/// unmeasured processor is assumed as *hungry* as the hungriest evidence,
+/// so the energy objective never dumps load onto a node it knows nothing
+/// about. All-empty evidence returns `None` (front degenerates to time).
+fn filled_energy(models: &[PiecewiseModel], fallback_x: f64) -> Option<Vec<PiecewiseModel>> {
+    let max_e = models
+        .iter()
+        .flat_map(|m| m.points().iter().map(|pt| pt.s))
+        .fold(0.0f64, f64::max);
+    if max_e <= 0.0 {
+        return None;
+    }
+    Some(
+        models
+            .iter()
+            .map(|m| {
+                if m.is_empty() {
+                    PiecewiseModel::constant(fallback_x.max(1.0), max_e)
+                } else {
+                    m.clone()
+                }
+            })
+            .collect(),
+    )
+}
+
+impl Distributor for BiObj {
+    fn name(&self) -> &'static str {
+        "biobj"
+    }
+
+    fn uses_model_store(&self) -> bool {
+        true
+    }
+
+    fn uses_energy_models(&self) -> bool {
+        true
+    }
+
+    fn distribute(
+        &mut self,
+        n: u64,
+        bench: &mut dyn Benchmarker,
+        ctx: &SessionCtx,
+    ) -> Result<Outcome> {
+        let p = bench.processors();
+        if p == 0 {
+            return Err(HfpmError::Partition("no processors".into()));
+        }
+        if n == 0 {
+            return Err(HfpmError::InvalidArg("n must be positive".into()));
+        }
+        if !(0.0..=1.0).contains(&self.weight) {
+            return Err(HfpmError::InvalidArg(format!(
+                "biobj weight must be in [0, 1], got {}",
+                self.weight
+            )));
+        }
+        if ctx.epsilon <= 0.0 {
+            return Err(HfpmError::InvalidArg(format!(
+                "epsilon must be positive, got {}",
+                ctx.epsilon
+            )));
+        }
+        let pure_time = self.weight >= 1.0 - 1e-9;
+        let fallback_x = (n as f64 / p as f64).max(1.0);
+
+        // --- seed both function families from the session's warm starts ---
+        let mut speed = vec![PiecewiseModel::new(); p];
+        let mut warm_speed = false;
+        if let Some(w) = &ctx.warm_start {
+            if w.has_evidence() {
+                if w.models.len() != p {
+                    return Err(HfpmError::InvalidArg(format!(
+                        "warm start carries {} models for {p} processors",
+                        w.models.len()
+                    )));
+                }
+                speed = w.models.clone();
+                warm_speed = true;
+            }
+        }
+        let mut energy = vec![PiecewiseModel::new(); p];
+        let mut warm_energy = false;
+        if let Some(w) = &ctx.warm_energy {
+            if w.has_evidence() {
+                if w.models.len() != p {
+                    return Err(HfpmError::InvalidArg(format!(
+                        "energy warm start carries {} models for {p} processors",
+                        w.models.len()
+                    )));
+                }
+                energy = w.models.clone();
+                warm_energy = true;
+            }
+        }
+
+        // --- initial distribution: front selection over the seeds, with
+        // DFPA's coverage guard; even split on a cold start ---
+        let mut d = if warm_speed {
+            let fs = filled_speed(&speed, fallback_x);
+            let fe = filled_energy(&energy, fallback_x);
+            match build_front(n, &fs, fe.as_deref(), self.geometric, &self.pareto) {
+                Ok(front) => {
+                    let pick = front.select(self.weight);
+                    let covered = pick.d.iter().zip(&fs).all(|(&di, m)| {
+                        let (lo, hi) = m.observed_range().expect("filled above");
+                        di == 0 || (di as f64 >= lo / 4.0 && di as f64 <= hi * 4.0)
+                    });
+                    if covered {
+                        pick.d.clone()
+                    } else {
+                        even_distribution(n, p)
+                    }
+                }
+                // degenerate stored models must never kill the run
+                Err(_) => even_distribution(n, p),
+            }
+        } else {
+            even_distribution(n, p)
+        };
+
+        let mut obs_speed = vec![PiecewiseModel::new(); p];
+        let mut obs_energy = vec![PiecewiseModel::new(); p];
+        let mut records: Vec<IterationRecord> = Vec::new();
+        let mut total_virtual = 0.0f64;
+        let mut partition_wall = 0.0f64;
+        let mut energy_total = 0.0f64;
+        let mut metered = true;
+        let mut converged = false;
+        let mut imbalance = 0.0f64;
+        let mut last_cost = f64::INFINITY;
+        let mut stagnant = 0usize;
+        let mut summary: Option<ParetoSummary> = None;
+
+        for iter in 0..ctx.max_iters.max(1) {
+            let report = bench.run_parallel(&d)?;
+            if report.times.len() != p {
+                return Err(HfpmError::Cluster(format!(
+                    "benchmarker returned {} times for {p} processors",
+                    report.times.len()
+                )));
+            }
+            total_virtual += report.virtual_cost_s;
+            let energies = bench.last_energy_j();
+            if let Some(es) = &energies {
+                energy_total += es.iter().sum::<f64>();
+            } else {
+                metered = false;
+            }
+
+            let speeds: Vec<f64> = d
+                .iter()
+                .zip(&report.times)
+                .map(|(&di, &ti)| if di == 0 || ti <= 0.0 { 0.0 } else { di as f64 / ti })
+                .collect();
+            let active: Vec<f64> = report
+                .times
+                .iter()
+                .zip(&d)
+                .filter(|(_, &di)| di > 0)
+                .map(|(&t, _)| t)
+                .collect();
+            imbalance = max_relative_imbalance(&active);
+
+            let sw = Stopwatch::start();
+            for i in 0..p {
+                if d[i] > 0 && speeds[i] > 0.0 {
+                    speed[i].insert(d[i] as f64, speeds[i]);
+                    obs_speed[i].insert(d[i] as f64, speeds[i]);
+                    if let Some(es) = &energies {
+                        if es[i] > 0.0 && es[i].is_finite() {
+                            let per_unit = es[i] / d[i] as f64;
+                            energy[i].insert(d[i] as f64, per_unit);
+                            obs_energy[i].insert(d[i] as f64, per_unit);
+                        }
+                    }
+                }
+            }
+            records.push(IterationRecord {
+                iter,
+                d: d.clone(),
+                times: report.times.clone(),
+                speeds,
+                imbalance,
+                virtual_cost_s: report.virtual_cost_s,
+                partition_wall_s: 0.0, // patched below if we re-partition
+            });
+
+            // w = 1 terminates exactly like DFPA: on the time imbalance
+            if pure_time && imbalance <= ctx.epsilon {
+                partition_wall += sw.elapsed_s();
+                converged = true;
+                break;
+            }
+
+            // re-select from the refined models
+            let fs = filled_speed(&speed, fallback_x);
+            let fe = if metered {
+                filled_energy(&energy, fallback_x)
+            } else {
+                None
+            };
+            let front = build_front(n, &fs, fe.as_deref(), self.geometric, &self.pareto)?;
+            let (chosen, cost) = front.scalarized(self.weight);
+            let pick = front.points[chosen].d.clone();
+            summary = Some(front.summary(self.weight));
+            let wall = sw.elapsed_s();
+            partition_wall += wall;
+            records.last_mut().expect("pushed above").partition_wall_s = wall;
+
+            // scalarized-cost plateau / selection fixpoint: the models
+            // stopped moving the choice — re-benchmarking only refreshes
+            // noise (the analogue of DFPA's stagnation exits)
+            let rel_impr = if last_cost.is_finite() {
+                (last_cost - cost) / last_cost.abs().max(1e-300)
+            } else {
+                f64::INFINITY
+            };
+            if pick == d || rel_impr <= ctx.epsilon * 0.1 {
+                stagnant += 1;
+            } else {
+                stagnant = 0;
+            }
+            last_cost = cost.min(last_cost);
+            if stagnant >= 2 {
+                // a stable scalarized optimum *is* the bi-objective
+                // termination criterion; for w = 1 the criterion is the
+                // imbalance test above, so a fixpoint there means the
+                // quantization floor exceeded ε — flag it like DFPA does
+                converged = !pure_time;
+                break;
+            }
+            // adopt the selection — except on the last iteration, where it
+            // would never be benchmarked: the outcome must report a
+            // distribution whose times (and imbalance) were measured
+            if iter + 1 < ctx.max_iters.max(1) {
+                d = pick;
+            }
+        }
+
+        // rebuild the summary against the final models so the reported
+        // front is the most refined one (a pure-time run can converge
+        // before ever building one) and `chosen` describes the
+        // distribution this outcome actually returns — a plateau exit can
+        // leave the last in-loop selection pointing elsewhere
+        if metered {
+            let fs = filled_speed(&speed, fallback_x);
+            if let Some(fe) = filled_energy(&energy, fallback_x) {
+                if let Ok(front) = build_front(n, &fs, Some(&fe), self.geometric, &self.pareto) {
+                    let mut s = front.summary(self.weight);
+                    match front.points.iter().position(|p| p.d == d) {
+                        Some(i) => s.chosen = i,
+                        None => {
+                            // the returned d fell off the final front
+                            // (quantization, plateau): splice its actual
+                            // objectives in so the summary describes it
+                            let t = eval_time(&d, &fs);
+                            let e = eval_energy(&d, &fe);
+                            let at = s.points.partition_point(|&(pt, _)| pt < t);
+                            s.points.insert(at, (t, e));
+                            s.chosen = at;
+                        }
+                    }
+                    summary = Some(s);
+                }
+            }
+        }
+
+        let has_energy_obs = obs_energy.iter().any(|m| !m.is_empty());
+        Ok(Outcome {
+            strategy: self.name(),
+            distribution: Distribution::OneD(d),
+            benchmark_steps: records.len(),
+            converged,
+            imbalance,
+            warm_started: warm_speed || warm_energy,
+            warm_started_energy: warm_energy,
+            observations: Observations::OneD(obs_speed),
+            energy_observations: if has_energy_obs {
+                Observations::OneD(obs_energy)
+            } else {
+                Observations::None
+            },
+            records,
+            total_virtual_s: total_virtual,
+            partition_wall_s: partition_wall,
+            model_build_s: None,
+            executes_workload: false,
+            energy_j: energy_total,
+            pareto: summary,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfpa::algorithm::{StepReport, WarmStart};
+    use crate::testkit::ConstEnergyBench as EnergyBench;
+
+    #[test]
+    fn pure_energy_weight_prefers_the_efficient_processor() {
+        // equal speeds, 5× energy gap: w = 0 must shift load to proc 1
+        let mut bench = EnergyBench::new(&[10.0, 10.0], &[5.0, 1.0]);
+        let out = BiObj::new(0.0)
+            .distribute(1000, &mut bench, &SessionCtx::with_epsilon(0.05))
+            .unwrap();
+        let d = out.distribution.into_1d().unwrap();
+        assert_eq!(d.iter().sum::<u64>(), 1000);
+        assert!(d[1] > d[0], "w=0 kept loading the hungry node: {d:?}");
+        assert!(out.energy_j > 0.0);
+        let s = out.pareto.expect("metered run reports a front");
+        assert!(s.len() >= 2);
+        assert_eq!(s.chosen, s.len() - 1, "w=0 selects the cheapest point");
+    }
+
+    #[test]
+    fn pure_time_weight_balances_like_dfpa() {
+        let mut bench = EnergyBench::new(&[10.0, 30.0], &[1.0, 1.0]);
+        let out = BiObj::new(1.0)
+            .distribute(400, &mut bench, &SessionCtx::with_epsilon(0.02))
+            .unwrap();
+        assert!(out.converged);
+        let d = out.distribution.into_1d().unwrap();
+        assert_eq!(d, vec![100, 300]);
+        assert!(matches!(out.observations, Observations::OneD(_)));
+        assert!(
+            matches!(&out.energy_observations, Observations::OneD(obs) if obs.iter().any(|m| !m.is_empty())),
+            "energy observations must be recorded"
+        );
+    }
+
+    #[test]
+    fn unmetered_bench_degrades_to_time_only() {
+        struct NoEnergy(EnergyBench);
+        impl Benchmarker for NoEnergy {
+            fn processors(&self) -> usize {
+                self.0.processors()
+            }
+            fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+                self.0.run_parallel(d)
+            }
+            // default last_energy_j: None
+        }
+        let mut bench = NoEnergy(EnergyBench::new(&[10.0, 30.0], &[1.0, 1.0]));
+        let out = BiObj::new(0.0)
+            .distribute(400, &mut bench, &SessionCtx::with_epsilon(0.02))
+            .unwrap();
+        let d = out.distribution.into_1d().unwrap();
+        assert_eq!(d.iter().sum::<u64>(), 400);
+        // without joules the selection is the time-optimal point
+        assert_eq!(d, vec![100, 300]);
+        assert!(out.energy_observations.is_none());
+        assert_eq!(out.energy_j, 0.0);
+    }
+
+    #[test]
+    fn warm_energy_models_flow_through_the_ctx() {
+        let mut cold_bench = EnergyBench::new(&[10.0, 10.0], &[5.0, 1.0]);
+        let cold = BiObj::new(0.3)
+            .distribute(2000, &mut cold_bench, &SessionCtx::with_epsilon(0.05))
+            .unwrap();
+        assert!(!cold.warm_started);
+        let (speed_obs, energy_obs) = match (&cold.observations, &cold.energy_observations) {
+            (Observations::OneD(s), Observations::OneD(e)) => (s.clone(), e.clone()),
+            other => panic!("expected 1D observation families, got {other:?}"),
+        };
+        let ctx = SessionCtx {
+            epsilon: 0.05,
+            warm_start: Some(WarmStart::new(speed_obs)),
+            warm_energy: Some(WarmStart::new(energy_obs)),
+            ..Default::default()
+        };
+        let mut warm_bench = EnergyBench::new(&[10.0, 10.0], &[5.0, 1.0]);
+        let warm = BiObj::new(0.3).distribute(2000, &mut warm_bench, &ctx).unwrap();
+        assert!(warm.warm_started);
+        assert!(warm.warm_started_energy);
+        assert!(
+            warm.benchmark_steps <= cold.benchmark_steps,
+            "warm {} vs cold {}",
+            warm.benchmark_steps,
+            cold.benchmark_steps
+        );
+    }
+
+    #[test]
+    fn invalid_weight_is_rejected() {
+        let mut bench = EnergyBench::new(&[10.0], &[1.0]);
+        let ctx = SessionCtx::default();
+        assert!(BiObj::new(-0.1).distribute(10, &mut bench, &ctx).is_err());
+        assert!(BiObj::new(1.1).distribute(10, &mut bench, &ctx).is_err());
+    }
+}

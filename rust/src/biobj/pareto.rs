@@ -1,0 +1,467 @@
+//! Time/energy Pareto-front construction over 1D distributions.
+//!
+//! Given two learned function families per processor — speed `s_i(x)`
+//! (units/second, a [`PiecewiseModel`]) and energy-per-unit `e_i(x)`
+//! (joules/unit, the same representation) — a distribution
+//! `d = (d_1, …, d_p)`, `Σ d_i = n`, has two objectives:
+//!
+//! ```text
+//! T(d) = max_i d_i / s_i(d_i)          (makespan)
+//! E(d) = Σ_i  d_i · e_i(d_i)           (total dynamic energy)
+//! ```
+//!
+//! The front is built by the ε-constraint method, the discrete analogue of
+//! Khaleghzadeh et al. 2019: the time-optimal endpoint comes from the
+//! geometric FPM partitioner (the same kernel DFPA uses every iteration),
+//! the energy-optimal endpoint from a greedy marginal-energy allocation,
+//! and the interior from minimizing energy subject to a makespan cap `T`
+//! swept geometrically between the endpoints (each cap translates into
+//! per-processor unit capacities through the speed functions). Dominated
+//! candidates are filtered, leaving a chain with strictly increasing time
+//! and strictly decreasing energy.
+//!
+//! A user weight `w ∈ [0, 1]` picks one front point by scalarization over
+//! *normalized* objectives (`w = 1` pure time, `0` pure energy) — see
+//! [`ParetoFront::scalarized`].
+
+use crate::error::{HfpmError, Result};
+use crate::fpm::{PiecewiseModel, SpeedFunction};
+use crate::partition::{partition_with, GeometricOptions};
+
+/// Tuning of the front construction.
+#[derive(Debug, Clone, Copy)]
+pub struct ParetoOptions {
+    /// Makespan-cap levels swept between the time- and energy-optimal
+    /// endpoints (the front holds at most `levels + 1` points).
+    pub levels: usize,
+    /// Granularity of the greedy energy allocation: units are handed out
+    /// in `≈ n / chunks` pieces.
+    pub chunks: usize,
+}
+
+impl Default for ParetoOptions {
+    fn default() -> Self {
+        Self {
+            levels: 16,
+            chunks: 64,
+        }
+    }
+}
+
+/// One candidate distribution with its two objective values.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub d: Vec<u64>,
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+/// The non-dominated set, sorted by ascending time (so descending energy).
+/// Always non-empty: the time-optimal point exists even without energy
+/// models (the front then degenerates to that single point with
+/// `energy_j = 0`, meaning "not metered").
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    pub points: Vec<ParetoPoint>,
+}
+
+/// Makespan of `d` under the speed models (which must all be non-empty).
+pub fn eval_time(d: &[u64], speed: &[PiecewiseModel]) -> f64 {
+    d.iter()
+        .zip(speed)
+        .filter(|(&di, _)| di > 0)
+        .map(|(&di, m)| di as f64 / m.speed(di as f64))
+        .fold(0.0f64, f64::max)
+}
+
+/// Total dynamic energy of `d` under the energy-per-unit models.
+pub fn eval_energy(d: &[u64], energy: &[PiecewiseModel]) -> f64 {
+    d.iter()
+        .zip(energy)
+        .filter(|(&di, _)| di > 0)
+        .map(|(&di, m)| di as f64 * m.speed(di as f64))
+        .sum()
+}
+
+/// Largest `x ≤ n` with `x / s(x) ≤ cap_t` (binary search; exact for the
+/// canonical non-decreasing `x/s(x)` shape, a safe approximation when
+/// noise dents it).
+fn max_units_within(speed: &PiecewiseModel, cap_t: f64, n: u64) -> u64 {
+    if n == 0 || cap_t <= 0.0 {
+        return 0;
+    }
+    let time = |x: u64| x as f64 / speed.speed(x as f64);
+    if time(n) <= cap_t {
+        return n;
+    }
+    let (mut lo, mut hi) = (0u64, n); // invariant: time(lo) ≤ cap_t < time(hi)
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if time(mid) <= cap_t {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Greedy minimum-energy allocation of `n` units, optionally capped per
+/// processor: each chunk goes to the processor with the smallest marginal
+/// energy `(x+c)·e(x+c) − x·e(x)`.
+fn greedy_energy(
+    n: u64,
+    energy: &[PiecewiseModel],
+    caps: Option<&[u64]>,
+    chunks: usize,
+) -> Vec<u64> {
+    let p = energy.len();
+    let mut d = vec![0u64; p];
+    let chunk = (n / chunks.max(1) as u64).max(1);
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = chunk.min(remaining);
+        let mut best: Option<(usize, f64)> = None;
+        for (i, m) in energy.iter().enumerate() {
+            let cap = caps.map(|c| c[i]).unwrap_or(n);
+            if d[i].saturating_add(take) > cap {
+                continue;
+            }
+            let x0 = d[i] as f64;
+            let x1 = (d[i] + take) as f64;
+            // m.speed(x) *is* e(x): joules per unit at size x
+            let before = if d[i] == 0 { 0.0 } else { x0 * m.speed(x0) };
+            let marginal = x1 * m.speed(x1) - before;
+            if best.map(|(_, b)| marginal < b).unwrap_or(true) {
+                best = Some((i, marginal));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                d[i] += take;
+                remaining -= take;
+            }
+            None => {
+                // caps too tight for a whole chunk: pour the remainder into
+                // whatever slack exists (the caller checked Σ caps ≥ n)
+                let mut progressed = false;
+                for (i, di) in d.iter_mut().enumerate() {
+                    let cap = caps.map(|c| c[i]).unwrap_or(n);
+                    let slack = cap.saturating_sub(*di).min(remaining);
+                    if slack > 0 {
+                        *di += slack;
+                        remaining -= slack;
+                        progressed = true;
+                    }
+                    if remaining == 0 {
+                        break;
+                    }
+                }
+                if !progressed {
+                    break; // infeasible caps; return a partial allocation
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Build the time/energy front over 1D distributions of `n` units.
+///
+/// `speed` models must all be non-empty (the caller fills gaps with its
+/// pessimistic constants, as DFPA does). `energy` is optional: `None` —
+/// or any empty model in it — degenerates the front to the time-optimal
+/// point alone, which keeps energy-aware strategies correct on unmetered
+/// platforms.
+pub fn build_front(
+    n: u64,
+    speed: &[PiecewiseModel],
+    energy: Option<&[PiecewiseModel]>,
+    geometric: GeometricOptions,
+    opts: &ParetoOptions,
+) -> Result<ParetoFront> {
+    if speed.is_empty() {
+        return Err(HfpmError::Partition("no processors".into()));
+    }
+    if speed.iter().any(|m| m.is_empty()) {
+        return Err(HfpmError::InvalidArg(
+            "pareto front needs a non-empty speed model per processor".into(),
+        ));
+    }
+    let d_time = partition_with(n, speed, geometric)?.d;
+    let energy = match energy {
+        Some(e) if e.len() == speed.len() && e.iter().all(|m| !m.is_empty()) => e,
+        _ => {
+            let time_s = eval_time(&d_time, speed);
+            return Ok(ParetoFront {
+                points: vec![ParetoPoint {
+                    d: d_time,
+                    time_s,
+                    energy_j: 0.0,
+                }],
+            });
+        }
+    };
+
+    let mut cands: Vec<Vec<u64>> = vec![d_time.clone()];
+    let d_energy = greedy_energy(n, energy, None, opts.chunks);
+    if d_energy.iter().sum::<u64>() == n {
+        cands.push(d_energy.clone());
+    }
+    let t_min = eval_time(&d_time, speed);
+    let t_max = eval_time(&d_energy, speed).max(t_min);
+    if t_max > t_min * (1.0 + 1e-9) && t_min > 0.0 {
+        for k in 1..opts.levels.max(1) {
+            let frac = k as f64 / opts.levels as f64;
+            let t_cap = t_min * (t_max / t_min).powf(frac);
+            let caps: Vec<u64> = speed
+                .iter()
+                .map(|m| max_units_within(m, t_cap, n))
+                .collect();
+            if caps.iter().sum::<u64>() < n {
+                continue; // this cap is infeasible; tighter ones are too,
+                          // but skipping keeps the loop simple
+            }
+            let d = greedy_energy(n, energy, Some(&caps), opts.chunks);
+            if d.iter().sum::<u64>() == n {
+                cands.push(d);
+            }
+        }
+    }
+
+    let mut pts: Vec<ParetoPoint> = cands
+        .into_iter()
+        .map(|d| ParetoPoint {
+            time_s: eval_time(&d, speed),
+            energy_j: eval_energy(&d, energy),
+            d,
+        })
+        .collect();
+    pts.sort_by(|a, b| {
+        a.time_s
+            .total_cmp(&b.time_s)
+            .then(a.energy_j.total_cmp(&b.energy_j))
+    });
+    // non-domination: time is ascending, so keep only strict energy drops
+    let mut points: Vec<ParetoPoint> = Vec::new();
+    for pt in pts {
+        let dominated = points
+            .last()
+            .map(|prev| pt.energy_j >= prev.energy_j)
+            .unwrap_or(false);
+        if !dominated {
+            points.push(pt);
+        }
+    }
+    Ok(ParetoFront { points })
+}
+
+impl ParetoFront {
+    /// Index and cost of the point minimizing the scalarization
+    /// `w·T/T_min + (1−w)·E/E_min` (objectives normalized by the front's
+    /// own minima so the weight is unit-free).
+    pub fn scalarized(&self, weight: f64) -> (usize, f64) {
+        let w = weight.clamp(0.0, 1.0);
+        let t0 = self
+            .points
+            .iter()
+            .map(|p| p.time_s)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-300);
+        let e_min = self
+            .points
+            .iter()
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        let e0 = if e_min > 0.0 { e_min } else { 1.0 };
+        let mut best = (0usize, f64::INFINITY);
+        for (i, p) in self.points.iter().enumerate() {
+            let cost = w * (p.time_s / t0) + (1.0 - w) * (p.energy_j / e0);
+            if cost < best.1 {
+                best = (i, cost);
+            }
+        }
+        best
+    }
+
+    /// The selected point for a weight (see [`ParetoFront::scalarized`]).
+    pub fn select(&self, weight: f64) -> &ParetoPoint {
+        &self.points[self.scalarized(weight).0]
+    }
+
+    /// Is every point non-dominated by every other? (Test invariant.)
+    pub fn is_non_dominated(&self) -> bool {
+        self.points.iter().enumerate().all(|(i, a)| {
+            self.points.iter().enumerate().all(|(j, b)| {
+                i == j
+                    || !(b.time_s <= a.time_s
+                        && b.energy_j <= a.energy_j
+                        && (b.time_s < a.time_s || b.energy_j < a.energy_j))
+            })
+        })
+    }
+
+    /// Compact copy for reports: objective pairs plus the chosen index.
+    pub fn summary(&self, weight: f64) -> ParetoSummary {
+        ParetoSummary {
+            weight,
+            points: self.points.iter().map(|p| (p.time_s, p.energy_j)).collect(),
+            chosen: self.scalarized(weight).0,
+        }
+    }
+}
+
+/// What an [`crate::adapt::Outcome`] carries of the front: the objective
+/// pairs (time-ascending), the scalarization weight, and which point it
+/// selected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoSummary {
+    /// Scalarization weight used (1 = pure time, 0 = pure energy).
+    pub weight: f64,
+    /// `(time_s, energy_j)` per non-dominated point, time-ascending.
+    pub points: Vec<(f64, f64)>,
+    /// Index of the selected point.
+    pub chosen: usize,
+}
+
+impl ParetoSummary {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// `(fastest, slowest)` times on the front.
+    pub fn time_range_s(&self) -> (f64, f64) {
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for &(t, _) in &self.points {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        (lo, hi)
+    }
+
+    /// `(cheapest, dearest)` energies on the front.
+    pub fn energy_range_j(&self) -> (f64, f64) {
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for &(_, e) in &self.points {
+            lo = lo.min(e);
+            hi = hi.max(e);
+        }
+        (lo, hi)
+    }
+
+    /// The selected point's objectives.
+    pub fn chosen_point(&self) -> (f64, f64) {
+        self.points[self.chosen]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts(vals: &[f64]) -> Vec<PiecewiseModel> {
+        vals.iter()
+            .map(|&v| PiecewiseModel::constant(100.0, v))
+            .collect()
+    }
+
+    #[test]
+    fn equal_speeds_unequal_energy_spread_the_front() {
+        // two equally fast processors, 5× energy difference: time-optimal
+        // splits evenly, energy-optimal loads the cheap one
+        let speed = consts(&[10.0, 10.0]);
+        let energy = consts(&[5.0, 1.0]);
+        let front = build_front(
+            1000,
+            &speed,
+            Some(&energy),
+            GeometricOptions::default(),
+            &ParetoOptions::default(),
+        )
+        .unwrap();
+        assert!(front.points.len() >= 2, "front: {:?}", front.points);
+        assert!(front.is_non_dominated());
+        // endpoints
+        let fastest = &front.points[0];
+        let cheapest = front.points.last().unwrap();
+        assert_eq!(fastest.d, vec![500, 500]);
+        assert_eq!(cheapest.d, vec![0, 1000]);
+        assert!(cheapest.energy_j < fastest.energy_j);
+        assert!(cheapest.time_s > fastest.time_s);
+        // scalarization endpoints
+        assert_eq!(front.select(1.0).d, fastest.d);
+        assert_eq!(front.select(0.0).d, cheapest.d);
+        // summary round trip
+        let s = front.summary(0.0);
+        assert_eq!(s.chosen, front.points.len() - 1);
+        assert_eq!(s.len(), front.points.len());
+    }
+
+    #[test]
+    fn no_energy_models_degenerate_to_the_time_point() {
+        let speed = consts(&[10.0, 30.0]);
+        let front = build_front(
+            400,
+            &speed,
+            None,
+            GeometricOptions::default(),
+            &ParetoOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(front.points.len(), 1);
+        assert_eq!(front.points[0].d, vec![100, 300]);
+        assert_eq!(front.select(0.3).d, vec![100, 300]);
+    }
+
+    #[test]
+    fn size_dependent_energy_caps_the_greedy_dump() {
+        // the cheap processor gets expensive past x=600 (paging-like):
+        // pure greedy must not dump everything on it
+        let speed = consts(&[10.0, 10.0]);
+        let mut cheap_then_dear = PiecewiseModel::new();
+        cheap_then_dear.insert(100.0, 1.0);
+        cheap_then_dear.insert(600.0, 1.0);
+        cheap_then_dear.insert(1000.0, 20.0);
+        let energy = vec![PiecewiseModel::constant(100.0, 5.0), cheap_then_dear];
+        let front = build_front(
+            1000,
+            &speed,
+            Some(&energy),
+            GeometricOptions::default(),
+            &ParetoOptions::default(),
+        )
+        .unwrap();
+        assert!(front.is_non_dominated());
+        let cheapest = front.select(0.0);
+        assert!(
+            cheapest.d[1] < 1000,
+            "greedy ignored the energy knee: {:?}",
+            cheapest.d
+        );
+    }
+
+    #[test]
+    fn cap_search_respects_the_speed_functions() {
+        let m = PiecewiseModel::constant(100.0, 10.0); // t(x) = x/10
+        assert_eq!(max_units_within(&m, 5.0, 1000), 50);
+        assert_eq!(max_units_within(&m, 0.0, 1000), 0);
+        assert_eq!(max_units_within(&m, 1e9, 1000), 1000);
+    }
+
+    #[test]
+    fn empty_speed_model_is_an_error() {
+        let speed = vec![PiecewiseModel::new()];
+        assert!(build_front(
+            10,
+            &speed,
+            None,
+            GeometricOptions::default(),
+            &ParetoOptions::default()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-node power/energy modeling — the second size-dependent function
+//! family of the bi-objective extension (Khaleghzadeh et al. 2019).
+//!
+//! The paper this repo reproduces optimizes one objective, execution time,
+//! through the speed function `s(x)`. The bi-objective extension needs a
+//! second function of the same shape: **dynamic energy** `E(x)`, the
+//! joules a node spends executing `x` computation units. This module
+//! models it analytically per node, exactly as `fpm::analytic` models
+//! speed, so the simulated cluster can meter joules the way it meters
+//! virtual seconds:
+//!
+//! ```text
+//! E(x) = dyn_w · t(x) + e_unit_j · x
+//! ```
+//!
+//! - `e_unit_j` — switching energy per computation unit. CMOS switching
+//!   energy per cycle scales roughly with `f²` (voltage tracks frequency),
+//!   and a unit costs `1/units_per_cycle` cycles, so high-clock low-IPC
+//!   cores (the NetBurst P4s of the HCL cluster) pay far more joules per
+//!   unit than low-clock high-IPC ones (the Opterons) — which is what
+//!   makes the time-optimal and energy-optimal distributions genuinely
+//!   different on the paper's testbeds;
+//! - `dyn_w` — the power burned for the *duration* of the execution over
+//!   and above idle (uncore, memory controller, stall power). Through
+//!   `t(x) = x / s(x)` this term makes energy-per-unit **size-dependent**:
+//!   past the cache and paging knees the node slows down, every unit takes
+//!   longer, and its energy cost rises — the same functional shape the
+//!   speed model has, which is why the bi-objective partitioner learns
+//!   `e(x) = E(x)/x` as a second [`crate::fpm::PiecewiseModel`];
+//! - `static_w` — idle draw attributed to the node, reported separately
+//!   (the bi-objective optimization follows Khaleghzadeh et al. in
+//!   optimizing *dynamic* energy; static energy is `static_w · T` whatever
+//!   the distribution, so it only re-weights the time objective).
+
+use crate::config::MachineSpec;
+
+/// Joules per cycle per GHz² — calibrated so a 3.4 GHz NetBurst-era core
+/// lands near its ~60 W dynamic budget (1.5 nJ/cycle · GHz⁻²).
+const SWITCH_J_PER_CYCLE_GHZ2: f64 = 1.5e-9;
+
+/// Power model of one node. Built per [`MachineSpec`] by
+/// [`PowerProfile::from_spec`] (heuristic) or
+/// [`crate::cluster::presets::power_profile`] (heuristic plus per-model
+/// calibration of the paper-era machines).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerProfile {
+    /// Idle draw attributed to the node, watts.
+    pub static_w: f64,
+    /// Dynamic power burned for the duration of an execution (uncore,
+    /// memory, stalls), watts.
+    pub dyn_w: f64,
+    /// Switching energy per computation unit, joules.
+    pub e_unit_j: f64,
+}
+
+impl PowerProfile {
+    /// Derive a profile from the hardware description alone.
+    ///
+    /// `e_unit_j = c · f² / units_per_cycle`: energy per cycle grows
+    /// quadratically with clock (voltage scaling) and a unit costs
+    /// `1/upc` cycles. `dyn_w` and `static_w` grow mildly with clock.
+    pub fn from_spec(spec: &MachineSpec) -> Self {
+        let ghz = spec.clock_ghz.max(0.1);
+        let upc = spec.units_per_cycle.max(1e-3);
+        Self {
+            static_w: 40.0 + 6.0 * ghz,
+            dyn_w: 4.0 + 2.0 * ghz,
+            e_unit_j: SWITCH_J_PER_CYCLE_GHZ2 * ghz * ghz / upc,
+        }
+    }
+
+    /// Dynamic energy of executing `units` in `time_s` seconds.
+    pub fn dynamic_energy_j(&self, units: u64, time_s: f64) -> f64 {
+        if units == 0 {
+            return 0.0;
+        }
+        self.dyn_w * time_s.max(0.0) + self.e_unit_j * units as f64
+    }
+
+    /// Scale the whole dynamic side of the profile (per-model calibration
+    /// hook used by the presets: e.g. NetBurst runs hotter than the spec
+    /// heuristic alone suggests, Opterons cooler).
+    pub fn scaled_dynamic(mut self, factor: f64) -> Self {
+        self.dyn_w *= factor;
+        self.e_unit_j *= factor;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(ghz: f64, upc: f64) -> MachineSpec {
+        MachineSpec::new("h", "m", ghz, 800.0, upc, 1024, 1024)
+    }
+
+    #[test]
+    fn energy_is_affine_in_time_and_units() {
+        let p = PowerProfile {
+            static_w: 50.0,
+            dyn_w: 10.0,
+            e_unit_j: 2e-9,
+        };
+        let e = p.dynamic_energy_j(1_000_000, 0.5);
+        assert!((e - (10.0 * 0.5 + 2e-9 * 1e6)).abs() < 1e-12);
+        assert_eq!(p.dynamic_energy_j(0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn high_clock_low_ipc_pays_more_per_unit() {
+        // NetBurst-ish (3.4 GHz, upc 0.30) vs Opteron-ish (1.8 GHz, 0.55):
+        // similar peak speeds, wildly different joules per unit
+        let hot = PowerProfile::from_spec(&spec(3.4, 0.30));
+        let cool = PowerProfile::from_spec(&spec(1.8, 0.55));
+        assert!(
+            hot.e_unit_j > 4.0 * cool.e_unit_j,
+            "hot {} vs cool {}",
+            hot.e_unit_j,
+            cool.e_unit_j
+        );
+    }
+
+    #[test]
+    fn calibration_scales_dynamic_only() {
+        let base = PowerProfile::from_spec(&spec(3.0, 0.5));
+        let hot = base.scaled_dynamic(1.2);
+        assert_eq!(hot.static_w, base.static_w);
+        assert!((hot.e_unit_j / base.e_unit_j - 1.2).abs() < 1e-12);
+        assert!((hot.dyn_w / base.dyn_w - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_raises_energy_per_unit() {
+        // the same units taking longer (paging, straggler) must cost more
+        // joules — this is what makes e(x) size-dependent through t(x)
+        let p = PowerProfile::from_spec(&spec(3.0, 0.5));
+        let fast = p.dynamic_energy_j(1 << 20, 0.1);
+        let slow = p.dynamic_energy_j(1 << 20, 1.0);
+        assert!(slow > fast);
+    }
+}

@@ -29,6 +29,22 @@ pub trait NodeExecutor: Send {
     fn host(&self) -> &str {
         "?"
     }
+
+    /// Dynamic energy (joules) this node spends executing `units` in
+    /// `time_s` seconds. The default of 0 marks the executor as
+    /// **unmetered** — the cluster then reports no energy for its steps
+    /// and energy-aware strategies degrade to time-only operation.
+    /// [`super::node::SimNode`] meters through its
+    /// [`super::energy::PowerProfile`].
+    fn dynamic_energy_j(&self, units: u64, time_s: f64) -> f64 {
+        let _ = (units, time_s);
+        0.0
+    }
+
+    /// Idle power draw attributed to this node, watts (0 = unmetered).
+    fn static_power_w(&self) -> f64 {
+        0.0
+    }
 }
 
 /// How the cluster executes kernels — selected by CLI/app configuration.

@@ -19,10 +19,14 @@
 //! - [`virtual_cluster`] — the leader/worker runtime: one thread per node,
 //!   real message channels, virtual clock accounting; implements
 //!   [`crate::dfpa::Benchmarker`] and [`crate::dfpa2d::Benchmarker2d`];
+//! - [`energy`] — per-node power models ([`PowerProfile`]): the cluster
+//!   meters dynamic joules alongside virtual seconds, the second objective
+//!   of the bi-objective distributor (`crate::biobj`);
 //! - [`faults`] — fault injection (dead worker, straggler) for the
 //!   failure-path tests.
 
 pub mod comm;
+pub mod energy;
 pub mod executor;
 pub mod faults;
 pub mod node;
@@ -30,6 +34,7 @@ pub mod presets;
 pub mod virtual_cluster;
 
 pub use comm::{CommModel, Collective};
+pub use energy::PowerProfile;
 pub use executor::{ExecutionMode, KernelExecutor};
 pub use node::SimNode;
 pub use virtual_cluster::{VirtualCluster, VirtualCluster2d};

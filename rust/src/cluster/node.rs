@@ -1,6 +1,7 @@
 //! A simulated cluster node: hardware spec → analytic speed model → noisy
 //! kernel timings.
 
+use super::energy::PowerProfile;
 use super::executor::NodeExecutor;
 use crate::config::MachineSpec;
 use crate::error::Result;
@@ -17,6 +18,7 @@ pub struct SimNode {
     pub spec: MachineSpec,
     model: AnalyticModel,
     surface: SpeedSurface,
+    power: PowerProfile,
     noise_rel: f64,
     rng: Pcg32,
 }
@@ -37,6 +39,7 @@ impl SimNode {
             spec: spec.clone(),
             model: AnalyticModel::from_spec(spec, footprint),
             surface: SpeedSurface::from_spec(spec, block),
+            power: super::presets::power_profile(spec),
             noise_rel,
             rng: Pcg32::new(seed, rank as u64 + 1),
         }
@@ -56,6 +59,17 @@ impl SimNode {
     /// The node's 2D ground-truth surface.
     pub fn surface(&self) -> &SpeedSurface {
         &self.surface
+    }
+
+    /// The node's power model (see [`PowerProfile`]).
+    pub fn power(&self) -> &PowerProfile {
+        &self.power
+    }
+
+    /// Override the power model (tests, custom calibrations).
+    pub fn with_power(mut self, power: PowerProfile) -> Self {
+        self.power = power;
+        self
     }
 
     /// Change the 1D kernel footprint (new problem size n ⇒ new fixed
@@ -92,6 +106,14 @@ impl NodeExecutor for SimNode {
 
     fn host(&self) -> &str {
         &self.spec.host
+    }
+
+    fn dynamic_energy_j(&self, units: u64, time_s: f64) -> f64 {
+        self.power.dynamic_energy_j(units, time_s)
+    }
+
+    fn static_power_w(&self) -> f64 {
+        self.power.static_w
     }
 }
 
@@ -139,6 +161,18 @@ mod tests {
         let mut node = SimNode::new(0, &spec, Footprint::affine(16.0, 0.0), 32, 0.0, 1);
         assert_eq!(node.execute(0).unwrap(), 0.0);
         assert_eq!(node.execute_2d(0, 10).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn node_meters_joules_alongside_seconds() {
+        let spec = MachineSpec::new("a", "", 3.0, 800.0, 0.4, 1024, 1024);
+        let mut node = SimNode::new(0, &spec, Footprint::affine(16.0, 0.0), 32, 0.0, 1);
+        let t = node.execute(1_000_000).unwrap();
+        let e = node.dynamic_energy_j(1_000_000, t);
+        let want = node.power().dynamic_energy_j(1_000_000, t);
+        assert!(e > 0.0 && (e - want).abs() < 1e-12);
+        assert!(node.static_power_w() > 0.0);
+        assert_eq!(node.dynamic_energy_j(0, 0.0), 0.0);
     }
 
     #[test]

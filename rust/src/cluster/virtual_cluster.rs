@@ -45,6 +45,9 @@ enum WorkerMsg {
     Done {
         rank: usize,
         time_s: f64,
+        /// Dynamic joules the executor metered for this task (0 when the
+        /// executor does not meter energy).
+        energy_j: f64,
         capped: bool,
     },
     Failed {
@@ -73,6 +76,17 @@ pub struct VirtualCluster {
     pub steps_run: usize,
     /// Observations cut short by a time cap (paper optimization 4).
     pub capped_observations: usize,
+    /// Per-rank dynamic joules of the most recent superstep.
+    last_energies: Vec<f64>,
+    /// Dynamic joules accumulated across all supersteps (plus explicit
+    /// [`VirtualCluster::charge_energy`] charges), the energy analogue of
+    /// the virtual clock.
+    total_dynamic_j: f64,
+    /// Whether any executor actually meters energy (all-zero static power
+    /// marks a fully unmetered cluster, e.g. stub executors).
+    metered: bool,
+    /// Sum of the nodes' static power draws, watts.
+    static_w: f64,
     /// Reply timeout for hang protection.
     timeout: Duration,
 }
@@ -87,6 +101,13 @@ impl VirtualCluster {
         let (reply_tx, reply_rx) = channel::<WorkerMsg>();
         let faults = Arc::new(faults);
         let hosts: Vec<String> = executors.iter().map(|e| e.host().to_string()).collect();
+        let static_w: f64 = executors.iter().map(|e| e.static_power_w()).sum();
+        // probe once before the executors move to their threads: a cluster
+        // where no executor meters energy reports None instead of zeros
+        let metered = executors
+            .iter()
+            .any(|e| e.static_power_w() > 0.0 || e.dynamic_energy_j(1 << 20, 1.0) > 0.0);
+        let size = executors.len();
         let workers = executors
             .into_iter()
             .enumerate()
@@ -119,9 +140,21 @@ impl VirtualCluster {
                                         Ok(t) => {
                                             let t = t * plan.slowdown(rank, step);
                                             let (t, capped) = apply_time_cap(t, cap);
+                                            // joules follow the *reported*
+                                            // duration: a straggler burns
+                                            // power for as long as it runs
+                                            let units = match task {
+                                                Task::OneD { units } => units,
+                                                Task::TwoD { rows, width } => {
+                                                    rows.saturating_mul(width)
+                                                }
+                                            };
+                                            let energy_j =
+                                                exec.dynamic_energy_j(units, t);
                                             let _ = reply.send(WorkerMsg::Done {
                                                 rank,
                                                 time_s: t,
+                                                energy_j,
                                                 capped,
                                             });
                                         }
@@ -152,6 +185,10 @@ impl VirtualCluster {
             step: 0,
             steps_run: 0,
             capped_observations: 0,
+            last_energies: vec![0.0; size],
+            total_dynamic_j: 0.0,
+            metered,
+            static_w,
             timeout: Duration::from_secs(120),
         }
     }
@@ -177,6 +214,39 @@ impl VirtualCluster {
     /// Charge an explicit virtual cost (e.g. application data distribution).
     pub fn charge(&mut self, seconds: f64) {
         self.clock.advance(seconds);
+    }
+
+    /// Charge explicit dynamic joules (the energy analogue of
+    /// [`VirtualCluster::charge`]; used when an app scales a probed step
+    /// to a whole phase).
+    pub fn charge_energy(&mut self, joules: f64) {
+        self.total_dynamic_j += joules.max(0.0);
+    }
+
+    /// Does any executor meter energy?
+    pub fn meters_energy(&self) -> bool {
+        self.metered
+    }
+
+    /// Per-rank dynamic joules of the most recent superstep.
+    pub fn last_step_energies(&self) -> &[f64] {
+        &self.last_energies
+    }
+
+    /// Dynamic joules accumulated so far (supersteps + explicit charges).
+    pub fn total_dynamic_j(&self) -> f64 {
+        self.total_dynamic_j
+    }
+
+    /// Sum of the nodes' static power draws, watts.
+    pub fn static_power_w(&self) -> f64 {
+        self.static_w
+    }
+
+    /// Total energy so far: accumulated dynamic joules plus the cluster's
+    /// static draw over the elapsed virtual time.
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_dynamic_j + self.static_w * self.now()
     }
 
     /// Execute one superstep: `tasks[rank] = None` sits the rank out.
@@ -207,15 +277,18 @@ impl VirtualCluster {
         }
 
         let mut times = vec![0.0f64; self.size()];
+        let mut energies = vec![0.0f64; self.size()];
         let mut failure: Option<HfpmError> = None;
         for _ in 0..expected {
             match self.reply_rx.recv_timeout(self.timeout) {
                 Ok(WorkerMsg::Done {
                     rank,
                     time_s,
+                    energy_j,
                     capped,
                 }) => {
                     times[rank] = time_s;
+                    energies[rank] = energy_j;
                     if capped {
                         self.capped_observations += 1;
                     }
@@ -245,6 +318,8 @@ impl VirtualCluster {
         let max_t = times.iter().cloned().fold(0.0f64, f64::max);
         let cost = max_t + control;
         self.clock.advance(cost);
+        self.total_dynamic_j += energies.iter().sum::<f64>();
+        self.last_energies = energies;
         Ok(StepReport {
             times,
             virtual_cost_s: cost,
@@ -302,6 +377,14 @@ impl Benchmarker for VirtualCluster {
 
     fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
         self.run_1d(d)
+    }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        if self.metered {
+            Some(self.last_energies.clone())
+        } else {
+            None
+        }
     }
 }
 
@@ -424,6 +507,49 @@ mod tests {
         assert_eq!(r.d.iter().sum::<u64>(), 2_000_000);
         // slow node p4 (2.9 GHz Celeron) gets fewer units than fast p1
         assert!(r.d[3] < r.d[0], "d = {:?}", r.d);
+    }
+
+    #[test]
+    fn supersteps_accumulate_joules() {
+        let mut c = mini_cluster(0.0);
+        assert!(c.meters_energy());
+        assert!(c.static_power_w() > 0.0);
+        assert_eq!(c.total_dynamic_j(), 0.0);
+        c.run_1d(&[1 << 20; 4]).unwrap();
+        let e1 = c.total_dynamic_j();
+        assert!(e1 > 0.0);
+        let step = c.last_step_energies().to_vec();
+        assert_eq!(step.len(), 4);
+        assert!(step.iter().all(|&e| e > 0.0));
+        assert!((step.iter().sum::<f64>() - e1).abs() < 1e-9);
+        // a sat-out rank burns nothing
+        c.run_1d(&[1 << 20, 0, 1 << 20, 0]).unwrap();
+        assert_eq!(c.last_step_energies()[1], 0.0);
+        assert!(c.total_dynamic_j() > e1);
+        // explicit charges and the static-draw integral land in the total
+        c.charge_energy(5.0);
+        assert!(c.total_energy_j() > c.total_dynamic_j());
+        // mini4: p1 (3.4 GHz NetBurst-ish) pays more than p2 (1.8 GHz
+        // high-IPC) for near-equal speed — the bi-objective lever
+        assert!(step[0] > 2.0 * step[1], "p1 {} vs p2 {}", step[0], step[1]);
+    }
+
+    #[test]
+    fn unmetered_executors_report_no_energy() {
+        struct Plain;
+        impl NodeExecutor for Plain {
+            fn execute(&mut self, units: u64) -> Result<f64> {
+                Ok(units as f64 * 1e-9)
+            }
+        }
+        let spec = presets::mini4();
+        let execs: Vec<Box<dyn NodeExecutor>> =
+            (0..4).map(|_| Box::new(Plain) as Box<dyn NodeExecutor>).collect();
+        let mut c = VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none());
+        assert!(!c.meters_energy());
+        c.run_1d(&[1000; 4]).unwrap();
+        assert!(c.last_energy_j().is_none());
+        assert_eq!(c.total_dynamic_j(), 0.0);
     }
 
     #[test]

@@ -30,6 +30,15 @@ pub trait Benchmarker {
     /// return observed times. `d` has length `processors()`. Entries may
     /// be 0 (that processor sits the step out and reports time 0).
     fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport>;
+
+    /// Per-processor dynamic energy (joules) of the most recent
+    /// [`Benchmarker::run_parallel`] step, when the platform meters it.
+    /// `None` (the default) means energy is not instrumented — energy-aware
+    /// strategies (`crate::biobj`) then degrade to time-only operation.
+    /// Implemented by `VirtualCluster` via the nodes' `PowerProfile`s.
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Models carried over from previous invocations (e.g. loaded from a

@@ -33,6 +33,12 @@
 //!   partitioning strategy behind one `Distributor` trait, a unified
 //!   `Outcome` report, an `AdaptiveSession` builder owning the model-store
 //!   and fault-policy plumbing, and a name-keyed strategy registry.
+//! - **The bi-objective distributor** ([`biobj`]) — time *and* dynamic
+//!   energy à la Khaleghzadeh et al. 2019: two piecewise functions learned
+//!   per processor, a Pareto front over 1D distributions, and a
+//!   user-weighted scalarization (`--strategy biobj:<w>`), with the
+//!   cluster metering joules through per-node power models
+//!   ([`cluster::energy`]).
 //!
 //! Support modules: [`config`] (mini-TOML), [`bench_harness`]
 //! (criterion-lite), [`testkit`] (proptest-lite), [`util`].
@@ -53,6 +59,7 @@ pub mod dfpa;
 pub mod dfpa2d;
 
 pub mod adapt;
+pub mod biobj;
 
 pub mod apps;
 pub mod baselines;

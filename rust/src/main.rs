@@ -95,9 +95,12 @@ COMMANDS:
   info      platform and artifact status
   cluster   print a cluster preset      --name hcl
   run1d     1D matmul app (§3.1)        --cluster hcl15 --n 4096 --strategy
-            dfpa|ffmpa|cpm|even|factoring [--eps 0.025] [--mode sim|real]
-            [--compare] [--model-store DIR]  persist partial FPMs; later
-            runs warm-start
+            dfpa|ffmpa|cpm|even|factoring|biobj:<w> [--eps 0.025]
+            [--mode sim|real] [--compare [dfpa,…]] [--model-store DIR]
+            persist partial FPMs; later runs warm-start. biobj:<w> learns
+            speed AND energy functions and picks from their Pareto front
+            (w=1 pure time, 0 pure energy); bare --compare sweeps the
+            registry, --compare with a list pits --strategy against it
   run2d     2D matmul app (§3.2)        --cluster hcl --n 8192 --strategy ...
             [--model-store DIR]
   jacobi    iterative 2D stencil        --cluster hcl15 --n 2048 [--sweeps 12]
@@ -165,7 +168,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
 fn report_row_1d(t: &mut Table, r: &matmul1d::Matmul1dReport) {
     t.add_row(vec![
-        r.strategy.name().to_string(),
+        r.strategy.label(),
         r.n.to_string(),
         fdur(r.partition_s),
         fdur(r.compute_s),
@@ -173,8 +176,40 @@ fn report_row_1d(t: &mut Table, r: &matmul1d::Matmul1dReport) {
         fdur(r.total_s),
         r.iterations.to_string(),
         fnum(100.0 * r.imbalance, 1),
+        fnum(r.energy_j, 0),
         r.model_build_s.map(fdur).unwrap_or_else(|| "-".into()),
     ])
+}
+
+/// Warm-start marker for the per-strategy summary line; bi-objective runs
+/// say which function families the store actually seeded.
+fn warm_suffix(warm: bool, warm_energy: bool) -> &'static str {
+    match (warm, warm_energy) {
+        (true, true) => " (warm-started: speed+energy)",
+        (true, false) => " (warm-started)",
+        _ => "",
+    }
+}
+
+/// One line summarizing a bi-objective run's learned Pareto front.
+fn print_pareto(report: &hfpm::adapt::WorkloadReport) {
+    if let Some(par) = &report.pareto {
+        let (t_lo, t_hi) = par.time_range_s();
+        let (e_lo, e_hi) = par.energy_range_j();
+        let (ct, ce) = par.chosen_point();
+        println!(
+            "  pareto: {} points, time {}–{}, energy {:.0}–{:.0} J; \
+             w={:.2} chose ({}, {:.0} J)",
+            par.len(),
+            fdur(t_lo),
+            fdur(t_hi),
+            e_lo,
+            e_hi,
+            par.weight,
+            fdur(ct),
+            ce
+        );
+    }
 }
 
 fn cmd_run1d(args: &Args) -> Result<()> {
@@ -186,7 +221,7 @@ fn cmd_run1d(args: &Args) -> Result<()> {
     let strategies = strategies_arg(args)?;
     let mut t = Table::new(
         &format!("1D matmul on `{}` (n={n}, ε={eps})", spec.name),
-        &["strategy", "n", "partition", "matmul", "comm", "total", "iters", "imb %", "model build"],
+        &["strategy", "n", "partition", "matmul", "comm", "total", "iters", "imb %", "energy J", "model build"],
     );
     let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
     for s in strategies {
@@ -196,8 +231,9 @@ fn cmd_run1d(args: &Args) -> Result<()> {
         cfg.model_store = model_store.clone();
         let r = matmul1d::run(&spec, &cfg)?;
         report_row_1d(&mut t, &r);
-        let warm = if r.warm_started { " (warm-started)" } else { "" };
-        println!("{}: d = {}{warm}", s.name(), compact(&r.d));
+        let warm = warm_suffix(r.warm_started, r.warm_started_energy);
+        println!("{}: d = {}{warm}", s.label(), compact(&r.d));
+        print_pareto(&r);
     }
     print!("{}", t.render());
     Ok(())
@@ -207,12 +243,7 @@ fn cmd_run2d(args: &Args) -> Result<()> {
     let spec = cluster_arg(args, "hcl")?;
     let n = args.get_u64("n", 8192)?;
     let eps = args.get_f64("eps", 0.1)?;
-    let s = args.get_or_checked("strategy", "dfpa")?;
-    let strategies: Vec<Strategy> = if args.has("compare") {
-        registry::compare_2d()
-    } else {
-        vec![parse_strategy(&s)?]
-    };
+    let strategies = strategies_for(args, registry::compare_2d)?;
     let mut t = Table::new(
         &format!("2D matmul on `{}` (N={n}, ε={eps})", spec.name),
         &["strategy", "grid", "partition", "matmul", "total", "iters", "cost %", "imb %"],
@@ -240,13 +271,30 @@ fn cmd_run2d(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn strategies_arg(args: &Args) -> Result<Vec<Strategy>> {
-    if args.has("compare") {
-        Ok(registry::compare_1d())
+/// Resolve `--strategy`/`--compare` into the strategy list to run: bare
+/// `--compare` is the registry's default sweep for the dimension,
+/// `--compare dfpa[,even,…]` pits the primary `--strategy` against the
+/// listed baselines, and no `--compare` runs the primary alone.
+fn strategies_for(args: &Args, default_sweep: fn() -> Vec<Strategy>) -> Result<Vec<Strategy>> {
+    if let Some(list) = args.get("compare") {
+        let mut out = vec![parse_strategy(&args.get_or_checked("strategy", "dfpa")?)?];
+        for name in list.split(',') {
+            let s = parse_strategy(name.trim())?;
+            if !out.contains(&s) {
+                out.push(s);
+            }
+        }
+        Ok(out)
+    } else if args.has("compare") {
+        Ok(default_sweep())
     } else {
         let s = args.get_or_checked("strategy", "dfpa")?;
         Ok(vec![parse_strategy(&s)?])
     }
+}
+
+fn strategies_arg(args: &Args) -> Result<Vec<Strategy>> {
+    strategies_for(args, registry::compare_1d)
 }
 
 fn cmd_jacobi(args: &Args) -> Result<()> {
@@ -261,7 +309,7 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
             "jacobi on `{}` (n={n}, {sweeps} sweeps, rebalance every {every}, ε={eps})",
             spec.name
         ),
-        &["strategy", "partition", "compute", "comm", "total", "bench steps", "rebal", "imb %"],
+        &["strategy", "partition", "compute", "comm", "total", "bench steps", "rebal", "imb %", "energy J"],
     );
     for s in strategies_arg(args)? {
         let mut cfg = jacobi::JacobiConfig::new(n, s);
@@ -271,7 +319,7 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
         cfg.model_store = model_store.clone();
         let r = jacobi::run(&spec, &cfg)?;
         t.add_row(vec![
-            s.name().to_string(),
+            s.label(),
             fdur(r.partition_s),
             fdur(r.compute_s),
             fdur(r.comm_s),
@@ -279,15 +327,17 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
             r.iterations.to_string(),
             r.rebalances.to_string(),
             fnum(100.0 * r.imbalance, 1),
+            fnum(r.energy_j, 0),
         ]);
-        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        let warm = warm_suffix(r.warm_started, r.warm_started_energy);
         println!(
             "{}: {} benchmark steps over {} rebalances, d = {}{warm}",
-            s.name(),
+            s.label(),
             r.iterations,
             r.rebalances,
             compact(&r.d)
         );
+        print_pareto(&r);
     }
     print!("{}", t.render());
     Ok(())
@@ -305,7 +355,7 @@ fn cmd_lu(args: &Args) -> Result<()> {
             "block LU on `{}` (n={n}, b={block}, repartition every {every}, ε={eps})",
             spec.name
         ),
-        &["strategy", "partition", "compute", "comm", "total", "bench steps", "repart", "imb %"],
+        &["strategy", "partition", "compute", "comm", "total", "bench steps", "repart", "imb %", "energy J"],
     );
     for s in strategies_arg(args)? {
         let mut cfg = lu::LuConfig::new(n, s);
@@ -315,7 +365,7 @@ fn cmd_lu(args: &Args) -> Result<()> {
         cfg.model_store = model_store.clone();
         let r = lu::run(&spec, &cfg)?;
         t.add_row(vec![
-            s.name().to_string(),
+            s.label(),
             fdur(r.partition_s),
             fdur(r.compute_s),
             fdur(r.comm_s),
@@ -323,16 +373,18 @@ fn cmd_lu(args: &Args) -> Result<()> {
             r.iterations.to_string(),
             r.repartitions.to_string(),
             fnum(100.0 * r.imbalance, 1),
+            fnum(r.energy_j, 0),
         ]);
-        let warm = if r.warm_started { " (warm-started)" } else { "" };
+        let warm = warm_suffix(r.warm_started, r.warm_started_energy);
         println!(
             "{}: {} panels, {} benchmark steps over {} repartitions, d₀ = {}{warm}",
-            s.name(),
+            s.label(),
             r.panels,
             r.iterations,
             r.repartitions,
             compact(&r.d)
         );
+        print_pareto(&r);
     }
     print!("{}", t.render());
     Ok(())

@@ -22,7 +22,13 @@
 //! - an **advisory lock file** (`.hfpm.lock`) guards each store directory
 //!   against concurrent writers: the first opener holds the lock, later
 //!   concurrent openers downgrade their saves to a warn-and-skip instead
-//!   of silently racing last-writer-wins.
+//!   of silently racing last-writer-wins;
+//! - a **corrupt file** (truncated write, damaged JSON) degrades its key
+//!   to a cold start with a warning instead of failing the whole warm
+//!   start — see [`ModelStore::load`]; real I/O errors still propagate;
+//! - the bi-objective strategy stores its second function family (energy
+//!   per unit) under the same keys with an [`ENERGY_KERNEL_SUFFIX`]ed
+//!   kernel ([`ModelKey::energy`]), so both families warm-start.
 //!
 //! The store knows nothing about DFPA; `dfpa`/`dfpa2d` accept a
 //! `WarmStart` of plain [`PiecewiseModel`]s and `adapt::AdaptiveSession`
@@ -50,6 +56,10 @@ pub struct ModelKey {
     pub mode: String,
 }
 
+/// Kernel-name suffix under which a key's *energy* function family is
+/// stored (see [`ModelKey::energy`]).
+pub const ENERGY_KERNEL_SUFFIX: &str = "#energy";
+
 impl ModelKey {
     pub fn new(host: &str, kernel: &str, mode: &str) -> Self {
         Self {
@@ -57,6 +67,25 @@ impl ModelKey {
             kernel: kernel.to_string(),
             mode: mode.to_string(),
         }
+    }
+
+    /// The key this key's energy-per-unit models live under: same host and
+    /// mode, kernel suffixed with [`ENERGY_KERNEL_SUFFIX`]. The suffix
+    /// contains `#`, which no kernel id uses and the file-name sanitizer
+    /// maps to `_`, so the two families can never collide on disk (the
+    /// raw-key hash keeps them apart even if a kernel id ever ends in
+    /// `_energy`).
+    pub fn energy(&self) -> ModelKey {
+        ModelKey::new(
+            &self.host,
+            &format!("{}{ENERGY_KERNEL_SUFFIX}", self.kernel),
+            &self.mode,
+        )
+    }
+
+    /// Is this an energy-family key (see [`ModelKey::energy`])?
+    pub fn is_energy(&self) -> bool {
+        self.kernel.ends_with(ENERGY_KERNEL_SUFFIX)
     }
 
     /// File name for this key: sanitized components joined with `__`, plus
@@ -229,8 +258,15 @@ impl StoredModel {
         for p in &mut self.points {
             p.w *= policy.decay;
             if let Some(hl) = policy.half_life_s {
-                if hl > 0.0 && p.t > 0.0 && now_s > p.t {
-                    p.w *= 0.5f64.powf((now_s - p.t) / hl);
+                if hl > 0.0 && p.t > 0.0 {
+                    // clamp the age at 0: a point stamped in the future
+                    // (clock skew, an NTP step between runs) would yield
+                    // Δt < 0 and 0.5^(Δt/hl) > 1 — *inflating* the weight
+                    // above 1 and violating the documented w ∈ (0, 1]
+                    // invariant. A future stamp means "age unknown, at
+                    // most 0", never negative.
+                    let age = (now_s - p.t).max(0.0);
+                    p.w *= 0.5f64.powf(age / hl);
                 }
             }
         }
@@ -472,6 +508,12 @@ impl ModelStore {
     /// when the hashed name is absent the legacy name is tried (and the
     /// embedded-key check below still refuses a legacy file that actually
     /// belongs to a colliding key).
+    ///
+    /// A **corrupt** file (truncated write, damaged JSON, bad structure)
+    /// degrades this key to "no history" with a warning — a damaged cache
+    /// entry must cost a cold start, never the run (the next save
+    /// overwrites it). Real I/O errors still propagate: an unreadable
+    /// store is a configuration problem, not a stale cache.
     pub fn load(&self, key: &ModelKey) -> Result<Option<StoredModel>> {
         let mut path = self.path_for(key);
         let mut from_legacy = false;
@@ -482,11 +524,38 @@ impl ModelStore {
                 return Ok(None);
             }
         }
-        let text = std::fs::read_to_string(&path)?;
-        let v = json::parse(&text).map_err(|e| {
-            HfpmError::Config(format!("corrupt model store file {}: {e}", path.display()))
-        })?;
-        let stored = StoredModel::from_json(&v, key)?;
+        let degrade = |what: &str| {
+            eprintln!(
+                "warn: corrupt model store file {} ({what}); treating `{}` \
+                 as no history (cold start)",
+                path.display(),
+                key.kernel
+            );
+        };
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            // invalid UTF-8 *is* file corruption (torn write, disk
+            // damage), not an I/O failure — degrade like unparseable JSON
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                degrade("invalid UTF-8");
+                return Ok(None);
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let v = match json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                degrade(&e.to_string());
+                return Ok(None);
+            }
+        };
+        let stored = match StoredModel::from_json(&v, key) {
+            Ok(s) => s,
+            Err(e) => {
+                degrade(&e.to_string());
+                return Ok(None);
+            }
+        };
         if stored.key != *key {
             // legacy (pre-hash) file names sanitize distinct keys onto one
             // file (host "node/1" vs "node_1"): a legacy file owned by a
@@ -734,6 +803,29 @@ mod tests {
     }
 
     #[test]
+    fn energy_keys_are_distinct_and_round_trip() {
+        let k = ModelKey::new("hcl01", "matmul1d_n4096", "sim");
+        let e = k.energy();
+        assert_eq!(e.kernel, "matmul1d_n4096#energy");
+        assert!(e.is_energy() && !k.is_energy());
+        assert_ne!(k.file_name(), e.file_name());
+
+        // both families coexist in one store under their own files
+        let store = tmp_store("energy");
+        store
+            .record_run(&[k.clone()], &[sample_model()], &MergePolicy::default())
+            .unwrap();
+        let mut eu = PiecewiseModel::new();
+        eu.insert(1024.0, 4.0e-8);
+        store
+            .record_run(&[e.clone()], &[eu], &MergePolicy::default())
+            .unwrap();
+        assert_eq!(store.load(&k).unwrap().unwrap().points.len(), 3);
+        assert_eq!(store.load(&e).unwrap().unwrap().points.len(), 1);
+        assert_eq!(store.entries().unwrap().len(), 2);
+    }
+
+    #[test]
     fn save_load_round_trip() {
         let store = tmp_store("roundtrip");
         let key = ModelKey::new("hcl01", "matmul1d_n4096", "sim");
@@ -844,6 +936,41 @@ mod tests {
         sm.merge_at(&other, &policy, 1_000_000.0 + 2.0 * 3600.0);
         assert_eq!(sm.points.len(), 1, "idle x=100 evicted: {:?}", sm.points);
         assert_eq!(sm.points[0].x, 200.0);
+    }
+
+    #[test]
+    fn future_stamped_points_never_inflate_weights() {
+        // regression: a point stamped in the future (clock skew, NTP step)
+        // yields Δt < 0; 0.5^(Δt/hl) is then > 1 and, without the age
+        // clamp, *inflates* the weight above 1 — violating w ∈ (0, 1] and
+        // letting a skewed-clock point dominate every later blend
+        let policy = MergePolicy {
+            decay: 1.0, // isolate the time-based decay
+            half_life_s: Some(3600.0),
+            ..Default::default()
+        };
+        let mut sm = StoredModel::new(ModelKey::new("h", "k", "sim"));
+        sm.points.push(StoredPoint {
+            x: 100.0,
+            s: 10.0,
+            w: 1.0,
+            t: 2_000_000.0, // one "now" ahead of the merge below
+        });
+        let mut other = PiecewiseModel::new();
+        other.insert(200.0, 5.0);
+        sm.merge_at(&other, &policy, 1_000_000.0);
+        assert!(
+            sm.points.iter().all(|p| p.w > 0.0 && p.w <= 1.0),
+            "w invariant violated: {:?}",
+            sm.points
+        );
+        // re-measuring the future-stamped size must blend 50/50 (w = 1
+        // against 1), not be swamped by an inflated stored weight
+        let mut remeasure = PiecewiseModel::new();
+        remeasure.insert(100.0, 20.0);
+        sm.merge_at(&remeasure, &policy, 1_000_000.0);
+        let p100 = sm.points.iter().find(|p| p.x == 100.0).unwrap();
+        assert!((p100.s - 15.0).abs() < 1e-9, "blend skewed: {p100:?}");
     }
 
     #[test]
@@ -1014,11 +1141,64 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_file_is_an_error_not_a_panic() {
+    fn corrupt_file_degrades_to_cold_start() {
+        // regression: one damaged cache entry used to fail the entire warm
+        // start (and therefore the run); it must cost only that key's
+        // history
         let store = tmp_store("corrupt");
         let key = ModelKey::new("h", "k", "sim");
         std::fs::write(store.path_for(&key), "{not json").unwrap();
+        assert!(store.load(&key).unwrap().is_none(), "corrupt ⇒ no history");
+        assert!(store.load_model(&key).unwrap().is_empty());
+        // disk-level corruption that isn't even UTF-8 degrades the same way
+        std::fs::write(store.path_for(&key), [0xFFu8, 0xFE, 0x80, 0x00]).unwrap();
+        assert!(store.load(&key).unwrap().is_none(), "non-UTF-8 ⇒ no history");
+        // a later save self-heals the damaged entry
+        store
+            .record_run(&[key.clone()], &[sample_model()], &MergePolicy::default())
+            .unwrap();
+        assert_eq!(store.load(&key).unwrap().unwrap().points.len(), 3);
+    }
+
+    #[test]
+    fn truncated_file_degrades_only_its_own_key() {
+        // regression for the warm-start path: a truncated store file must
+        // cold-start its key while the healthy keys still warm-start
+        let store = tmp_store("truncated");
+        let good = ModelKey::new("a", "k", "sim");
+        let bad = ModelKey::new("b", "k", "sim");
+        store
+            .record_run(
+                &[good.clone(), bad.clone()],
+                &[sample_model(), sample_model()],
+                &MergePolicy::default(),
+            )
+            .unwrap();
+        // truncate b's file mid-JSON, as a crashed non-atomic writer would
+        let text = std::fs::read_to_string(store.path_for(&bad)).unwrap();
+        std::fs::write(store.path_for(&bad), &text[..text.len() / 2]).unwrap();
+
+        let warm = store
+            .warm_models(&[good.clone(), bad.clone()])
+            .unwrap()
+            .expect("the healthy key still warm-starts");
+        assert_eq!(warm[0].len(), 3);
+        assert!(warm[1].is_empty(), "truncated key degrades to no history");
+
+        // structurally-bad-but-parseable JSON degrades the same way
+        std::fs::write(store.path_for(&bad), r#"{"version": 99}"#).unwrap();
+        assert!(store.load(&bad).unwrap().is_none());
+    }
+
+    #[test]
+    fn real_io_errors_still_propagate() {
+        // a directory squatting on the file path is an I/O problem, not a
+        // stale cache entry — it must surface, not silently cold-start
+        let store = tmp_store("ioerr");
+        let key = ModelKey::new("h", "k", "sim");
+        std::fs::create_dir_all(store.path_for(&key)).unwrap();
         assert!(store.load(&key).is_err());
+        assert!(store.warm_models(&[key]).is_err());
     }
 
     #[test]

@@ -139,6 +139,63 @@ pub fn unique_temp_dir(tag: &str) -> std::path::PathBuf {
     dir
 }
 
+/// Deterministic, energy-metered benchmarker fixture: constant speed and
+/// constant joules-per-unit per processor, noise-free. The shared test
+/// double for the bi-objective code paths (`biobj` unit tests and the
+/// `test_biobj` integration suite both drive it).
+#[derive(Debug, Clone)]
+pub struct ConstEnergyBench {
+    /// Units/second per processor.
+    pub speeds: Vec<f64>,
+    /// Joules per unit per processor.
+    pub e_unit: Vec<f64>,
+    /// Per-processor joules of the most recent step.
+    pub last: Vec<f64>,
+    /// Parallel steps executed.
+    pub steps: usize,
+}
+
+impl ConstEnergyBench {
+    pub fn new(speeds: &[f64], e_unit: &[f64]) -> Self {
+        assert_eq!(speeds.len(), e_unit.len());
+        Self {
+            speeds: speeds.to_vec(),
+            e_unit: e_unit.to_vec(),
+            last: vec![0.0; speeds.len()],
+            steps: 0,
+        }
+    }
+}
+
+impl crate::dfpa::Benchmarker for ConstEnergyBench {
+    fn processors(&self) -> usize {
+        self.speeds.len()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> crate::error::Result<crate::dfpa::StepReport> {
+        self.steps += 1;
+        let times: Vec<f64> = d
+            .iter()
+            .zip(&self.speeds)
+            .map(|(&di, &s)| di as f64 / s)
+            .collect();
+        self.last = d
+            .iter()
+            .zip(&self.e_unit)
+            .map(|(&di, &e)| di as f64 * e)
+            .collect();
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        Ok(crate::dfpa::StepReport {
+            times,
+            virtual_cost_s: max,
+        })
+    }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        Some(self.last.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -61,7 +61,6 @@ const SPEEDS: [f64; 3] = [10.0, 30.0, 20.0];
 fn make_1d(strategy: Strategy) -> Box<dyn Distributor> {
     // none of the parity strategies need app resources
     strategy
-        .entry()
         .make_1d(&registry::AppResources {
             nodes: &[],
             n: 0,
@@ -398,6 +397,66 @@ fn run_2d_rejects_observation_grids_that_mismatch_the_keys() {
 }
 
 #[test]
+fn cold_store_rejects_misaligned_carry() {
+    // regression: the carry-length check only fired when the store returned
+    // models, so with a *cold* store a wrong-length carry was wrapped
+    // positionally misaligned and surfaced only later — as a confusing
+    // record_run "2 keys vs 3 models" at flush time — or not at all
+    let dir = unique_temp_dir("adapt-carry-mismatch");
+    let session = AdaptiveSession::new().model_store(Some(dir.clone()));
+    let keys: Vec<ModelKey> = (0..2)
+        .map(|i| ModelKey::new(&format!("node{i}"), "k", "sim"))
+        .collect();
+    let carry = vec![PiecewiseModel::constant(10.0, 5.0); 3];
+    let mut dist = Dfpa::default();
+    let mut bench = ModelBench::new(&SPEEDS);
+    let err = session
+        .run_1d_seeded(&mut dist, 600, &mut bench, &keys, Some(&carry), None)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("carry seeds 3 models for 2 store keys"),
+        "got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_keys_skip_1d_persistence_instead_of_erroring() {
+    // regression: run_1d with a store but no keys let record_run fail with
+    // "0 keys vs N models"; the documented contract is skip-with-warning
+    let dir = unique_temp_dir("adapt-nokeys-1d");
+    let session = AdaptiveSession::new()
+        .epsilon(0.02)
+        .model_store(Some(dir.clone()));
+    let mut dist = Dfpa::default();
+    let mut bench = ModelBench::new(&SPEEDS);
+    let out = session.run_1d(&mut dist, 600, &mut bench, &[]).unwrap();
+    assert!(out.benchmark_steps >= 1);
+    let store = ModelStore::open(&dir).unwrap();
+    assert!(store.entries().unwrap().is_empty(), "nothing may persist");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_key_grid_skips_2d_persistence() {
+    // the 2D side of the same contract: observations are dropped with a
+    // warning instead of vanishing in a zip over zero key columns
+    let dir = unique_temp_dir("adapt-nokeys-2d");
+    let session = AdaptiveSession::new().model_store(Some(dir.clone()));
+    let mut bench = GridBench {
+        speeds: vec![vec![10.0, 20.0], vec![30.0, 40.0]],
+    };
+    let mut dist = hfpm::adapt::Dfpa2d;
+    let out = session.run_2d(&mut dist, 8, 8, &mut bench, &[]).unwrap();
+    assert!(matches!(out.observations, Observations::TwoD(_)));
+    let store = ModelStore::open(&dir).unwrap();
+    assert!(store.entries().unwrap().is_empty(), "nothing may persist");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn seeded_run_warm_starts_without_a_store() {
     // the within-run carry path iterative workloads use: models learned in
     // an earlier phase seed the next repartition directly
@@ -414,7 +473,7 @@ fn seeded_run_warm_starts_without_a_store() {
     };
     let mut bench = ModelBench::new(&SPEEDS);
     let warm = session
-        .run_1d_seeded(&mut dist, 6000, &mut bench, &[], Some(&carry[..]))
+        .run_1d_seeded(&mut dist, 6000, &mut bench, &[], Some(&carry[..]), None)
         .unwrap();
     assert!(warm.warm_started, "carry models must warm-start");
     assert!(warm.benchmark_steps <= cold.benchmark_steps);

@@ -1,0 +1,218 @@
+//! The bi-objective distributor: golden Pareto cases, DFPA equivalence at
+//! w = 1, dual-family store round trips, and the energy-aware workloads.
+
+use hfpm::adapt::{AdaptiveSession, Dfpa, Distributor, Observations, SessionCtx, Strategy};
+use hfpm::apps::matmul1d::{self, Matmul1dConfig};
+use hfpm::apps::{jacobi, JacobiConfig};
+use hfpm::biobj::BiObj;
+use hfpm::cluster::presets;
+use hfpm::modelstore::{ModelKey, ModelStore};
+use hfpm::testkit::{unique_temp_dir, ConstEnergyBench as EnergyBench};
+
+/// Deterministic 2-processor "cluster": equal constant speeds, a 5× gap in
+/// energy per unit — the time-optimal and energy-optimal distributions
+/// provably differ ([n/2, n/2] vs [0, n]).
+fn golden() -> EnergyBench {
+    EnergyBench::new(&[10.0, 10.0], &[5.0, 1.0])
+}
+
+#[test]
+fn golden_front_is_non_dominated_and_spans_the_tradeoff() {
+    let mut bench = golden();
+    let out = BiObj::new(0.5)
+        .distribute(1000, &mut bench, &SessionCtx::with_epsilon(0.05))
+        .unwrap();
+    let front = out.pareto.expect("metered run reports a front");
+    assert!(front.len() >= 2, "front collapsed: {front:?}");
+    // time-ascending and energy-descending ⇒ pairwise non-dominated
+    for w in front.points.windows(2) {
+        assert!(w[0].0 < w[1].0, "times not increasing: {front:?}");
+        assert!(w[0].1 > w[1].1, "energies not decreasing: {front:?}");
+    }
+    let (t_lo, t_hi) = front.time_range_s();
+    let (e_lo, e_hi) = front.energy_range_j();
+    assert!(t_hi > t_lo && e_hi > e_lo);
+}
+
+#[test]
+fn weight_one_matches_dfpa_exactly_on_a_deterministic_bench() {
+    // the acceptance bar: biobj:1.0 must reproduce dfpa's distribution —
+    // noise-free constant speeds make the match exact, since both refine
+    // the same models and re-partition with the same geometric kernel
+    let speeds = [10.0, 30.0, 20.0];
+    let mut dfpa_bench = EnergyBench::new(&speeds, &[1.0, 1.0, 1.0]);
+    let d_dfpa = Dfpa::default()
+        .distribute(600, &mut dfpa_bench, &SessionCtx::with_epsilon(0.02))
+        .unwrap()
+        .distribution
+        .into_1d()
+        .unwrap();
+
+    let mut bi_bench = EnergyBench::new(&speeds, &[1.0, 1.0, 1.0]);
+    let out = BiObj::new(1.0)
+        .distribute(600, &mut bi_bench, &SessionCtx::with_epsilon(0.02))
+        .unwrap();
+    assert!(out.converged);
+    assert_eq!(out.distribution.into_1d().unwrap(), d_dfpa);
+}
+
+#[test]
+fn weight_zero_shifts_load_to_the_efficient_processor() {
+    let mut bench = golden();
+    let time_opt = BiObj::new(1.0)
+        .distribute(1000, &mut bench, &SessionCtx::with_epsilon(0.05))
+        .unwrap()
+        .distribution
+        .into_1d()
+        .unwrap();
+    let mut bench = golden();
+    let energy_opt = BiObj::new(0.0)
+        .distribute(1000, &mut bench, &SessionCtx::with_epsilon(0.05))
+        .unwrap()
+        .distribution
+        .into_1d()
+        .unwrap();
+    assert_ne!(time_opt, energy_opt, "objectives must disagree here");
+    assert!(energy_opt[1] > time_opt[1], "w=0 must load the cheap node");
+    // under the bench's ground truth the energy ordering is strict
+    let e = |d: &[u64]| d[0] as f64 * 5.0 + d[1] as f64 * 1.0;
+    assert!(e(&energy_opt) < e(&time_opt));
+}
+
+#[test]
+fn session_round_trip_warm_starts_both_function_families() {
+    let dir = unique_temp_dir("biobj-store");
+    let keys: Vec<ModelKey> = (0..2)
+        .map(|i| ModelKey::new(&format!("node{i}"), "biobj_test", "sim"))
+        .collect();
+    let session = AdaptiveSession::new()
+        .epsilon(0.05)
+        .model_store(Some(dir.clone()));
+
+    let mut dist = BiObj::new(0.5);
+    let cold = {
+        let mut bench = golden();
+        session.run_1d(&mut dist, 2000, &mut bench, &keys).unwrap()
+    };
+    assert!(!cold.warm_started && !cold.warm_started_energy);
+    assert!(matches!(&cold.energy_observations, Observations::OneD(_)));
+
+    // the flush wrote BOTH families: plain keys and #energy keys
+    let store = ModelStore::open(&dir).unwrap();
+    let entries = store.entries().unwrap();
+    let plain = entries.iter().filter(|k| !k.is_energy()).count();
+    let energetic = entries.iter().filter(|k| k.is_energy()).count();
+    assert!(plain >= 1, "speed family missing: {entries:?}");
+    assert!(energetic >= 1, "energy family missing: {entries:?}");
+    drop(store); // release the advisory lock before the warm run
+
+    let warm = {
+        let mut bench = golden();
+        session.run_1d(&mut dist, 2000, &mut bench, &keys).unwrap()
+    };
+    assert!(warm.warm_started, "speed family must warm-start");
+    assert!(warm.warm_started_energy, "energy family must warm-start");
+    assert!(
+        warm.benchmark_steps < cold.benchmark_steps,
+        "warm {} vs cold {}",
+        warm.benchmark_steps,
+        cold.benchmark_steps
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------------------------------
+// App-level acceptance on the simulated clusters (joules metered by the
+// nodes' power profiles)
+// --------------------------------------------------------------------------
+
+fn strategy(s: &str) -> Strategy {
+    Strategy::parse(s).unwrap()
+}
+
+#[test]
+fn app_biobj_pure_energy_beats_dfpa_on_energy() {
+    // mini4's p1 (3.4 GHz NetBurst-ish) and p2 (1.8 GHz high-IPC) are
+    // near-equally fast but ~6× apart in joules per unit, so the
+    // energy-optimal split genuinely differs from the time-optimal one
+    let spec = presets::mini4();
+    let mut cfg_dfpa = Matmul1dConfig::new(2048, Strategy::Dfpa);
+    cfg_dfpa.epsilon = 0.05;
+    let r_dfpa = matmul1d::run(&spec, &cfg_dfpa).unwrap();
+
+    let mut cfg_bi = Matmul1dConfig::new(2048, strategy("biobj:0.0"));
+    cfg_bi.epsilon = 0.05;
+    let r_bi = matmul1d::run(&spec, &cfg_bi).unwrap();
+
+    assert_eq!(r_bi.d.iter().sum::<u64>(), 2048);
+    assert!(
+        r_bi.energy_j < r_dfpa.energy_j,
+        "biobj:0.0 {} J vs dfpa {} J",
+        r_bi.energy_j,
+        r_dfpa.energy_j
+    );
+    assert!(r_bi.pareto.is_some(), "biobj reports its front");
+}
+
+#[test]
+fn app_biobj_pure_time_tracks_dfpa_within_epsilon() {
+    let spec = presets::mini4();
+    let mut cfg_dfpa = Matmul1dConfig::new(2048, Strategy::Dfpa);
+    cfg_dfpa.epsilon = 0.05;
+    let r_dfpa = matmul1d::run(&spec, &cfg_dfpa).unwrap();
+
+    let mut cfg_bi = Matmul1dConfig::new(2048, strategy("biobj:1.0"));
+    cfg_bi.epsilon = 0.05;
+    let r_bi = matmul1d::run(&spec, &cfg_bi).unwrap();
+
+    // same objective, same partitioner ⇒ the compute phases agree to
+    // within the termination accuracy (plus simulator noise headroom)
+    let rel = (r_bi.compute_s - r_dfpa.compute_s).abs() / r_dfpa.compute_s;
+    assert!(
+        rel <= 3.0 * 0.05,
+        "biobj:1.0 compute {} vs dfpa {} (rel {rel})",
+        r_bi.compute_s,
+        r_dfpa.compute_s
+    );
+}
+
+#[test]
+fn app_jacobi_runs_energy_aware_end_to_end() {
+    // the registry entry opens the iterative workloads to energy-aware
+    // operation without app changes
+    let spec = presets::mini4();
+    let mut cfg = JacobiConfig::new(512, strategy("biobj:0.5"));
+    cfg.sweeps = 8;
+    cfg.rebalance_every = 4;
+    let r = jacobi::run(&spec, &cfg).unwrap();
+    assert_eq!(r.d.iter().sum::<u64>(), 512);
+    assert_eq!(r.sweeps, 8);
+    assert!(r.energy_j > 0.0);
+    assert!(r.pareto.is_some(), "jacobi surfaces the biobj front");
+}
+
+#[test]
+fn store_strategies_report_energy_consistently() {
+    // dfpa on a metered cluster reports joules too (from the cluster's
+    // joule clock), with no pareto front
+    let spec = presets::mini4();
+    let dir = unique_temp_dir("biobj-vs-dfpa-store");
+    let mut cfg = Matmul1dConfig::new(1024, strategy("biobj:0.5"));
+    cfg.model_store = Some(dir.clone());
+    let cold = matmul1d::run(&spec, &cfg).unwrap();
+    assert!(!cold.warm_started);
+    let warm = matmul1d::run(&spec, &cfg).unwrap();
+    assert!(warm.warm_started && warm.warm_started_energy);
+    assert!(
+        warm.iterations <= cold.iterations,
+        "warm {} vs cold {}",
+        warm.iterations,
+        cold.iterations
+    );
+    // both families persisted under this app's kernel keys
+    let store = ModelStore::open(&dir).unwrap();
+    let entries = store.entries().unwrap();
+    assert!(entries.iter().any(|k| k.is_energy()));
+    assert!(entries.iter().any(|k| !k.is_energy()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
