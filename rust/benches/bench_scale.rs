@@ -1,0 +1,158 @@
+//! Nodes-vs-wall-clock scaling curve: the frame-synchronized engine
+//! against the legacy thread-per-node runtime on synthetic heterogeneous
+//! clusters up to 1000 nodes.
+//!
+//! Every point runs the same fixed superstep workload on both runtimes
+//! (identically seeded executors) and checks that their *virtual* clocks
+//! agree — the engine must be a faster way to compute the same numbers,
+//! not different numbers. Wall-clock speedups land in `BENCH_scale.json`.
+//!
+//! Env knobs:
+//! - `BENCH_SCALE_NODES="64,256"` — override the node counts (CI smoke);
+//! - `BENCH_SCALE_OUT=path.json` — where to write the curve
+//!   (default `BENCH_scale.json` in the cargo cwd, i.e. `rust/`);
+//! - `BENCH_SCALE_STRICT=1` — fail if the engine is not ≥4× faster than
+//!   legacy at ≥256 nodes (off by default: small CI hosts first).
+
+use hfpm::cluster::comm::CommModel;
+use hfpm::cluster::executor::NodeExecutor;
+use hfpm::cluster::faults::FaultPlan;
+use hfpm::cluster::node::build_nodes;
+use hfpm::cluster::presets;
+use hfpm::cluster::{Engine, LegacyCluster};
+use hfpm::fpm::analytic::Footprint;
+use hfpm::util::table::{fdur, fnum, Table};
+use hfpm::util::timer::Stopwatch;
+
+const STEPS: usize = 20;
+
+fn executors(n: usize) -> (Vec<Box<dyn NodeExecutor>>, CommModel) {
+    let spec = presets::synth(n);
+    let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+    let execs = nodes
+        .into_iter()
+        .map(|nd| Box::new(nd) as Box<dyn NodeExecutor>)
+        .collect();
+    (execs, CommModel::new(spec))
+}
+
+/// The per-step unit vector: mildly uneven so slots cost unequal work.
+fn units(n: usize) -> Vec<u64> {
+    (0..n).map(|i| 40_000 + 5_000 * (i % 7) as u64).collect()
+}
+
+struct Point {
+    nodes: usize,
+    engine_wall_s: f64,
+    legacy_wall_s: f64,
+    speedup: f64,
+    virtual_s: f64,
+    engine_workers: usize,
+}
+
+fn run_point(n: usize) -> Point {
+    let d = units(n);
+
+    let (execs, comm) = executors(n);
+    let mut engine = Engine::spawn(execs, comm, FaultPlan::none());
+    let sw = Stopwatch::start();
+    for _ in 0..STEPS {
+        engine.run_1d(&d).expect("engine step");
+    }
+    let engine_wall_s = sw.elapsed_s();
+    let engine_virtual = engine.now();
+    let engine_workers = engine.worker_threads();
+
+    let (execs, comm) = executors(n);
+    let mut legacy = LegacyCluster::spawn(execs, comm, FaultPlan::none());
+    let sw = Stopwatch::start();
+    for _ in 0..STEPS {
+        legacy.run_1d(&d).expect("legacy step");
+    }
+    let legacy_wall_s = sw.elapsed_s();
+    let legacy_virtual = legacy.now();
+
+    // same executors, same fold order: the virtual clocks must agree to
+    // f64 rounding — the engine computes the same numbers, faster
+    let rel = (engine_virtual - legacy_virtual).abs() / legacy_virtual.max(f64::MIN_POSITIVE);
+    assert!(
+        rel < 1e-9,
+        "virtual-clock divergence at {n} nodes: engine {engine_virtual} vs legacy {legacy_virtual}"
+    );
+
+    Point {
+        nodes: n,
+        engine_wall_s,
+        legacy_wall_s,
+        speedup: legacy_wall_s / engine_wall_s.max(f64::MIN_POSITIVE),
+        virtual_s: engine_virtual,
+        engine_workers,
+    }
+}
+
+fn json(points: &[Point]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"bench_scale\",\n");
+    out.push_str(&format!("  \"steps\": {STEPS},\n  \"points\": [\n"));
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"nodes\": {}, \"engine_wall_s\": {:.6}, \"legacy_wall_s\": {:.6}, \
+             \"speedup\": {:.3}, \"virtual_s\": {:.6}, \"engine_workers\": {}}}{}\n",
+            p.nodes,
+            p.engine_wall_s,
+            p.legacy_wall_s,
+            p.speedup,
+            p.virtual_s,
+            p.engine_workers,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let counts: Vec<usize> = match std::env::var("BENCH_SCALE_NODES") {
+        Ok(v) => v
+            .split(',')
+            .map(|s| s.trim().parse().expect("BENCH_SCALE_NODES: bad count"))
+            .collect(),
+        Err(_) => vec![16, 64, 256, 1000],
+    };
+
+    let mut t = Table::new(
+        &format!("cluster engine scaling ({STEPS} supersteps per point)"),
+        &["nodes", "pool", "engine wall", "legacy wall", "speedup", "virtual_s"],
+    );
+    let mut points = Vec::new();
+    for &n in &counts {
+        let p = run_point(n);
+        t.add_row(vec![
+            p.nodes.to_string(),
+            p.engine_workers.to_string(),
+            fdur(p.engine_wall_s),
+            fdur(p.legacy_wall_s),
+            format!("{}x", fnum(p.speedup, 2)),
+            fnum(p.virtual_s, 3),
+        ]);
+        points.push(p);
+    }
+    print!("{}", t.render());
+
+    let strict = std::env::var("BENCH_SCALE_STRICT").is_ok();
+    for p in points.iter().filter(|p| p.nodes >= 256) {
+        if p.speedup < 4.0 {
+            let msg = format!(
+                "engine speedup at {} nodes is only {:.2}x (< 4x target)",
+                p.nodes, p.speedup
+            );
+            if strict {
+                panic!("{msg}");
+            }
+            eprintln!("warn: {msg}");
+        }
+    }
+
+    let out = std::env::var("BENCH_SCALE_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
+    std::fs::write(&out, json(&points)).expect("write BENCH_scale.json");
+    println!("json: {out}");
+}

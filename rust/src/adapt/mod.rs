@@ -18,7 +18,9 @@
 //! - [`WorkloadReport`] — the partition/comm/compute cost breakdown every
 //!   workload app reports, with the shared probe-phase accounting;
 //! - [`registry`] — the name-keyed strategy table behind
-//!   [`Strategy::parse`] and the CLI.
+//!   [`Strategy::parse`] and the CLI;
+//! - [`sweep`] — [`ScenarioGrid`]: strategy × cluster × fault grids run
+//!   concurrently (each cell its own engine) behind `repro sweep`.
 //!
 //! The apps (`apps::matmul1d`, `apps::matmul2d`, `apps::jacobi`,
 //! `apps::lu`) and the `repro` CLI are written against this layer only; a
@@ -34,6 +36,7 @@ pub mod outcome;
 pub mod registry;
 pub mod report;
 pub mod session;
+pub mod sweep;
 
 pub use distributor::{
     Cpm, Cpm2d, Dfpa, Dfpa2d, Distributor, Distributor2d, Even, Even2d, Factoring, Ffmpa,
@@ -43,3 +46,4 @@ pub use outcome::{Distribution, Observations, Outcome};
 pub use registry::{AppResources, AppResources2d, Strategy, StrategyEntry};
 pub use report::{probe_compute, ComputePhase, PartitionRounds, WorkloadReport};
 pub use session::AdaptiveSession;
+pub use sweep::{ScenarioGrid, SweepReport, SweepRow};

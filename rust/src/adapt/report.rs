@@ -11,7 +11,7 @@
 use super::outcome::{Observations, Outcome};
 use super::registry::Strategy;
 use crate::biobj::ParetoSummary;
-use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::cluster::engine::Engine;
 use crate::error::Result;
 use crate::fpm::PiecewiseModel;
 use crate::util::stats::max_relative_imbalance;
@@ -185,11 +185,11 @@ impl ComputePhase {
 /// Run one probe step of `units` on the cluster, scale it to `steps`
 /// kernel steps, and charge the remainder to the virtual clock (the probe
 /// itself is already on it). The probe's joules are scaled the same way
-/// onto the cluster's energy clock, so `VirtualCluster::total_dynamic_j`
-/// covers the whole phase just as `now()` covers its time. Returns the
-/// phase cost and the imbalance over the processors that participated.
+/// onto the cluster's energy clock, so `Engine::total_dynamic_j` covers
+/// the whole phase just as `now()` covers its time. Returns the phase
+/// cost and the imbalance over the processors that participated.
 pub fn probe_compute(
-    cluster: &mut VirtualCluster,
+    cluster: &mut Engine,
     units: &[u64],
     steps: f64,
 ) -> Result<ComputePhase> {
@@ -222,7 +222,7 @@ mod tests {
     use crate::cluster::presets;
     use crate::fpm::analytic::Footprint;
 
-    fn mini_cluster() -> VirtualCluster {
+    fn mini_cluster() -> Engine {
         let mut spec = presets::mini4();
         spec.noise_rel = 0.0;
         let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
@@ -230,7 +230,7 @@ mod tests {
             .into_iter()
             .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
             .collect();
-        VirtualCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+        Engine::spawn(execs, CommModel::new(spec), FaultPlan::none())
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! [`ScenarioGrid`] — strategy × cluster × fault-plan sweeps.
+//!
+//! The engine made a single adaptive run cheap; this module makes *many*
+//! runs cheap: a grid of scenario cells, each executed on its own
+//! [`Engine`](crate::cluster::engine::Engine) instance by a pool of sweep
+//! jobs, folded into one consolidated report (`repro sweep`). A cell that
+//! fails — an injected death, an undersized matrix — becomes an error row
+//! in the report instead of aborting the sweep: surviving a worker death
+//! mid-sweep is part of what the grid demonstrates.
+//!
+//! Layering note: this module sits *above* the apps (it drives
+//! `apps::matmul1d` end-to-end per cell) even though it lives in `adapt` —
+//! it is scenario orchestration, not a distribution strategy.
+
+use super::registry::Strategy;
+use crate::apps::matmul1d::{run_with_faults, Matmul1dConfig};
+use crate::cluster::faults::FaultPlan;
+use crate::config::ClusterSpec;
+use crate::error::{HfpmError, Result};
+use crate::util::table::{fnum, Table};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A grid of sweep scenarios: every strategy × cluster × fault-plan combo
+/// becomes one cell, run as an independent 1D matmul workload.
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    pub strategies: Vec<Strategy>,
+    pub clusters: Vec<ClusterSpec>,
+    /// Fault plans with their display labels (the parse spec).
+    pub faults: Vec<(String, FaultPlan)>,
+    /// Problem size of every cell's workload.
+    pub n: u64,
+    pub epsilon: f64,
+    pub max_iters: usize,
+    /// Concurrent cells (0 = available parallelism, capped at the cell
+    /// count). Each job runs whole cells; each cell spawns its own engine.
+    pub jobs: usize,
+}
+
+/// One cell's outcome in the consolidated report.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub strategy: String,
+    pub cluster: String,
+    pub nodes: usize,
+    pub fault: String,
+    pub total_s: f64,
+    pub partition_s: f64,
+    pub comm_s: f64,
+    pub compute_s: f64,
+    pub iterations: usize,
+    pub imbalance: f64,
+    pub energy_j: f64,
+    /// The cell's failure, if it did not complete (e.g. an injected
+    /// death). Timing fields are zero for error rows.
+    pub error: Option<String>,
+}
+
+/// The consolidated sweep result, cell rows in strategy-major grid order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub n: u64,
+    pub rows: Vec<SweepRow>,
+}
+
+impl ScenarioGrid {
+    pub fn new(n: u64) -> Self {
+        Self {
+            strategies: Vec::new(),
+            clusters: Vec::new(),
+            faults: Vec::new(),
+            n,
+            epsilon: 0.05,
+            max_iters: 100,
+            jobs: 0,
+        }
+    }
+
+    /// Total cell count of the grid.
+    pub fn cells(&self) -> usize {
+        self.strategies.len() * self.clusters.len() * self.faults.len()
+    }
+
+    /// Run every cell, `jobs` at a time. Rows come back in grid order
+    /// (strategy-major, then cluster, then fault) regardless of which job
+    /// finished first.
+    pub fn run(&self) -> Result<SweepReport> {
+        if self.cells() == 0 {
+            return Err(HfpmError::InvalidArg(
+                "empty sweep grid: need at least one strategy, cluster and fault plan".into(),
+            ));
+        }
+        // materialize the cells in grid order
+        let mut cells: Vec<(Strategy, &ClusterSpec, &str, &FaultPlan)> = Vec::new();
+        for &s in &self.strategies {
+            for spec in &self.clusters {
+                for (label, plan) in &self.faults {
+                    cells.push((s, spec, label.as_str(), plan));
+                }
+            }
+        }
+        let jobs = if self.jobs == 0 {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+        } else {
+            self.jobs
+        }
+        .min(cells.len())
+        .max(1);
+
+        let cursor = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<SweepRow>>> = Mutex::new(vec![None; cells.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                    if idx >= cells.len() {
+                        break;
+                    }
+                    let (strategy, spec, fault_label, plan) = cells[idx];
+                    let row = self.run_cell(strategy, spec, fault_label, plan);
+                    slots.lock().expect("sweep slots poisoned")[idx] = Some(row);
+                });
+            }
+        });
+        let rows = slots
+            .into_inner()
+            .expect("sweep slots poisoned")
+            .into_iter()
+            .map(|r| r.expect("every sweep cell produces a row"))
+            .collect();
+        Ok(SweepReport { n: self.n, rows })
+    }
+
+    fn run_cell(
+        &self,
+        strategy: Strategy,
+        spec: &ClusterSpec,
+        fault_label: &str,
+        plan: &FaultPlan,
+    ) -> SweepRow {
+        let mut row = SweepRow {
+            strategy: strategy.label(),
+            cluster: spec.name.clone(),
+            nodes: spec.size(),
+            fault: fault_label.to_string(),
+            total_s: 0.0,
+            partition_s: 0.0,
+            comm_s: 0.0,
+            compute_s: 0.0,
+            iterations: 0,
+            imbalance: 0.0,
+            energy_j: 0.0,
+            error: None,
+        };
+        let mut cfg = Matmul1dConfig::new(self.n, strategy);
+        cfg.epsilon = self.epsilon;
+        cfg.max_iters = self.max_iters;
+        match run_with_faults(spec, &cfg, plan.clone()) {
+            Ok(report) => {
+                row.total_s = report.total_s;
+                row.partition_s = report.partition_s;
+                row.comm_s = report.comm_s;
+                row.compute_s = report.compute_s;
+                row.iterations = report.iterations;
+                row.imbalance = report.imbalance;
+                row.energy_j = report.energy_j;
+            }
+            Err(e) => row.error = Some(e.to_string()),
+        }
+        row
+    }
+}
+
+impl SweepReport {
+    /// Render the consolidated table (one row per cell).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("scenario sweep (n = {})", self.n),
+            &[
+                "strategy", "cluster", "p", "faults", "total_s", "partition_s", "comm_s",
+                "compute_s", "iters", "imbalance", "energy_j", "status",
+            ],
+        );
+        for r in &self.rows {
+            let status = match &r.error {
+                None => "ok".to_string(),
+                Some(e) => format!("error: {e}"),
+            };
+            let num = |x: f64, prec: usize| {
+                if r.error.is_some() {
+                    "-".to_string()
+                } else {
+                    fnum(x, prec)
+                }
+            };
+            t.add_row(vec![
+                r.strategy.clone(),
+                r.cluster.clone(),
+                r.nodes.to_string(),
+                r.fault.clone(),
+                num(r.total_s, 4),
+                num(r.partition_s, 4),
+                num(r.comm_s, 4),
+                num(r.compute_s, 4),
+                if r.error.is_some() {
+                    "-".to_string()
+                } else {
+                    r.iterations.to_string()
+                },
+                num(r.imbalance, 4),
+                num(r.energy_j, 1),
+                status,
+            ]);
+        }
+        t
+    }
+
+    /// Cells that completed.
+    pub fn ok_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.error.is_none()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn mini_grid() -> ScenarioGrid {
+        let mut g = ScenarioGrid::new(512);
+        g.strategies = vec![Strategy::Even, Strategy::Dfpa];
+        g.clusters = vec![presets::mini4()];
+        g.faults = vec![
+            ("none".to_string(), FaultPlan::none()),
+            (
+                "straggler:0x3@0".to_string(),
+                FaultPlan::parse("straggler:0x3@0").unwrap(),
+            ),
+        ];
+        g.epsilon = 0.10;
+        g
+    }
+
+    #[test]
+    fn grid_runs_all_cells_in_order() {
+        let g = mini_grid();
+        assert_eq!(g.cells(), 4);
+        let report = g.run().unwrap();
+        assert_eq!(report.rows.len(), 4);
+        assert_eq!(report.ok_rows(), 4);
+        // strategy-major order: even×(none, straggler), dfpa×(none, straggler)
+        let labels: Vec<(&str, &str)> = report
+            .rows
+            .iter()
+            .map(|r| (r.strategy.as_str(), r.fault.as_str()))
+            .collect();
+        assert_eq!(
+            labels,
+            vec![
+                ("even", "none"),
+                ("even", "straggler:0x3@0"),
+                ("dfpa", "none"),
+                ("dfpa", "straggler:0x3@0"),
+            ]
+        );
+        assert!(report.rows.iter().all(|r| r.total_s > 0.0));
+        assert_eq!(report.table().row_count(), 4);
+    }
+
+    #[test]
+    fn death_cell_becomes_error_row_not_abort() {
+        let mut g = mini_grid();
+        g.faults.push((
+            "death:1@0".to_string(),
+            FaultPlan::parse("death:1@0").unwrap(),
+        ));
+        let report = g.run().unwrap();
+        assert_eq!(report.rows.len(), 6);
+        let dead: Vec<&SweepRow> =
+            report.rows.iter().filter(|r| r.fault == "death:1@0").collect();
+        assert_eq!(dead.len(), 2);
+        assert!(dead.iter().all(|r| r.error.is_some()));
+        // the healthy cells still completed
+        assert_eq!(report.ok_rows(), 4);
+    }
+
+    #[test]
+    fn empty_grid_rejected() {
+        let g = ScenarioGrid::new(512);
+        assert!(g.run().is_err());
+    }
+
+    #[test]
+    fn single_job_matches_parallel_run_shape() {
+        let mut g = mini_grid();
+        g.jobs = 1;
+        let serial = g.run().unwrap();
+        assert_eq!(serial.rows.len(), 4);
+        assert_eq!(serial.ok_rows(), 4);
+    }
+}

@@ -33,7 +33,7 @@ use crate::cluster::comm::CommModel;
 use crate::cluster::executor::NodeExecutor;
 use crate::cluster::faults::FaultPlan;
 use crate::cluster::node::{build_nodes, SimNode};
-use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::cluster::engine::Engine;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
@@ -107,7 +107,7 @@ fn build_cluster(
     spec: &ClusterSpec,
     cfg: &JacobiConfig,
     faults: FaultPlan,
-) -> (VirtualCluster, Vec<SimNode>) {
+) -> (Engine, Vec<SimNode>) {
     // two n-point row slabs per unit (u and u_next) plus the halo rows
     let fp = Footprint {
         per_unit: 2.0 * cfg.elem_bytes as f64,
@@ -118,7 +118,7 @@ fn build_cluster(
         .iter()
         .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
         .collect();
-    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), faults);
+    let cluster = Engine::spawn(execs, CommModel::new(spec.clone()), faults);
     (cluster, nodes)
 }
 

@@ -32,7 +32,7 @@ use crate::adapt::{
 use crate::cluster::comm::{Collective, CommModel};
 use crate::cluster::executor::NodeExecutor;
 use crate::cluster::node::{build_nodes, SimNode};
-use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::cluster::engine::Engine;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
@@ -110,7 +110,7 @@ impl std::ops::Deref for LuReport {
 fn build_cluster(
     spec: &ClusterSpec,
     cfg: &LuConfig,
-) -> (VirtualCluster, Vec<SimNode>) {
+) -> (Engine, Vec<SimNode>) {
     // per element update: read the A block, the L panel and the U row
     let fp = Footprint {
         per_unit: 3.0 * cfg.elem_bytes as f64,
@@ -121,7 +121,7 @@ fn build_cluster(
         .iter()
         .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
         .collect();
-    let cluster = VirtualCluster::spawn(
+    let cluster = Engine::spawn(
         execs,
         CommModel::new(spec.clone()),
         crate::cluster::faults::FaultPlan::none(),

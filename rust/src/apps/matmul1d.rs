@@ -25,8 +25,8 @@ use crate::adapt::{
 use crate::cluster::comm::CommModel;
 use crate::cluster::executor::{ExecutionMode, NodeExecutor};
 use crate::cluster::faults::FaultPlan;
+use crate::cluster::engine::Engine;
 use crate::cluster::node::{build_nodes, SimNode};
-use crate::cluster::virtual_cluster::VirtualCluster;
 use crate::config::ClusterSpec;
 use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::error::{HfpmError, Result};
@@ -99,7 +99,7 @@ impl std::ops::Deref for Matmul1dReport {
 /// Row-granularity benchmarker: DFPA distributes rows, the cluster kernel
 /// works in computation units (`rows · n` per rank-1 update).
 pub struct RowBench<'a> {
-    pub cluster: &'a mut VirtualCluster,
+    pub cluster: &'a mut Engine,
     pub n: u64,
 }
 
@@ -125,7 +125,7 @@ pub fn build_cluster(
     spec: &ClusterSpec,
     cfg: &Matmul1dConfig,
     faults: FaultPlan,
-) -> Result<(VirtualCluster, Vec<SimNode>)> {
+) -> Result<(Engine, Vec<SimNode>)> {
     let fp = Footprint {
         per_unit: 2.0 * cfg.elem_bytes as f64,
         fixed: (cfg.n * cfg.n * cfg.elem_bytes) as f64,
@@ -156,7 +156,7 @@ pub fn build_cluster(
                 .collect()
         }
     };
-    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), faults);
+    let cluster = Engine::spawn(execs, CommModel::new(spec.clone()), faults);
     Ok((cluster, nodes))
 }
 

@@ -17,7 +17,8 @@ use crate::cluster::comm::{Collective, CommModel};
 use crate::cluster::executor::NodeExecutor;
 use crate::cluster::faults::FaultPlan;
 use crate::cluster::node::{build_nodes, SimNode};
-use crate::cluster::virtual_cluster::{VirtualCluster, VirtualCluster2d};
+use crate::cluster::engine::Engine;
+use crate::cluster::virtual_cluster::VirtualCluster2d;
 use crate::config::ClusterSpec;
 use crate::dfpa2d::nested::Benchmarker2d;
 use crate::error::{HfpmError, Result};
@@ -119,8 +120,8 @@ fn build_cluster_2d(
         .iter()
         .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
         .collect();
-    let cluster = VirtualCluster::spawn(execs, CommModel::new(spec.clone()), FaultPlan::none());
-    Ok((VirtualCluster2d::new(cluster, p, q)?, nodes))
+    let engine = Engine::spawn(execs, CommModel::new(spec.clone()), FaultPlan::none());
+    Ok((VirtualCluster2d::new(engine.into(), p, q)?, nodes))
 }
 
 /// Run the 2D application.

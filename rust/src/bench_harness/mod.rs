@@ -14,7 +14,7 @@ pub mod runner;
 pub use runner::{BenchGroup, BenchResult, Bencher};
 
 use crate::adapt::{Distributor, SessionCtx};
-use crate::cluster::virtual_cluster::VirtualCluster;
+use crate::cluster::engine::Engine;
 use crate::dfpa::{Benchmarker, StepReport};
 use crate::fpm::PiecewiseModel;
 use crate::util::rng::Pcg32;
@@ -51,7 +51,7 @@ pub fn random_piecewise_models(
 /// Distributes rows, runs `rows · n` kernel units per rank, and passes the
 /// cluster's joule metering through for energy-aware strategies.
 pub struct OwnedRowBench {
-    pub cluster: VirtualCluster,
+    pub cluster: Engine,
     pub n: u64,
 }
 

@@ -1,0 +1,182 @@
+//! Frame state shared between the engine leader and its worker pool.
+//!
+//! A *frame* is one BSP superstep driven through the pool: the leader
+//! writes every node's assignment into its slot, releases the `start`
+//! barrier, the workers claim contiguous slot ranges off the atomic
+//! cursor and execute them, and everyone meets again at the `done`
+//! barrier, after which the leader folds the results into the virtual
+//! clock. The design follows simulon's frame/worker scheme (SNIPPETS.md
+//! §1–3): per-slot `UnsafeCell` state, an atomic frame counter and work
+//! cursor, one barrier crossing per frame instead of two channel
+//! round-trips per node.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use crate::cluster::executor::{apply_time_cap, NodeExecutor};
+use crate::cluster::faults::FaultPlan;
+
+/// A kernel assignment for one node in one frame.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Task {
+    OneD { units: u64 },
+    TwoD { rows: u64, width: u64 },
+}
+
+impl Task {
+    /// Computation units of the assignment (drives the energy model).
+    pub(crate) fn units(&self) -> u64 {
+        match *self {
+            Task::OneD { units } => units,
+            Task::TwoD { rows, width } => rows.saturating_mul(width),
+        }
+    }
+}
+
+/// What one node produced in the current frame.
+pub(crate) enum SlotResult {
+    /// No task this frame (the rank sat the step out).
+    Idle,
+    Done {
+        time_s: f64,
+        energy_j: f64,
+        capped: bool,
+    },
+    Failed {
+        reason: String,
+    },
+}
+
+/// One simulated node: its executor, liveness, and the current frame's
+/// input/output. Only ever touched through the `UnsafeCell`s in
+/// [`Shared`]; the frame protocol is what makes that sound.
+pub(crate) struct NodeSlot {
+    pub exec: Box<dyn NodeExecutor>,
+    /// Set when an injected death or an executor panic retires the node
+    /// permanently (mirrors a legacy worker thread breaking its loop).
+    pub dead: bool,
+    /// The leader's assignment for the current frame (`None` = sit out).
+    pub task: Option<(Task, Option<f64>)>,
+    pub result: SlotResult,
+}
+
+/// State shared between the engine leader and the worker pool.
+///
+/// The node slots live behind `UnsafeCell` instead of mutexes because the
+/// frame protocol already guarantees exclusive access:
+///
+/// 1. *Between frames* — from the leader's return out of `done.wait()`
+///    until the next `start.wait()` release — no worker touches a slot
+///    (each is either parked on `start` or on its way there, past its own
+///    `done.wait()`), so the leader owns all of them.
+/// 2. *Within a frame* each slot index is claimed by exactly one worker
+///    via `cursor.fetch_add`, and the leader is parked on `done`.
+///
+/// So only one thread (leader/worker) is interested in a slot's data at
+/// a time; the barriers provide the happens-before edges that publish the
+/// writes across the hand-offs.
+pub(crate) struct Shared {
+    pub slots: Box<[UnsafeCell<NodeSlot>]>,
+    pub faults: FaultPlan,
+    /// Frames started so far; bumped by the leader before releasing
+    /// `start` (diagnostics — ordering comes from the barriers).
+    pub frame: AtomicUsize,
+    /// Next unclaimed slot index of the current frame.
+    pub cursor: AtomicUsize,
+    /// BSP step index of the current frame (drives the fault plan).
+    pub step: AtomicUsize,
+    /// Slot count claimed per cursor bump.
+    pub chunk: usize,
+    pub shutdown: AtomicBool,
+    /// Frame-start barrier (workers + leader).
+    pub start: Barrier,
+    /// Frame-end barrier (workers + leader).
+    pub done: Barrier,
+}
+
+// SAFETY: the `UnsafeCell` slots are the only non-Sync state, and the
+// frame protocol documented on [`Shared`] hands each slot to exactly one
+// thread at a time (the leader between frames, the single claiming
+// worker within a frame), with the barriers ordering the hand-offs.
+unsafe impl Sync for Shared {}
+
+impl Shared {
+    /// Body of one pool thread: wait for a frame, drain the cursor, meet
+    /// at `done`; exit when the leader raises `shutdown`.
+    pub(crate) fn worker_loop(&self) {
+        let n = self.slots.len();
+        loop {
+            self.start.wait();
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let step = self.step.load(Ordering::Acquire);
+            loop {
+                let base = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+                if base >= n {
+                    break;
+                }
+                for rank in base..(base + self.chunk).min(n) {
+                    // SAFETY: `cursor` hands each index to exactly one
+                    // worker this frame, and the leader is parked on
+                    // `done` (see `Shared`).
+                    let slot = unsafe { &mut *self.slots[rank].get() };
+                    execute_slot(slot, rank, step, &self.faults);
+                }
+            }
+            self.done.wait();
+        }
+    }
+}
+
+/// Run one node's assignment, reproducing the legacy worker semantics:
+/// injected death retires the node with the same message, a straggler
+/// factor scales the reported time before the cap, and joules follow the
+/// *reported* (post-slowdown, post-cap) duration. An executor panic is
+/// caught and surfaced as a failure so the frame barrier can never hang
+/// on a poisoned worker.
+fn execute_slot(slot: &mut NodeSlot, rank: usize, step: usize, faults: &FaultPlan) {
+    let Some((task, cap)) = slot.task.take() else {
+        slot.result = SlotResult::Idle;
+        return;
+    };
+    if slot.dead {
+        slot.result = SlotResult::Failed {
+            reason: "channel closed (worker dead)".into(),
+        };
+        return;
+    }
+    if faults.dies(rank, step) {
+        slot.dead = true;
+        slot.result = SlotResult::Failed {
+            reason: format!("injected death at step {step}"),
+        };
+        return;
+    }
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match task {
+        Task::OneD { units } => slot.exec.execute(units),
+        Task::TwoD { rows, width } => slot.exec.execute_2d(rows, width),
+    }));
+    slot.result = match out {
+        Err(_) => {
+            slot.dead = true;
+            SlotResult::Failed {
+                reason: format!("executor panicked at step {step}"),
+            }
+        }
+        Ok(Err(e)) => SlotResult::Failed {
+            reason: e.to_string(),
+        },
+        Ok(Ok(t)) => {
+            let t = t * faults.slowdown(rank, step);
+            let (t, capped) = apply_time_cap(t, cap);
+            let energy_j = slot.exec.dynamic_energy_j(task.units(), t);
+            SlotResult::Done {
+                time_s: t,
+                energy_j,
+                capped,
+            }
+        }
+    };
+}

@@ -1,0 +1,469 @@
+//! The frame-synchronized cluster engine.
+//!
+//! [`Engine`] replaces the thread-per-node + per-step channel protocol of
+//! the original `VirtualCluster` (retained as
+//! [`crate::cluster::legacy::LegacyCluster`] for comparison benchmarks
+//! and parity tests): a fixed pool of `min(nodes, available_parallelism)`
+//! worker threads executes every node's kernel assignment each frame,
+//! claiming contiguous slot ranges off an atomic cursor, and the leader
+//! folds the superstep at a per-frame barrier — `max_i(t_i) + control
+//! collectives` onto the virtual clock, joules in rank order onto the
+//! energy clock, exactly the BSP accounting of DESIGN.md §2/§3.8.
+//!
+//! Determinism: each node's noise stream lives in its own executor
+//! (seeded per rank), so *which* pool thread runs a slot never affects
+//! the reported time, and the leader folds in rank order — for a fixed
+//! seed the virtual times are bit-identical to the legacy runtime's.
+
+mod frame;
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+pub(crate) use frame::Task;
+use frame::{NodeSlot, Shared, SlotResult};
+
+use super::comm::CommModel;
+use super::executor::NodeExecutor;
+use super::faults::FaultPlan;
+use crate::dfpa::algorithm::{Benchmarker, StepReport};
+use crate::error::{HfpmError, Result};
+use crate::util::timer::VirtualClock;
+
+/// The frame-synchronized cluster runtime. Rank 0 is the leader-side
+/// root for collectives. See the module docs for the frame protocol.
+pub struct Engine {
+    shared: Arc<Shared>,
+    pool: Vec<JoinHandle<()>>,
+    comm: CommModel,
+    /// Host identity of each rank, captured from the executors before
+    /// they move into their slots — the stable key the model store files
+    /// partial FPMs under (see `modelstore::ModelKey`).
+    hosts: Vec<String>,
+    clock: VirtualClock,
+    step: usize,
+    /// Count of benchmark supersteps executed (diagnostics).
+    pub steps_run: usize,
+    /// Observations cut short by a time cap (paper optimization 4).
+    pub capped_observations: usize,
+    /// Per-rank dynamic joules of the most recent superstep.
+    last_energies: Vec<f64>,
+    /// Dynamic joules accumulated across all supersteps (plus explicit
+    /// [`Engine::charge_energy`] charges), the energy analogue of the
+    /// virtual clock.
+    total_dynamic_j: f64,
+    /// Whether any executor actually meters energy (all-zero static power
+    /// marks a fully unmetered cluster, e.g. stub executors).
+    metered: bool,
+    /// Sum of the nodes' static power draws, watts.
+    static_w: f64,
+}
+
+impl Engine {
+    /// Spawn the engine with the default pool size,
+    /// `min(nodes, available_parallelism)`.
+    pub fn spawn(
+        executors: Vec<Box<dyn NodeExecutor>>,
+        comm: CommModel,
+        faults: FaultPlan,
+    ) -> Self {
+        Self::spawn_with_workers(executors, comm, faults, 0)
+    }
+
+    /// Spawn with an explicit pool size (`0` = default). The pool never
+    /// exceeds the node count — extra threads would only spin the cursor.
+    pub fn spawn_with_workers(
+        executors: Vec<Box<dyn NodeExecutor>>,
+        comm: CommModel,
+        faults: FaultPlan,
+        workers: usize,
+    ) -> Self {
+        let hosts: Vec<String> = executors.iter().map(|e| e.host().to_string()).collect();
+        let static_w: f64 = executors.iter().map(|e| e.static_power_w()).sum();
+        // probe once before the executors move into their slots: a cluster
+        // where no executor meters energy reports None instead of zeros
+        let metered = executors
+            .iter()
+            .any(|e| e.static_power_w() > 0.0 || e.dynamic_energy_j(1 << 20, 1.0) > 0.0);
+        let n = executors.len();
+        let workers = if workers == 0 {
+            n.min(
+                std::thread::available_parallelism()
+                    .map(|c| c.get())
+                    .unwrap_or(1),
+            )
+        } else {
+            workers.min(n)
+        };
+        let slots: Box<[UnsafeCell<NodeSlot>]> = executors
+            .into_iter()
+            .map(|exec| {
+                UnsafeCell::new(NodeSlot {
+                    exec,
+                    dead: false,
+                    task: None,
+                    result: SlotResult::Idle,
+                })
+            })
+            .collect();
+        // a few claims per worker per frame: coarse enough to keep the
+        // cursor cold, fine enough to absorb uneven slot costs
+        let chunk = (n / (4 * workers.max(1))).max(1);
+        let shared = Arc::new(Shared {
+            slots,
+            faults,
+            frame: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            step: AtomicUsize::new(0),
+            chunk,
+            shutdown: AtomicBool::new(false),
+            start: Barrier::new(workers + 1),
+            done: Barrier::new(workers + 1),
+        });
+        let pool = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("engine-{w}"))
+                    .spawn(move || shared.worker_loop())
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Self {
+            shared,
+            pool,
+            comm,
+            hosts,
+            clock: VirtualClock::new(),
+            step: 0,
+            steps_run: 0,
+            capped_observations: 0,
+            last_energies: vec![0.0; n],
+            total_dynamic_j: 0.0,
+            metered,
+            static_w,
+        }
+    }
+
+    /// Simulated node count (not the pool size).
+    pub fn size(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// OS threads in the worker pool.
+    pub fn worker_threads(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Frames executed so far.
+    pub fn frames(&self) -> usize {
+        self.shared.frame.load(Ordering::Relaxed)
+    }
+
+    pub fn comm(&self) -> &CommModel {
+        &self.comm
+    }
+
+    /// Host identity per rank (model-store keys, diagnostics).
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    /// Virtual time elapsed so far.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Charge an explicit virtual cost (e.g. application data distribution).
+    pub fn charge(&mut self, seconds: f64) {
+        self.clock.advance(seconds);
+    }
+
+    /// Charge explicit dynamic joules (the energy analogue of
+    /// [`Engine::charge`]; used when an app scales a probed step to a
+    /// whole phase).
+    pub fn charge_energy(&mut self, joules: f64) {
+        self.total_dynamic_j += joules.max(0.0);
+    }
+
+    /// Does any executor meter energy?
+    pub fn meters_energy(&self) -> bool {
+        self.metered
+    }
+
+    /// Per-rank dynamic joules of the most recent superstep.
+    pub fn last_step_energies(&self) -> &[f64] {
+        &self.last_energies
+    }
+
+    /// Dynamic joules accumulated so far (supersteps + explicit charges).
+    pub fn total_dynamic_j(&self) -> f64 {
+        self.total_dynamic_j
+    }
+
+    /// Sum of the nodes' static power draws, watts.
+    pub fn static_power_w(&self) -> f64 {
+        self.static_w
+    }
+
+    /// Total energy so far: accumulated dynamic joules plus the cluster's
+    /// static draw over the elapsed virtual time.
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_dynamic_j + self.static_w * self.now()
+    }
+
+    /// Execute one superstep as one frame: `tasks[rank] = None` sits the
+    /// rank out. Returns per-rank times (0.0 for non-participants) and
+    /// the step's virtual cost (max duration + control collectives over
+    /// participants).
+    pub(crate) fn run_step(&mut self, tasks: &[Option<(Task, Option<f64>)>]) -> Result<StepReport> {
+        assert_eq!(tasks.len(), self.size());
+        let step = self.step;
+        self.step += 1;
+        self.steps_run += 1;
+
+        for (rank, t) in tasks.iter().enumerate() {
+            // SAFETY: between frames every worker is parked on (or headed
+            // to) `start`, so the leader owns the slots (see `Shared`).
+            let slot = unsafe { &mut *self.shared.slots[rank].get() };
+            slot.task = *t;
+            slot.result = SlotResult::Idle;
+        }
+        self.shared.step.store(step, Ordering::Release);
+        self.shared.cursor.store(0, Ordering::Release);
+        self.shared.frame.fetch_add(1, Ordering::AcqRel);
+        self.shared.start.wait();
+        self.shared.done.wait();
+
+        let n = self.size();
+        let mut times = vec![0.0f64; n];
+        let mut energies = vec![0.0f64; n];
+        let mut failure: Option<HfpmError> = None;
+        for rank in 0..n {
+            // SAFETY: the frame is over; the leader owns the slots again.
+            let slot = unsafe { &mut *self.shared.slots[rank].get() };
+            match std::mem::replace(&mut slot.result, SlotResult::Idle) {
+                SlotResult::Idle => {}
+                SlotResult::Done {
+                    time_s,
+                    energy_j,
+                    capped,
+                } => {
+                    times[rank] = time_s;
+                    energies[rank] = energy_j;
+                    if capped {
+                        self.capped_observations += 1;
+                    }
+                }
+                SlotResult::Failed { reason } => {
+                    if failure.is_none() {
+                        failure = Some(HfpmError::WorkerFailed { rank, reason });
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        // fold the superstep exactly as the legacy leader does: slowest
+        // member plus control collectives onto the clock, joules summed
+        // in rank order onto the energy clock
+        let members: Vec<usize> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_some())
+            .map(|(r, _)| r)
+            .collect();
+        let control = self.comm.subset_control_cost(0, &members);
+        let max_t = times.iter().cloned().fold(0.0f64, f64::max);
+        let cost = max_t + control;
+        self.clock.advance(cost);
+        self.total_dynamic_j += energies.iter().sum::<f64>();
+        self.last_energies = energies;
+        Ok(StepReport {
+            times,
+            virtual_cost_s: cost,
+        })
+    }
+
+    /// Run the 1D kernel with `d[rank]` units on every rank.
+    pub fn run_1d(&mut self, d: &[u64]) -> Result<StepReport> {
+        let tasks: Vec<Option<(Task, Option<f64>)>> = d
+            .iter()
+            .map(|&units| {
+                if units == 0 {
+                    None
+                } else {
+                    Some((Task::OneD { units }, None))
+                }
+            })
+            .collect();
+        self.run_step(&tasks)
+    }
+
+    /// Run the 2D kernel on an arbitrary subset (used per column).
+    pub fn run_2d_subset(
+        &mut self,
+        assignments: &[(usize, u64, u64)], // (rank, rows, width)
+        cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let mut tasks: Vec<Option<(Task, Option<f64>)>> = vec![None; self.size()];
+        for &(rank, rows, width) in assignments {
+            if rows > 0 && width > 0 {
+                tasks[rank] = Some((Task::TwoD { rows, width }, cap));
+            }
+        }
+        self.run_step(&tasks)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // release the pool through `start`; workers see the flag and exit
+        self.shared.start.wait();
+        for h in self.pool.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Benchmarker for Engine {
+    fn processors(&self) -> usize {
+        self.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        self.run_1d(d)
+    }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        if self.metered {
+            Some(self.last_energies.clone())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::build_nodes;
+    use crate::cluster::presets;
+    use crate::fpm::analytic::Footprint;
+
+    fn mini_engine(faults: FaultPlan) -> Engine {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        Engine::spawn(execs, CommModel::new(spec), faults)
+    }
+
+    #[test]
+    fn pool_never_exceeds_node_count() {
+        let e = mini_engine(FaultPlan::none());
+        assert!(e.worker_threads() >= 1);
+        assert!(e.worker_threads() <= 4);
+    }
+
+    #[test]
+    fn explicit_pool_size_is_respected() {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        let mut e = Engine::spawn_with_workers(execs, CommModel::new(spec), FaultPlan::none(), 2);
+        assert_eq!(e.worker_threads(), 2);
+        let r = e.run_1d(&[1000; 4]).unwrap();
+        assert!(r.times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn frames_count_supersteps() {
+        let mut e = mini_engine(FaultPlan::none());
+        assert_eq!(e.frames(), 0);
+        e.run_1d(&[100; 4]).unwrap();
+        e.run_1d(&[100, 0, 100, 0]).unwrap();
+        assert_eq!(e.frames(), 2);
+        assert_eq!(e.steps_run, 2);
+    }
+
+    #[test]
+    fn empty_engine_is_inert() {
+        let spec = presets::mini4();
+        let mut e = Engine::spawn(Vec::new(), CommModel::new(spec), FaultPlan::none());
+        assert_eq!(e.size(), 0);
+        assert_eq!(e.worker_threads(), 0);
+        let r = e.run_1d(&[]).unwrap();
+        assert!(r.times.is_empty());
+    }
+
+    #[test]
+    fn dead_slot_keeps_failing_without_hanging() {
+        let mut e = mini_engine(FaultPlan::none().with_death(1, 1));
+        assert!(e.run_1d(&[100; 4]).is_ok());
+        let err = e.run_1d(&[100; 4]).unwrap_err();
+        match err {
+            HfpmError::WorkerFailed { rank, reason } => {
+                assert_eq!(rank, 1);
+                assert!(reason.contains("injected death at step 1"), "{reason}");
+            }
+            other => panic!("unexpected error {other}"),
+        }
+        // the slot stays dead: a later assignment fails again, same shape
+        // as the legacy closed-channel error, and the frame still completes
+        let err = e.run_1d(&[100; 4]).unwrap_err();
+        match err {
+            HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 1),
+            other => panic!("unexpected error {other}"),
+        }
+        // a step that sits the dead rank out succeeds
+        assert!(e.run_1d(&[100, 0, 100, 100]).is_ok());
+    }
+
+    #[test]
+    fn panicking_executor_fails_the_step_not_the_barrier() {
+        struct Bomb;
+        impl NodeExecutor for Bomb {
+            fn execute(&mut self, _units: u64) -> Result<f64> {
+                panic!("kernel exploded");
+            }
+        }
+        struct Plain;
+        impl NodeExecutor for Plain {
+            fn execute(&mut self, units: u64) -> Result<f64> {
+                Ok(units as f64 * 1e-9)
+            }
+        }
+        let spec = presets::mini4();
+        let execs: Vec<Box<dyn NodeExecutor>> = vec![
+            Box::new(Plain),
+            Box::new(Bomb),
+            Box::new(Plain),
+            Box::new(Plain),
+        ];
+        let mut e = Engine::spawn(execs, CommModel::new(spec), FaultPlan::none());
+        let err = e.run_1d(&[10; 4]).unwrap_err();
+        match err {
+            HfpmError::WorkerFailed { rank, reason } => {
+                assert_eq!(rank, 1);
+                assert!(reason.contains("panicked"), "{reason}");
+            }
+            other => panic!("unexpected error {other}"),
+        }
+        // the pool survives the panic; healthy ranks keep serving
+        let r = e.run_1d(&[10, 0, 10, 10]).unwrap();
+        assert!(r.times[0] > 0.0 && r.times[2] > 0.0);
+    }
+}

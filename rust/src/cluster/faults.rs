@@ -5,7 +5,12 @@
 //! (a dead worker surfaces as `HfpmError::WorkerFailed`, a straggler is
 //! simply absorbed by DFPA as a slow processor — which is the paper's
 //! whole point).
+//!
+//! Stragglers carry their onset *per rank*: two stragglers with different
+//! start steps coexist (`with_straggler(0, 2.0, 0)` no longer retroactively
+//! moves the onset of a straggler added for another rank).
 
+use crate::error::{HfpmError, Result};
 use std::collections::BTreeMap;
 
 /// What goes wrong, per rank.
@@ -13,10 +18,8 @@ use std::collections::BTreeMap;
 pub struct FaultPlan {
     /// Rank → step index at which the worker dies (fails permanently).
     pub die_at_step: BTreeMap<usize, usize>,
-    /// Rank → multiplicative slowdown applied from `straggle_from_step`.
-    pub straggler_factor: BTreeMap<usize, f64>,
-    /// First step at which stragglers slow down.
-    pub straggle_from_step: usize,
+    /// Rank → (multiplicative slowdown, first step it applies).
+    pub stragglers: BTreeMap<usize, (f64, usize)>,
 }
 
 impl FaultPlan {
@@ -31,9 +34,13 @@ impl FaultPlan {
 
     pub fn with_straggler(mut self, rank: usize, factor: f64, from_step: usize) -> Self {
         assert!(factor >= 1.0);
-        self.straggler_factor.insert(rank, factor);
-        self.straggle_from_step = from_step;
+        self.stragglers.insert(rank, (factor, from_step));
         self
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.die_at_step.is_empty() && self.stragglers.is_empty()
     }
 
     /// Should `rank` fail at `step`?
@@ -43,11 +50,54 @@ impl FaultPlan {
 
     /// Slowdown factor for `rank` at `step` (1.0 = healthy).
     pub fn slowdown(&self, rank: usize, step: usize) -> f64 {
-        if step >= self.straggle_from_step {
-            self.straggler_factor.get(&rank).copied().unwrap_or(1.0)
-        } else {
-            1.0
+        match self.stragglers.get(&rank) {
+            Some(&(factor, from)) if step >= from => factor,
+            _ => 1.0,
         }
+    }
+
+    /// Parse a fault spec from the CLI / sweep grid.
+    ///
+    /// Grammar: `none`, or `+`-joined events:
+    /// - `death:<rank>@<step>` — the worker at `rank` dies at `step`;
+    /// - `straggler:<rank>x<factor>@<step>` — `rank` slows by `factor`
+    ///   from `step` on.
+    ///
+    /// Example: `straggler:0x3@0+death:2@5`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        let mut plan = FaultPlan::none();
+        if spec.is_empty() || spec == "none" {
+            return Ok(plan);
+        }
+        let bad = |what: &str| {
+            HfpmError::InvalidArg(format!(
+                "bad fault spec '{what}' (expected none, death:<rank>@<step>, \
+                 or straggler:<rank>x<factor>@<step>, joined with '+')"
+            ))
+        };
+        for event in spec.split('+') {
+            let (kind, rest) = event.split_once(':').ok_or_else(|| bad(event))?;
+            let (who, at) = rest.split_once('@').ok_or_else(|| bad(event))?;
+            let step: usize = at.parse().map_err(|_| bad(event))?;
+            match kind {
+                "death" => {
+                    let rank: usize = who.parse().map_err(|_| bad(event))?;
+                    plan = plan.with_death(rank, step);
+                }
+                "straggler" => {
+                    let (rank, factor) = who.split_once('x').ok_or_else(|| bad(event))?;
+                    let rank: usize = rank.parse().map_err(|_| bad(event))?;
+                    let factor: f64 = factor.parse().map_err(|_| bad(event))?;
+                    if factor < 1.0 {
+                        return Err(bad(event));
+                    }
+                    plan = plan.with_straggler(rank, factor, step);
+                }
+                _ => return Err(bad(event)),
+            }
+        }
+        Ok(plan)
     }
 }
 
@@ -58,6 +108,7 @@ mod tests {
     #[test]
     fn no_faults_by_default() {
         let p = FaultPlan::none();
+        assert!(p.is_none());
         assert!(!p.dies(0, 100));
         assert_eq!(p.slowdown(0, 100), 1.0);
     }
@@ -79,9 +130,37 @@ mod tests {
         assert_eq!(p.slowdown(0, 5), 1.0);
     }
 
+    /// Regression: the onset used to be a single global field, so the last
+    /// `with_straggler` call silently moved every straggler's start step.
+    #[test]
+    fn straggler_onsets_are_per_rank() {
+        let p = FaultPlan::none()
+            .with_straggler(0, 2.0, 5)
+            .with_straggler(1, 3.0, 0);
+        // rank 0 keeps its own onset even though rank 1 starts at step 0
+        assert_eq!(p.slowdown(0, 0), 1.0);
+        assert_eq!(p.slowdown(0, 4), 1.0);
+        assert_eq!(p.slowdown(0, 5), 2.0);
+        assert_eq!(p.slowdown(1, 0), 3.0);
+    }
+
     #[test]
     #[should_panic]
     fn straggler_factor_below_one_rejected() {
         let _ = FaultPlan::none().with_straggler(0, 0.5, 0);
+    }
+
+    #[test]
+    fn parse_grammar() {
+        assert!(FaultPlan::parse("none").unwrap().is_none());
+        assert!(FaultPlan::parse("").unwrap().is_none());
+        let p = FaultPlan::parse("straggler:0x3@2+death:2@5").unwrap();
+        assert_eq!(p.slowdown(0, 2), 3.0);
+        assert_eq!(p.slowdown(0, 1), 1.0);
+        assert!(p.dies(2, 5));
+        assert!(!p.dies(2, 4));
+        assert!(FaultPlan::parse("straggler:0x0.5@0").is_err());
+        assert!(FaultPlan::parse("death:x@1").is_err());
+        assert!(FaultPlan::parse("meteor:0@1").is_err());
     }
 }

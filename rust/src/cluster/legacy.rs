@@ -1,0 +1,475 @@
+//! The original thread-per-node cluster runtime, kept as the reference
+//! implementation.
+//!
+//! One OS thread per simulated node, real `mpsc` channels, and the same
+//! BSP virtual-clock accounting as [`crate::cluster::engine::Engine`]:
+//! workers *report* kernel durations and the leader folds a parallel step
+//! as `max_i(t_i) + collectives`. The frame-synchronized engine replaced
+//! this runtime behind the `VirtualCluster` facade; [`LegacyCluster`]
+//! remains for `bench_scale`'s wall-clock comparison and for the
+//! determinism parity tests (engine and legacy virtual times must agree
+//! for a fixed seed).
+//!
+//! Replies are tagged with the step they answer: after a `recv_timeout`
+//! fires, a late reply from the timed-out step would otherwise be
+//! credited to the *next* step's matching rank. The leader drops replies
+//! whose step tag mismatches the step it is collecting.
+
+use super::comm::CommModel;
+use super::engine::Task;
+use super::executor::{apply_time_cap, NodeExecutor};
+use super::faults::FaultPlan;
+use crate::dfpa::algorithm::{Benchmarker, StepReport};
+use crate::error::{HfpmError, Result};
+use crate::util::timer::VirtualClock;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+enum LeaderMsg {
+    Execute {
+        step: usize,
+        task: Task,
+        cap: Option<f64>,
+    },
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Done {
+        /// The step this reply answers — the leader drops replies from
+        /// timed-out earlier steps instead of mis-crediting them.
+        step: usize,
+        rank: usize,
+        time_s: f64,
+        /// Dynamic joules the executor metered for this task (0 when the
+        /// executor does not meter energy).
+        energy_j: f64,
+        capped: bool,
+    },
+    Failed {
+        step: usize,
+        rank: usize,
+        reason: String,
+    },
+}
+
+struct WorkerHandle {
+    tx: Sender<LeaderMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The retired leader/worker runtime. Same public accounting surface as
+/// the engine, same semantics; see the module docs for why it is kept.
+pub struct LegacyCluster {
+    comm: CommModel,
+    hosts: Vec<String>,
+    workers: Vec<WorkerHandle>,
+    reply_rx: Receiver<WorkerMsg>,
+    clock: VirtualClock,
+    step: usize,
+    /// Count of benchmark supersteps executed (diagnostics).
+    pub steps_run: usize,
+    /// Observations cut short by a time cap (paper optimization 4).
+    pub capped_observations: usize,
+    last_energies: Vec<f64>,
+    total_dynamic_j: f64,
+    metered: bool,
+    static_w: f64,
+    /// Reply timeout for hang protection.
+    timeout: Duration,
+}
+
+impl LegacyCluster {
+    /// Spawn one worker thread per executor.
+    pub fn spawn(
+        executors: Vec<Box<dyn NodeExecutor>>,
+        comm: CommModel,
+        faults: FaultPlan,
+    ) -> Self {
+        let (reply_tx, reply_rx) = channel::<WorkerMsg>();
+        let faults = Arc::new(faults);
+        let hosts: Vec<String> = executors.iter().map(|e| e.host().to_string()).collect();
+        let static_w: f64 = executors.iter().map(|e| e.static_power_w()).sum();
+        let metered = executors
+            .iter()
+            .any(|e| e.static_power_w() > 0.0 || e.dynamic_energy_j(1 << 20, 1.0) > 0.0);
+        let size = executors.len();
+        let workers = executors
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut exec)| {
+                let (tx, rx) = channel::<LeaderMsg>();
+                let reply = reply_tx.clone();
+                let plan = Arc::clone(&faults);
+                let join = std::thread::Builder::new()
+                    .name(format!("legacy-{rank}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                LeaderMsg::Shutdown => break,
+                                LeaderMsg::Execute { step, task, cap } => {
+                                    if plan.dies(rank, step) {
+                                        let _ = reply.send(WorkerMsg::Failed {
+                                            step,
+                                            rank,
+                                            reason: format!("injected death at step {step}"),
+                                        });
+                                        // a dead worker stops serving
+                                        break;
+                                    }
+                                    let result = match task {
+                                        Task::OneD { units } => exec.execute(units),
+                                        Task::TwoD { rows, width } => {
+                                            exec.execute_2d(rows, width)
+                                        }
+                                    };
+                                    match result {
+                                        Ok(t) => {
+                                            let t = t * plan.slowdown(rank, step);
+                                            let (t, capped) = apply_time_cap(t, cap);
+                                            // joules follow the *reported*
+                                            // duration: a straggler burns
+                                            // power for as long as it runs
+                                            let energy_j =
+                                                exec.dynamic_energy_j(task.units(), t);
+                                            let _ = reply.send(WorkerMsg::Done {
+                                                step,
+                                                rank,
+                                                time_s: t,
+                                                energy_j,
+                                                capped,
+                                            });
+                                        }
+                                        Err(e) => {
+                                            let _ = reply.send(WorkerMsg::Failed {
+                                                step,
+                                                rank,
+                                                reason: e.to_string(),
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread");
+                WorkerHandle {
+                    tx,
+                    join: Some(join),
+                }
+            })
+            .collect();
+        Self {
+            comm,
+            hosts,
+            workers,
+            reply_rx,
+            clock: VirtualClock::new(),
+            step: 0,
+            steps_run: 0,
+            capped_observations: 0,
+            last_energies: vec![0.0; size],
+            total_dynamic_j: 0.0,
+            metered,
+            static_w,
+            timeout: Duration::from_secs(120),
+        }
+    }
+
+    /// Override the reply timeout (hang protection; tests shrink it to
+    /// exercise the timeout-then-recover path).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn comm(&self) -> &CommModel {
+        &self.comm
+    }
+
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    /// Virtual time elapsed so far.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    pub fn charge(&mut self, seconds: f64) {
+        self.clock.advance(seconds);
+    }
+
+    pub fn meters_energy(&self) -> bool {
+        self.metered
+    }
+
+    pub fn last_step_energies(&self) -> &[f64] {
+        &self.last_energies
+    }
+
+    pub fn total_dynamic_j(&self) -> f64 {
+        self.total_dynamic_j
+    }
+
+    pub fn static_power_w(&self) -> f64 {
+        self.static_w
+    }
+
+    /// Total energy so far: accumulated dynamic joules plus the cluster's
+    /// static draw over the elapsed virtual time.
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_dynamic_j + self.static_w * self.now()
+    }
+
+    /// Execute one superstep: `tasks[rank] = None` sits the rank out.
+    fn run_step(&mut self, tasks: &[Option<(Task, Option<f64>)>]) -> Result<StepReport> {
+        assert_eq!(tasks.len(), self.size());
+        let step = self.step;
+        self.step += 1;
+        self.steps_run += 1;
+
+        let mut expected = 0usize;
+        for (rank, t) in tasks.iter().enumerate() {
+            if let Some((task, cap)) = t {
+                self.workers[rank]
+                    .tx
+                    .send(LeaderMsg::Execute {
+                        step,
+                        task: *task,
+                        cap: *cap,
+                    })
+                    .map_err(|_| HfpmError::WorkerFailed {
+                        rank,
+                        reason: "channel closed (worker dead)".into(),
+                    })?;
+                expected += 1;
+            }
+        }
+
+        let mut times = vec![0.0f64; self.size()];
+        let mut energies = vec![0.0f64; self.size()];
+        let mut failure: Option<HfpmError> = None;
+        let mut received = 0usize;
+        while received < expected {
+            match self.reply_rx.recv_timeout(self.timeout) {
+                // a reply tagged with an earlier step is a straggling
+                // answer to a step that already timed out: drop it rather
+                // than crediting it to the step being collected
+                Ok(WorkerMsg::Done { step: s, .. }) | Ok(WorkerMsg::Failed { step: s, .. })
+                    if s != step =>
+                {
+                    continue;
+                }
+                Ok(WorkerMsg::Done {
+                    rank,
+                    time_s,
+                    energy_j,
+                    capped,
+                    ..
+                }) => {
+                    times[rank] = time_s;
+                    energies[rank] = energy_j;
+                    if capped {
+                        self.capped_observations += 1;
+                    }
+                    received += 1;
+                }
+                Ok(WorkerMsg::Failed { rank, reason, .. }) => {
+                    failure.get_or_insert(HfpmError::WorkerFailed { rank, reason });
+                    received += 1;
+                }
+                Err(_) => {
+                    failure.get_or_insert(HfpmError::Cluster(
+                        "timed out waiting for worker replies".into(),
+                    ));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        let members: Vec<usize> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_some())
+            .map(|(r, _)| r)
+            .collect();
+        let control = self.comm.subset_control_cost(0, &members);
+        let max_t = times.iter().cloned().fold(0.0f64, f64::max);
+        let cost = max_t + control;
+        self.clock.advance(cost);
+        self.total_dynamic_j += energies.iter().sum::<f64>();
+        self.last_energies = energies;
+        Ok(StepReport {
+            times,
+            virtual_cost_s: cost,
+        })
+    }
+
+    /// Run the 1D kernel with `d[rank]` units on every rank.
+    pub fn run_1d(&mut self, d: &[u64]) -> Result<StepReport> {
+        let tasks: Vec<Option<(Task, Option<f64>)>> = d
+            .iter()
+            .map(|&units| {
+                if units == 0 {
+                    None
+                } else {
+                    Some((Task::OneD { units }, None))
+                }
+            })
+            .collect();
+        self.run_step(&tasks)
+    }
+
+    /// Run the 2D kernel on an arbitrary subset (used per column).
+    pub fn run_2d_subset(
+        &mut self,
+        assignments: &[(usize, u64, u64)],
+        cap: Option<f64>,
+    ) -> Result<StepReport> {
+        let mut tasks: Vec<Option<(Task, Option<f64>)>> = vec![None; self.size()];
+        for &(rank, rows, width) in assignments {
+            if rows > 0 && width > 0 {
+                tasks[rank] = Some((Task::TwoD { rows, width }, cap));
+            }
+        }
+        self.run_step(&tasks)
+    }
+}
+
+impl Drop for LegacyCluster {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(LeaderMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Benchmarker for LegacyCluster {
+    fn processors(&self) -> usize {
+        self.size()
+    }
+
+    fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
+        self.run_1d(d)
+    }
+
+    fn last_energy_j(&self) -> Option<Vec<f64>> {
+        if self.metered {
+            Some(self.last_energies.clone())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::build_nodes;
+    use crate::cluster::presets;
+    use crate::fpm::analytic::Footprint;
+
+    fn mini_legacy() -> LegacyCluster {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        LegacyCluster::spawn(execs, CommModel::new(spec), FaultPlan::none())
+    }
+
+    #[test]
+    fn superstep_reports_all_ranks() {
+        let mut c = mini_legacy();
+        let r = c.run_1d(&[1000; 4]).unwrap();
+        assert_eq!(r.times.len(), 4);
+        assert!(r.times.iter().all(|&t| t > 0.0));
+        assert_eq!(c.steps_run, 1);
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_error() {
+        let mut spec = presets::mini4();
+        spec.noise_rel = 0.0;
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        let faults = FaultPlan::none().with_death(2, 1);
+        let mut c = LegacyCluster::spawn(execs, CommModel::new(spec), faults);
+        assert!(c.run_1d(&[100; 4]).is_ok());
+        let err = c.run_1d(&[100; 4]).unwrap_err();
+        match err {
+            HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 2),
+            other => panic!("unexpected error {other}"),
+        }
+    }
+
+    /// Regression (stale-reply mis-attribution): a reply that arrives
+    /// after its step already timed out used to be credited to the next
+    /// step's matching rank. With step-tagged replies the late answer is
+    /// dropped and the next step reports its own fresh measurement.
+    #[test]
+    fn late_reply_from_timed_out_step_is_dropped() {
+        /// Rank 1's executor: the first call wall-sleeps past the leader
+        /// timeout and reports a poisoned virtual time; later calls are
+        /// instant and report 1.0 s.
+        struct SlowOnce {
+            calls: usize,
+        }
+        impl NodeExecutor for SlowOnce {
+            fn execute(&mut self, _units: u64) -> Result<f64> {
+                self.calls += 1;
+                if self.calls == 1 {
+                    std::thread::sleep(Duration::from_millis(300));
+                    Ok(100.0)
+                } else {
+                    Ok(1.0)
+                }
+            }
+        }
+        struct Fast;
+        impl NodeExecutor for Fast {
+            fn execute(&mut self, _units: u64) -> Result<f64> {
+                Ok(0.5)
+            }
+        }
+        let spec = presets::mini4().without_host("p3").without_host("p4");
+        let execs: Vec<Box<dyn NodeExecutor>> =
+            vec![Box::new(Fast), Box::new(SlowOnce { calls: 0 })];
+        let mut c = LegacyCluster::spawn(execs, CommModel::new(spec), FaultPlan::none());
+        c.set_timeout(Duration::from_millis(50));
+
+        // step 0 times out (rank 1 is wall-slow); its reply arrives later
+        let err = c.run_1d(&[10, 10]).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        // let the stale Done{step: 0, time_s: 100.0} land in the channel
+        std::thread::sleep(Duration::from_millis(400));
+
+        // step 1 must report the fresh 1.0 s measurement, not the stale
+        // poisoned one — and must not leave its own replies queued
+        let r = c.run_1d(&[10, 10]).unwrap();
+        assert_eq!(r.times[1], 1.0, "stale reply credited to step 1");
+        assert_eq!(r.times[0], 0.5);
+        // a further step stays clean too (nothing left over in the queue)
+        let r = c.run_1d(&[10, 10]).unwrap();
+        assert_eq!(r.times[1], 1.0);
+    }
+}

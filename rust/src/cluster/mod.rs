@@ -16,9 +16,16 @@
 //!   time, zero wall cost), `Real` (runs the AOT-compiled XLA kernel via
 //!   PJRT and scales measured wall time by the node's heterogeneity
 //!   factor), or a custom callback;
-//! - [`virtual_cluster`] — the leader/worker runtime: one thread per node,
-//!   real message channels, virtual clock accounting; implements
-//!   [`crate::dfpa::Benchmarker`] and [`crate::dfpa2d::Benchmarker2d`];
+//! - [`engine`] — the frame-synchronized runtime: a fixed worker pool
+//!   drives every simulated node through per-frame barriers (one barrier
+//!   crossing per BSP superstep instead of two channel round-trips per
+//!   node), with the same virtual clock accounting; implements
+//!   [`crate::dfpa::Benchmarker`];
+//! - [`virtual_cluster`] — the `VirtualCluster` facade over the engine
+//!   (the API the apps program against) and the `VirtualCluster2d` grid
+//!   view implementing [`crate::dfpa2d::Benchmarker2d`];
+//! - [`legacy`] — the original thread-per-node `mpsc` runtime, kept for
+//!   the scaling bench and determinism parity tests;
 //! - [`energy`] — per-node power models ([`PowerProfile`]): the cluster
 //!   meters dynamic joules alongside virtual seconds, the second objective
 //!   of the bi-objective distributor (`crate::biobj`);
@@ -27,14 +34,18 @@
 
 pub mod comm;
 pub mod energy;
+pub mod engine;
 pub mod executor;
 pub mod faults;
+pub mod legacy;
 pub mod node;
 pub mod presets;
 pub mod virtual_cluster;
 
 pub use comm::{CommModel, Collective};
 pub use energy::PowerProfile;
+pub use engine::Engine;
 pub use executor::{ExecutionMode, KernelExecutor};
+pub use legacy::LegacyCluster;
 pub use node::SimNode;
 pub use virtual_cluster::{VirtualCluster, VirtualCluster2d};

@@ -72,6 +72,26 @@ pub fn hcl15() -> ClusterSpec {
     hcl().without_host("hcl07")
 }
 
+/// The 14 Grid5000-era node types: (ghz, bus, upc, l2 KiB, ram MiB).
+/// Shared by [`grid5000`] (2 copies each) and [`synth`] (cycled to any
+/// cluster size).
+const G5K_TYPES: [(f64, f64, f64, u64, u64); 14] = [
+    (2.2, 1000.0, 0.50, 1024, 4096),
+    (2.6, 1000.0, 0.50, 1024, 4096),
+    (2.0, 1000.0, 0.52, 2048, 8192),
+    (2.83, 1333.0, 0.55, 6144, 8192),
+    (2.5, 1333.0, 0.50, 6144, 4096),
+    (3.0, 800.0, 0.30, 2048, 2048),
+    (2.33, 1333.0, 0.50, 4096, 4096),
+    (1.6, 1000.0, 0.42, 1024, 2048),
+    (2.4, 1000.0, 0.50, 1024, 4096),
+    (2.93, 1333.0, 0.60, 8192, 8192),
+    (2.66, 1333.0, 0.52, 4096, 4096),
+    (1.86, 1066.0, 0.45, 4096, 2048),
+    (2.27, 1066.0, 0.48, 8192, 4096),
+    (2.83, 1333.0, 0.55, 6144, 4096),
+];
+
 /// A Grid5000-like platform: 28 nodes of 14 types spread over 8 French
 /// sites (the paper's §3.1 last experiment). Node types are modeled on the
 /// 2010-era Grid5000 fleet (Opteron/Xeon, 2–8 GiB RAM); heterogeneity of
@@ -80,24 +100,7 @@ pub fn hcl15() -> ClusterSpec {
 /// needs ≤ 3 iterations there.
 pub fn grid5000() -> ClusterSpec {
     let mut nodes = Vec::new();
-    // 14 types × 2 nodes; (ghz, bus, upc, l2 KiB, ram MiB), site round-robin
-    let types: [(f64, f64, f64, u64, u64); 14] = [
-        (2.2, 1000.0, 0.50, 1024, 4096),
-        (2.6, 1000.0, 0.50, 1024, 4096),
-        (2.0, 1000.0, 0.52, 2048, 8192),
-        (2.83, 1333.0, 0.55, 6144, 8192),
-        (2.5, 1333.0, 0.50, 6144, 4096),
-        (3.0, 800.0, 0.30, 2048, 2048),
-        (2.33, 1333.0, 0.50, 4096, 4096),
-        (1.6, 1000.0, 0.42, 1024, 2048),
-        (2.4, 1000.0, 0.50, 1024, 4096),
-        (2.93, 1333.0, 0.60, 8192, 8192),
-        (2.66, 1333.0, 0.52, 4096, 4096),
-        (1.86, 1066.0, 0.45, 4096, 2048),
-        (2.27, 1066.0, 0.48, 8192, 4096),
-        (2.83, 1333.0, 0.55, 6144, 4096),
-    ];
-    for (idx, &(ghz, bus, upc, l2, ram)) in types.iter().enumerate() {
+    for (idx, &(ghz, bus, upc, l2, ram)) in G5K_TYPES.iter().enumerate() {
         for copy in 0..2 {
             let host = format!("g5k{:02}-{copy}", idx + 1);
             nodes.push(
@@ -113,6 +116,36 @@ pub fn grid5000() -> ClusterSpec {
         inter_site: LinkModel::WAN,
         noise_rel: 0.005,
         seed: 0x6005,
+    }
+}
+
+/// A synthetic heterogeneous cluster of arbitrary size: `n` nodes cycling
+/// the Grid5000 type table over 8 sites. This is the scaling substrate for
+/// `bench_scale` (1000-node runs) and for `repro sweep` grids larger than
+/// the paper's physical testbeds; heterogeneity matches [`grid5000`].
+pub fn synth(n: usize) -> ClusterSpec {
+    let nodes = (0..n)
+        .map(|idx| {
+            let (ghz, bus, upc, l2, ram) = G5K_TYPES[idx % G5K_TYPES.len()];
+            MachineSpec::new(
+                &format!("syn{idx:04}"),
+                "grid5000",
+                ghz,
+                bus,
+                upc,
+                l2,
+                ram,
+            )
+            .with_site(idx % 8)
+        })
+        .collect();
+    ClusterSpec {
+        name: format!("synth{n}"),
+        nodes,
+        intra_site: LinkModel::GIGE,
+        inter_site: LinkModel::WAN,
+        noise_rel: 0.005,
+        seed: 0x5717,
     }
 }
 
@@ -136,8 +169,12 @@ pub fn mini4() -> ClusterSpec {
     }
 }
 
-/// Look a preset up by name (CLI / config use).
+/// Look a preset up by name (CLI / config use). `synth:<n>` builds a
+/// synthetic heterogeneous cluster of `n` nodes.
 pub fn by_name(name: &str) -> Option<ClusterSpec> {
+    if let Some(count) = name.strip_prefix("synth:") {
+        return count.parse::<usize>().ok().filter(|&n| n > 0).map(synth);
+    }
     match name {
         "hcl" => Some(hcl()),
         "hcl15" => Some(hcl15()),
@@ -247,5 +284,29 @@ mod tests {
         assert!(by_name("hcl").is_some());
         assert!(by_name("grid5000").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn synth_scales_and_stays_heterogeneous() {
+        let c = synth(100);
+        assert_eq!(c.size(), 100);
+        assert_eq!(c.name, "synth100");
+        let h = c.peak_heterogeneity();
+        assert!((2.0..=3.2).contains(&h), "heterogeneity {h}");
+        let sites: std::collections::BTreeSet<usize> =
+            c.nodes.iter().map(|n| n.site).collect();
+        assert_eq!(sites.len(), 8);
+        // all hosts distinct (model-store keys depend on it)
+        let hosts: std::collections::BTreeSet<&str> =
+            c.nodes.iter().map(|n| n.host.as_str()).collect();
+        assert_eq!(hosts.len(), 100);
+    }
+
+    #[test]
+    fn synth_by_name() {
+        let c = by_name("synth:12").unwrap();
+        assert_eq!(c.size(), 12);
+        assert!(by_name("synth:0").is_none());
+        assert!(by_name("synth:x").is_none());
     }
 }

@@ -1,390 +1,87 @@
-//! The leader/worker cluster runtime.
+//! The cluster runtime facade.
 //!
-//! One OS thread per simulated node, real `mpsc` message channels, and a
-//! **virtual clock** on the leader: workers *report* kernel durations
+//! `VirtualCluster` is the name the rest of the crate programs against; it
+//! is now a thin wrapper over the frame-synchronized
+//! [`Engine`](super::engine::Engine) (DESIGN.md §3.8). The original
+//! thread-per-node `mpsc` runtime lives on as
+//! [`LegacyCluster`](super::legacy::LegacyCluster) for the scaling bench
+//! and the determinism parity tests.
+//!
+//! The accounting contract is unchanged: workers *report* kernel durations
 //! (computed by their [`NodeExecutor`]), and the leader folds a parallel
 //! step into virtual time as `max_i(t_i) + collectives` — the BSP
 //! accounting described in DESIGN.md §2. The real wall cost of a simulated
 //! step is microseconds, which is what lets the benches regenerate every
 //! table of the paper in seconds.
 //!
-//! The same runtime drives *real* execution: give the workers
-//! PJRT-backed executors and the reported durations are measured wall
-//! times (scaled per node), while the protocol and accounting stay
-//! identical.
+//! The same runtime drives *real* execution: give it PJRT-backed executors
+//! and the reported durations are measured wall times (scaled per node),
+//! while the protocol and accounting stay identical.
 
 use super::comm::CommModel;
-use super::executor::{apply_time_cap, NodeExecutor};
+use super::engine::Engine;
+use super::executor::NodeExecutor;
 use super::faults::FaultPlan;
 use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::dfpa2d::nested::Benchmarker2d;
 use crate::error::{HfpmError, Result};
-use crate::util::timer::VirtualClock;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
-
-/// A task assignment for one step.
-#[derive(Debug, Clone, Copy)]
-enum Task {
-    OneD { units: u64 },
-    TwoD { rows: u64, width: u64 },
-}
-
-enum LeaderMsg {
-    Execute {
-        step: usize,
-        task: Task,
-        cap: Option<f64>,
-    },
-    Shutdown,
-}
-
-enum WorkerMsg {
-    Done {
-        rank: usize,
-        time_s: f64,
-        /// Dynamic joules the executor metered for this task (0 when the
-        /// executor does not meter energy).
-        energy_j: f64,
-        capped: bool,
-    },
-    Failed {
-        rank: usize,
-        reason: String,
-    },
-}
-
-struct WorkerHandle {
-    tx: Sender<LeaderMsg>,
-    join: Option<JoinHandle<()>>,
-}
+use std::ops::{Deref, DerefMut};
 
 /// The cluster runtime. Rank 0 is the leader-side root for collectives.
+///
+/// Derefs to [`Engine`], so every engine accessor (`run_1d`, `now`,
+/// `total_energy_j`, the `steps_run` / `capped_observations` counters, …)
+/// is available directly on a `VirtualCluster`.
 pub struct VirtualCluster {
-    comm: CommModel,
-    /// Host identity of each rank, captured from the executors before they
-    /// move to their worker threads — the stable key the model store files
-    /// partial FPMs under (see `modelstore::ModelKey`).
-    hosts: Vec<String>,
-    workers: Vec<WorkerHandle>,
-    reply_rx: Receiver<WorkerMsg>,
-    clock: VirtualClock,
-    step: usize,
-    /// Count of benchmark supersteps executed (diagnostics).
-    pub steps_run: usize,
-    /// Observations cut short by a time cap (paper optimization 4).
-    pub capped_observations: usize,
-    /// Per-rank dynamic joules of the most recent superstep.
-    last_energies: Vec<f64>,
-    /// Dynamic joules accumulated across all supersteps (plus explicit
-    /// [`VirtualCluster::charge_energy`] charges), the energy analogue of
-    /// the virtual clock.
-    total_dynamic_j: f64,
-    /// Whether any executor actually meters energy (all-zero static power
-    /// marks a fully unmetered cluster, e.g. stub executors).
-    metered: bool,
-    /// Sum of the nodes' static power draws, watts.
-    static_w: f64,
-    /// Reply timeout for hang protection.
-    timeout: Duration,
+    engine: Engine,
 }
 
 impl VirtualCluster {
-    /// Spawn one worker thread per executor.
+    /// Build a cluster over the given executors (one simulated node each).
     pub fn spawn(
         executors: Vec<Box<dyn NodeExecutor>>,
         comm: CommModel,
         faults: FaultPlan,
     ) -> Self {
-        let (reply_tx, reply_rx) = channel::<WorkerMsg>();
-        let faults = Arc::new(faults);
-        let hosts: Vec<String> = executors.iter().map(|e| e.host().to_string()).collect();
-        let static_w: f64 = executors.iter().map(|e| e.static_power_w()).sum();
-        // probe once before the executors move to their threads: a cluster
-        // where no executor meters energy reports None instead of zeros
-        let metered = executors
-            .iter()
-            .any(|e| e.static_power_w() > 0.0 || e.dynamic_energy_j(1 << 20, 1.0) > 0.0);
-        let size = executors.len();
-        let workers = executors
-            .into_iter()
-            .enumerate()
-            .map(|(rank, mut exec)| {
-                let (tx, rx) = channel::<LeaderMsg>();
-                let reply = reply_tx.clone();
-                let plan = Arc::clone(&faults);
-                let join = std::thread::Builder::new()
-                    .name(format!("worker-{rank}"))
-                    .spawn(move || {
-                        while let Ok(msg) = rx.recv() {
-                            match msg {
-                                LeaderMsg::Shutdown => break,
-                                LeaderMsg::Execute { step, task, cap } => {
-                                    if plan.dies(rank, step) {
-                                        let _ = reply.send(WorkerMsg::Failed {
-                                            rank,
-                                            reason: format!("injected death at step {step}"),
-                                        });
-                                        // a dead worker stops serving
-                                        break;
-                                    }
-                                    let result = match task {
-                                        Task::OneD { units } => exec.execute(units),
-                                        Task::TwoD { rows, width } => {
-                                            exec.execute_2d(rows, width)
-                                        }
-                                    };
-                                    match result {
-                                        Ok(t) => {
-                                            let t = t * plan.slowdown(rank, step);
-                                            let (t, capped) = apply_time_cap(t, cap);
-                                            // joules follow the *reported*
-                                            // duration: a straggler burns
-                                            // power for as long as it runs
-                                            let units = match task {
-                                                Task::OneD { units } => units,
-                                                Task::TwoD { rows, width } => {
-                                                    rows.saturating_mul(width)
-                                                }
-                                            };
-                                            let energy_j =
-                                                exec.dynamic_energy_j(units, t);
-                                            let _ = reply.send(WorkerMsg::Done {
-                                                rank,
-                                                time_s: t,
-                                                energy_j,
-                                                capped,
-                                            });
-                                        }
-                                        Err(e) => {
-                                            let _ = reply.send(WorkerMsg::Failed {
-                                                rank,
-                                                reason: e.to_string(),
-                                            });
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    })
-                    .expect("spawn worker thread");
-                WorkerHandle {
-                    tx,
-                    join: Some(join),
-                }
-            })
-            .collect();
         Self {
-            comm,
-            hosts,
-            workers,
-            reply_rx,
-            clock: VirtualClock::new(),
-            step: 0,
-            steps_run: 0,
-            capped_observations: 0,
-            last_energies: vec![0.0; size],
-            total_dynamic_j: 0.0,
-            metered,
-            static_w,
-            timeout: Duration::from_secs(120),
-        }
-    }
-
-    pub fn size(&self) -> usize {
-        self.workers.len()
-    }
-
-    pub fn comm(&self) -> &CommModel {
-        &self.comm
-    }
-
-    /// Host identity per rank (model-store keys, diagnostics).
-    pub fn hosts(&self) -> &[String] {
-        &self.hosts
-    }
-
-    /// Virtual time elapsed so far.
-    pub fn now(&self) -> f64 {
-        self.clock.now()
-    }
-
-    /// Charge an explicit virtual cost (e.g. application data distribution).
-    pub fn charge(&mut self, seconds: f64) {
-        self.clock.advance(seconds);
-    }
-
-    /// Charge explicit dynamic joules (the energy analogue of
-    /// [`VirtualCluster::charge`]; used when an app scales a probed step
-    /// to a whole phase).
-    pub fn charge_energy(&mut self, joules: f64) {
-        self.total_dynamic_j += joules.max(0.0);
-    }
-
-    /// Does any executor meter energy?
-    pub fn meters_energy(&self) -> bool {
-        self.metered
-    }
-
-    /// Per-rank dynamic joules of the most recent superstep.
-    pub fn last_step_energies(&self) -> &[f64] {
-        &self.last_energies
-    }
-
-    /// Dynamic joules accumulated so far (supersteps + explicit charges).
-    pub fn total_dynamic_j(&self) -> f64 {
-        self.total_dynamic_j
-    }
-
-    /// Sum of the nodes' static power draws, watts.
-    pub fn static_power_w(&self) -> f64 {
-        self.static_w
-    }
-
-    /// Total energy so far: accumulated dynamic joules plus the cluster's
-    /// static draw over the elapsed virtual time.
-    pub fn total_energy_j(&self) -> f64 {
-        self.total_dynamic_j + self.static_w * self.now()
-    }
-
-    /// Execute one superstep: `tasks[rank] = None` sits the rank out.
-    /// Returns per-rank times (0.0 for non-participants) and the step's
-    /// virtual cost (max duration + control collectives over participants).
-    fn run_step(&mut self, tasks: &[Option<(Task, Option<f64>)>]) -> Result<StepReport> {
-        assert_eq!(tasks.len(), self.size());
-        let step = self.step;
-        self.step += 1;
-        self.steps_run += 1;
-
-        let mut expected = 0usize;
-        for (rank, t) in tasks.iter().enumerate() {
-            if let Some((task, cap)) = t {
-                self.workers[rank]
-                    .tx
-                    .send(LeaderMsg::Execute {
-                        step,
-                        task: *task,
-                        cap: *cap,
-                    })
-                    .map_err(|_| HfpmError::WorkerFailed {
-                        rank,
-                        reason: "channel closed (worker dead)".into(),
-                    })?;
-                expected += 1;
-            }
-        }
-
-        let mut times = vec![0.0f64; self.size()];
-        let mut energies = vec![0.0f64; self.size()];
-        let mut failure: Option<HfpmError> = None;
-        for _ in 0..expected {
-            match self.reply_rx.recv_timeout(self.timeout) {
-                Ok(WorkerMsg::Done {
-                    rank,
-                    time_s,
-                    energy_j,
-                    capped,
-                }) => {
-                    times[rank] = time_s;
-                    energies[rank] = energy_j;
-                    if capped {
-                        self.capped_observations += 1;
-                    }
-                }
-                Ok(WorkerMsg::Failed { rank, reason }) => {
-                    failure.get_or_insert(HfpmError::WorkerFailed { rank, reason });
-                }
-                Err(_) => {
-                    failure.get_or_insert(HfpmError::Cluster(
-                        "timed out waiting for worker replies".into(),
-                    ));
-                    break;
-                }
-            }
-        }
-        if let Some(e) = failure {
-            return Err(e);
-        }
-
-        let members: Vec<usize> = tasks
-            .iter()
-            .enumerate()
-            .filter(|(_, t)| t.is_some())
-            .map(|(r, _)| r)
-            .collect();
-        let control = self.comm.subset_control_cost(0, &members);
-        let max_t = times.iter().cloned().fold(0.0f64, f64::max);
-        let cost = max_t + control;
-        self.clock.advance(cost);
-        self.total_dynamic_j += energies.iter().sum::<f64>();
-        self.last_energies = energies;
-        Ok(StepReport {
-            times,
-            virtual_cost_s: cost,
-        })
-    }
-
-    /// Run the 1D kernel with `d[rank]` units on every rank.
-    pub fn run_1d(&mut self, d: &[u64]) -> Result<StepReport> {
-        let tasks: Vec<Option<(Task, Option<f64>)>> = d
-            .iter()
-            .map(|&units| {
-                if units == 0 {
-                    None
-                } else {
-                    Some((Task::OneD { units }, None))
-                }
-            })
-            .collect();
-        self.run_step(&tasks)
-    }
-
-    /// Run the 2D kernel on an arbitrary subset (used per column).
-    pub fn run_2d_subset(
-        &mut self,
-        assignments: &[(usize, u64, u64)], // (rank, rows, width)
-        cap: Option<f64>,
-    ) -> Result<StepReport> {
-        let mut tasks: Vec<Option<(Task, Option<f64>)>> = vec![None; self.size()];
-        for &(rank, rows, width) in assignments {
-            if rows > 0 && width > 0 {
-                tasks[rank] = Some((Task::TwoD { rows, width }, cap));
-            }
-        }
-        self.run_step(&tasks)
-    }
-}
-
-impl Drop for VirtualCluster {
-    fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(LeaderMsg::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
+            engine: Engine::spawn(executors, comm, faults),
         }
     }
 }
 
+impl Deref for VirtualCluster {
+    type Target = Engine;
+    fn deref(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl DerefMut for VirtualCluster {
+    fn deref_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}
+
+impl From<Engine> for VirtualCluster {
+    fn from(engine: Engine) -> Self {
+        Self { engine }
+    }
+}
+
+// Deref does not forward trait impls, so the Benchmarker surface is
+// restated here for callers that pass `&mut VirtualCluster` as a
+// `&mut dyn Benchmarker`.
 impl Benchmarker for VirtualCluster {
     fn processors(&self) -> usize {
-        self.size()
+        self.engine.processors()
     }
 
     fn run_parallel(&mut self, d: &[u64]) -> Result<StepReport> {
-        self.run_1d(d)
+        self.engine.run_parallel(d)
     }
 
     fn last_energy_j(&self) -> Option<Vec<f64>> {
-        if self.metered {
-            Some(self.last_energies.clone())
-        } else {
-            None
-        }
+        self.engine.last_energy_j()
     }
 }
 
@@ -611,5 +308,33 @@ mod tests {
     fn grid_size_mismatch_rejected() {
         let c = mini_cluster(0.0);
         assert!(VirtualCluster2d::new(c, 3, 2).is_err());
+    }
+
+    #[test]
+    fn facade_derefs_to_engine() {
+        let mut c = mini_cluster(0.0);
+        assert_eq!(c.size(), 4);
+        assert_eq!(c.steps_run, 0);
+        c.run_1d(&[100; 4]).unwrap();
+        assert_eq!(c.steps_run, 1);
+        assert!(c.worker_threads() >= 1);
+        // an engine converts back into the facade for 2d-view composition
+        let e = Engine::spawn(
+            (0..4)
+                .map(|_| {
+                    struct One;
+                    impl NodeExecutor for One {
+                        fn execute(&mut self, _u: u64) -> Result<f64> {
+                            Ok(1.0)
+                        }
+                    }
+                    Box::new(One) as Box<dyn NodeExecutor>
+                })
+                .collect(),
+            CommModel::new(presets::mini4()),
+            FaultPlan::none(),
+        );
+        let g = VirtualCluster2d::new(e.into(), 2, 2).unwrap();
+        assert_eq!(g.grid(), (2, 2));
     }
 }

@@ -13,6 +13,8 @@
 //! repro trace  --cluster hcl15 --n 5120 [--eps 0.025] [--out f.csv]
 //!              per-iteration DFPA trace (Figs 2/6)
 //! repro cluster --name hcl                    print a preset's node table
+//! repro sweep  --n 1024 --strategies dfpa,even --clusters mini4,synth:64
+//!              --faults none,straggler:0x3@0  scenario grid, one row per cell
 //! ```
 
 use hfpm::adapt::{registry, AdaptiveSession, Strategy};
@@ -51,19 +53,23 @@ fn parse_strategy(s: &str) -> Result<Strategy> {
     })
 }
 
-fn cluster_arg(args: &Args, default: &str) -> Result<ClusterSpec> {
-    let name = args.get_or_checked("cluster", default)?;
-    if let Some(spec) = presets::by_name(&name) {
+fn resolve_cluster(name: &str) -> Result<ClusterSpec> {
+    if let Some(spec) = presets::by_name(name) {
         return Ok(spec);
     }
     // not a preset: try as a config file path
-    let path = std::path::Path::new(&name);
+    let path = std::path::Path::new(name);
     if path.exists() {
         return ClusterSpec::load(path);
     }
     Err(HfpmError::InvalidArg(format!(
-        "unknown cluster `{name}` (presets: hcl, hcl15, grid5000, mini4, or a .toml path)"
+        "unknown cluster `{name}` (presets: hcl, hcl15, grid5000, mini4, \
+         synth:<n>, or a .toml path)"
     )))
+}
+
+fn cluster_arg(args: &Args, default: &str) -> Result<ClusterSpec> {
+    resolve_cluster(&args.get_or_checked("cluster", default)?)
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -80,6 +86,7 @@ fn run(args: &Args) -> Result<()> {
         "lu" => cmd_lu(args),
         "verify" => cmd_verify(args),
         "trace" => cmd_trace(args),
+        "sweep" => cmd_sweep(args),
         other => Err(HfpmError::InvalidArg(format!(
             "unknown command `{other}` — try `repro help`"
         ))),
@@ -113,6 +120,13 @@ COMMANDS:
             every panel step (speed functions queried at sliding sizes)
   verify    real PJRT e2e + correctness --n 512 [--cluster mini4] [--eps 0.1]
   trace     DFPA iteration trace        --cluster hcl15 --n 5120 [--out f.csv]
+  sweep     scenario grid               --n 1024 [--eps 0.05]
+            [--strategies dfpa,even] [--clusters mini4,synth:64]
+            [--faults none,straggler:0x3@0,death:1@2] [--jobs K] [--out f.csv]
+            runs every strategy × cluster × fault cell concurrently (each on
+            its own engine) and emits one consolidated table; fault grammar:
+            none | death:<rank>@<step> | straggler:<rank>x<factor>@<step>,
+            events joined with '+'
 ";
 
 fn cmd_info() -> Result<()> {
@@ -129,7 +143,7 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("artifacts: NOT BUILT ({e}) — run `make artifacts`"),
     }
     println!("pjrt: {}", hfpm::runtime::pjrt_status());
-    println!("presets: hcl (16 nodes), hcl15, grid5000 (28 nodes), mini4");
+    println!("presets: hcl (16 nodes), hcl15, grid5000 (28 nodes), mini4, synth:<n>");
     println!("strategies:");
     for e in registry::entries() {
         let dims = match (e.supports_1d(), e.supports_2d()) {
@@ -440,6 +454,36 @@ fn cmd_trace(args: &Args) -> Result<()> {
         spec.name, r.benchmark_steps, r.imbalance, r.converged
     );
     println!("trace written to {out}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let n = args.get_u64("n", 1024)?;
+    let mut grid = hfpm::adapt::ScenarioGrid::new(n);
+    grid.epsilon = args.get_f64("eps", 0.05)?;
+    grid.jobs = args.get_u64("jobs", 0)? as usize;
+    for s in args.get_or_checked("strategies", "dfpa,even")?.split(',') {
+        grid.strategies.push(parse_strategy(s.trim())?);
+    }
+    for name in args.get_or_checked("clusters", "mini4")?.split(',') {
+        grid.clusters.push(resolve_cluster(name.trim())?);
+    }
+    for f in args.get_or_checked("faults", "none")?.split(',') {
+        let f = f.trim();
+        grid.faults
+            .push((f.to_string(), hfpm::cluster::faults::FaultPlan::parse(f)?));
+    }
+    println!(
+        "sweep: {} strategies × {} clusters × {} fault plans = {} cells (n = {n})",
+        grid.strategies.len(),
+        grid.clusters.len(),
+        grid.faults.len(),
+        grid.cells()
+    );
+    let report = grid.run()?;
+    let out = args.get_checked("out")?.map(std::path::PathBuf::from);
+    report.table().emit(out.as_deref());
+    println!("{} of {} cells ok", report.ok_rows(), report.rows.len());
     Ok(())
 }
 

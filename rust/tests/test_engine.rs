@@ -1,0 +1,146 @@
+//! Integration tests: the frame-synchronized engine against the legacy
+//! thread-per-node runtime — accounting parity, fault surfacing, and
+//! fault visibility in the adaptive layer above it.
+
+use hfpm::cluster::comm::CommModel;
+use hfpm::cluster::executor::NodeExecutor;
+use hfpm::cluster::faults::FaultPlan;
+use hfpm::cluster::node::build_nodes;
+use hfpm::cluster::presets;
+use hfpm::cluster::{Engine, LegacyCluster};
+use hfpm::dfpa::{run_dfpa, DfpaOptions, DfpaResult};
+use hfpm::error::HfpmError;
+use hfpm::fpm::analytic::Footprint;
+
+fn executors(preset: &str) -> (Vec<Box<dyn NodeExecutor>>, CommModel) {
+    let spec = presets::by_name(preset).unwrap();
+    let nodes = build_nodes(&spec, Footprint::matmul_1d(2048), 32);
+    let execs = nodes
+        .into_iter()
+        .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+        .collect();
+    (execs, CommModel::new(spec))
+}
+
+/// The acceptance bar for the refactor: for a fixed seed the engine and the
+/// legacy runtime produce the same virtual times, step by step.
+#[test]
+fn engine_matches_legacy_virtual_times() {
+    let (execs, comm) = executors("mini4");
+    let mut engine = Engine::spawn(execs, comm, FaultPlan::none());
+    let (execs, comm) = executors("mini4");
+    let mut legacy = LegacyCluster::spawn(execs, comm, FaultPlan::none());
+
+    let steps: Vec<Vec<u64>> = vec![
+        vec![10_000, 20_000, 30_000, 40_000],
+        vec![40_000, 30_000, 20_000, 10_000],
+        vec![25_000, 25_000, 25_000, 25_000],
+        vec![1, 0, 100_000, 7],
+    ];
+    for d in &steps {
+        let e = engine.run_1d(d).unwrap();
+        let l = legacy.run_1d(d).unwrap();
+        assert_eq!(e.times, l.times, "per-rank times diverge on step {d:?}");
+        assert_eq!(
+            e.virtual_cost_s, l.virtual_cost_s,
+            "fold diverges on step {d:?}"
+        );
+    }
+    assert_eq!(engine.now(), legacy.now(), "virtual clocks diverge");
+    assert_eq!(
+        engine.total_energy_j(),
+        legacy.total_energy_j(),
+        "energy accounting diverges"
+    );
+}
+
+#[test]
+fn engine_parity_holds_with_stragglers() {
+    let plan = FaultPlan::none().with_straggler(2, 3.0, 1);
+    let (execs, comm) = executors("mini4");
+    let mut engine = Engine::spawn(execs, comm, plan.clone());
+    let (execs, comm) = executors("mini4");
+    let mut legacy = LegacyCluster::spawn(execs, comm, plan);
+    for _ in 0..5 {
+        let d = [50_000u64; 4];
+        let e = engine.run_1d(&d).unwrap();
+        let l = legacy.run_1d(&d).unwrap();
+        assert_eq!(e.times, l.times);
+    }
+    assert_eq!(engine.now(), legacy.now());
+}
+
+/// A worker death surfaces as `WorkerFailed` on the step it happens —
+/// the frame barrier must complete, not hang.
+#[test]
+fn engine_death_surfaces_without_hanging() {
+    let (execs, comm) = executors("mini4");
+    let mut engine = Engine::spawn(execs, comm, FaultPlan::none().with_death(2, 1));
+    engine.run_1d(&[10_000; 4]).unwrap();
+    let err = engine.run_1d(&[10_000; 4]).unwrap_err();
+    match err {
+        HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 2),
+        other => panic!("expected WorkerFailed, got {other}"),
+    }
+    // the engine stays usable for the surviving ranks' accounting: the dead
+    // rank keeps failing, it does not wedge the frame protocol
+    assert!(engine.run_1d(&[10_000; 4]).is_err());
+}
+
+/// A straggler injected at the engine layer must be *visible* to the
+/// adaptive layer above: DFPA's learned speed function for the slowed rank
+/// drops, and so does its share of the work.
+#[test]
+fn straggler_shows_in_learned_speed_functions() {
+    let run = |plan: FaultPlan| {
+        let (execs, comm) = executors("mini4");
+        let mut engine = Engine::spawn(execs, comm, plan);
+        run_dfpa(4096, &mut engine, DfpaOptions::with_epsilon(0.05)).unwrap()
+    };
+    let healthy = run(FaultPlan::none());
+    let slowed = run(FaultPlan::none().with_straggler(1, 4.0, 0));
+
+    let mean_speed = |r: &DfpaResult, rank: usize| {
+        let pts = r.models[rank].points();
+        pts.iter().map(|p| p.s).sum::<f64>() / pts.len() as f64
+    };
+    assert!(
+        mean_speed(&slowed, 1) < 0.5 * mean_speed(&healthy, 1),
+        "4x straggler barely dented the learned speed: {} vs {}",
+        mean_speed(&slowed, 1),
+        mean_speed(&healthy, 1)
+    );
+    assert!(
+        slowed.d[1] < healthy.d[1],
+        "straggler kept its share: {} !< {}",
+        slowed.d[1],
+        healthy.d[1]
+    );
+}
+
+/// Same comparison at a size the legacy runtime was never asked to reach:
+/// a synthetic 64-node cluster, both runtimes, identical books.
+#[test]
+fn parity_on_synthetic_64_nodes() {
+    let build = || {
+        let spec = presets::synth(64);
+        let nodes = build_nodes(&spec, Footprint::affine(16.0, 0.0), 32);
+        let execs: Vec<Box<dyn NodeExecutor>> = nodes
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn NodeExecutor>)
+            .collect();
+        (execs, CommModel::new(spec))
+    };
+    let d: Vec<u64> = (0..64).map(|i| 10_000 + 1_000 * (i % 5)).collect();
+    let (execs, comm) = build();
+    let mut engine = Engine::spawn(execs, comm, FaultPlan::none());
+    let (execs, comm) = build();
+    let mut legacy = LegacyCluster::spawn(execs, comm, FaultPlan::none());
+    for _ in 0..3 {
+        let e = engine.run_1d(&d).unwrap();
+        let l = legacy.run_1d(&d).unwrap();
+        assert_eq!(e.times, l.times);
+    }
+    assert_eq!(engine.now(), legacy.now());
+    assert!(engine.worker_threads() <= 64);
+}
