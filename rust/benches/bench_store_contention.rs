@@ -1,0 +1,238 @@
+//! Concurrent model-store contention: the single-writer service against
+//! N sessions racing the advisory lock directly.
+//!
+//! Every point runs K concurrent sessions, each recording `RUNS`
+//! observation batches for its own key, twice:
+//!
+//! - **direct** — each session opens its own `ModelStore` on the shared
+//!   directory. Only one wins the advisory `.hfpm.lock`; every other
+//!   session's saves are warn-and-skipped (counted in `dropped_saves`) and
+//!   its observations never reach disk.
+//! - **service** — all sessions share one [`StoreService`] handle and
+//!   submit batches to its writer thread. The bounded channel blocks
+//!   instead of dropping; `dropped_saves` must be **zero** at every K (the
+//!   zero-drop guarantee — hard-asserted, not strict-gated).
+//!
+//! Throughput (observation batches per second) and the drop counts land in
+//! `BENCH_store.json`.
+//!
+//! Env knobs:
+//! - `BENCH_STORE_SESSIONS="1,8"` — override the session counts (CI smoke);
+//! - `BENCH_STORE_RUNS=32` — batches per session;
+//! - `BENCH_STORE_OUT=path.json` — where to write the results
+//!   (default `BENCH_store.json` in the cargo cwd, i.e. `rust/`).
+
+use hfpm::modelstore::{
+    Family, MergePolicy, ModelKey, ModelStore, ObsBatch, StoreService, StoreServiceConfig,
+};
+use hfpm::fpm::PiecewiseModel;
+use hfpm::testkit::unique_temp_dir;
+use hfpm::util::table::{fnum, Table};
+use hfpm::util::timer::Stopwatch;
+use std::sync::Barrier;
+
+fn key_for(session: usize) -> ModelKey {
+    ModelKey::new(&format!("node{session:03}"), "bench_contention", "sim")
+}
+
+/// One session's observed partial model for run `r`: a couple of points at
+/// sizes distinct per run so merges insert rather than blend.
+fn observation(session: usize, r: usize) -> PiecewiseModel {
+    let mut m = PiecewiseModel::new();
+    let base = 100.0 + r as f64 * 64.0;
+    m.insert(base, 5.0 + session as f64);
+    m.insert(base + 32.0, 6.0 + session as f64);
+    m
+}
+
+struct Point {
+    sessions: usize,
+    runs: usize,
+    direct_wall_s: f64,
+    direct_obs_per_s: f64,
+    direct_dropped: u64,
+    direct_persisted: usize,
+    service_wall_s: f64,
+    service_obs_per_s: f64,
+    service_dropped: u64,
+    service_persisted: usize,
+}
+
+/// K sessions, each its own `ModelStore` on one directory: the legacy
+/// pattern the service replaces. Returns (wall, dropped saves, keys on disk).
+fn run_direct(k: usize, runs: usize) -> (f64, u64, usize) {
+    let dir = unique_temp_dir("bench-store-direct");
+    let barrier = Barrier::new(k);
+    let sw = Stopwatch::start();
+    let dropped: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..k)
+            .map(|s| {
+                let dir = dir.clone();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let store = ModelStore::open(&dir).expect("open store").quiet(true);
+                    let key = key_for(s);
+                    barrier.wait();
+                    for r in 0..runs {
+                        store
+                            .record_run(
+                                std::slice::from_ref(&key),
+                                &[observation(s, r)],
+                                &MergePolicy::default(),
+                            )
+                            .expect("record_run");
+                    }
+                    store.stats().dropped_saves
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session")).sum()
+    });
+    let wall = sw.elapsed_s();
+    let persisted = ModelStore::open(&dir)
+        .expect("reopen")
+        .entries()
+        .expect("entries")
+        .len();
+    let _ = std::fs::remove_dir_all(&dir);
+    (wall, dropped, persisted)
+}
+
+/// K sessions sharing one service handle. Returns (wall, dropped saves,
+/// keys on disk); wall includes the final flush, so everything is durable.
+fn run_service(k: usize, runs: usize) -> (f64, u64, usize) {
+    let dir = unique_temp_dir("bench-store-service");
+    let handle = StoreService::open_with(
+        &dir,
+        StoreServiceConfig {
+            quiet: true,
+            ..Default::default()
+        },
+    )
+    .expect("open service");
+    let barrier = Barrier::new(k);
+    let sw = Stopwatch::start();
+    std::thread::scope(|scope| {
+        for s in 0..k {
+            let handle = handle.clone();
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let key = key_for(s);
+                barrier.wait();
+                for r in 0..runs {
+                    let mut b = ObsBatch::new();
+                    b.insert(key.clone(), Family::Speed, observation(s, r));
+                    handle.submit(b).expect("submit");
+                }
+            });
+        }
+    });
+    let stats = handle.flush().expect("flush");
+    let wall = sw.elapsed_s();
+    assert_eq!(
+        stats.dropped_saves, 0,
+        "zero-drop guarantee violated at {k} sessions: {stats:?}"
+    );
+    assert_eq!(
+        stats.merged_batches,
+        (k * runs) as u64,
+        "every submitted batch must merge"
+    );
+    drop(handle);
+    let persisted = ModelStore::open(&dir)
+        .expect("reopen")
+        .entries()
+        .expect("entries")
+        .len();
+    let _ = std::fs::remove_dir_all(&dir);
+    (wall, stats.dropped_saves, persisted)
+}
+
+fn run_point(k: usize, runs: usize) -> Point {
+    let obs = (k * runs) as f64;
+    let (direct_wall_s, direct_dropped, direct_persisted) = run_direct(k, runs);
+    let (service_wall_s, service_dropped, service_persisted) = run_service(k, runs);
+    // the service must persist every session's key; the direct path
+    // persists only the lock holder's
+    assert_eq!(service_persisted, k, "one model per session on disk");
+    Point {
+        sessions: k,
+        runs,
+        direct_wall_s,
+        direct_obs_per_s: obs / direct_wall_s.max(f64::MIN_POSITIVE),
+        direct_dropped,
+        direct_persisted,
+        service_wall_s,
+        service_obs_per_s: obs / service_wall_s.max(f64::MIN_POSITIVE),
+        service_dropped,
+        service_persisted,
+    }
+}
+
+fn json(points: &[Point]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"bench_store_contention\",\n  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"sessions\": {}, \"runs\": {}, \
+             \"direct_obs_per_s\": {:.1}, \"direct_dropped\": {}, \"direct_persisted\": {}, \
+             \"service_obs_per_s\": {:.1}, \"service_dropped\": {}, \"service_persisted\": {}}}{}\n",
+            p.sessions,
+            p.runs,
+            p.direct_obs_per_s,
+            p.direct_dropped,
+            p.direct_persisted,
+            p.service_obs_per_s,
+            p.service_dropped,
+            p.service_persisted,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let counts: Vec<usize> = match std::env::var("BENCH_STORE_SESSIONS") {
+        Ok(v) => v
+            .split(',')
+            .map(|s| s.trim().parse().expect("BENCH_STORE_SESSIONS: bad count"))
+            .collect(),
+        Err(_) => vec![1, 4, 16, 64],
+    };
+    let runs: usize = std::env::var("BENCH_STORE_RUNS")
+        .ok()
+        .map(|v| v.parse().expect("BENCH_STORE_RUNS: bad count"))
+        .unwrap_or(32);
+
+    let mut t = Table::new(
+        &format!("model-store contention ({runs} batches per session)"),
+        &[
+            "sessions", "direct obs/s", "dropped", "persisted", "service obs/s", "dropped",
+            "persisted",
+        ],
+    );
+    let mut points = Vec::new();
+    for &k in &counts {
+        let p = run_point(k, runs);
+        t.add_row(vec![
+            p.sessions.to_string(),
+            fnum(p.direct_obs_per_s, 0),
+            p.direct_dropped.to_string(),
+            p.direct_persisted.to_string(),
+            fnum(p.service_obs_per_s, 0),
+            p.service_dropped.to_string(),
+            p.service_persisted.to_string(),
+        ]);
+        points.push(p);
+    }
+    print!("{}", t.render());
+    println!(
+        "wall: direct {:?}, service {:?}",
+        points.iter().map(|p| p.direct_wall_s).collect::<Vec<_>>(),
+        points.iter().map(|p| p.service_wall_s).collect::<Vec<_>>()
+    );
+
+    let out = std::env::var("BENCH_STORE_OUT").unwrap_or_else(|_| "BENCH_store.json".into());
+    std::fs::write(&out, json(&points)).expect("write BENCH_store.json");
+    println!("json: {out}");
+}

@@ -306,6 +306,7 @@ impl Distributor for Dfpa {
             executes_workload: false,
             energy_j: 0.0,
             pareto: None,
+            store_stats: None,
         })
     }
 }
@@ -526,6 +527,7 @@ impl Distributor2d for Dfpa2d {
             executes_workload: false,
             energy_j: 0.0,
             pareto: None,
+            store_stats: None,
         })
     }
 }

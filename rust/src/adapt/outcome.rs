@@ -11,6 +11,7 @@ use crate::biobj::ParetoSummary;
 use crate::dfpa::trace::IterationRecord;
 use crate::error::{HfpmError, Result};
 use crate::fpm::PiecewiseModel;
+use crate::modelstore::StoreStats;
 
 /// The distribution a strategy produced, in the dimensionality it runs in.
 #[derive(Debug, Clone, PartialEq)]
@@ -125,6 +126,12 @@ pub struct Outcome {
     /// The time/energy Pareto front the bi-objective strategy learned,
     /// with its selected point. `None` for single-objective strategies.
     pub pareto: Option<ParetoSummary>,
+    /// Model-store health counters sampled when the session flushed this
+    /// run's observations (`None` when no store was configured). Surfaces
+    /// dropped/deferred saves instead of burying them in warn output; on
+    /// the service backend the sample is point-in-time (merges are
+    /// asynchronous — `StoreServiceHandle::flush` gives the settled view).
+    pub store_stats: Option<StoreStats>,
 }
 
 impl Outcome {
@@ -148,6 +155,7 @@ impl Outcome {
             executes_workload: false,
             energy_j: 0.0,
             pareto: None,
+            store_stats: None,
         }
     }
 }

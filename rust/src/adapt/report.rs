@@ -14,6 +14,7 @@ use crate::biobj::ParetoSummary;
 use crate::cluster::engine::Engine;
 use crate::error::Result;
 use crate::fpm::PiecewiseModel;
+use crate::modelstore::StoreStats;
 use crate::util::stats::max_relative_imbalance;
 
 /// Timing breakdown of one application run. All times are virtual seconds
@@ -61,6 +62,11 @@ pub struct WorkloadReport {
     /// The time/energy Pareto front of the last partitioning round, for
     /// bi-objective runs.
     pub pareto: Option<ParetoSummary>,
+    /// Model-store health counters from the last round that flushed
+    /// observations (`None` without a configured store): batches merged,
+    /// saves dropped/deferred under lock contention, corrupt files
+    /// degraded. Printed by the CLI so dropped observations are visible.
+    pub store_stats: Option<StoreStats>,
 }
 
 /// The per-round partition bookkeeping every iterative workload repeats:
@@ -90,6 +96,9 @@ pub struct PartitionRounds {
     pub energy_carry: Vec<PiecewiseModel>,
     /// The latest round's Pareto front, if any round produced one.
     pub pareto: Option<ParetoSummary>,
+    /// The latest round's store counters (cumulative on the backend, so
+    /// the latest sample covers every earlier round's flush too).
+    pub store_stats: Option<StoreStats>,
 }
 
 impl PartitionRounds {
@@ -106,6 +115,7 @@ impl PartitionRounds {
             carry: vec![PiecewiseModel::new(); p],
             energy_carry: vec![PiecewiseModel::new(); p],
             pareto: None,
+            store_stats: None,
         }
     }
 
@@ -145,6 +155,10 @@ impl PartitionRounds {
         if outcome.pareto.is_some() {
             // the latest front reflects the most refined models
             self.pareto = outcome.pareto.clone();
+        }
+        if outcome.store_stats.is_some() {
+            // counters are cumulative — the latest sample supersedes
+            self.store_stats = outcome.store_stats;
         }
         if let Observations::OneD(obs) = &outcome.observations {
             for (c, o) in self.carry.iter_mut().zip(obs) {

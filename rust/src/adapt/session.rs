@@ -15,7 +15,9 @@ use crate::dfpa::trace::IterationRecord;
 use crate::dfpa2d::nested::{Benchmarker2d, WarmStart2d};
 use crate::error::{HfpmError, Result};
 use crate::fpm::PiecewiseModel;
-use crate::modelstore::{MergePolicy, ModelKey, ModelStore};
+use crate::modelstore::{
+    Family, MergePolicy, ModelKey, ModelStore, ObsBatch, StoreServiceHandle, StoreStats,
+};
 use std::path::PathBuf;
 
 /// Builder-style owner of a run's cross-cutting configuration. Construct
@@ -26,6 +28,7 @@ pub struct AdaptiveSession {
     epsilon: f64,
     max_iters: usize,
     store_dir: Option<PathBuf>,
+    service: Option<StoreServiceHandle>,
     merge_policy: MergePolicy,
     faults: FaultPlan,
     trace_sink: Option<PathBuf>,
@@ -37,9 +40,47 @@ impl Default for AdaptiveSession {
             epsilon: 0.025,
             max_iters: 100,
             store_dir: None,
+            service: None,
             merge_policy: MergePolicy::default(),
             faults: FaultPlan::none(),
             trace_sink: None,
+        }
+    }
+}
+
+/// Where a session's warm starts come from and its observations go: a
+/// directly opened [`ModelStore`] (one writer per directory, losers
+/// warn-and-skip) or a shared [`StoreServiceHandle`] (all in-process
+/// sessions feed one writer thread; nothing is dropped). The two expose
+/// the same warm-model contract, so the session logic is backend-blind.
+enum StoreBackend {
+    Direct(ModelStore),
+    Service(StoreServiceHandle),
+}
+
+impl StoreBackend {
+    fn warm_models(&self, keys: &[ModelKey]) -> Result<Option<Vec<PiecewiseModel>>> {
+        match self {
+            StoreBackend::Direct(store) => store.warm_models(keys),
+            // snapshot reads never block behind the writer and never fail
+            StoreBackend::Service(handle) => Ok(handle.snapshot().warm_models(keys)),
+        }
+    }
+
+    fn dir_display(&self) -> String {
+        match self {
+            StoreBackend::Direct(store) => store.dir().display().to_string(),
+            StoreBackend::Service(handle) => handle.dir().display().to_string(),
+        }
+    }
+
+    /// Point-in-time health counters. On the service path merges happen
+    /// asynchronously, so a sample taken right after a submit may not see
+    /// that batch yet; `StoreServiceHandle::flush` gives the settled view.
+    fn stats(&self) -> StoreStats {
+        match self {
+            StoreBackend::Direct(store) => store.stats(),
+            StoreBackend::Service(handle) => handle.stats(),
         }
     }
 }
@@ -68,6 +109,19 @@ impl AdaptiveSession {
         self
     }
 
+    /// Shared concurrent store service: warm-start from its snapshots and
+    /// submit observation batches to its writer thread instead of opening
+    /// the store directly. Takes precedence over
+    /// [`model_store`](Self::model_store) when both are set — concurrent
+    /// sessions sharing one handle is exactly what the service is for
+    /// (direct opens would race the advisory lock and drop saves). On this
+    /// path the *service's* merge policy governs, not this session's
+    /// [`merge_policy`](Self::merge_policy) — one writer, one policy.
+    pub fn store_service(mut self, service: Option<StoreServiceHandle>) -> Self {
+        self.service = service;
+        self
+    }
+
     /// How flushed observations merge into stored history.
     pub fn merge_policy(mut self, policy: MergePolicy) -> Self {
         self.merge_policy = policy;
@@ -91,9 +145,12 @@ impl AdaptiveSession {
         &self.faults
     }
 
-    fn open_store(&self) -> Result<Option<ModelStore>> {
+    fn open_backend(&self) -> Result<Option<StoreBackend>> {
+        if let Some(handle) = &self.service {
+            return Ok(Some(StoreBackend::Service(handle.clone())));
+        }
         match &self.store_dir {
-            Some(dir) => Ok(Some(ModelStore::open(dir)?)),
+            Some(dir) => Ok(Some(StoreBackend::Direct(ModelStore::open(dir)?))),
             None => Ok(None),
         }
     }
@@ -167,7 +224,7 @@ impl AdaptiveSession {
         // entirely — no warm-model parsing, and no advisory writer lock
         // taken away from a concurrent run that actually needs it
         let store = if dist.uses_model_store() {
-            self.open_store()?
+            self.open_backend()?
         } else {
             None
         };
@@ -220,9 +277,9 @@ impl AdaptiveSession {
             warm_energy,
             warm_start_2d: None,
         };
-        let out = dist.distribute(n, bench, &ctx)?;
+        let mut out = dist.distribute(n, bench, &ctx)?;
         if let Some(s) = &store {
-            self.flush_1d(s, keys, &out)?;
+            self.flush_1d(s, keys, &mut out)?;
         }
         self.write_trace(&out)?;
         Ok(out)
@@ -233,7 +290,13 @@ impl AdaptiveSession {
     /// observations are recorded: echoing seeded models back would refresh
     /// stored points' weights and defeat staleness decay. With no keys,
     /// persistence is skipped with a warning (see [`Self::run_1d`]).
-    fn flush_1d(&self, store: &ModelStore, keys: &[ModelKey], out: &Outcome) -> Result<()> {
+    ///
+    /// On the direct backend both families are `record_run` immediately;
+    /// on the service backend they form **one atomic [`ObsBatch`]** — a
+    /// reader snapshot either sees all of this run's observations or none,
+    /// and the writer stamps both families with one merge time. The
+    /// backend's [`StoreStats`] land in [`Outcome::store_stats`].
+    fn flush_1d(&self, store: &StoreBackend, keys: &[ModelKey], out: &mut Outcome) -> Result<()> {
         let speed_obs = match &out.observations {
             Observations::OneD(obs) => Some(obs),
             _ => None,
@@ -250,18 +313,38 @@ impl AdaptiveSession {
                 eprintln!(
                     "warn: model store `{}` is configured but the run supplied \
                      no model keys; dropping this run's observations",
-                    store.dir().display()
+                    store.dir_display()
                 );
             }
+            out.store_stats = Some(store.stats());
             return Ok(());
         }
-        if let Some(obs) = speed_obs {
-            store.record_run(keys, obs, &self.merge_policy)?;
+        match store {
+            StoreBackend::Direct(store) => {
+                if let Some(obs) = speed_obs {
+                    store.record_run(keys, obs, &self.merge_policy)?;
+                }
+                if let Some(obs) = energy_obs {
+                    let ekeys: Vec<ModelKey> = keys.iter().map(ModelKey::energy).collect();
+                    store.record_run(&ekeys, obs, &self.merge_policy)?;
+                }
+            }
+            StoreBackend::Service(handle) => {
+                let mut batch = ObsBatch::new();
+                if let Some(obs) = speed_obs {
+                    for (key, m) in keys.iter().zip(obs) {
+                        batch.insert(key.clone(), Family::Speed, m.clone());
+                    }
+                }
+                if let Some(obs) = energy_obs {
+                    for (key, m) in keys.iter().zip(obs) {
+                        batch.insert(key.clone(), Family::Energy, m.clone());
+                    }
+                }
+                handle.submit(batch)?;
+            }
         }
-        if let Some(obs) = energy_obs {
-            let ekeys: Vec<ModelKey> = keys.iter().map(ModelKey::energy).collect();
-            store.record_run(&ekeys, obs, &self.merge_policy)?;
-        }
+        out.store_stats = Some(store.stats());
         Ok(())
     }
 
@@ -287,7 +370,7 @@ impl AdaptiveSession {
             ));
         }
         let store = if dist.uses_model_store() {
-            self.open_store()?
+            self.open_backend()?
         } else {
             None
         };
@@ -309,7 +392,7 @@ impl AdaptiveSession {
             warm_energy: None,
             warm_start_2d,
         };
-        let out = dist.distribute(m, n, bench, &ctx)?;
+        let mut out = dist.distribute(m, n, bench, &ctx)?;
         if let Some(s) = &store {
             if let Observations::TwoD(obs) = &out.observations {
                 if keys.is_empty() {
@@ -320,7 +403,7 @@ impl AdaptiveSession {
                             "warn: model store `{}` is configured but the 2D \
                              run supplied no model keys; dropping this run's \
                              observations",
-                            s.dir().display()
+                            s.dir_display()
                         );
                     }
                 } else {
@@ -339,11 +422,26 @@ impl AdaptiveSession {
                             keys.len()
                         )));
                     }
-                    for (col_keys, col_obs) in keys.iter().zip(obs) {
-                        s.record_run(col_keys, col_obs, &self.merge_policy)?;
+                    match s {
+                        StoreBackend::Direct(store) => {
+                            for (col_keys, col_obs) in keys.iter().zip(obs) {
+                                store.record_run(col_keys, col_obs, &self.merge_policy)?;
+                            }
+                        }
+                        StoreBackend::Service(handle) => {
+                            // the whole grid is one atomic batch
+                            let mut batch = ObsBatch::new();
+                            for (col_keys, col_obs) in keys.iter().zip(obs) {
+                                for (key, m) in col_keys.iter().zip(col_obs) {
+                                    batch.insert(key.clone(), Family::Speed, m.clone());
+                                }
+                            }
+                            handle.submit(batch)?;
+                        }
                     }
                 }
             }
+            out.store_stats = Some(s.stats());
         }
         self.write_trace(&out)?;
         Ok(out)

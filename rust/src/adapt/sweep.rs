@@ -17,6 +17,7 @@ use crate::apps::matmul1d::{run_with_faults, Matmul1dConfig};
 use crate::cluster::faults::FaultPlan;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
+use crate::modelstore::{StoreServiceHandle, StoreStats};
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -36,6 +37,12 @@ pub struct ScenarioGrid {
     /// Concurrent cells (0 = available parallelism, capped at the cell
     /// count). Each job runs whole cells; each cell spawns its own engine.
     pub jobs: usize,
+    /// Shared model-store service every cell flushes to. Concurrent cells
+    /// opening one store directory directly would race the advisory lock
+    /// and drop all but one cell's observations; one service handle
+    /// serializes them through a single writer instead (`None` disables
+    /// persistence).
+    pub store: Option<StoreServiceHandle>,
 }
 
 /// One cell's outcome in the consolidated report.
@@ -62,6 +69,10 @@ pub struct SweepRow {
 pub struct SweepReport {
     pub n: u64,
     pub rows: Vec<SweepRow>,
+    /// Settled store-service counters after the final flush (`None` when
+    /// the grid ran without a shared store). `dropped_saves == 0` here is
+    /// the zero-drop guarantee: every cell's observations reached disk.
+    pub store_stats: Option<StoreStats>,
 }
 
 impl ScenarioGrid {
@@ -74,6 +85,7 @@ impl ScenarioGrid {
             epsilon: 0.05,
             max_iters: 100,
             jobs: 0,
+            store: None,
         }
     }
 
@@ -131,7 +143,18 @@ impl ScenarioGrid {
             .into_iter()
             .map(|r| r.expect("every sweep cell produces a row"))
             .collect();
-        Ok(SweepReport { n: self.n, rows })
+        // settle the shared store before reporting: after this flush every
+        // cell's observations are merged *and* committed, and the stats
+        // are final rather than a mid-drain sample
+        let store_stats = match &self.store {
+            Some(handle) => Some(handle.flush()?),
+            None => None,
+        };
+        Ok(SweepReport {
+            n: self.n,
+            rows,
+            store_stats,
+        })
     }
 
     fn run_cell(
@@ -158,6 +181,7 @@ impl ScenarioGrid {
         let mut cfg = Matmul1dConfig::new(self.n, strategy);
         cfg.epsilon = self.epsilon;
         cfg.max_iters = self.max_iters;
+        cfg.store_service = self.store.clone();
         match run_with_faults(spec, &cfg, plan.clone()) {
             Ok(report) => {
                 row.total_s = report.total_s;
@@ -300,5 +324,29 @@ mod tests {
         let serial = g.run().unwrap();
         assert_eq!(serial.rows.len(), 4);
         assert_eq!(serial.ok_rows(), 4);
+    }
+
+    #[test]
+    fn shared_service_persists_every_cells_observations() {
+        use crate::modelstore::{ModelStore, StoreService};
+        use crate::testkit::unique_temp_dir;
+
+        let dir = unique_temp_dir("sweep-shared-service");
+        let handle = StoreService::open(&dir).unwrap();
+        let mut g = mini_grid(); // even + dfpa × (none, straggler)
+        g.store = Some(handle.clone());
+        let report = g.run().unwrap();
+        assert_eq!(report.ok_rows(), 4);
+
+        let stats = report.store_stats.expect("service-backed sweep reports stats");
+        assert_eq!(stats.dropped_saves, 0, "the service never drops a save");
+        // both dfpa cells flushed a batch (even cells skip the store)
+        assert!(stats.merged_batches >= 2, "got {stats:?}");
+
+        // the flushed state is on disk: one model per mini4 host
+        drop(handle);
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.entries().unwrap().len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -37,7 +37,7 @@ use crate::cluster::engine::Engine;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::modelstore::ModelKey;
+use crate::modelstore::{ModelKey, StoreServiceHandle};
 
 pub use crate::adapt::Strategy;
 
@@ -58,6 +58,9 @@ pub struct JacobiConfig {
     pub max_iters: usize,
     /// Persistent FPM model store directory (see `Matmul1dConfig`).
     pub model_store: Option<std::path::PathBuf>,
+    /// Shared model-store service handle; takes precedence over
+    /// `model_store` (see `Matmul1dConfig::store_service`).
+    pub store_service: Option<StoreServiceHandle>,
 }
 
 impl JacobiConfig {
@@ -71,6 +74,7 @@ impl JacobiConfig {
             elem_bytes: 8,
             max_iters: 100,
             model_store: None,
+            store_service: None,
         }
     }
 
@@ -168,7 +172,8 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
     let session = AdaptiveSession::new()
         .epsilon(cfg.epsilon)
         .max_iters(cfg.max_iters)
-        .model_store(cfg.model_store.clone());
+        .model_store(cfg.model_store.clone())
+        .store_service(cfg.store_service.clone());
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone());
     let mut dist = cfg.strategy.make_1d(&AppResources {
         nodes: &nodes,
@@ -263,6 +268,7 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
             converged: rounds.converged,
             energy_j: cluster.total_dynamic_j(),
             pareto: rounds.pareto.clone(),
+            store_stats: rounds.store_stats,
         },
         d,
         sweeps: sweeps_done,

@@ -36,7 +36,7 @@ use crate::cluster::engine::Engine;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::modelstore::ModelKey;
+use crate::modelstore::{ModelKey, StoreServiceHandle};
 use crate::partition::hsp;
 
 pub use crate::adapt::Strategy;
@@ -56,6 +56,9 @@ pub struct LuConfig {
     pub max_iters: usize,
     /// Persistent FPM model store directory (see `Matmul1dConfig`).
     pub model_store: Option<std::path::PathBuf>,
+    /// Shared model-store service handle; takes precedence over
+    /// `model_store` (see `Matmul1dConfig::store_service`).
+    pub store_service: Option<StoreServiceHandle>,
 }
 
 impl LuConfig {
@@ -69,6 +72,7 @@ impl LuConfig {
             elem_bytes: 8,
             max_iters: 100,
             model_store: None,
+            store_service: None,
         }
     }
 
@@ -152,7 +156,8 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
     let session = AdaptiveSession::new()
         .epsilon(cfg.epsilon)
         .max_iters(cfg.max_iters)
-        .model_store(cfg.model_store.clone());
+        .model_store(cfg.model_store.clone())
+        .store_service(cfg.store_service.clone());
     let (mut cluster, nodes) = build_cluster(spec, cfg);
     // the distributor works directly in element-update *units*, not
     // columns: a column's work shrinks every panel step, so only the units
@@ -288,6 +293,7 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
             converged: rounds.converged,
             energy_j: cluster.total_dynamic_j(),
             pareto: rounds.pareto.clone(),
+            store_stats: rounds.store_stats,
         },
         d: first_d,
         panels: nb as usize,

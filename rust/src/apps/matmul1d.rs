@@ -31,7 +31,7 @@ use crate::config::ClusterSpec;
 use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::modelstore::ModelKey;
+use crate::modelstore::{ModelKey, StoreServiceHandle};
 use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
 
 /// Partitioning strategy tag — now a registry lookup in the adapt layer
@@ -55,6 +55,11 @@ pub struct Matmul1dConfig {
     /// cluster's hosts (keyed per host, kernel shape and execution mode)
     /// and merges its own observations back afterwards.
     pub model_store: Option<std::path::PathBuf>,
+    /// Shared model-store service handle. Takes precedence over
+    /// `model_store`: concurrent runs (e.g. sweep cells) submit their
+    /// observations to the service's single writer instead of racing the
+    /// store's advisory lock, and warm-start from its lock-free snapshot.
+    pub store_service: Option<StoreServiceHandle>,
 }
 
 impl Matmul1dConfig {
@@ -67,6 +72,7 @@ impl Matmul1dConfig {
             elem_bytes: 8,
             max_iters: 100,
             model_store: None,
+            store_service: None,
         }
     }
 
@@ -183,6 +189,7 @@ pub fn run_with_faults(
         .epsilon(cfg.epsilon)
         .max_iters(cfg.max_iters)
         .model_store(cfg.model_store.clone())
+        .store_service(cfg.store_service.clone())
         .faults(faults);
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone())?;
 
@@ -254,6 +261,7 @@ pub fn run_with_faults(
             // scaled compute phase, mirroring the virtual time accounting
             energy_j: cluster.total_dynamic_j(),
             pareto: outcome.pareto.clone(),
+            store_stats: outcome.store_stats,
         },
         d,
     })

@@ -23,7 +23,7 @@ use crate::config::ClusterSpec;
 use crate::dfpa2d::nested::Benchmarker2d;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
-use crate::modelstore::ModelKey;
+use crate::modelstore::{ModelKey, StoreServiceHandle, StoreStats};
 use crate::util::stats::max_relative_imbalance;
 
 pub use super::matmul1d::Strategy;
@@ -40,6 +40,9 @@ pub struct Matmul2dConfig {
     pub elem_bytes: u64,
     /// Persistent FPM model store directory (see `Matmul1dConfig`).
     pub model_store: Option<std::path::PathBuf>,
+    /// Shared model-store service handle; takes precedence over
+    /// `model_store` (see `Matmul1dConfig::store_service`).
+    pub store_service: Option<StoreServiceHandle>,
 }
 
 impl Matmul2dConfig {
@@ -51,6 +54,7 @@ impl Matmul2dConfig {
             epsilon: 0.1,
             elem_bytes: 8,
             model_store: None,
+            store_service: None,
         }
     }
 
@@ -93,6 +97,9 @@ pub struct Matmul2dReport {
     pub overhead_pct: f64,
     /// Whether DFPA warm-started from a persistent model store.
     pub warm_started: bool,
+    /// Model-store health counters sampled at observation flush (`None`
+    /// when no store was configured).
+    pub store_stats: Option<StoreStats>,
 }
 
 /// Near-square factorization of the cluster size into p×q, p ≥ q.
@@ -139,7 +146,8 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     // --- partition phase (strategy-agnostic via the adapt layer) ---
     let session = AdaptiveSession::new()
         .epsilon(cfg.epsilon)
-        .model_store(cfg.model_store.clone());
+        .model_store(cfg.model_store.clone())
+        .store_service(cfg.store_service.clone());
     let mut dist = cfg.strategy.make_2d(&AppResources2d {
         nodes: &nodes,
         p,
@@ -158,6 +166,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     let partition_s = grid.cluster.now() - before;
     let iterations = outcome.benchmark_steps;
     let warm_started = outcome.warm_started;
+    let store_stats = outcome.store_stats;
     let (widths, heights) = outcome.distribution.into_2d()?;
 
     // --- evaluate the final distribution: one pivot step per column ---
@@ -207,6 +216,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
         imbalance,
         overhead_pct: 100.0 * partition_s / total_s.max(1e-12),
         warm_started,
+        store_stats,
     })
 }
 

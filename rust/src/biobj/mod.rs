@@ -375,6 +375,7 @@ impl Distributor for BiObj {
             executes_workload: false,
             energy_j: energy_total,
             pareto: summary,
+            store_stats: None,
         })
     }
 }

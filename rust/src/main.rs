@@ -14,7 +14,8 @@
 //!              per-iteration DFPA trace (Figs 2/6)
 //! repro cluster --name hcl                    print a preset's node table
 //! repro sweep  --n 1024 --strategies dfpa,even --clusters mini4,synth:64
-//!              --faults none,straggler:0x3@0  scenario grid, one row per cell
+//!              --faults none,straggler:0x3@0 [--model-store DIR]
+//!              scenario grid, one row per cell
 //! ```
 
 use hfpm::adapt::{registry, AdaptiveSession, Strategy};
@@ -123,10 +124,13 @@ COMMANDS:
   sweep     scenario grid               --n 1024 [--eps 0.05]
             [--strategies dfpa,even] [--clusters mini4,synth:64]
             [--faults none,straggler:0x3@0,death:1@2] [--jobs K] [--out f.csv]
+            [--model-store DIR]
             runs every strategy × cluster × fault cell concurrently (each on
             its own engine) and emits one consolidated table; fault grammar:
             none | death:<rank>@<step> | straggler:<rank>x<factor>@<step>,
-            events joined with '+'
+            events joined with '+'. --model-store opens ONE store service
+            shared by all cells: observations merge through a single writer
+            (no advisory-lock races, zero dropped saves)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -205,6 +209,13 @@ fn warm_suffix(warm: bool, warm_energy: bool) -> &'static str {
     }
 }
 
+/// One line of model-store health counters, when a store was in play.
+fn print_store_stats(stats: &Option<hfpm::modelstore::StoreStats>) {
+    if let Some(s) = stats {
+        println!("  store: {}", s.summary());
+    }
+}
+
 /// One line summarizing a bi-objective run's learned Pareto front.
 fn print_pareto(report: &hfpm::adapt::WorkloadReport) {
     if let Some(par) = &report.pareto {
@@ -248,6 +259,7 @@ fn cmd_run1d(args: &Args) -> Result<()> {
         let warm = warm_suffix(r.warm_started, r.warm_started_energy);
         println!("{}: d = {}{warm}", s.label(), compact(&r.d));
         print_pareto(&r);
+        print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
     Ok(())
@@ -280,6 +292,7 @@ fn cmd_run2d(args: &Args) -> Result<()> {
         ]);
         let warm = if r.warm_started { " (warm-started)" } else { "" };
         println!("{}: widths = {:?}{warm}", st.name(), r.widths);
+        print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
     Ok(())
@@ -352,6 +365,7 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
             compact(&r.d)
         );
         print_pareto(&r);
+        print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
     Ok(())
@@ -399,6 +413,7 @@ fn cmd_lu(args: &Args) -> Result<()> {
             compact(&r.d)
         );
         print_pareto(&r);
+        print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
     Ok(())
@@ -473,6 +488,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         grid.faults
             .push((f.to_string(), hfpm::cluster::faults::FaultPlan::parse(f)?));
     }
+    // one shared service: concurrent cells would otherwise race the store's
+    // advisory lock and all but one cell's observations would be dropped
+    if let Some(dir) = args.get_checked("model-store")? {
+        grid.store = Some(hfpm::modelstore::StoreService::open(dir)?);
+    }
     println!(
         "sweep: {} strategies × {} clusters × {} fault plans = {} cells (n = {n})",
         grid.strategies.len(),
@@ -484,6 +504,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let out = args.get_checked("out")?.map(std::path::PathBuf::from);
     report.table().emit(out.as_deref());
     println!("{} of {} cells ok", report.ok_rows(), report.rows.len());
+    if let Some(stats) = &report.store_stats {
+        println!("store: {}", stats.summary());
+    }
     Ok(())
 }
 

@@ -1,0 +1,121 @@
+//! Observation batches — the store service's atomic unit of work.
+//!
+//! A session's flush becomes one [`ObsBatch`]: a list of per-key insert
+//! operations (both the speed and the `#energy` function family) plus one
+//! merge timestamp. The writer thread applies a batch atomically — either
+//! every op is merged into the in-memory state and visible in the next
+//! published snapshot, or (if the service is gone) the submit fails as a
+//! whole — so a reader can never observe half a run's observations.
+
+use super::{ModelKey, ENERGY_KERNEL_SUFFIX};
+use crate::fpm::PiecewiseModel;
+
+/// Which function family an op's points belong to. The store keys the
+/// energy family under [`ModelKey::energy`] (kernel suffixed with
+/// [`ENERGY_KERNEL_SUFFIX`]); ops carry the *base* key plus this tag so
+/// callers never hand-build suffixed keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Speed, units/second.
+    Speed,
+    /// Energy per unit (the bi-objective second family).
+    Energy,
+}
+
+/// One per-key insert operation: fold `points` into the model stored
+/// under `key` (resolved per [`Family`]).
+#[derive(Debug, Clone)]
+pub struct ObsOp {
+    pub key: ModelKey,
+    pub family: Family,
+    pub points: PiecewiseModel,
+}
+
+impl ObsOp {
+    /// The key this op's points are stored under — the base key for the
+    /// speed family, [`ModelKey::energy`] for the energy family.
+    pub fn store_key(&self) -> ModelKey {
+        match self.family {
+            Family::Speed => self.key.clone(),
+            Family::Energy => self.key.energy(),
+        }
+    }
+}
+
+/// A batch of observation ops merged atomically under one timestamp.
+#[derive(Debug, Clone, Default)]
+pub struct ObsBatch {
+    pub ops: Vec<ObsOp>,
+    /// Merge timestamp (unix seconds) for staleness decay. `None` means
+    /// "stamp with the wall clock when the writer applies the batch";
+    /// tests pin it for clock-free reproducibility. One stamp per batch:
+    /// all of a run's observations are equally fresh.
+    pub t: Option<f64>,
+}
+
+impl ObsBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A batch whose merge time is pinned to `t` (unix seconds).
+    pub fn at(t: f64) -> Self {
+        Self {
+            ops: Vec::new(),
+            t: Some(t),
+        }
+    }
+
+    /// Queue one insert op. Empty models are skipped outright — a
+    /// processor that never benchmarked teaches nothing (mirrors
+    /// `ModelStore::record_run`).
+    pub fn insert(&mut self, key: ModelKey, family: Family, points: PiecewiseModel) -> &mut Self {
+        if !points.is_empty() {
+            self.ops.push(ObsOp { key, family, points });
+        }
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(x: f64, s: f64) -> PiecewiseModel {
+        let mut m = PiecewiseModel::new();
+        m.insert(x, s);
+        m
+    }
+
+    #[test]
+    fn ops_resolve_family_keys() {
+        let key = ModelKey::new("h", "k", "sim");
+        let mut b = ObsBatch::new();
+        b.insert(key.clone(), Family::Speed, model(10.0, 5.0));
+        b.insert(key.clone(), Family::Energy, model(10.0, 2.0e-8));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.ops[0].store_key(), key);
+        assert_eq!(b.ops[1].store_key(), key.energy());
+        assert!(b.ops[1]
+            .store_key()
+            .kernel
+            .ends_with(ENERGY_KERNEL_SUFFIX));
+    }
+
+    #[test]
+    fn empty_models_are_skipped() {
+        let key = ModelKey::new("h", "k", "sim");
+        let mut b = ObsBatch::at(1_000.0);
+        b.insert(key, Family::Speed, PiecewiseModel::new());
+        assert!(b.is_empty());
+        assert_eq!(b.t, Some(1_000.0));
+    }
+}

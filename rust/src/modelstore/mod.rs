@@ -34,16 +34,34 @@
 //! `WarmStart` of plain [`PiecewiseModel`]s and `adapt::AdaptiveSession`
 //! glues the two together — seeding before the run, flushing observations
 //! after (see DESIGN.md §3/§3.5).
+//!
+//! For *concurrent* sessions in one process, the lock's warn-and-skip
+//! would drop every non-holder's observations. The [`service`] submodule
+//! wraps the store in a single-writer merge thread fed observation
+//! [`batch`]es over a bounded channel, group-committing to disk and
+//! publishing immutable read [`snapshot`]s — see DESIGN.md §3.9. The
+//! advisory lock then degrades to a cross-*process* guard acquired once
+//! by the service.
 
+pub mod batch;
 pub mod json;
+pub mod service;
+pub mod snapshot;
+
+pub use batch::{Family, ObsBatch, ObsOp};
+pub use service::{StoreService, StoreServiceConfig, StoreServiceHandle};
+pub use snapshot::{SnapshotCell, StoreSnapshot};
 
 use crate::error::{HfpmError, Result};
 use crate::fpm::PiecewiseModel;
 use json::Value;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Identity of one stored model: which machine ran which kernel, how.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// `Ord` so snapshot maps iterate deterministically (host, kernel, mode).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ModelKey {
     /// Host identity (see `VirtualCluster::hosts`).
     pub host: String,
@@ -402,6 +420,56 @@ impl Drop for StoreLock {
 /// Name of the advisory lock file inside a store directory.
 const LOCK_FILE: &str = ".hfpm.lock";
 
+/// Cumulative health counters for one store (or store service): how many
+/// observation batches were merged, how many saves were dropped/deferred
+/// because another writer held the advisory lock, and how many corrupt
+/// files degraded to cold starts. Threaded into `Outcome`/`WorkloadReport`
+/// so dropped observations are *visible*, not just an `eprintln!` that
+/// scrolls away.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Observation batches merged into the (in-memory or on-disk) store.
+    /// For a direct [`ModelStore`] each non-empty `record_run` call counts
+    /// as one batch; for a [`StoreService`] each applied [`ObsBatch`].
+    pub merged_batches: u64,
+    /// Save attempts skipped because another writer held the advisory
+    /// lock. Direct stores *lose* these observations (warn-and-skip); the
+    /// service only *defers* them — the merged state stays in memory and
+    /// every later commit retries, so each failed attempt still counts.
+    pub dropped_saves: u64,
+    /// Store files that failed to parse and degraded to a cold start.
+    pub corrupt_files: u64,
+}
+
+impl StoreStats {
+    /// One-line human summary for CLI reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} batches merged, {} saves dropped, {} corrupt files",
+            self.merged_batches, self.dropped_saves, self.corrupt_files
+        )
+    }
+}
+
+/// Shared atomic backing for [`StoreStats`]: clones of one store (and the
+/// service handles wrapping it) all count into the same cells.
+#[derive(Debug, Default)]
+struct StoreCounters {
+    merged_batches: AtomicU64,
+    dropped_saves: AtomicU64,
+    corrupt_files: AtomicU64,
+}
+
+impl StoreCounters {
+    fn snapshot(&self) -> StoreStats {
+        StoreStats {
+            merged_batches: self.merged_batches.load(Ordering::Relaxed),
+            dropped_saves: self.dropped_saves.load(Ordering::Relaxed),
+            corrupt_files: self.corrupt_files.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// A lock file untouched for this long belongs to a crashed writer and may
 /// be stolen (a live writer re-creates its lock only at open, but a run
 /// that outlives this is a pathology, not a normal save pattern).
@@ -413,7 +481,13 @@ pub struct ModelStore {
     dir: PathBuf,
     /// `Some` while this instance holds the directory's advisory lock
     /// (shared across clones; released when the last clone drops).
-    lock: Option<std::sync::Arc<StoreLock>>,
+    lock: Option<Arc<StoreLock>>,
+    /// Health counters, shared across clones (see [`ModelStore::stats`]).
+    counters: Arc<StoreCounters>,
+    /// Suppress warn `eprintln!`s (the counters still count). Used by the
+    /// contention bench, where thousands of expected warn-and-skips would
+    /// drown the output.
+    quiet: bool,
 }
 
 impl ModelStore {
@@ -426,16 +500,37 @@ impl ModelStore {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
         let lock = Self::acquire_lock(&dir);
-        Ok(Self { dir, lock })
+        Ok(Self {
+            dir,
+            lock,
+            counters: Arc::new(StoreCounters::default()),
+            quiet: false,
+        })
+    }
+
+    /// Builder: suppress warn output (counters still count).
+    pub fn quiet(mut self, quiet: bool) -> Self {
+        self.quiet = quiet;
+        self
+    }
+
+    /// Cumulative health counters (shared across clones of this store).
+    pub fn stats(&self) -> StoreStats {
+        self.counters.snapshot()
     }
 
     fn lock_path(dir: &Path) -> PathBuf {
         dir.join(LOCK_FILE)
     }
 
-    fn acquire_lock(dir: &Path) -> Option<std::sync::Arc<StoreLock>> {
+    fn acquire_lock(dir: &Path) -> Option<Arc<StoreLock>> {
+        Self::acquire_lock_with(dir, STALE_LOCK_S)
+    }
+
+    /// [`ModelStore::acquire_lock`] with an injectable staleness threshold
+    /// so the steal path is testable without 10-minute-old files.
+    fn acquire_lock_with(dir: &Path, stale_after_s: u64) -> Option<Arc<StoreLock>> {
         use std::io::Write as _;
-        use std::sync::atomic::{AtomicU64, Ordering};
         // pid + per-process counter: a unique ownership token so releases
         // only ever delete a lock this instance actually wrote
         static SEQ: AtomicU64 = AtomicU64::new(0);
@@ -453,18 +548,17 @@ impl ModelStore {
             {
                 Ok(mut f) => {
                     let _ = writeln!(f, "{token}");
-                    return Some(std::sync::Arc::new(StoreLock { path, token }));
+                    return Some(Arc::new(StoreLock { path, token }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
                     let stale = std::fs::metadata(&path)
                         .and_then(|md| md.modified())
                         .ok()
                         .and_then(|mtime| mtime.elapsed().ok())
-                        .map(|age| age.as_secs() > STALE_LOCK_S)
+                        .map(|age| age.as_secs() >= stale_after_s)
                         .unwrap_or(false);
-                    if stale {
-                        let _ = std::fs::remove_file(&path);
-                        continue; // one retry after stealing a dead lock
+                    if stale && Self::steal_stale_lock(&path, &token, stale_after_s) {
+                        continue; // one retry after claiming a dead lock
                     }
                     return None;
                 }
@@ -472,6 +566,41 @@ impl ModelStore {
             }
         }
         None
+    }
+
+    /// Atomically claim a stale lock file. The old `remove_file` steal let
+    /// two openers both decide the same lock was stale and both "succeed":
+    /// A removes + re-creates, B removes *A's fresh lock* + re-creates —
+    /// two writers, each believing it holds the directory. Instead, rename
+    /// the dead lock onto a name carrying the stealer's own token: the
+    /// rename source is the shared path, so exactly one rename succeeds
+    /// and every later stealer fails with `NotFound`. The winner then
+    /// re-verifies the *claimed* file's age — a fresh file means a live
+    /// writer re-acquired between the staleness check and the rename, and
+    /// is handed back.
+    fn steal_stale_lock(path: &Path, token: &str, stale_after_s: u64) -> bool {
+        let claimed = path.with_extension(format!("steal-{}", clean(token)));
+        if std::fs::rename(path, &claimed).is_err() {
+            return false; // another stealer (or the holder's drop) won
+        }
+        let fresh = std::fs::metadata(&claimed)
+            .and_then(|md| md.modified())
+            .ok()
+            .and_then(|mtime| mtime.elapsed().ok())
+            .map(|age| age.as_secs() < stale_after_s)
+            .unwrap_or(false);
+        if fresh {
+            // we grabbed a live writer's lock — put it back (or, if yet
+            // another opener already re-created the path, just discard our
+            // claim: the claimed file's owner has stopped writing either
+            // way, exactly as if its lock had expired)
+            if std::fs::rename(&claimed, path).is_err() {
+                let _ = std::fs::remove_file(&claimed);
+            }
+            return false;
+        }
+        let _ = std::fs::remove_file(&claimed);
+        true
     }
 
     /// Does this instance hold the directory's advisory writer lock?
@@ -525,12 +654,15 @@ impl ModelStore {
             }
         }
         let degrade = |what: &str| {
-            eprintln!(
-                "warn: corrupt model store file {} ({what}); treating `{}` \
-                 as no history (cold start)",
-                path.display(),
-                key.kernel
-            );
+            self.counters.corrupt_files.fetch_add(1, Ordering::Relaxed);
+            if !self.quiet {
+                eprintln!(
+                    "warn: corrupt model store file {} ({what}); treating `{}` \
+                     as no history (cold start)",
+                    path.display(),
+                    key.kernel
+                );
+            }
         };
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
@@ -590,19 +722,24 @@ impl ModelStore {
     }
 
     /// Atomically persist a stored model (write temp file, then rename).
+    /// Returns whether the model actually reached disk.
     ///
     /// When another writer holds the directory's advisory lock the save is
-    /// skipped with a warning — losing one run's observations to a warn is
-    /// recoverable, two writers interleaving load→merge→save is not.
-    pub fn save(&self, model: &StoredModel) -> Result<()> {
+    /// skipped (`Ok(false)`) with a warning and a `dropped_saves` count —
+    /// losing one run's observations to a warn is recoverable, two writers
+    /// interleaving load→merge→save is not.
+    pub fn save(&self, model: &StoredModel) -> Result<bool> {
         if !self.can_write() {
-            eprintln!(
-                "warn: model store `{}` is locked by another writer; \
-                 skipping save of {}",
-                self.dir.display(),
-                model.key.file_name()
-            );
-            return Ok(());
+            self.counters.dropped_saves.fetch_add(1, Ordering::Relaxed);
+            if !self.quiet {
+                eprintln!(
+                    "warn: model store `{}` is locked by another writer; \
+                     skipping save of {}",
+                    self.dir.display(),
+                    model.key.file_name()
+                );
+            }
+            return Ok(false);
         }
         let path = self.path_for(&model.key);
         let tmp = path.with_extension("json.tmp");
@@ -627,7 +764,7 @@ impl ModelStore {
                 let _ = std::fs::remove_file(&legacy);
             }
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Merge one run's observed models into the store: for each key,
@@ -646,6 +783,7 @@ impl ModelStore {
                 observed.len()
             )));
         }
+        let mut any = false;
         for (key, model) in keys.iter().zip(observed) {
             if model.is_empty() {
                 continue;
@@ -655,6 +793,10 @@ impl ModelStore {
                 .unwrap_or_else(|| StoredModel::new(key.clone()));
             stored.merge(model, policy);
             self.save(&stored)?;
+            any = true;
+        }
+        if any {
+            self.counters.merged_batches.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -1048,6 +1190,122 @@ mod tests {
 
         drop(holder); // must NOT delete the thief's lock
         assert!(lock_path.exists(), "thief's lock deleted by old holder");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Backdate a lock file's mtime so staleness tests need no real clock.
+    fn age_lock(path: &Path, secs: u64) {
+        let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+        let old = std::time::SystemTime::now() - std::time::Duration::from_secs(secs);
+        f.set_times(
+            std::fs::FileTimes::new()
+                .set_accessed(old)
+                .set_modified(old),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn stale_lock_steal_is_atomic() {
+        // regression: the old steal was remove_file + create_new — two
+        // openers could both decide the lock was stale, A re-creates, B
+        // removes *A's fresh lock*, and both end up "holding" the
+        // directory. The rename-onto-own-token claim admits exactly one
+        // winner: the second rename finds no source and fails.
+        let dir = unique_temp_dir("modelstore-steal-atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = ModelStore::lock_path(&dir);
+        std::fs::write(&path, "999999:0\n").unwrap();
+        age_lock(&path, 2 * STALE_LOCK_S);
+        assert!(ModelStore::steal_stale_lock(&path, "1:1", STALE_LOCK_S));
+        assert!(
+            !ModelStore::steal_stale_lock(&path, "2:2", STALE_LOCK_S),
+            "second stealer of the same dead lock must lose"
+        );
+        assert!(!path.exists(), "claimed lock removed by the winner");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_lock_steal_hands_back_a_live_lock() {
+        // a lock that turns out to be fresh once claimed (a live writer
+        // re-acquired in the staleness-check window) is put back untouched
+        let dir = unique_temp_dir("modelstore-steal-fresh");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = ModelStore::lock_path(&dir);
+        std::fs::write(&path, "42:7\n").unwrap(); // mtime = now: fresh
+        assert!(!ModelStore::steal_stale_lock(&path, "1:1", STALE_LOCK_S));
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap().trim(),
+            "42:7",
+            "live lock must survive a failed steal with its token intact"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_stale_steals_admit_one_winner() {
+        // N threads race acquire_lock over one dead lock: exactly one may
+        // come away holding the directory (the losers see the winner's
+        // fresh lock, or lose the rename race)
+        let dir = unique_temp_dir("modelstore-steal-race");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = ModelStore::lock_path(&dir);
+        std::fs::write(&path, "999999:0\n").unwrap();
+        age_lock(&path, 2 * STALE_LOCK_S);
+
+        let barrier = std::sync::Barrier::new(8);
+        // hold every acquired lock until all threads finished: dropping a
+        // winner's lock mid-race would legitimately free the directory
+        let locks: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let (dir, barrier) = (&dir, &barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        ModelStore::acquire_lock(dir)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let winners = locks.iter().filter(|l| l.is_some()).count();
+        assert_eq!(winners, 1, "stale-lock steal admitted {winners} writers");
+        drop(locks);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_count_merges_drops_and_corruption() {
+        let holder = tmp_store("stats");
+        let dir = holder.dir().to_path_buf();
+        let key = ModelKey::new("h", "k", "sim");
+        holder
+            .record_run(&[key.clone()], &[sample_model()], &MergePolicy::default())
+            .unwrap();
+        assert_eq!(
+            holder.stats(),
+            StoreStats {
+                merged_batches: 1,
+                dropped_saves: 0,
+                corrupt_files: 0
+            }
+        );
+
+        // a non-holder's save is counted as dropped (quiet: no warn spam)
+        let loser = ModelStore::open(&dir).unwrap().quiet(true);
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge(&sample_model(), &MergePolicy::default());
+        assert!(!loser.save(&sm).unwrap(), "save must report the skip");
+        assert_eq!(loser.stats().dropped_saves, 1);
+        // ... and the clone shares the counters
+        assert_eq!(loser.clone().stats().dropped_saves, 1);
+        assert_eq!(holder.stats().dropped_saves, 0, "holder counts its own");
+
+        // corrupt files count on the reader that degraded them
+        std::fs::write(holder.path_for(&key), "{not json").unwrap();
+        assert!(holder.load(&key).unwrap().is_none());
+        assert_eq!(holder.stats().corrupt_files, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

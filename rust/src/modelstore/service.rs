@@ -1,0 +1,481 @@
+//! [`StoreService`] — the concurrent model-store service.
+//!
+//! One writer thread owns the [`ModelStore`]; any number of sessions hold
+//! cheap cloneable [`StoreServiceHandle`]s. Sessions submit observation
+//! [`ObsBatch`]es over a *bounded* channel (back-pressure blocks the
+//! submitter; nothing is ever dropped), the writer merges them into an
+//! in-memory map with the store's staleness-decay `merge_at`, publishes an
+//! immutable [`StoreSnapshot`] after every drain, and group-commits dirty
+//! keys to disk on a count/interval threshold so fsync traffic stays
+//! bounded no matter how many sessions flush at once.
+//!
+//! Compare the direct path: N concurrent `ModelStore` writers race the
+//! advisory `.hfpm.lock`, and all but the holder warn-and-skip — every
+//! non-holder's observations are *lost*. Under the service the lock is
+//! still acquired (once, by the writer's store) but only as a
+//! cross-**process** guard; in-process concurrency is serialized by the
+//! channel instead. See DESIGN.md §3.9.
+//!
+//! Shutdown: dropping the last handle closes the channel; the writer
+//! drains what's queued, commits everything dirty, and exits. The drop
+//! joins the thread, so "all handles dropped" implies "all submitted
+//! observations are on disk".
+
+use super::batch::ObsBatch;
+use super::snapshot::{SnapshotCell, StoreSnapshot};
+use super::{MergePolicy, ModelKey, ModelStore, StoreStats, StoredModel};
+use crate::error::{HfpmError, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Tuning for one service instance.
+#[derive(Debug, Clone)]
+pub struct StoreServiceConfig {
+    /// Merge policy applied to every batch (the direct path's default).
+    pub merge_policy: MergePolicy,
+    /// Group-commit after this many applied batches.
+    pub commit_every: usize,
+    /// ... or after this many seconds with uncommitted merges, whichever
+    /// comes first (also the writer's idle poll interval).
+    pub commit_interval_s: f64,
+    /// Submit-queue capacity. A full queue *blocks* submitters — the
+    /// service trades latency for the zero-drop guarantee.
+    pub queue_capacity: usize,
+    /// Suppress the underlying store's warn output (counters still count).
+    pub quiet: bool,
+}
+
+impl Default for StoreServiceConfig {
+    fn default() -> Self {
+        Self {
+            merge_policy: MergePolicy::default(),
+            commit_every: 16,
+            commit_interval_s: 0.05,
+            queue_capacity: 1024,
+            quiet: false,
+        }
+    }
+}
+
+enum Msg {
+    Batch(ObsBatch),
+    /// Commit everything applied so far and ack with the current stats.
+    Flush(Sender<StoreStats>),
+}
+
+/// State shared between handles and the writer thread.
+#[derive(Debug)]
+struct ServiceShared {
+    snap: SnapshotCell,
+    /// Batches applied by the writer (the service-level `merged_batches`;
+    /// the store's own counter stays untouched on this path).
+    merged_batches: AtomicU64,
+    /// A clone of the writer's store: shares the advisory lock (held until
+    /// the service fully drops) and the dropped/corrupt counters, so
+    /// handles can report stats without bothering the writer.
+    store: ModelStore,
+}
+
+#[derive(Debug)]
+struct ServiceInner {
+    shared: Arc<ServiceShared>,
+    /// `Some` until shutdown; dropping the sender is the shutdown signal.
+    tx: Mutex<Option<SyncSender<Msg>>>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+    dir: PathBuf,
+}
+
+impl Drop for ServiceInner {
+    fn drop(&mut self) {
+        // last handle gone: close the channel, then wait for the writer's
+        // final drain + commit — flush-on-drop, never drop-on-drop
+        if let Ok(mut tx) = self.tx.lock() {
+            *tx = None;
+        }
+        let handle = match self.writer.lock() {
+            Ok(mut w) => w.take(),
+            Err(_) => None,
+        };
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Constructor namespace for the service (see module docs).
+pub struct StoreService;
+
+impl StoreService {
+    /// Open a store directory behind a fresh writer thread with default
+    /// tuning. The on-disk state is preloaded and published as snapshot
+    /// version 0, so warm starts work before the first submit.
+    pub fn open(dir: impl AsRef<Path>) -> Result<StoreServiceHandle> {
+        Self::open_with(dir, StoreServiceConfig::default())
+    }
+
+    /// [`StoreService::open`] with explicit tuning.
+    pub fn open_with(dir: impl AsRef<Path>, config: StoreServiceConfig) -> Result<StoreServiceHandle> {
+        let dir = dir.as_ref().to_path_buf();
+        let store = ModelStore::open(&dir)?.quiet(config.quiet);
+        if !store.holds_lock() && !config.quiet {
+            eprintln!(
+                "warn: model store `{}` is locked by another process; the \
+                 service will merge in memory and defer saves until the \
+                 lock frees",
+                dir.display()
+            );
+        }
+
+        // preload everything on disk: corrupt files degrade (and count),
+        // real I/O errors fail the open
+        let mut mem: BTreeMap<ModelKey, StoredModel> = BTreeMap::new();
+        for key in store.entries()? {
+            if let Some(sm) = store.load(&key)? {
+                mem.insert(sm.key.clone(), sm);
+            }
+        }
+
+        let shared = Arc::new(ServiceShared {
+            snap: SnapshotCell::new(StoreSnapshot::new(mem.clone(), 0)),
+            merged_batches: AtomicU64::new(0),
+            store: store.clone(),
+        });
+        let (tx, rx) = sync_channel(config.queue_capacity.max(1));
+        let writer = Writer {
+            store,
+            mem,
+            dirty: BTreeSet::new(),
+            applied_since_commit: 0,
+            policy: config.merge_policy,
+            commit_every: config.commit_every.max(1),
+            commit_interval: Duration::from_secs_f64(config.commit_interval_s.max(1e-3)),
+            shared: Arc::clone(&shared),
+            version: 0,
+        };
+        let thread = std::thread::Builder::new()
+            .name("hfpm-store-writer".into())
+            .spawn(move || writer.run(rx))?;
+
+        Ok(StoreServiceHandle {
+            inner: Arc::new(ServiceInner {
+                shared,
+                tx: Mutex::new(Some(tx)),
+                writer: Mutex::new(Some(thread)),
+                dir,
+            }),
+        })
+    }
+}
+
+/// Cheap cloneable handle to a running [`StoreService`]. All clones feed
+/// one writer; the last clone's drop flushes and joins it.
+#[derive(Debug, Clone)]
+pub struct StoreServiceHandle {
+    inner: Arc<ServiceInner>,
+}
+
+impl StoreServiceHandle {
+    fn sender(&self) -> Result<SyncSender<Msg>> {
+        self.inner
+            .tx
+            .lock()
+            .ok()
+            .and_then(|g| g.clone())
+            .ok_or_else(|| {
+                HfpmError::Artifact("model-store service is shut down".into())
+            })
+    }
+
+    /// Submit one observation batch. Blocks (never drops) when the queue
+    /// is full; empty batches are a no-op.
+    pub fn submit(&self, batch: ObsBatch) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        self.sender()?.send(Msg::Batch(batch)).map_err(|_| {
+            HfpmError::Artifact("model-store writer thread is gone".into())
+        })
+    }
+
+    /// Block until everything submitted before this call is merged,
+    /// published, and committed to disk; returns the stats at that point.
+    pub fn flush(&self) -> Result<StoreStats> {
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        self.sender()?.send(Msg::Flush(ack_tx)).map_err(|_| {
+            HfpmError::Artifact("model-store writer thread is gone".into())
+        })?;
+        ack_rx.recv().map_err(|_| {
+            HfpmError::Artifact("model-store writer died before flushing".into())
+        })
+    }
+
+    /// The current read snapshot (never blocks behind the writer).
+    pub fn snapshot(&self) -> Arc<StoreSnapshot> {
+        self.inner.shared.snap.load()
+    }
+
+    /// Service-level stats: batches merged by the writer plus the
+    /// underlying store's dropped-save/corrupt-file counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            merged_batches: self.inner.shared.merged_batches.load(Ordering::Relaxed),
+            ..self.inner.shared.store.stats()
+        }
+    }
+
+    /// Does the service's store hold the directory's cross-process lock?
+    pub fn holds_lock(&self) -> bool {
+        self.inner.shared.store.holds_lock()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+}
+
+/// The single writer: owns the store and the authoritative in-memory map.
+struct Writer {
+    store: ModelStore,
+    mem: BTreeMap<ModelKey, StoredModel>,
+    /// Keys merged since the last commit.
+    dirty: BTreeSet<ModelKey>,
+    applied_since_commit: usize,
+    policy: MergePolicy,
+    commit_every: usize,
+    commit_interval: Duration,
+    shared: Arc<ServiceShared>,
+    version: u64,
+}
+
+impl Writer {
+    fn run(mut self, rx: Receiver<Msg>) {
+        loop {
+            match rx.recv_timeout(self.commit_interval) {
+                Ok(first) => {
+                    // drain opportunistically: one snapshot publish (and at
+                    // most one commit) per drain amortizes across
+                    // everything that queued up while we were merging
+                    let mut msgs = vec![first];
+                    while let Ok(m) = rx.try_recv() {
+                        msgs.push(m);
+                        if msgs.len() >= 256 {
+                            break;
+                        }
+                    }
+                    let mut acks = Vec::new();
+                    for m in msgs {
+                        match m {
+                            Msg::Batch(b) => self.apply(b),
+                            Msg::Flush(ack) => acks.push(ack),
+                        }
+                    }
+                    self.publish();
+                    if !acks.is_empty() || self.applied_since_commit >= self.commit_every {
+                        self.commit();
+                    }
+                    for ack in acks {
+                        let _ = ack.send(self.stats());
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.dirty.is_empty() {
+                        self.commit();
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // all handles dropped: final commit, then exit
+                    self.publish();
+                    self.commit();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Merge one batch into the in-memory map (atomically: all ops under
+    /// one timestamp, no snapshot published in between).
+    fn apply(&mut self, batch: ObsBatch) {
+        let now = batch.t.unwrap_or_else(super::unix_now);
+        let mut any = false;
+        for op in &batch.ops {
+            if op.points.is_empty() {
+                continue;
+            }
+            let key = op.store_key();
+            let sm = self
+                .mem
+                .entry(key.clone())
+                .or_insert_with(|| StoredModel::new(key.clone()));
+            sm.merge_at(&op.points, &self.policy, now);
+            self.dirty.insert(key);
+            any = true;
+        }
+        if any {
+            self.applied_since_commit += 1;
+            self.shared.merged_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn publish(&mut self) {
+        self.version += 1;
+        self.shared
+            .snap
+            .publish(StoreSnapshot::new(self.mem.clone(), self.version));
+    }
+
+    /// Group commit: save every dirty key. A key whose save fails — an
+    /// I/O error, or the advisory lock held by another *process* (counted
+    /// as dropped/deferred) — stays dirty and is retried at the next
+    /// commit point; the merged state itself is never lost while the
+    /// service lives.
+    fn commit(&mut self) {
+        let dirty = std::mem::take(&mut self.dirty);
+        for key in dirty {
+            let Some(sm) = self.mem.get(&key) else { continue };
+            match self.store.save(sm) {
+                Ok(true) => {}
+                Ok(false) => {
+                    self.dirty.insert(key);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warn: model store service failed to commit {}: {e}; \
+                         will retry",
+                        key.file_name()
+                    );
+                    self.dirty.insert(key);
+                }
+            }
+        }
+        self.applied_since_commit = 0;
+    }
+
+    fn stats(&self) -> StoreStats {
+        StoreStats {
+            merged_batches: self.shared.merged_batches.load(Ordering::Relaxed),
+            ..self.store.stats()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpm::PiecewiseModel;
+    use crate::modelstore::batch::Family;
+    use crate::testkit::unique_temp_dir;
+
+    fn model(x: f64, s: f64) -> PiecewiseModel {
+        let mut m = PiecewiseModel::new();
+        m.insert(x, s);
+        m
+    }
+
+    #[test]
+    fn submit_flush_snapshot_and_disk_agree() {
+        let dir = unique_temp_dir("store-service-roundtrip");
+        let key = ModelKey::new("h", "k", "sim");
+        let handle = StoreService::open(&dir).unwrap();
+        assert!(handle.holds_lock());
+        assert_eq!(handle.snapshot().version(), 0);
+
+        let mut b = ObsBatch::at(1_000_000.0);
+        b.insert(key.clone(), Family::Speed, model(100.0, 7.0));
+        b.insert(key.clone(), Family::Energy, model(100.0, 2.0e-8));
+        handle.submit(b).unwrap();
+        let stats = handle.flush().unwrap();
+        assert_eq!(stats.merged_batches, 1);
+        assert_eq!(stats.dropped_saves, 0);
+
+        let snap = handle.snapshot();
+        assert!(snap.version() >= 1);
+        assert_eq!(snap.model(&key).speed(100.0), 7.0);
+        assert_eq!(snap.model(&key.energy()).speed(100.0), 2.0e-8);
+
+        // flush means on disk — readable through a plain store right now
+        drop(handle);
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.load(&key).unwrap().unwrap().points.len(), 1);
+        assert!(store.load(&key.energy()).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_without_flush_still_commits() {
+        let dir = unique_temp_dir("store-service-drop");
+        let key = ModelKey::new("h", "k", "sim");
+        {
+            let handle = StoreService::open(&dir).unwrap();
+            let clone = handle.clone();
+            let mut b = ObsBatch::new();
+            b.insert(key.clone(), Family::Speed, model(100.0, 7.0));
+            clone.submit(b).unwrap();
+            // no flush: the last drop must drain + commit + join
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.holds_lock(), "service must release the lock on drop");
+        assert!(store.load(&key).unwrap().is_some(), "drop lost the batch");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn preloads_existing_history_into_snapshot() {
+        let dir = unique_temp_dir("store-service-preload");
+        let key = ModelKey::new("h", "k", "sim");
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store
+                .record_run(&[key.clone()], &[model(50.0, 3.0)], &MergePolicy::default())
+                .unwrap();
+        }
+        let handle = StoreService::open(&dir).unwrap();
+        let warm = handle
+            .snapshot()
+            .warm_models(std::slice::from_ref(&key))
+            .expect("preloaded history warm-starts");
+        assert_eq!(warm[0].speed(50.0), 3.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lock_held_elsewhere_defers_saves_then_recovers() {
+        let dir = unique_temp_dir("store-service-defer");
+        let outside = ModelStore::open(&dir).unwrap(); // takes the lock
+        let key = ModelKey::new("h", "k", "sim");
+
+        let handle = StoreService::open_with(
+            &dir,
+            StoreServiceConfig {
+                quiet: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(!handle.holds_lock());
+        let mut b = ObsBatch::new();
+        b.insert(key.clone(), Family::Speed, model(100.0, 7.0));
+        handle.submit(b).unwrap();
+        let stats = handle.flush().unwrap();
+        assert_eq!(stats.merged_batches, 1, "merge happens in memory");
+        assert!(stats.dropped_saves >= 1, "the save is deferred and counted");
+        assert!(
+            ModelStore::open(&dir).unwrap().load(&key).unwrap().is_none(),
+            "nothing reached disk while the lock was held elsewhere"
+        );
+        // reads still serve the merged state
+        assert_eq!(handle.snapshot().model(&key).speed(100.0), 7.0);
+
+        drop(outside); // lock freed: the next commit point retries
+        handle.flush().unwrap();
+        assert!(
+            ModelStore::open(&dir).unwrap().load(&key).unwrap().is_some(),
+            "deferred save must land once the lock frees"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

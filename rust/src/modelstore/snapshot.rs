@@ -1,0 +1,160 @@
+//! Immutable read views of the store service's merged state.
+//!
+//! The writer thread publishes a fresh [`StoreSnapshot`] after every
+//! applied drain of the submit queue; readers grab the current `Arc` and
+//! keep reading a consistent view for as long as they hold it — a
+//! warm-start never blocks behind a merge and never sees half a batch.
+//!
+//! [`SnapshotCell`] is the hand-rolled arc-swap: a `RwLock` held only for
+//! the duration of an `Arc` clone (readers) or pointer replacement
+//! (writer). The repo is deliberately zero-dep, so no `arc_swap` crate —
+//! an uncontended `RwLock` read is a single atomic on every platform this
+//! targets, which is close enough to lock-free for warm-start traffic.
+
+use super::{ModelKey, StoredModel};
+use crate::fpm::PiecewiseModel;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// One immutable, internally consistent view of every stored model.
+#[derive(Debug, Clone, Default)]
+pub struct StoreSnapshot {
+    models: BTreeMap<ModelKey, StoredModel>,
+    version: u64,
+}
+
+impl StoreSnapshot {
+    pub(crate) fn new(models: BTreeMap<ModelKey, StoredModel>, version: u64) -> Self {
+        Self { models, version }
+    }
+
+    /// Monotone publish counter; 0 is the preloaded at-open snapshot.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn get(&self, key: &ModelKey) -> Option<&StoredModel> {
+        self.models.get(key)
+    }
+
+    /// The piecewise model for a key (empty when absent) — the snapshot
+    /// counterpart of `ModelStore::load_model`, minus the I/O and minus
+    /// the failure modes.
+    pub fn model(&self, key: &ModelKey) -> PiecewiseModel {
+        self.models
+            .get(key)
+            .map(|sm| sm.to_model())
+            .unwrap_or_default()
+    }
+
+    /// Warm-start models for a key set: `None` when the snapshot holds
+    /// nothing for *any* of the keys, otherwise one (possibly empty) model
+    /// per key, positionally aligned — the same contract as
+    /// `ModelStore::warm_models`, so `AdaptiveSession` treats both
+    /// backends identically.
+    pub fn warm_models(&self, keys: &[ModelKey]) -> Option<Vec<PiecewiseModel>> {
+        let mut models = Vec::with_capacity(keys.len());
+        let mut any = false;
+        for key in keys {
+            let m = self.model(key);
+            any |= !m.is_empty();
+            models.push(m);
+        }
+        if any {
+            Some(models)
+        } else {
+            None
+        }
+    }
+
+    /// Stored keys in deterministic (host, kernel, mode) order.
+    pub fn keys(&self) -> impl Iterator<Item = &ModelKey> {
+        self.models.keys()
+    }
+}
+
+/// The publication point: readers [`load`](SnapshotCell::load) the current
+/// snapshot, the writer [`publish`](SnapshotCell::publish)es replacements.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    cur: RwLock<Arc<StoreSnapshot>>,
+}
+
+impl SnapshotCell {
+    pub fn new(initial: StoreSnapshot) -> Self {
+        Self {
+            cur: RwLock::new(Arc::new(initial)),
+        }
+    }
+
+    /// The current snapshot. A poisoned cell (writer panicked mid-publish)
+    /// still serves its last value: publication replaces the whole `Arc`,
+    /// so the stored pointer is valid at every instant.
+    pub fn load(&self) -> Arc<StoreSnapshot> {
+        match self.cur.read() {
+            Ok(g) => Arc::clone(&g),
+            Err(poisoned) => Arc::clone(&poisoned.into_inner()),
+        }
+    }
+
+    pub fn publish(&self, next: StoreSnapshot) {
+        let next = Arc::new(next);
+        match self.cur.write() {
+            Ok(mut g) => *g = next,
+            Err(poisoned) => *poisoned.into_inner() = next,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelstore::{MergePolicy, StoredModel};
+
+    fn snap_with(key: &ModelKey, x: f64, s: f64, version: u64) -> StoreSnapshot {
+        let mut m = PiecewiseModel::new();
+        m.insert(x, s);
+        let mut sm = StoredModel::new(key.clone());
+        sm.merge_at(&m, &MergePolicy::default(), 1_000.0);
+        let mut models = BTreeMap::new();
+        models.insert(key.clone(), sm);
+        StoreSnapshot::new(models, version)
+    }
+
+    #[test]
+    fn warm_models_mirror_store_contract() {
+        let key = ModelKey::new("h", "k", "sim");
+        let other = ModelKey::new("h2", "k", "sim");
+        let snap = snap_with(&key, 100.0, 7.0, 1);
+
+        assert!(snap.warm_models(&[other.clone()]).is_none(), "all-cold");
+        let warm = snap.warm_models(&[key.clone(), other]).expect("h stored");
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm[0].speed(100.0), 7.0);
+        assert!(warm[1].is_empty());
+        assert_eq!(snap.model(&key).len(), 1);
+    }
+
+    #[test]
+    fn cell_serves_latest_published_view() {
+        let key = ModelKey::new("h", "k", "sim");
+        let cell = SnapshotCell::new(StoreSnapshot::default());
+        let before = cell.load();
+        assert_eq!(before.version(), 0);
+        assert!(before.is_empty());
+
+        cell.publish(snap_with(&key, 100.0, 7.0, 1));
+        assert_eq!(cell.load().version(), 1);
+        assert_eq!(cell.load().model(&key).speed(100.0), 7.0);
+        // the old view stays valid and unchanged for whoever holds it
+        assert!(before.is_empty());
+    }
+}

@@ -1,0 +1,241 @@
+//! Integration tests for the concurrent model-store service: order
+//! tolerance of concurrent merges, the zero-drop guarantee under high
+//! contention, and the session-level warm-start path through snapshots.
+
+use hfpm::fpm::PiecewiseModel;
+use hfpm::modelstore::{
+    Family, MergePolicy, ModelKey, ModelStore, ObsBatch, StoreService, StoreServiceConfig,
+    StoredModel,
+};
+use hfpm::testkit::unique_temp_dir;
+use std::sync::Barrier;
+
+fn point(x: f64, s: f64) -> PiecewiseModel {
+    let mut m = PiecewiseModel::new();
+    m.insert(x, s);
+    m
+}
+
+/// A merge policy whose result is independent of merge order: no per-run
+/// decay (1.0 — older points keep full weight no matter how many merges
+/// follow), no wall-clock decay, and room for every point.
+fn commutative_policy() -> MergePolicy {
+    MergePolicy {
+        decay: 1.0,
+        min_weight: 1e-6,
+        max_points: 1024,
+        blend_tol_rel: 1e-9,
+        half_life_s: None,
+    }
+}
+
+/// Disjoint keys: each session writes its own key, so the writer applies
+/// every session's batches in that session's submit order (the channel is
+/// FIFO). The per-key result must match a serial `merge_at` replay exactly
+/// — same points, same speeds, same weights — even under the default
+/// (order-sensitive) decaying policy.
+#[test]
+fn concurrent_disjoint_keys_match_serial_replay() {
+    const SESSIONS: usize = 8;
+    const RUNS: usize = 6;
+    let dir = unique_temp_dir("svc-disjoint");
+    let handle = StoreService::open(&dir).unwrap();
+
+    let barrier = Barrier::new(SESSIONS);
+    std::thread::scope(|scope| {
+        for s in 0..SESSIONS {
+            let handle = handle.clone();
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let key = ModelKey::new(&format!("h{s}"), "k", "sim");
+                barrier.wait();
+                for r in 0..RUNS {
+                    let mut b = ObsBatch::at(1_000_000.0 + r as f64);
+                    b.insert(
+                        key.clone(),
+                        Family::Speed,
+                        point(100.0 + r as f64 * 50.0, 3.0 + s as f64),
+                    );
+                    handle.submit(b).unwrap();
+                }
+            });
+        }
+    });
+    let stats = handle.flush().unwrap();
+    assert_eq!(stats.merged_batches, (SESSIONS * RUNS) as u64);
+    assert_eq!(stats.dropped_saves, 0);
+    drop(handle);
+
+    // serial replay with the same policy and timestamps
+    let store = ModelStore::open(&dir).unwrap();
+    for s in 0..SESSIONS {
+        let key = ModelKey::new(&format!("h{s}"), "k", "sim");
+        let mut expect = StoredModel::new(key.clone());
+        for r in 0..RUNS {
+            expect.merge_at(
+                &point(100.0 + r as f64 * 50.0, 3.0 + s as f64),
+                &MergePolicy::default(),
+                1_000_000.0 + r as f64,
+            );
+        }
+        let got = store.load(&key).unwrap().expect("session key persisted");
+        assert_eq!(got.points.len(), expect.points.len(), "key h{s}");
+        for (g, e) in got.points.iter().zip(&expect.points) {
+            assert_eq!(g.x, e.x, "key h{s}");
+            assert_eq!(g.s, e.s, "key h{s}");
+            assert_eq!(g.w, e.w, "key h{s}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Overlapping key: every session merges into the *same* model, so the
+/// interleaving is nondeterministic. Under a commutative policy (no decay,
+/// distinct sizes, one shared timestamp) the merged point set must equal a
+/// serial replay in any order — concurrency changes nothing but the order.
+#[test]
+fn concurrent_overlapping_key_is_order_tolerant() {
+    const SESSIONS: usize = 8;
+    const RUNS: usize = 5;
+    let dir = unique_temp_dir("svc-overlap");
+    let handle = StoreService::open_with(
+        &dir,
+        StoreServiceConfig {
+            merge_policy: commutative_policy(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let key = ModelKey::new("shared", "k", "sim");
+
+    let barrier = Barrier::new(SESSIONS);
+    std::thread::scope(|scope| {
+        for s in 0..SESSIONS {
+            let handle = handle.clone();
+            let key = key.clone();
+            let barrier = &barrier;
+            scope.spawn(move || {
+                barrier.wait();
+                for r in 0..RUNS {
+                    let i = s * RUNS + r;
+                    let mut b = ObsBatch::at(1_000_000.0);
+                    b.insert(
+                        key.clone(),
+                        Family::Speed,
+                        point(100.0 + i as f64 * 10.0, 1.0 + i as f64),
+                    );
+                    handle.submit(b).unwrap();
+                }
+            });
+        }
+    });
+    let stats = handle.flush().unwrap();
+    assert_eq!(stats.merged_batches, (SESSIONS * RUNS) as u64);
+    assert_eq!(stats.dropped_saves, 0);
+    drop(handle);
+
+    // serial replay in reverse submission order: same set must come out
+    let mut expect = StoredModel::new(key.clone());
+    for i in (0..SESSIONS * RUNS).rev() {
+        expect.merge_at(
+            &point(100.0 + i as f64 * 10.0, 1.0 + i as f64),
+            &commutative_policy(),
+            1_000_000.0,
+        );
+    }
+    let got = ModelStore::open(&dir)
+        .unwrap()
+        .load(&key)
+        .unwrap()
+        .expect("shared key persisted");
+    assert_eq!(got.points.len(), SESSIONS * RUNS);
+    assert_eq!(got.points.len(), expect.points.len());
+    // both are sorted by x, so positional comparison is set comparison
+    for (g, e) in got.points.iter().zip(&expect.points) {
+        assert_eq!(g.x, e.x);
+        assert_eq!(g.s, e.s);
+        assert_eq!(g.w, e.w);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// High contention: many sessions hammering one service. Nothing may be
+/// dropped, every batch must merge, and every key must reach disk.
+#[test]
+fn high_contention_drops_nothing() {
+    const SESSIONS: usize = 32;
+    const RUNS: usize = 8;
+    let dir = unique_temp_dir("svc-contention");
+    let handle = StoreService::open(&dir).unwrap();
+
+    let barrier = Barrier::new(SESSIONS);
+    std::thread::scope(|scope| {
+        for s in 0..SESSIONS {
+            let handle = handle.clone();
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let key = ModelKey::new(&format!("n{s:02}"), "k", "sim");
+                barrier.wait();
+                for r in 0..RUNS {
+                    let mut b = ObsBatch::new();
+                    b.insert(
+                        key.clone(),
+                        Family::Speed,
+                        point(64.0 + r as f64 * 64.0, 2.0),
+                    );
+                    handle.submit(b).unwrap();
+                }
+            });
+        }
+    });
+    let stats = handle.flush().unwrap();
+    assert_eq!(stats.dropped_saves, 0, "zero-drop guarantee: {stats:?}");
+    assert_eq!(stats.merged_batches, (SESSIONS * RUNS) as u64);
+    assert_eq!(stats.corrupt_files, 0);
+    drop(handle);
+
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.entries().unwrap().len(), SESSIONS);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The session-level path: two app runs sharing one service handle. The
+/// first cold-starts and submits its observations; after a flush the
+/// second warm-starts from the published snapshot — without ever touching
+/// the store directory from the app thread.
+#[test]
+fn app_runs_warm_start_through_the_service() {
+    use hfpm::apps::matmul1d::{self, Matmul1dConfig, Strategy};
+    use hfpm::cluster::presets;
+
+    let dir = unique_temp_dir("svc-warmstart");
+    let handle = StoreService::open(&dir).unwrap();
+    let spec = presets::mini4();
+    let mut cfg = Matmul1dConfig::new(2048, Strategy::Dfpa);
+    cfg.store_service = Some(handle.clone());
+
+    let first = matmul1d::run(&spec, &cfg).unwrap();
+    assert!(!first.warm_started, "empty service must cold-start");
+    // submission is asynchronous: flush before the next run reads
+    let stats = handle.flush().unwrap();
+    assert_eq!(stats.dropped_saves, 0);
+    assert!(stats.merged_batches >= 1);
+
+    let second = matmul1d::run(&spec, &cfg).unwrap();
+    assert!(second.warm_started, "snapshot must seed the second run");
+    assert!(
+        second.iterations <= first.iterations,
+        "warm {} vs cold {}",
+        second.iterations,
+        first.iterations
+    );
+    let run_stats = second.store_stats.expect("service runs report stats");
+    assert_eq!(run_stats.dropped_saves, 0);
+
+    // the service owned all persistence: the directory holds one model
+    // per host, written by the writer thread alone
+    drop(handle);
+    let store = ModelStore::open(&dir).unwrap();
+    assert_eq!(store.entries().unwrap().len(), spec.size());
+    let _ = std::fs::remove_dir_all(&dir);
+}
