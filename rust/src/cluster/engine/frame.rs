@@ -9,10 +9,15 @@
 //! §1–3): per-slot `UnsafeCell` state, an atomic frame counter and work
 //! cursor, one barrier crossing per frame instead of two channel
 //! round-trips per node.
+//!
+//! All primitives come through [`crate::sync`] so the whole protocol can
+//! be model-checked: `RUSTFLAGS="--cfg loom"` swaps in loom's
+//! instrumented versions, and the `loom_tests` module next to
+//! [`super::Engine`] exhaustively explores the hand-off (DESIGN.md §3.10).
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Barrier;
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::cell::UnsafeCell;
+use crate::sync::Barrier;
 
 use crate::cluster::executor::{apply_time_cap, NodeExecutor};
 use crate::cluster::faults::FaultPlan;
@@ -75,7 +80,9 @@ pub(crate) struct NodeSlot {
 ///
 /// So only one thread (leader/worker) is interested in a slot's data at
 /// a time; the barriers provide the happens-before edges that publish the
-/// writes across the hand-offs.
+/// writes across the hand-offs. The loom models in
+/// `cluster::engine::loom_tests` check both halves of this argument
+/// (DESIGN.md §3.10).
 pub(crate) struct Shared {
     pub slots: Box<[UnsafeCell<NodeSlot>]>,
     pub faults: FaultPlan,
@@ -99,6 +106,9 @@ pub(crate) struct Shared {
 // frame protocol documented on [`Shared`] hands each slot to exactly one
 // thread at a time (the leader between frames, the single claiming
 // worker within a frame), with the barriers ordering the hand-offs.
+// Model-checked: `loom_tests::{frame_handoff_two_frames_single_worker,
+// cursor_claims_are_disjoint_and_complete}` explore every interleaving
+// of the hand-off under loom's C11 memory model.
 unsafe impl Sync for Shared {}
 
 impl Shared {
@@ -113,16 +123,27 @@ impl Shared {
             }
             let step = self.step.load(Ordering::Acquire);
             loop {
+                // Relaxed is sound here: `fetch_add` is a single atomic
+                // read-modify-write, so every worker still receives a
+                // distinct `base` — mutual exclusion over slot indices
+                // comes from RMW atomicity, not from memory ordering. The
+                // slot *contents* were published by the `start` barrier
+                // crossing, not by this counter. Proven by
+                // `loom_tests::cursor_claims_are_disjoint_and_complete`,
+                // which fails if any slot is claimed twice or missed.
                 let base = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
                 if base >= n {
                     break;
                 }
                 for rank in base..(base + self.chunk).min(n) {
-                    // SAFETY: `cursor` hands each index to exactly one
-                    // worker this frame, and the leader is parked on
-                    // `done` (see `Shared`).
-                    let slot = unsafe { &mut *self.slots[rank].get() };
-                    execute_slot(slot, rank, step, &self.faults);
+                    self.slots[rank].with_mut(|slot| {
+                        // SAFETY: `cursor` hands each index to exactly
+                        // one worker this frame, and the leader is parked
+                        // on `done` (see `Shared`); loom checks this
+                        // access region for overlap in `loom_tests`.
+                        let slot = unsafe { &mut *slot };
+                        execute_slot(slot, rank, step, &self.faults);
+                    });
                 }
             }
             self.done.wait();

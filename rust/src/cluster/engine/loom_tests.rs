@@ -1,0 +1,114 @@
+//! Loom model checking for the frame hand-off protocol.
+//!
+//! These run the *real* [`Engine`] — leader, worker pool, `UnsafeCell`
+//! slots, barriers — under loom's exhaustive scheduler, which explores
+//! every interleaving the C11 memory model permits and tracks every
+//! `UnsafeCell` access region for overlap. They exist to prove the two
+//! deliberately-Relaxed atomics (the `cursor.fetch_add` claim in
+//! `frame.rs` and the `frames()` diagnostic load in `mod.rs`) and the
+//! `unsafe impl Sync for Shared` aliasing argument (DESIGN.md §3.10).
+//!
+//! Run with:
+//! `RUSTFLAGS="--cfg loom" cargo test --manifest-path rust/loom-harness/Cargo.toml --lib --release loom`
+//!
+//! Only compiled under `--cfg loom`, so thread counts stay within loom's
+//! limits (≤ 4, counting the model's main thread as the engine leader).
+
+use super::*;
+use crate::cluster::presets;
+
+/// Deterministic executor: `units × scale` seconds, no noise, no state.
+struct Fixed(f64);
+
+impl NodeExecutor for Fixed {
+    fn execute(&mut self, units: u64) -> Result<f64> {
+        Ok(self.0 * units as f64)
+    }
+}
+
+/// Executor whose kernel always reports failure (not a panic — loom
+/// models must not unwind; the panic path is covered by the std test
+/// `tests::drop_after_worker_panic_joins_cleanly`).
+struct Broken;
+
+impl NodeExecutor for Broken {
+    fn execute(&mut self, _units: u64) -> Result<f64> {
+        Err(HfpmError::Cluster("kernel reported failure".into()))
+    }
+}
+
+fn engine(execs: Vec<Box<dyn NodeExecutor>>, workers: usize) -> Engine {
+    Engine::spawn_with_workers(
+        execs,
+        CommModel::new(presets::mini4()),
+        FaultPlan::none(),
+        workers,
+    )
+}
+
+/// The full hand-off, twice in a row: leader publishes slots, bumps
+/// `step`/`cursor`/`frame`, crosses `start`; the worker claims and
+/// executes every slot; both cross `done`; the leader folds. Every
+/// interleaving must yield the exact deterministic times in both frames
+/// — any missed publication (stale `task`, lost `result`) or barrier
+/// misordering shows up as a wrong fold or a loom-detected overlapping
+/// `UnsafeCell` access. Also pins the `frames()` Relaxed load: the count
+/// must read exactly 1 then 2 from the leader with no stronger ordering.
+#[test]
+fn frame_handoff_two_frames_single_worker() {
+    loom::model(|| {
+        let execs: Vec<Box<dyn NodeExecutor>> =
+            vec![Box::new(Fixed(1.0)), Box::new(Fixed(2.0))];
+        let mut e = engine(execs, 1);
+        let r1 = e.run_1d(&[3, 5]).expect("frame 1");
+        assert_eq!(r1.times, vec![3.0, 10.0]);
+        assert_eq!(e.frames(), 1);
+        let r2 = e.run_1d(&[4, 0]).expect("frame 2");
+        assert_eq!(r2.times, vec![4.0, 0.0]);
+        assert_eq!(e.frames(), 2);
+    });
+}
+
+/// Two workers race the Relaxed `cursor.fetch_add` over three slots
+/// (chunk = 1). Exactly one worker must execute each slot exactly once:
+/// a double claim re-runs `execute_slot`, whose `task.take()` then
+/// overwrites the result with `Idle` (time 0.0), failing the assert —
+/// and loom independently flags the overlapping slot access. This is the
+/// proof cited by the Relaxed ordering comment in `frame.rs`.
+#[test]
+fn cursor_claims_are_disjoint_and_complete() {
+    let mut builder = loom::model::Builder::new();
+    // bounded exhaustive search: 3 threads × 2 barrier crossings blows
+    // up unbounded; 2 preemptions still covers every claim interleaving
+    builder.preemption_bound = Some(2);
+    builder.check(|| {
+        let execs: Vec<Box<dyn NodeExecutor>> = vec![
+            Box::new(Fixed(1.0)),
+            Box::new(Fixed(1.0)),
+            Box::new(Fixed(1.0)),
+        ];
+        let mut e = engine(execs, 2);
+        let r = e.run_1d(&[7, 9, 11]).expect("frame");
+        assert_eq!(r.times, vec![7.0, 9.0, 11.0]);
+    });
+}
+
+/// A failed frame must leave the pool healthy, and `Drop` must join the
+/// worker from every reachable state: shutdown-store → `start` release →
+/// worker observes the flag and exits. A lost shutdown signal or a
+/// worker re-entering the claim loop deadlocks the model, which loom
+/// reports as a hang.
+#[test]
+fn shutdown_joins_workers_after_failed_frame() {
+    loom::model(|| {
+        let execs: Vec<Box<dyn NodeExecutor>> =
+            vec![Box::new(Fixed(1.0)), Box::new(Broken)];
+        let mut e = engine(execs, 1);
+        let err = e.run_1d(&[2, 2]).expect_err("broken rank fails the step");
+        match err {
+            HfpmError::WorkerFailed { rank, .. } => assert_eq!(rank, 1),
+            other => panic!("unexpected error {other}"),
+        }
+        drop(e);
+    });
+}

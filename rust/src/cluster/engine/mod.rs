@@ -16,11 +16,13 @@
 //! seed the virtual times are bit-identical to the legacy runtime's.
 
 mod frame;
+#[cfg(all(loom, test))]
+mod loom_tests;
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier};
-use std::thread::JoinHandle;
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::cell::UnsafeCell;
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{Arc, Barrier};
 
 pub(crate) use frame::Task;
 use frame::{NodeSlot, Shared, SlotResult};
@@ -89,11 +91,7 @@ impl Engine {
             .any(|e| e.static_power_w() > 0.0 || e.dynamic_energy_j(1 << 20, 1.0) > 0.0);
         let n = executors.len();
         let workers = if workers == 0 {
-            n.min(
-                std::thread::available_parallelism()
-                    .map(|c| c.get())
-                    .unwrap_or(1),
-            )
+            n.min(thread::available_parallelism())
         } else {
             workers.min(n)
         };
@@ -125,9 +123,7 @@ impl Engine {
         let pool = (0..workers)
             .map(|w| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("engine-{w}"))
-                    .spawn(move || shared.worker_loop())
+                thread::spawn_named(format!("engine-{w}"), move || shared.worker_loop())
                     .expect("spawn engine worker")
             })
             .collect();
@@ -158,6 +154,15 @@ impl Engine {
     }
 
     /// Frames executed so far.
+    ///
+    /// Relaxed is sound: `frame` is written only by the leader inside
+    /// `run_step(&mut self)`, so any caller of this `&self` accessor is
+    /// sequenced after those writes by Rust's borrow rules alone — no
+    /// cross-thread edge is needed, and the workers never read `frame`.
+    /// The frame hand-off itself synchronizes through the barriers, not
+    /// this counter; proven by
+    /// `loom_tests::frame_handoff_two_frames_single_worker`, which keeps
+    /// this load Relaxed and still observes exact counts.
     pub fn frames(&self) -> usize {
         self.shared.frame.load(Ordering::Relaxed)
     }
@@ -225,11 +230,14 @@ impl Engine {
         self.steps_run += 1;
 
         for (rank, t) in tasks.iter().enumerate() {
-            // SAFETY: between frames every worker is parked on (or headed
-            // to) `start`, so the leader owns the slots (see `Shared`).
-            let slot = unsafe { &mut *self.shared.slots[rank].get() };
-            slot.task = *t;
-            slot.result = SlotResult::Idle;
+            self.shared.slots[rank].with_mut(|slot| {
+                // SAFETY: between frames every worker is parked on (or
+                // headed to) `start`, so the leader owns the slots (see
+                // `Shared`); loom checks the region in `loom_tests`.
+                let slot = unsafe { &mut *slot };
+                slot.task = *t;
+                slot.result = SlotResult::Idle;
+            });
         }
         self.shared.step.store(step, Ordering::Release);
         self.shared.cursor.store(0, Ordering::Release);
@@ -242,9 +250,15 @@ impl Engine {
         let mut energies = vec![0.0f64; n];
         let mut failure: Option<HfpmError> = None;
         for rank in 0..n {
-            // SAFETY: the frame is over; the leader owns the slots again.
-            let slot = unsafe { &mut *self.shared.slots[rank].get() };
-            match std::mem::replace(&mut slot.result, SlotResult::Idle) {
+            let result = self.shared.slots[rank].with_mut(|slot| {
+                // SAFETY: the frame is over (the leader returned from
+                // `done.wait()`), so the leader owns the slots again and
+                // the barrier published the workers' writes (see
+                // `Shared`); loom checks the region in `loom_tests`.
+                let slot = unsafe { &mut *slot };
+                std::mem::replace(&mut slot.result, SlotResult::Idle)
+            });
+            match result {
                 SlotResult::Idle => {}
                 SlotResult::Done {
                     time_s,
@@ -324,6 +338,8 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         // release the pool through `start`; workers see the flag and exit
+        // (checked end-to-end, including after a failed frame, by
+        // `loom_tests::shutdown_joins_workers_after_failed_frame`)
         self.shared.start.wait();
         for h in self.pool.drain(..) {
             let _ = h.join();
@@ -465,5 +481,34 @@ mod tests {
         // the pool survives the panic; healthy ranks keep serving
         let r = e.run_1d(&[10, 0, 10, 10]).unwrap();
         assert!(r.times[0] > 0.0 && r.times[2] > 0.0);
+    }
+
+    #[test]
+    fn drop_joins_pool_without_running_a_frame() {
+        // shutdown must work on an engine that never ran a step: the
+        // workers are parked on `start` and Drop's single `start.wait()`
+        // has to release every one of them into the shutdown check
+        let e = mini_engine(FaultPlan::none());
+        assert!(e.worker_threads() >= 1);
+        drop(e); // hangs the test binary if any worker fails to join
+    }
+
+    #[test]
+    fn drop_after_worker_panic_joins_cleanly() {
+        // a panicking executor mid-frame must not poison the pool: the
+        // panic is caught inside the slot, the frame completes, and Drop
+        // afterwards joins every worker instead of hanging the barrier
+        struct Bomb;
+        impl NodeExecutor for Bomb {
+            fn execute(&mut self, _units: u64) -> Result<f64> {
+                panic!("kernel exploded");
+            }
+        }
+        let spec = presets::mini4();
+        let execs: Vec<Box<dyn NodeExecutor>> =
+            vec![Box::new(Bomb), Box::new(Bomb), Box::new(Bomb), Box::new(Bomb)];
+        let mut e = Engine::spawn_with_workers(execs, CommModel::new(spec), FaultPlan::none(), 2);
+        assert!(e.run_1d(&[10; 4]).is_err());
+        drop(e); // hangs the test binary if the barrier deadlocks
     }
 }

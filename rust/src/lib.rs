@@ -41,12 +41,26 @@
 //!   ([`cluster::energy`]).
 //!
 //! Support modules: [`config`] (mini-TOML), [`bench_harness`]
-//! (criterion-lite), [`testkit`] (proptest-lite), [`util`].
+//! (criterion-lite), [`testkit`] (proptest-lite), [`util`], and [`sync`]
+//! — the std/loom synchronization facade behind the concurrency-checked
+//! modules (DESIGN.md §3.10).
+
+// The lint wall. Every unsafe operation must sit in its own `unsafe`
+// block (even inside `unsafe fn`), carry a `// SAFETY:` comment
+// (clippy), and the debugging macros must never ship. The in-repo rules
+// that rustc/clippy can't express — float orderings, wall-clock use in
+// virtual-clock modules, facade bypasses, unwraps on the hot protocols —
+// are enforced by `cargo run -p xtask -- lint` (DESIGN.md §3.10).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+#![deny(clippy::dbg_macro)]
+#![deny(clippy::todo)]
 
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod error;
+pub mod sync;
 pub mod testkit;
 pub mod util;
 

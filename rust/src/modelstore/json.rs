@@ -264,7 +264,11 @@ impl Parser<'_> {
                     // copy one UTF-8 scalar (multi-byte sequences included)
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| self.err("invalid utf-8 in string"))?;
-                    let c = rest.chars().next().unwrap();
+                    // `peek()` returned `Some`, so `rest` is non-empty —
+                    // but degrade instead of unwrapping on a hot parser
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("unterminated string"));
+                    };
                     out.push(c);
                     self.pos += c.len_utf8();
                 }

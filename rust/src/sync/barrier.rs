@@ -1,0 +1,65 @@
+//! Loom-only `Barrier`: loom does not model `std::sync::Barrier`, so the
+//! loom build gets a classic generation-counting rebuild on the facade's
+//! (loom-instrumented) `Mutex` + `Condvar`. Semantics match std's: `wait`
+//! blocks until `n` threads have called it, exactly one of them observes
+//! `is_leader() == true` per generation, and the barrier is reusable.
+
+use super::{Condvar, Mutex};
+
+#[derive(Debug)]
+pub struct Barrier {
+    lock: Mutex<BarrierState>,
+    cvar: Condvar,
+    n: usize,
+}
+
+#[derive(Debug)]
+struct BarrierState {
+    count: usize,
+    generation: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BarrierWaitResult(bool);
+
+impl BarrierWaitResult {
+    pub fn is_leader(&self) -> bool {
+        self.0
+    }
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Barrier {
+        Barrier {
+            lock: Mutex::new(BarrierState {
+                count: 0,
+                generation: 0,
+            }),
+            cvar: Condvar::new(),
+            n,
+        }
+    }
+
+    pub fn wait(&self) -> BarrierWaitResult {
+        let mut state = self.lock.lock().expect("barrier lock never poisoned");
+        if self.n <= 1 {
+            return BarrierWaitResult(true);
+        }
+        let generation = state.generation;
+        state.count += 1;
+        if state.count == self.n {
+            state.count = 0;
+            state.generation = state.generation.wrapping_add(1);
+            self.cvar.notify_all();
+            BarrierWaitResult(true)
+        } else {
+            while state.generation == generation {
+                state = self
+                    .cvar
+                    .wait(state)
+                    .expect("barrier lock never poisoned");
+            }
+            BarrierWaitResult(false)
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! `UnsafeCell` with loom's closure-based access API in both builds.
+//!
+//! Loom's `UnsafeCell` tracks every access as a region so the model
+//! checker can flag overlapping mutable access; its API hands the
+//! closure a raw pointer (`with`/`with_mut`) rather than exposing
+//! `get()`. This wrapper gives the engine the same shape in both builds:
+//! the std side is a `#[repr(transparent)]` pass-through whose `with_mut`
+//! simply calls the closure with the raw pointer, compiling to exactly
+//! the code `&mut *cell.get()` produced before the facade existed.
+//!
+//! Like loom's, `with`/`with_mut` are *safe* to call — the unsafety is in
+//! dereferencing the pointer inside the closure, where the caller states
+//! the aliasing argument next to the access (and loom verifies the
+//! access region does not overlap another).
+
+#[cfg(loom)]
+pub struct UnsafeCell<T>(loom::cell::UnsafeCell<T>);
+
+#[cfg(loom)]
+impl<T> UnsafeCell<T> {
+    pub fn new(data: T) -> UnsafeCell<T> {
+        UnsafeCell(loom::cell::UnsafeCell::new(data))
+    }
+
+    /// Run `f` with a shared (read-only) pointer to the cell's value.
+    /// Loom flags the access if it overlaps a mutable one.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        self.0.with(f)
+    }
+
+    /// Run `f` with an exclusive pointer to the cell's value. Loom flags
+    /// the access if it overlaps any other access to the same cell.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        self.0.with_mut(f)
+    }
+}
+
+#[cfg(not(loom))]
+#[repr(transparent)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+// One opaque Debug for both builds: never reads the value (that would be
+// an access) and never requires `T: Debug`.
+impl<T> std::fmt::Debug for UnsafeCell<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("UnsafeCell { .. }")
+    }
+}
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub fn new(data: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(data))
+    }
+
+    /// Run `f` with a shared (read-only) pointer to the cell's value.
+    /// Dereferencing it is unsafe: the caller's protocol must keep every
+    /// mutable access from overlapping `f`.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Run `f` with an exclusive pointer to the cell's value.
+    /// Dereferencing it is unsafe: the caller's protocol must keep any
+    /// other access to this cell from overlapping `f` (the engine's frame
+    /// protocol, DESIGN.md §3.10, provides this via the cursor RMW and
+    /// the frame barriers).
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}

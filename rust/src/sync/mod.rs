@@ -1,0 +1,152 @@
+//! Synchronization facade: `std` by default, loom's instrumented doubles
+//! under `--cfg loom`.
+//!
+//! Every module that participates in a hand-checked concurrency protocol
+//! — the frame-synchronized engine (`cluster::engine`) and the model-store
+//! service (`modelstore::{snapshot, service}`) — imports its primitives
+//! from here instead of `std::sync`/`std::thread`/`std::cell`. The default
+//! build re-exports `std` unchanged (zero cost, zero dependencies). With
+//! `RUSTFLAGS="--cfg loom"` the same code compiles against
+//! [loom](https://docs.rs/loom)'s model-checked versions, and the
+//! `loom_tests` modules next to each protocol explore every interleaving
+//! the C11 memory model allows — see DESIGN.md §3.10 for how to run the
+//! lane locally (`rust/loom-harness/` owns the loom dependency so the
+//! default workspace's dependency graph stays empty).
+//!
+//! What the facade deliberately adds over raw `std`:
+//!
+//! - [`cell::UnsafeCell`] exposes loom's closure-based `with_mut` API in
+//!   both builds, so every unsafe slot access is a region loom can track;
+//! - [`Barrier`] is `std`'s by default and a `Mutex`+`Condvar` rebuild
+//!   under loom (loom does not model `std::sync::Barrier`);
+//! - [`mpsc`] is `std`'s by default and a bounded-queue rebuild under
+//!   loom (loom has no `sync_channel`); under loom `recv_timeout` never
+//!   times out — there is no virtual time in a loom model, so timeout
+//!   paths are idle-only optimizations that the model leaves unexplored;
+//! - [`thread::spawn_named`] and [`thread::available_parallelism`] paper
+//!   over `std::thread::Builder`, which loom does not provide.
+//!
+//! The `facade` lint (`cargo run -p xtask -- lint`) keeps the migrated
+//! modules from quietly reintroducing direct `std::sync`/`std::thread`
+//! imports, which would compile fine but escape the model checker.
+
+pub mod cell;
+
+#[cfg(loom)]
+mod barrier;
+#[cfg(loom)]
+pub mod mpsc;
+
+#[cfg(loom)]
+pub use self::barrier::{Barrier, BarrierWaitResult};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::*;
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Barrier, BarrierWaitResult, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::*;
+}
+
+#[cfg(not(loom))]
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+/// Thread spawn/join through the facade. Only the surface the engine and
+/// the store service actually use — named spawns and pool sizing.
+pub mod thread {
+    #[cfg(loom)]
+    pub use loom::thread::{yield_now, JoinHandle};
+    #[cfg(not(loom))]
+    pub use std::thread::{yield_now, JoinHandle};
+
+    /// `std::thread::Builder::new().name(..).spawn(..)`; loom has no
+    /// `Builder`, so there the name is dropped and the spawn is
+    /// infallible (wrapped in `Ok` to keep one signature).
+    #[cfg(not(loom))]
+    pub fn spawn_named<F, T>(name: impl Into<String>, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new().name(name.into()).spawn(f)
+    }
+
+    #[cfg(loom)]
+    pub fn spawn_named<F, T>(name: impl Into<String>, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let _ = name.into();
+        Ok(loom::thread::spawn(f))
+    }
+
+    /// `std::thread::available_parallelism` flattened to `usize` (1 when
+    /// the platform cannot say). Under loom it is a fixed 2: the host's
+    /// core count must never change which schedules the model explores.
+    #[cfg(not(loom))]
+    pub fn available_parallelism() -> usize {
+        std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1)
+    }
+
+    #[cfg(loom)]
+    pub fn available_parallelism() -> usize {
+        2
+    }
+}
+
+// The facade itself is exercised indirectly by every engine/service test;
+// the loom-side rebuilds (`barrier`, `mpsc`) additionally carry their own
+// model tests here, next to the primitives they check.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::mpsc;
+    use super::thread;
+    use super::{Arc, Barrier};
+
+    #[test]
+    fn loom_barrier_releases_all_parties_each_generation() {
+        loom::model(|| {
+            let b = Arc::new(Barrier::new(2));
+            let b2 = Arc::clone(&b);
+            let h = thread::spawn_named("party", move || {
+                b2.wait();
+                b2.wait();
+            })
+            .expect("spawn");
+            b.wait();
+            b.wait();
+            h.join().expect("party thread exits");
+        });
+    }
+
+    #[test]
+    fn loom_bounded_channel_blocks_full_senders_and_drops_nothing() {
+        loom::model(|| {
+            let (tx, rx) = mpsc::sync_channel::<u32>(1);
+            let tx2 = tx.clone();
+            let h = thread::spawn_named("producer", move || {
+                tx2.send(1).expect("receiver alive");
+                tx2.send(2).expect("receiver alive");
+            })
+            .expect("spawn");
+            drop(tx);
+            let a = rx.recv().expect("first");
+            let b = rx.recv().expect("second");
+            assert_eq!(a + b, 3, "both sends arrive exactly once");
+            assert!(rx.recv().is_err(), "disconnect after last sender drops");
+            h.join().expect("producer exits");
+        });
+    }
+}

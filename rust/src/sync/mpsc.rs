@@ -1,0 +1,215 @@
+//! Loom-only mpsc channels: loom does not ship `std::sync::mpsc`, so the
+//! loom build gets a minimal rebuild on the facade's instrumented
+//! `Mutex` + `Condvar`. Only the surface the store service uses exists:
+//! `sync_channel` (bounded, blocking send — the zero-drop path),
+//! `channel` (unbounded — the flush-ack path), `send`/`recv`/`try_recv`/
+//! `recv_timeout`, clone-able senders, and disconnect on either side.
+//!
+//! Two deliberate deviations from std, both model-safe:
+//!
+//! - `recv_timeout` never times out: a loom model has no clock, so the
+//!   timeout arm (the writer's idle-commit path) is simply unexplored —
+//!   it is an optimization, not a correctness edge.
+//! - error types are re-used from `std::sync::mpsc`, so call sites match
+//!   on the same `SendError`/`RecvError`/`TryRecvError`/`RecvTimeoutError`
+//!   in both builds.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+pub use std::sync::mpsc::{RecvError, RecvTimeoutError, SendError, TryRecvError};
+
+use super::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Chan<T> {
+    state: Mutex<State<T>>,
+    /// Woken when an item arrives or the last sender disconnects.
+    recv_cvar: Condvar,
+    /// Woken when an item is taken or the receiver disconnects.
+    send_cvar: Condvar,
+    /// `None` = unbounded (`channel`), `Some(n)` = bounded (`sync_channel`).
+    capacity: Option<usize>,
+}
+
+impl<T> Chan<T> {
+    fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut state = self.state.lock().expect("channel lock never poisoned");
+        if let Some(cap) = self.capacity {
+            while state.rx_alive && state.queue.len() >= cap {
+                state = self
+                    .send_cvar
+                    .wait(state)
+                    .expect("channel lock never poisoned");
+            }
+        }
+        if !state.rx_alive {
+            return Err(SendError(value));
+        }
+        state.queue.push_back(value);
+        self.recv_cvar.notify_all();
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<T, RecvError> {
+        let mut state = self.state.lock().expect("channel lock never poisoned");
+        loop {
+            if let Some(value) = state.queue.pop_front() {
+                self.send_cvar.notify_all();
+                return Ok(value);
+            }
+            if state.senders == 0 {
+                return Err(RecvError);
+            }
+            state = self
+                .recv_cvar
+                .wait(state)
+                .expect("channel lock never poisoned");
+        }
+    }
+
+    fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut state = self.state.lock().expect("channel lock never poisoned");
+        if let Some(value) = state.queue.pop_front() {
+            self.send_cvar.notify_all();
+            Ok(value)
+        } else if state.senders == 0 {
+            Err(TryRecvError::Disconnected)
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+
+    fn drop_sender(&self) {
+        let mut state = self.state.lock().expect("channel lock never poisoned");
+        state.senders -= 1;
+        if state.senders == 0 {
+            self.recv_cvar.notify_all();
+        }
+    }
+
+    fn drop_receiver(&self) {
+        let mut state = self.state.lock().expect("channel lock never poisoned");
+        state.rx_alive = false;
+        self.send_cvar.notify_all();
+    }
+}
+
+pub struct SyncSender<T>(Arc<Chan<T>>);
+
+pub struct Sender<T>(Arc<Chan<T>>);
+
+pub struct Receiver<T>(Arc<Chan<T>>);
+
+impl<T> SyncSender<T> {
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        self.0.send(value)
+    }
+}
+
+impl<T> Sender<T> {
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        self.0.send(value)
+    }
+}
+
+impl<T> Receiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        self.0.recv()
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        self.0.try_recv()
+    }
+
+    /// Loom has no clock: blocks like `recv`, mapping disconnect to the
+    /// timeout-flavored error type so std-shaped match arms still work.
+    pub fn recv_timeout(&self, _timeout: Duration) -> Result<T, RecvTimeoutError> {
+        self.0.recv().map_err(|RecvError| RecvTimeoutError::Disconnected)
+    }
+}
+
+fn clone_sender<T>(chan: &Arc<Chan<T>>) -> Arc<Chan<T>> {
+    let mut state = chan.state.lock().expect("channel lock never poisoned");
+    state.senders += 1;
+    drop(state);
+    Arc::clone(chan)
+}
+
+impl<T> Clone for SyncSender<T> {
+    fn clone(&self) -> Self {
+        SyncSender(clone_sender(&self.0))
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Sender(clone_sender(&self.0))
+    }
+}
+
+impl<T> Drop for SyncSender<T> {
+    fn drop(&mut self) {
+        self.0.drop_sender();
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        self.0.drop_sender();
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.0.drop_receiver();
+    }
+}
+
+impl<T> std::fmt::Debug for SyncSender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SyncSender")
+    }
+}
+
+impl<T> std::fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Sender")
+    }
+}
+
+impl<T> std::fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Receiver")
+    }
+}
+
+fn new_chan<T>(capacity: Option<usize>) -> Arc<Chan<T>> {
+    Arc::new(Chan {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            rx_alive: true,
+        }),
+        recv_cvar: Condvar::new(),
+        send_cvar: Condvar::new(),
+        capacity,
+    })
+}
+
+/// Bounded channel: `send` blocks while `bound` items are queued.
+pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+    let chan = new_chan(Some(bound.max(1)));
+    (SyncSender(Arc::clone(&chan)), Receiver(chan))
+}
+
+/// Unbounded channel: `send` never blocks.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let chan = new_chan(None);
+    (Sender(Arc::clone(&chan)), Receiver(chan))
+}

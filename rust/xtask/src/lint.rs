@@ -1,0 +1,682 @@
+//! The lint engine: a comment- and string-aware textual scanner over the
+//! repository's Rust sources.
+//!
+//! Five rules, each one a concurrency- or determinism-invariant this
+//! codebase fixed by hand at least once (see DESIGN.md §3.10):
+//!
+//! - `float-ord` — no `partial_cmp` on the float hot paths. A NaN from a
+//!   noisy observation must order totally (`total_cmp`), not panic or
+//!   silently missort.
+//! - `wall-clock` — no `Instant::now`/`SystemTime::now` inside the
+//!   virtual-clock modules (`cluster/`, `adapt/`, `biobj/`,
+//!   `partition/`). Simulated time comes from `VirtualClock`; wall time
+//!   leaking in makes runs irreproducible.
+//! - `safety-comment` — every `unsafe` token is preceded by (or carries)
+//!   a `// SAFETY:` comment stating the aliasing/validity argument.
+//! - `facade` — the concurrency-checked modules (`cluster/engine/`,
+//!   `modelstore/{snapshot,service}.rs`) must import synchronization
+//!   through `crate::sync`, never `std::sync`/`std::thread`/
+//!   `std::cell::UnsafeCell` directly, or the loom lane silently stops
+//!   covering them. Test modules are exempt.
+//! - `no-unwrap` — no `.unwrap()` in non-test code of `cluster/engine/`
+//!   and `modelstore/`: those paths run under worker pools and services
+//!   where a panic poisons shared state; errors must propagate.
+//!
+//! Suppression goes through the allowlist file (`rust/xtask/lint.allow`):
+//! one entry per line, `<rule> <path-suffix> [line-substring]`. An entry
+//! suppresses a diagnostic when the rule matches, the diagnostic's
+//! repo-relative path ends with the suffix, and (when given) the source
+//! line contains the substring. `#` starts a comment.
+//!
+//! The scanner strips line comments, block comments, string literals
+//! (including `r#"…"#` raw strings and multi-line strings), and char
+//! literals before matching, so prose and test fixtures never trip a
+//! rule — and tracks `#[cfg(test)]`-module brace regions so the rules
+//! with a non-test scope skip them.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers, in report order.
+pub const RULE_FLOAT_ORD: &str = "float-ord";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_SAFETY_COMMENT: &str = "safety-comment";
+pub const RULE_FACADE: &str = "facade";
+pub const RULE_NO_UNWRAP: &str = "no-unwrap";
+
+/// Files that must route synchronization through `crate::sync`.
+const FACADE_FILES: &[&str] = &[
+    "rust/src/cluster/engine/frame.rs",
+    "rust/src/cluster/engine/mod.rs",
+    "rust/src/modelstore/snapshot.rs",
+    "rust/src/modelstore/service.rs",
+];
+
+/// Scopes (repo-relative path prefixes) per rule.
+const FLOAT_SCOPES: &[&str] = &[
+    "rust/src/",
+    "rust/benches/",
+    "rust/tests/",
+    "rust/xla-stub/src/",
+    "examples/",
+];
+const WALL_CLOCK_SCOPES: &[&str] = &[
+    "rust/src/cluster/",
+    "rust/src/adapt/",
+    "rust/src/biobj/",
+    "rust/src/partition/",
+];
+const SAFETY_SCOPE: &str = "rust/src/";
+const UNWRAP_SCOPES: &[&str] = &["rust/src/cluster/engine/", "rust/src/modelstore/"];
+
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub text: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{rule}: {file}:{line}: {text}",
+            rule = self.rule,
+            file = self.file,
+            line = self.line,
+            text = self.text
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub line_contains: Option<String>,
+}
+
+impl AllowEntry {
+    fn matches(&self, d: &Diagnostic) -> bool {
+        self.rule == d.rule
+            && d.file.ends_with(&self.path_suffix)
+            && self
+                .line_contains
+                .as_ref()
+                .map(|s| d.text.contains(s.as_str()))
+                .unwrap_or(true)
+    }
+}
+
+/// Parse an allowlist file's text. Unparseable lines are skipped — a
+/// malformed entry must never silently suppress diagnostics.
+pub fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    text.lines()
+        .filter_map(|line| {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                return None;
+            }
+            let mut it = line.split_whitespace();
+            let rule = it.next()?.to_string();
+            let path_suffix = it.next()?.to_string();
+            let rest: Vec<&str> = it.collect();
+            let line_contains = if rest.is_empty() {
+                None
+            } else {
+                Some(rest.join(" "))
+            };
+            Some(AllowEntry {
+                rule,
+                path_suffix,
+                line_contains,
+            })
+        })
+        .collect()
+}
+
+/// Lint every `.rs` file under `root` (skipping `target/`, dot-dirs, and
+/// the xtask crate itself, whose source spells the patterns it hunts).
+/// Returns diagnostics not covered by `allow`, sorted by file and line.
+pub fn run_lint(root: &Path, allow: &[AllowEntry]) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut out = Vec::new();
+    for path in files {
+        let rel = rel_path(root, &path);
+        if rel.starts_with("rust/xtask/") {
+            continue;
+        }
+        let text = fs::read_to_string(&path)?;
+        lint_file(&rel, &text, &mut out);
+    }
+    out.retain(|d| !allow.iter().any(|a| a.matches(d)));
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name.starts_with('.') || name == "target" || name == "node_modules" {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn in_any_scope(rel: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| rel.starts_with(s))
+}
+
+/// Lexer state carried across lines of one file.
+#[derive(Default)]
+struct ScanState {
+    in_block_comment: bool,
+    in_string: bool,
+    /// `Some(n)` while inside a raw string closed by `"` + n `#`s.
+    in_raw_string: Option<usize>,
+}
+
+/// One source line, reduced to the parts the rules look at.
+struct Line {
+    /// Code with comments and string/char literals stripped (literals
+    /// are replaced by a space so token boundaries survive).
+    code: String,
+    /// The raw source line (SAFETY comments are matched on this).
+    raw: String,
+    /// Inside a `#[cfg(test)]`-style module region.
+    in_test: bool,
+}
+
+fn lint_file(rel: &str, text: &str, out: &mut Vec<Diagnostic>) {
+    let lines = scan_lines(text);
+
+    let float_scope = in_any_scope(rel, FLOAT_SCOPES);
+    let wall_scope = in_any_scope(rel, WALL_CLOCK_SCOPES);
+    let safety_scope = rel.starts_with(SAFETY_SCOPE);
+    let facade_scope = FACADE_FILES.contains(&rel);
+    let unwrap_scope = in_any_scope(rel, UNWRAP_SCOPES);
+
+    if !(float_scope || wall_scope || safety_scope || facade_scope || unwrap_scope) {
+        return;
+    }
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let mut push = |rule: &'static str| {
+            out.push(Diagnostic {
+                rule,
+                file: rel.to_string(),
+                line: lineno,
+                text: line.raw.trim().to_string(),
+            });
+        };
+        let code = line.code.as_str();
+
+        if float_scope && code.contains("partial_cmp") {
+            push(RULE_FLOAT_ORD);
+        }
+        if wall_scope && (code.contains("Instant::now") || code.contains("SystemTime::now")) {
+            push(RULE_WALL_CLOCK);
+        }
+        if safety_scope && has_word(code, "unsafe") && !has_safety_comment(&lines, idx) {
+            push(RULE_SAFETY_COMMENT);
+        }
+        if facade_scope
+            && !line.in_test
+            && (code.contains("std::sync")
+                || code.contains("std::thread")
+                || code.contains("std::cell::UnsafeCell"))
+        {
+            push(RULE_FACADE);
+        }
+        if unwrap_scope && !line.in_test && code.contains(".unwrap()") {
+            push(RULE_NO_UNWRAP);
+        }
+    }
+}
+
+/// `// SAFETY:` on the line itself, or in the contiguous run of
+/// comment/attribute/blank lines directly above it.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].raw.contains("SAFETY:") {
+        return true;
+    }
+    for line in lines[..idx].iter().rev() {
+        let t = line.raw.trim();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") {
+                return true;
+            }
+        } else if !(t.is_empty() || t.starts_with("#[")) {
+            return false;
+        }
+    }
+    false
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `code` contain `word` with non-word characters on both sides?
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let abs = start + pos;
+        let end = abs + word.len();
+        let before_ok = abs == 0 || !is_word_byte(bytes[abs - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// First pass: strip each line and track `#[cfg(test)]` module regions
+/// by brace depth.
+fn scan_lines(text: &str) -> Vec<Line> {
+    let mut state = ScanState::default();
+    let mut depth: i64 = 0;
+    // entry depths of open test-module regions (nested mods supported)
+    let mut test_regions: Vec<i64> = Vec::new();
+    let mut pending_test_attr = false;
+    let mut out = Vec::new();
+
+    for raw in text.lines() {
+        let code = strip_line(raw, &mut state);
+        let trimmed = code.trim();
+        let depth_before = depth;
+
+        let is_test_attr =
+            trimmed.starts_with("#[") && trimmed.contains("cfg(") && trimmed.contains("test");
+        if is_test_attr {
+            pending_test_attr = true;
+        }
+        let is_mod_decl = trimmed.starts_with("mod ")
+            || trimmed.starts_with("pub mod ")
+            || trimmed.starts_with("pub(crate) mod ")
+            || (is_test_attr && trimmed.contains(" mod "));
+        if pending_test_attr && is_mod_decl {
+            pending_test_attr = false;
+            // `mod x;` declares an out-of-line module — nothing to track
+            // here (the module file is scoped by its own path)
+            if trimmed.contains('{') {
+                test_regions.push(depth_before);
+            }
+        } else if pending_test_attr
+            && !is_test_attr
+            && !(trimmed.is_empty() || trimmed.starts_with("#["))
+        {
+            // the attribute turned out to gate something other than a
+            // `mod` (a fn, an impl): no region
+            pending_test_attr = false;
+        }
+
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        depth += opens - closes;
+
+        out.push(Line {
+            code,
+            raw: raw.to_string(),
+            in_test: !test_regions.is_empty(),
+        });
+
+        while let Some(&entry) = test_regions.last() {
+            if depth <= entry {
+                test_regions.pop();
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Strip comments, string literals, and char literals from one line,
+/// carrying multi-line comment/string state in `state`. Stripped spans
+/// collapse to a single space.
+fn strip_line(raw: &str, state: &mut ScanState) -> String {
+    let cs: Vec<char> = raw.chars().collect();
+    let n = cs.len();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+
+    while i < n {
+        if state.in_block_comment {
+            if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                state.in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(hashes) = state.in_raw_string {
+            if cs[i] == '"' && cs[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes {
+                state.in_raw_string = None;
+                out.push(' ');
+                i += 1 + hashes;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if state.in_string {
+            match cs[i] {
+                '\\' => i += 2, // skip the escaped char (incl. `\"`)
+                '"' => {
+                    state.in_string = false;
+                    out.push(' ');
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+            continue;
+        }
+
+        let c = cs[i];
+        match c {
+            '/' if i + 1 < n && cs[i + 1] == '/' => break, // line comment
+            '/' if i + 1 < n && cs[i + 1] == '*' => {
+                state.in_block_comment = true;
+                out.push(' ');
+                i += 2;
+            }
+            '"' => {
+                state.in_string = true;
+                i += 1;
+            }
+            'r' | 'b' => {
+                // raw string r"…", r#"…"#, br"…" — count hashes between
+                // the prefix and the opening quote
+                let mut j = i + 1;
+                if c == 'b' && j < n && cs[j] == 'r' {
+                    j += 1;
+                }
+                let mut hashes = 0;
+                while j < n && cs[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                let prefix_is_raw = j > i + usize::from(c == 'b') && cs[i + usize::from(c == 'b')] == 'r';
+                if prefix_is_raw && j < n && cs[j] == '"' {
+                    state.in_raw_string = Some(hashes);
+                    i = j + 1;
+                } else if c == 'b' && i + 1 < n && cs[i + 1] == '"' {
+                    state.in_string = true;
+                    i += 2;
+                } else if c == 'b' && i + 1 < n && cs[i + 1] == '\'' {
+                    i += 1; // byte char: let the '\'' arm handle it
+                    out.push(c);
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: a literal closes within a few
+                // chars (`'x'`, `'\n'`, `'\u{7f}'`); a lifetime never has
+                // a closing quote before a non-ident char
+                if i + 1 < n && cs[i + 1] == '\\' {
+                    // escaped char literal: skip to the closing quote
+                    let mut j = i + 2;
+                    while j < n {
+                        if cs[j] == '\\' {
+                            j += 2;
+                            continue;
+                        }
+                        if cs[j] == '\'' {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    out.push(' ');
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && cs[i + 2] == '\'' {
+                    // one-char literal, e.g. '{'
+                    out.push(' ');
+                    i += 3;
+                } else {
+                    // lifetime: keep scanning normally
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{SystemTime, UNIX_EPOCH};
+
+    /// Tiny self-contained temp tree (no tempfile crate in a zero-dep
+    /// workspace): unique per test via pid + nanos, removed on drop.
+    struct TempTree {
+        root: PathBuf,
+    }
+
+    impl TempTree {
+        fn new(tag: &str) -> TempTree {
+            let nanos = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0);
+            let root = std::env::temp_dir().join(format!(
+                "xtask-lint-{tag}-{}-{}",
+                std::process::id(),
+                nanos
+            ));
+            fs::create_dir_all(&root).expect("create temp tree");
+            TempTree { root }
+        }
+
+        fn write(&self, rel: &str, content: &str) {
+            let path = self.root.join(rel);
+            if let Some(parent) = path.parent() {
+                fs::create_dir_all(parent).expect("create parent");
+            }
+            fs::write(path, content).expect("write seed file");
+        }
+
+        fn lint(&self, allow: &[AllowEntry]) -> Vec<Diagnostic> {
+            run_lint(&self.root, allow).expect("lint temp tree")
+        }
+    }
+
+    impl Drop for TempTree {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    fn rules_of(ds: &[Diagnostic]) -> Vec<&'static str> {
+        ds.iter().map(|d| d.rule).collect()
+    }
+
+    /// The meta-test the CI lint lane leans on: seed exactly one
+    /// violation per rule, assert every rule fires (and nothing else).
+    #[test]
+    fn seeded_violations_trip_every_rule() {
+        let t = TempTree::new("seeded");
+        t.write(
+            "rust/src/foo.rs",
+            "pub fn f(a: f64, b: f64) -> bool {\n    a.partial_cmp(&b).is_some()\n}\n",
+        );
+        t.write(
+            "rust/src/cluster/clocky.rs",
+            "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+        );
+        t.write(
+            "rust/src/nocomment.rs",
+            "pub fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n",
+        );
+        t.write(
+            "rust/src/cluster/engine/frame.rs",
+            "use std::sync::Mutex;\npub struct S(Mutex<u8>);\n",
+        );
+        t.write(
+            "rust/src/modelstore/m.rs",
+            "pub fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n",
+        );
+        let ds = t.lint(&[]);
+        let rules = rules_of(&ds);
+        for rule in [
+            RULE_FLOAT_ORD,
+            RULE_WALL_CLOCK,
+            RULE_SAFETY_COMMENT,
+            RULE_FACADE,
+            RULE_NO_UNWRAP,
+        ] {
+            assert!(rules.contains(&rule), "rule {rule} did not fire: {ds:?}");
+        }
+        assert_eq!(ds.len(), 5, "exactly one diagnostic per seed: {ds:?}");
+        // file:line diagnostics point at the offending line
+        let unwrap_d = ds.iter().find(|d| d.rule == RULE_NO_UNWRAP).expect("seeded");
+        assert_eq!(unwrap_d.file, "rust/src/modelstore/m.rs");
+        assert_eq!(unwrap_d.line, 2);
+        assert!(unwrap_d.text.contains("o.unwrap()"));
+    }
+
+    #[test]
+    fn safety_comment_satisfies_l3_even_blocks_above() {
+        let t = TempTree::new("safety");
+        t.write(
+            "rust/src/ok.rs",
+            "pub fn f(p: *mut u8) {\n    \
+             // SAFETY: caller guarantees exclusivity;\n    \
+             // this block is the only writer.\n    \
+             unsafe { *p = 0 };\n}\n\
+             // SAFETY: same-line form works too\n\
+             pub unsafe fn g() {}\n",
+        );
+        assert!(t.lint(&[]).is_empty(), "{:?}", t.lint(&[]));
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_unwrap_and_facade() {
+        let t = TempTree::new("testmod");
+        t.write(
+            "rust/src/modelstore/service.rs",
+            "pub fn f() -> u8 { 1 }\n\n\
+             #[cfg(test)]\n\
+             mod tests {\n    \
+             use std::sync::Mutex;\n    \
+             #[test]\n    \
+             fn t() {\n        \
+             let m = Mutex::new(1u8);\n        \
+             assert_eq!(*m.lock().unwrap(), super::f());\n    \
+             }\n\
+             }\n",
+        );
+        assert!(t.lint(&[]).is_empty(), "{:?}", t.lint(&[]));
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip_rules() {
+        let t = TempTree::new("strings");
+        t.write(
+            "rust/src/clean.rs",
+            "// total_cmp, not partial_cmp().unwrap(): prose only\n\
+             /* Instant::now() in a block comment */\n\
+             pub fn f() -> &'static str {\n    \
+             \"partial_cmp and .unwrap() and std::sync inside a string\"\n\
+             }\n\
+             pub fn g() -> &'static str {\n    \
+             r#\"{ \"k\": \"unsafe .unwrap()\" }\"#\n\
+             }\n",
+        );
+        assert!(t.lint(&[]).is_empty(), "{:?}", t.lint(&[]));
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_rule_path_and_substring() {
+        let t = TempTree::new("allow");
+        t.write(
+            "rust/src/foo.rs",
+            "pub fn f(a: f64, b: f64) -> bool {\n    a.partial_cmp(&b).is_some()\n}\n",
+        );
+        assert_eq!(t.lint(&[]).len(), 1);
+
+        let allow = parse_allowlist("# a comment\nfloat-ord src/foo.rs partial_cmp\n");
+        assert_eq!(allow.len(), 1);
+        assert!(t.lint(&allow).is_empty(), "entry must suppress the hit");
+
+        // a mismatched substring must NOT suppress
+        let wrong = parse_allowlist("float-ord src/foo.rs total_cmp\n");
+        assert_eq!(t.lint(&wrong).len(), 1);
+        // neither must a different rule on the same path
+        let wrong_rule = parse_allowlist("no-unwrap src/foo.rs\n");
+        assert_eq!(t.lint(&wrong_rule).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_token_matching_is_word_bounded() {
+        let t = TempTree::new("wordbound");
+        // `unsafe_op_in_unsafe_fn` in an attribute is not the `unsafe`
+        // token; `Instant::nowhere` is not `Instant::now`... (substring
+        // matching would flag the former; `now` needs its paren-free
+        // form matched exactly as spelled in the rule)
+        t.write(
+            "rust/src/attrs.rs",
+            "#![deny(unsafe_op_in_unsafe_fn)]\npub fn f() {}\n",
+        );
+        assert!(t.lint(&[]).is_empty(), "{:?}", t.lint(&[]));
+    }
+
+    /// The real repository must lint clean — this is what keeps the
+    /// invariants from regressing between CI runs: any new violation
+    /// fails `cargo test` at the workspace root, not just the lint lane.
+    #[test]
+    fn lint_repo_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .and_then(Path::parent)
+            .expect("xtask lives two levels under the repo root")
+            .to_path_buf();
+        let allow_text =
+            fs::read_to_string(root.join("rust/xtask/lint.allow")).unwrap_or_default();
+        let allow = parse_allowlist(&allow_text);
+        let ds = run_lint(&root, &allow).expect("lint repo");
+        assert!(
+            ds.is_empty(),
+            "repository must lint clean; violations:\n{}",
+            ds.iter()
+                .map(|d| format!("  {d}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

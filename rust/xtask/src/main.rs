@@ -1,0 +1,96 @@
+//! `cargo run -p xtask -- lint` — run the in-repo lint pass.
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage/IO error. The report
+//! file (when requested with `--report`) is written in both the clean and
+//! the dirty case, so CI can archive it unconditionally.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: cargo run -p xtask -- lint [--root <dir>] [--allow <file>] [--report <file>]"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        _ => return usage(),
+    }
+
+    // Default root: two levels above this crate's manifest dir — the
+    // repository root, regardless of the invoking cwd.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    root.pop();
+    root.pop();
+    let mut allow_path: Option<PathBuf> = None;
+    let mut report_path: Option<PathBuf> = None;
+
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage(),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--report" => match args.next() {
+                Some(v) => report_path = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+
+    let allow_path = allow_path.unwrap_or_else(|| root.join("rust/xtask/lint.allow"));
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => lint::parse_allowlist(&text),
+        // No allowlist file is fine — it just means nothing is suppressed.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            eprintln!("xtask lint: cannot read {}: {e}", allow_path.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let diagnostics = match lint::run_lint(&root, &allow) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("xtask lint: scan failed under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut report = String::new();
+    for d in &diagnostics {
+        println!("{d}");
+        report.push_str(&d.to_string());
+        report.push('\n');
+    }
+    if diagnostics.is_empty() {
+        report.push_str("lint clean\n");
+        println!("xtask lint: clean ({} rules)", 5);
+    } else {
+        eprintln!("xtask lint: {} violation(s)", diagnostics.len());
+    }
+
+    if let Some(path) = report_path {
+        if let Err(e) = std::fs::write(&path, &report) {
+            eprintln!("xtask lint: cannot write report {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
