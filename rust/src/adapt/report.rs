@@ -15,6 +15,7 @@ use crate::cluster::engine::Engine;
 use crate::error::Result;
 use crate::fpm::PiecewiseModel;
 use crate::modelstore::StoreStats;
+use crate::obs::ObsSummary;
 use crate::util::stats::max_relative_imbalance;
 
 /// Timing breakdown of one application run. All times are virtual seconds
@@ -67,6 +68,9 @@ pub struct WorkloadReport {
     /// saves dropped/deferred under lock contention, corrupt files
     /// degraded. Printed by the CLI so dropped observations are visible.
     pub store_stats: Option<StoreStats>,
+    /// Tracing sink summary when the run was observed (`--obs-out`):
+    /// event loss accounting plus the counter/histogram registry.
+    pub obs: Option<ObsSummary>,
 }
 
 /// The per-round partition bookkeeping every iterative workload repeats:

@@ -15,9 +15,11 @@ use crate::dfpa::trace::IterationRecord;
 use crate::dfpa2d::nested::{Benchmarker2d, WarmStart2d};
 use crate::error::{HfpmError, Result};
 use crate::fpm::PiecewiseModel;
+use crate::log_warn;
 use crate::modelstore::{
     Family, MergePolicy, ModelKey, ModelStore, ObsBatch, StoreServiceHandle, StoreStats,
 };
+use crate::obs::{Layer, ObsSink};
 use std::path::PathBuf;
 
 /// Builder-style owner of a run's cross-cutting configuration. Construct
@@ -32,6 +34,8 @@ pub struct AdaptiveSession {
     merge_policy: MergePolicy,
     faults: FaultPlan,
     trace_sink: Option<PathBuf>,
+    obs: ObsSink,
+    obs_parent: Option<u64>,
 }
 
 impl Default for AdaptiveSession {
@@ -44,6 +48,8 @@ impl Default for AdaptiveSession {
             merge_policy: MergePolicy::default(),
             faults: FaultPlan::none(),
             trace_sink: None,
+            obs: ObsSink::disabled(),
+            obs_parent: None,
         }
     }
 }
@@ -137,6 +143,16 @@ impl AdaptiveSession {
     /// Write the run's per-step trace to this CSV path.
     pub fn trace_to(mut self, path: PathBuf) -> Self {
         self.trace_sink = Some(path);
+        self
+    }
+
+    /// Attach a dual-clock tracing sink: the session emits first-class
+    /// "partition" and "store-flush" spans (the paper's cost of
+    /// adaptation, measured) under `parent` — typically the app's "run"
+    /// span — and mirrors its warnings as obs instants.
+    pub fn observe(mut self, obs: ObsSink, parent: Option<u64>) -> Self {
+        self.obs = obs;
+        self.obs_parent = parent;
         self
     }
 
@@ -277,9 +293,20 @@ impl AdaptiveSession {
             warm_energy,
             warm_start_2d: None,
         };
+        let part = self
+            .obs
+            .span_start(Layer::Session, "partition", None, self.obs_parent, bench.virtual_now());
         let mut out = dist.distribute(n, bench, &ctx)?;
+        self.obs.span_end(part, bench.virtual_now());
         if let Some(s) = &store {
+            // store flushing is leader-side bookkeeping: it costs wall
+            // time but never advances the virtual cluster clock
+            let virt = bench.virtual_now();
+            let flush = self
+                .obs
+                .span_start(Layer::Session, "store-flush", None, self.obs_parent, virt);
             self.flush_1d(s, keys, &mut out)?;
+            self.obs.span_end(flush, virt);
         }
         self.write_trace(&out)?;
         Ok(out)
@@ -310,10 +337,17 @@ impl AdaptiveSession {
         };
         if keys.is_empty() {
             if any(speed_obs) || any(energy_obs) {
-                eprintln!(
-                    "warn: model store `{}` is configured but the run supplied \
+                log_warn!(
+                    "model store `{}` is configured but the run supplied \
                      no model keys; dropping this run's observations",
                     store.dir_display()
+                );
+                self.obs.instant(
+                    Layer::Session,
+                    "dropped-observations",
+                    None,
+                    None,
+                    "run supplied no model keys",
                 );
             }
             out.store_stats = Some(store.stats());
@@ -392,18 +426,34 @@ impl AdaptiveSession {
             warm_energy: None,
             warm_start_2d,
         };
+        // 2D benchmarkers carry no virtual_now hook (the nested algorithm
+        // owns its column clocks), so the 2D partition span is wall-only
+        let part = self
+            .obs
+            .span_start(Layer::Session, "partition", None, self.obs_parent, None);
         let mut out = dist.distribute(m, n, bench, &ctx)?;
+        self.obs.span_end(part, None);
         if let Some(s) = &store {
+            let flush = self
+                .obs
+                .span_start(Layer::Session, "store-flush", None, self.obs_parent, None);
             if let Observations::TwoD(obs) = &out.observations {
                 if keys.is_empty() {
                     // mirror the 1D contract: no keys means skip-and-warn,
                     // not a silent zip over zero columns
                     if obs.iter().any(|col| col.iter().any(|m| !m.is_empty())) {
-                        eprintln!(
-                            "warn: model store `{}` is configured but the 2D \
+                        log_warn!(
+                            "model store `{}` is configured but the 2D \
                              run supplied no model keys; dropping this run's \
                              observations",
                             s.dir_display()
+                        );
+                        self.obs.instant(
+                            Layer::Session,
+                            "dropped-observations",
+                            None,
+                            None,
+                            "2D run supplied no model keys",
                         );
                     }
                 } else {
@@ -442,6 +492,7 @@ impl AdaptiveSession {
                 }
             }
             out.store_stats = Some(s.stats());
+            self.obs.span_end(flush, None);
         }
         self.write_trace(&out)?;
         Ok(out)

@@ -17,7 +17,9 @@ use crate::apps::matmul1d::{run_with_faults, Matmul1dConfig};
 use crate::cluster::faults::FaultPlan;
 use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
+use crate::log_warn;
 use crate::modelstore::{StoreServiceHandle, StoreStats};
+use crate::obs::{Layer, ObsSink};
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -43,6 +45,10 @@ pub struct ScenarioGrid {
     /// serializes them through a single writer instead (`None` disables
     /// persistence).
     pub store: Option<StoreServiceHandle>,
+    /// Tracing sink shared by every cell: each cell gets a wall-only
+    /// `cell` span on the sweep track and threads the sink into its own
+    /// engine and session. Disabled by default.
+    pub obs: ObsSink,
 }
 
 /// One cell's outcome in the consolidated report.
@@ -86,6 +92,7 @@ impl ScenarioGrid {
             max_iters: 100,
             jobs: 0,
             store: None,
+            obs: ObsSink::disabled(),
         }
     }
 
@@ -182,6 +189,10 @@ impl ScenarioGrid {
         cfg.epsilon = self.epsilon;
         cfg.max_iters = self.max_iters;
         cfg.store_service = self.store.clone();
+        cfg.obs = self.obs.clone();
+        // cells run concurrently on their own engines, so the sweep track
+        // is wall-only: there is no one virtual clock to order them on
+        let span = self.obs.span_start(Layer::Sweep, "cell", None, None, None);
         match run_with_faults(spec, &cfg, plan.clone()) {
             Ok(report) => {
                 row.total_s = report.total_s;
@@ -192,8 +203,24 @@ impl ScenarioGrid {
                 row.imbalance = report.imbalance;
                 row.energy_j = report.energy_j;
             }
-            Err(e) => row.error = Some(e.to_string()),
+            Err(e) => {
+                log_warn!(
+                    "sweep cell {}/{}/{} failed: {e}",
+                    row.strategy,
+                    row.cluster,
+                    fault_label
+                );
+                self.obs.instant(
+                    Layer::Sweep,
+                    "cell-error",
+                    None,
+                    None,
+                    &format!("{}/{}/{}: {e}", row.strategy, row.cluster, fault_label),
+                );
+                row.error = Some(e.to_string());
+            }
         }
+        self.obs.span_end(span, None);
         row
     }
 }

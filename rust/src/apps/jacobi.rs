@@ -38,6 +38,7 @@ use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
 use crate::modelstore::{ModelKey, StoreServiceHandle};
+use crate::obs::{Layer, ObsSink};
 
 pub use crate::adapt::Strategy;
 
@@ -61,6 +62,9 @@ pub struct JacobiConfig {
     /// Shared model-store service handle; takes precedence over
     /// `model_store` (see `Matmul1dConfig::store_service`).
     pub store_service: Option<StoreServiceHandle>,
+    /// Tracing sink (`--obs-out`); disabled by default. The run threads it
+    /// into the engine, the session and its own phase spans.
+    pub obs: ObsSink,
 }
 
 impl JacobiConfig {
@@ -75,6 +79,7 @@ impl JacobiConfig {
             max_iters: 100,
             model_store: None,
             store_service: None,
+            obs: ObsSink::disabled(),
         }
     }
 
@@ -175,6 +180,11 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
         .model_store(cfg.model_store.clone())
         .store_service(cfg.store_service.clone());
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone());
+    cluster.set_obs(cfg.obs.clone());
+    let run_span = cfg
+        .obs
+        .span_start(Layer::Session, "run", None, None, Some(cluster.now()));
+    let session = session.observe(cfg.obs.clone(), run_span.id());
     let mut dist = cfg.strategy.make_1d(&AppResources {
         nodes: &nodes,
         n: cfg.n,
@@ -231,7 +241,18 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
             round
         };
         let phase = if remaining > 0 {
-            probe_compute(&mut cluster, &units, remaining as f64)?
+            // first-class "execute" span, so `repro profile` separates the
+            // sweeps' cost from the cost of adaptation (partition spans)
+            let ex = cfg.obs.span_start(
+                Layer::Session,
+                "execute",
+                None,
+                run_span.id(),
+                Some(cluster.now()),
+            );
+            let phase = probe_compute(&mut cluster, &units, remaining as f64)?;
+            cfg.obs.span_end(ex, Some(cluster.now()));
+            phase
         } else {
             ComputePhase::already_executed(&outcome)
         };
@@ -249,6 +270,7 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
     let gather_s = comm.distribute_slices(0, &gather_bytes);
     cluster.charge(gather_s);
     comm_s += gather_s;
+    cfg.obs.span_end(run_span, Some(cluster.now()));
 
     Ok(JacobiReport {
         core: WorkloadReport {
@@ -269,6 +291,7 @@ pub fn run(spec: &ClusterSpec, cfg: &JacobiConfig) -> Result<JacobiReport> {
             energy_j: cluster.total_dynamic_j(),
             pareto: rounds.pareto.clone(),
             store_stats: rounds.store_stats,
+            obs: cfg.obs.summary(),
         },
         d,
         sweeps: sweeps_done,
@@ -395,6 +418,39 @@ mod tests {
             warm.iterations,
             cold.iterations
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn observed_run_emits_spans_across_layers() {
+        use crate::obs::{ObsEvent, DEFAULT_CAPACITY};
+        let dir = unique_temp_dir("jacobi-obs");
+        let spec = presets::mini4();
+        let mut cfg = JacobiConfig::new(512, Strategy::Dfpa);
+        cfg.model_store = Some(dir.clone());
+        cfg.obs = ObsSink::bounded(DEFAULT_CAPACITY);
+        let r = run(&spec, &cfg).unwrap();
+        let sum = r.obs.as_ref().expect("observed run carries a summary");
+        assert_eq!(sum.emitted, sum.recorded + sum.dropped);
+        assert_eq!(sum.dropped, 0, "small run fits the default capacity");
+        let evs = cfg.obs.drain();
+        let count = |layer: Layer, n: &str| {
+            evs.iter()
+                .filter(|e| match e {
+                    ObsEvent::Span { layer: l, name, .. } => *l == layer && name.as_str() == n,
+                    _ => false,
+                })
+                .count()
+        };
+        assert_eq!(count(Layer::Session, "run"), 1);
+        assert!(count(Layer::Session, "partition") >= 1, "adaptation cost is first-class");
+        assert!(count(Layer::Session, "execute") >= 1);
+        assert!(count(Layer::Session, "store-flush") >= 1);
+        assert!(count(Layer::Engine, "frame") >= 1, "engine frames recorded");
+        assert!(count(Layer::Engine, "compute") >= 1, "per-rank slices recorded");
+        // an unobserved run carries no summary at all
+        let plain = run(&spec, &JacobiConfig::new(512, Strategy::Dfpa)).unwrap();
+        assert!(plain.obs.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

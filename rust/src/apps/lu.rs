@@ -37,6 +37,7 @@ use crate::config::ClusterSpec;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
 use crate::modelstore::{ModelKey, StoreServiceHandle};
+use crate::obs::{Layer, ObsSink};
 use crate::partition::hsp;
 
 pub use crate::adapt::Strategy;
@@ -59,6 +60,9 @@ pub struct LuConfig {
     /// Shared model-store service handle; takes precedence over
     /// `model_store` (see `Matmul1dConfig::store_service`).
     pub store_service: Option<StoreServiceHandle>,
+    /// Tracing sink (`--obs-out`); disabled by default. The run threads it
+    /// into the engine, the session and its own phase spans.
+    pub obs: ObsSink,
 }
 
 impl LuConfig {
@@ -73,6 +77,7 @@ impl LuConfig {
             max_iters: 100,
             model_store: None,
             store_service: None,
+            obs: ObsSink::disabled(),
         }
     }
 
@@ -159,6 +164,11 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
         .model_store(cfg.model_store.clone())
         .store_service(cfg.store_service.clone());
     let (mut cluster, nodes) = build_cluster(spec, cfg);
+    cluster.set_obs(cfg.obs.clone());
+    let run_span = cfg
+        .obs
+        .span_start(Layer::Session, "run", None, None, Some(cluster.now()));
+    let session = session.observe(cfg.obs.clone(), run_span.id());
     // the distributor works directly in element-update *units*, not
     // columns: a column's work shrinks every panel step, so only the units
     // domain gives a speed function that is stationary across steps — the
@@ -265,7 +275,15 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
             }
         } else {
             let units: Vec<u64> = d.iter().map(|&c| c * units_per_col).collect();
+            let ex = cfg.obs.span_start(
+                Layer::Session,
+                "execute",
+                None,
+                run_span.id(),
+                Some(cluster.now()),
+            );
             let phase = probe_compute(&mut cluster, &units, 1.0)?;
+            cfg.obs.span_end(ex, Some(cluster.now()));
             compute_s += phase.compute_s;
             if k == 0 {
                 // report the distribution quality at full size, where the
@@ -275,6 +293,7 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
         }
     }
 
+    cfg.obs.span_end(run_span, Some(cluster.now()));
     Ok(LuReport {
         core: WorkloadReport {
             strategy: cfg.strategy,
@@ -294,6 +313,7 @@ pub fn run(spec: &ClusterSpec, cfg: &LuConfig) -> Result<LuReport> {
             energy_j: cluster.total_dynamic_j(),
             pareto: rounds.pareto.clone(),
             store_stats: rounds.store_stats,
+            obs: cfg.obs.summary(),
         },
         d: first_d,
         panels: nb as usize,

@@ -32,6 +32,7 @@ use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
 use crate::modelstore::{ModelKey, StoreServiceHandle};
+use crate::obs::{Layer, ObsSink};
 use crate::runtime::{ArtifactManifest, PjrtEngine, PjrtService, RealScaledExecutor};
 
 /// Partitioning strategy tag — now a registry lookup in the adapt layer
@@ -60,6 +61,9 @@ pub struct Matmul1dConfig {
     /// observations to the service's single writer instead of racing the
     /// store's advisory lock, and warm-start from its lock-free snapshot.
     pub store_service: Option<StoreServiceHandle>,
+    /// Tracing sink (`--obs-out`); disabled by default. The run threads it
+    /// into the engine, the session and its own phase spans.
+    pub obs: ObsSink,
 }
 
 impl Matmul1dConfig {
@@ -73,6 +77,7 @@ impl Matmul1dConfig {
             max_iters: 100,
             model_store: None,
             store_service: None,
+            obs: ObsSink::disabled(),
         }
     }
 
@@ -123,6 +128,12 @@ impl Benchmarker for RowBench<'_> {
         // joules pass through unscaled: they are per-rank totals, not in
         // the rows domain
         self.cluster.last_energy_j()
+    }
+
+    fn virtual_now(&self) -> Option<f64> {
+        // forward the engine's virtual clock so session spans emitted
+        // through this benchmarker carry both clocks
+        Some(self.cluster.now())
     }
 }
 
@@ -192,6 +203,11 @@ pub fn run_with_faults(
         .store_service(cfg.store_service.clone())
         .faults(faults);
     let (mut cluster, nodes) = build_cluster(spec, cfg, session.fault_plan().clone())?;
+    cluster.set_obs(cfg.obs.clone());
+    let run_span = cfg
+        .obs
+        .span_start(Layer::Session, "run", None, None, Some(cluster.now()));
+    let session = session.observe(cfg.obs.clone(), run_span.id());
 
     // --- phase 1: partition (strategy-agnostic via the adapt layer) ---------
     let mut dist = cfg.strategy.make_1d(&AppResources {
@@ -238,8 +254,18 @@ pub fn run_with_faults(
         ComputePhase::already_executed(&outcome)
     } else {
         let units: Vec<u64> = d.iter().map(|&r| r * cfg.n).collect();
-        probe_compute(&mut cluster, &units, cfg.n as f64)?
+        let ex = cfg.obs.span_start(
+            Layer::Session,
+            "execute",
+            None,
+            run_span.id(),
+            Some(cluster.now()),
+        );
+        let phase = probe_compute(&mut cluster, &units, cfg.n as f64)?;
+        cfg.obs.span_end(ex, Some(cluster.now()));
+        phase
     };
+    cfg.obs.span_end(run_span, Some(cluster.now()));
 
     Ok(Matmul1dReport {
         core: WorkloadReport {
@@ -262,6 +288,7 @@ pub fn run_with_faults(
             energy_j: cluster.total_dynamic_j(),
             pareto: outcome.pareto.clone(),
             store_stats: outcome.store_stats,
+            obs: cfg.obs.summary(),
         },
         d,
     })

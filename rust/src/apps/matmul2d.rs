@@ -24,6 +24,7 @@ use crate::dfpa2d::nested::Benchmarker2d;
 use crate::error::{HfpmError, Result};
 use crate::fpm::analytic::Footprint;
 use crate::modelstore::{ModelKey, StoreServiceHandle, StoreStats};
+use crate::obs::{Layer, ObsSink};
 use crate::util::stats::max_relative_imbalance;
 
 pub use super::matmul1d::Strategy;
@@ -43,6 +44,8 @@ pub struct Matmul2dConfig {
     /// Shared model-store service handle; takes precedence over
     /// `model_store` (see `Matmul1dConfig::store_service`).
     pub store_service: Option<StoreServiceHandle>,
+    /// Tracing sink (`--obs-out`); disabled by default.
+    pub obs: ObsSink,
 }
 
 impl Matmul2dConfig {
@@ -55,6 +58,7 @@ impl Matmul2dConfig {
             elem_bytes: 8,
             model_store: None,
             store_service: None,
+            obs: ObsSink::disabled(),
         }
     }
 
@@ -127,7 +131,8 @@ fn build_cluster_2d(
         .iter()
         .map(|nd| Box::new(nd.clone()) as Box<dyn NodeExecutor>)
         .collect();
-    let engine = Engine::spawn(execs, CommModel::new(spec.clone()), FaultPlan::none());
+    let mut engine = Engine::spawn(execs, CommModel::new(spec.clone()), FaultPlan::none());
+    engine.set_obs(cfg.obs.clone());
     Ok((VirtualCluster2d::new(engine.into(), p, q)?, nodes))
 }
 
@@ -142,12 +147,16 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
         )));
     }
     let (mut grid, nodes) = build_cluster_2d(spec, cfg, p, q)?;
+    let run_span =
+        cfg.obs
+            .span_start(Layer::Session, "run", None, None, Some(grid.cluster.now()));
 
     // --- partition phase (strategy-agnostic via the adapt layer) ---
     let session = AdaptiveSession::new()
         .epsilon(cfg.epsilon)
         .model_store(cfg.model_store.clone())
-        .store_service(cfg.store_service.clone());
+        .store_service(cfg.store_service.clone())
+        .observe(cfg.obs.clone(), run_span.id());
     let mut dist = cfg.strategy.make_2d(&AppResources2d {
         nodes: &nodes,
         p,
@@ -170,6 +179,13 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     let (widths, heights) = outcome.distribution.into_2d()?;
 
     // --- evaluate the final distribution: one pivot step per column ---
+    let ex = cfg.obs.span_start(
+        Layer::Session,
+        "execute",
+        None,
+        run_span.id(),
+        Some(grid.cluster.now()),
+    );
     let mut times = vec![vec![0.0f64; p]; q];
     let mut step_costs = vec![0.0f64; q];
     for j in 0..q {
@@ -183,6 +199,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     }
     let step_max = step_costs.iter().cloned().fold(0.0f64, f64::max);
     let matmul_s = step_max * m as f64;
+    cfg.obs.span_end(ex, Some(grid.cluster.now()));
 
     // per-step pivot broadcasts: a block column of A (m/p blocks avg per
     // proc) and block row of B, binomial over the grid
@@ -201,6 +218,7 @@ pub fn run(spec: &ClusterSpec, cfg: &Matmul2dConfig) -> Result<Matmul2dReport> {
     let imbalance = max_relative_imbalance(&active);
 
     let total_s = partition_s + matmul_s + comm_s;
+    cfg.obs.span_end(run_span, Some(grid.cluster.now()));
     Ok(Matmul2dReport {
         strategy: cfg.strategy,
         n_elems: cfg.n_elems,

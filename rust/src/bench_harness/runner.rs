@@ -114,7 +114,7 @@ impl BenchGroup {
         let mut b = Bencher::new(self.quick);
         f(&mut b);
         if b.samples.is_empty() {
-            eprintln!("warn: bench `{name}` recorded no samples");
+            crate::log_warn!("bench `{name}` recorded no samples");
             return;
         }
         let summary = Summary::from_samples(&b.samples);

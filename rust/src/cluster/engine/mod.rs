@@ -32,6 +32,7 @@ use super::executor::NodeExecutor;
 use super::faults::FaultPlan;
 use crate::dfpa::algorithm::{Benchmarker, StepReport};
 use crate::error::{HfpmError, Result};
+use crate::obs::{DualTime, Layer, ObsSink};
 use crate::util::timer::VirtualClock;
 
 /// The frame-synchronized cluster runtime. Rank 0 is the leader-side
@@ -61,6 +62,10 @@ pub struct Engine {
     metered: bool,
     /// Sum of the nodes' static power draws, watts.
     static_w: f64,
+    /// Dual-clock tracing sink (disabled by default; see
+    /// [`Engine::set_obs`]). Emits per-frame, per-rank
+    /// compute/wait/comm slices and fault-injection instants.
+    obs: ObsSink,
 }
 
 impl Engine {
@@ -140,7 +145,15 @@ impl Engine {
             total_dynamic_j: 0.0,
             metered,
             static_w,
+            obs: ObsSink::disabled(),
         }
+    }
+
+    /// Attach a tracing sink: every later frame emits its per-rank
+    /// compute/wait slices, the control-collective slice, and fault
+    /// instants, stamped on both the wall and virtual clocks.
+    pub fn set_obs(&mut self, obs: ObsSink) {
+        self.obs = obs;
     }
 
     /// Simulated node count (not the pool size).
@@ -228,6 +241,8 @@ impl Engine {
         let step = self.step;
         self.step += 1;
         self.steps_run += 1;
+        let frame_wall_begin = self.obs.wall_now();
+        let frame_virt_begin = self.clock.now();
 
         for (rank, t) in tasks.iter().enumerate() {
             self.shared.slots[rank].with_mut(|slot| {
@@ -272,6 +287,13 @@ impl Engine {
                     }
                 }
                 SlotResult::Failed { reason } => {
+                    self.obs.instant(
+                        Layer::Engine,
+                        "fault",
+                        Some(rank),
+                        Some(self.clock.now()),
+                        &reason,
+                    );
                     if failure.is_none() {
                         failure = Some(HfpmError::WorkerFailed { rank, reason });
                     }
@@ -296,6 +318,53 @@ impl Engine {
         let cost = max_t + control;
         self.clock.advance(cost);
         self.total_dynamic_j += energies.iter().sum::<f64>();
+        if self.obs.enabled() {
+            // virtual times per rank are exact; wall time is only known
+            // for the whole frame (the workers overlap), so per-rank wall
+            // stamps map the virtual offsets proportionally into the
+            // frame's wall window — ordering-preserving on both tracks
+            let wall_end = self.obs.wall_now();
+            let wall_at = |virt_off: f64| {
+                if cost > 0.0 {
+                    frame_wall_begin + (wall_end - frame_wall_begin) * (virt_off / cost)
+                } else {
+                    wall_end
+                }
+            };
+            let at = |virt_off: f64| DualTime {
+                wall_s: wall_at(virt_off),
+                virt_s: Some(frame_virt_begin + virt_off),
+            };
+            let frame_id = self.obs.span_at(
+                Layer::Engine,
+                "frame",
+                None,
+                None,
+                at(0.0),
+                at(cost),
+            );
+            for &rank in &members {
+                let t = times[rank];
+                if t > 0.0 {
+                    self.obs
+                        .span_at(Layer::Engine, "compute", Some(rank), frame_id, at(0.0), at(t));
+                }
+                if max_t - t > 0.0 {
+                    self.obs
+                        .span_at(Layer::Engine, "wait", Some(rank), frame_id, at(t), at(max_t));
+                }
+            }
+            if control > 0.0 {
+                self.obs.span_at(
+                    Layer::Engine,
+                    "comm",
+                    None,
+                    frame_id,
+                    at(max_t),
+                    at(cost),
+                );
+            }
+        }
         self.last_energies = energies;
         Ok(StepReport {
             times,
@@ -362,6 +431,10 @@ impl Benchmarker for Engine {
         } else {
             None
         }
+    }
+
+    fn virtual_now(&self) -> Option<f64> {
+        Some(self.clock.now())
     }
 }
 
@@ -481,6 +554,61 @@ mod tests {
         // the pool survives the panic; healthy ranks keep serving
         let r = e.run_1d(&[10, 0, 10, 10]).unwrap();
         assert!(r.times[0] > 0.0 && r.times[2] > 0.0);
+    }
+
+    #[test]
+    fn obs_emits_per_rank_frame_slices_on_both_clocks() {
+        use crate::obs::{ObsEvent, ObsSink};
+        let mut e = mini_engine(FaultPlan::none());
+        let sink = ObsSink::bounded(256);
+        e.set_obs(sink.clone());
+        let t0 = e.now();
+        e.run_1d(&[1000, 2000, 1000, 2000]).unwrap();
+        let t1 = e.now();
+        let evs = sink.drain();
+        let frame = evs
+            .iter()
+            .find_map(|ev| match ev {
+                ObsEvent::Span {
+                    id, name, begin, end, ..
+                } if name == "frame" => Some((*id, *begin, *end)),
+                _ => None,
+            })
+            .expect("frame span emitted");
+        // the frame span covers exactly the clock advance of the step
+        assert!((frame.1.virt_s.expect("virt") - t0).abs() < 1e-12);
+        assert!((frame.2.virt_s.expect("virt") - t1).abs() < 1e-12);
+        assert!(frame.2.wall_s >= frame.1.wall_s);
+        // every rank got a compute slice parented under the frame
+        for rank in 0..4 {
+            assert!(
+                evs.iter().any(|ev| matches!(ev, ObsEvent::Span {
+                    name, rank: r, parent, ..
+                } if name == "compute" && *r == Some(rank) && *parent == Some(frame.0))),
+                "missing compute slice for rank {rank}"
+            );
+        }
+        // stragglers wait: at least one rank is slower than another, so
+        // some rank carries a wait slice
+        assert!(evs
+            .iter()
+            .any(|ev| matches!(ev, ObsEvent::Span { name, .. } if name == "wait")));
+    }
+
+    #[test]
+    fn obs_records_fault_instants() {
+        use crate::obs::{ObsEvent, ObsSink};
+        let mut e = mini_engine(FaultPlan::none().with_death(1, 0));
+        let sink = ObsSink::bounded(64);
+        e.set_obs(sink.clone());
+        assert!(e.run_1d(&[100; 4]).is_err());
+        let evs = sink.drain();
+        assert!(
+            evs.iter().any(|ev| matches!(ev, ObsEvent::Instant {
+                name, rank, detail, ..
+            } if name == "fault" && *rank == Some(1) && detail.contains("injected death"))),
+            "fault instant missing: {evs:?}"
+        );
     }
 
     #[test]

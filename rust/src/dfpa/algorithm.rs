@@ -39,6 +39,15 @@ pub trait Benchmarker {
     fn last_energy_j(&self) -> Option<Vec<f64>> {
         None
     }
+
+    /// The benchmarker's virtual-clock reading, when it has one — the
+    /// `obs` layer stamps session-phase spans with it so the dual-clock
+    /// trace lines up with the engine's frame timeline. `None` (the
+    /// default) means the backend keeps no virtual time (stubs, real
+    /// execution); spans then carry wall time only.
+    fn virtual_now(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Models carried over from previous invocations (e.g. loaded from a

@@ -41,9 +41,10 @@
 //!   ([`cluster::energy`]).
 //!
 //! Support modules: [`config`] (mini-TOML), [`bench_harness`]
-//! (criterion-lite), [`testkit`] (proptest-lite), [`util`], and [`sync`]
+//! (criterion-lite), [`testkit`] (proptest-lite), [`util`], [`sync`]
 //! — the std/loom synchronization facade behind the concurrency-checked
-//! modules (DESIGN.md §3.10).
+//! modules (DESIGN.md §3.10) — and [`obs`], the dual-clock tracing and
+//! metrics layer with JSONL/Chrome-trace exporters (DESIGN.md §3.11).
 
 // The lint wall. Every unsafe operation must sit in its own `unsafe`
 // block (even inside `unsafe fn`), carry a `// SAFETY:` comment
@@ -66,6 +67,7 @@ pub mod util;
 
 pub mod fpm;
 pub mod modelstore;
+pub mod obs;
 pub mod partition;
 
 pub mod cluster;

@@ -16,7 +16,12 @@
 //! repro sweep  --n 1024 --strategies dfpa,even --clusters mini4,synth:64
 //!              --faults none,straggler:0x3@0 [--model-store DIR]
 //!              scenario grid, one row per cell
+//! repro profile [jacobi|run1d|lu] [--obs-out trace.json]
+//!              observed run + aggregated span tree (self/total, both clocks)
 //! ```
+//!
+//! Run commands accept a global `--obs-out <file>` to capture a dual-clock
+//! trace (JSONL or Chrome trace_event, by extension).
 
 use hfpm::adapt::{registry, AdaptiveSession, Strategy};
 use hfpm::apps::{jacobi, lu, matmul1d, matmul2d};
@@ -25,6 +30,7 @@ use hfpm::cluster::executor::ExecutionMode;
 use hfpm::cluster::presets;
 use hfpm::config::ClusterSpec;
 use hfpm::error::{HfpmError, Result};
+use hfpm::obs::{self, ObsSink};
 use hfpm::util::table::{fdur, fnum, Table};
 
 fn main() {
@@ -88,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         "verify" => cmd_verify(args),
         "trace" => cmd_trace(args),
         "sweep" => cmd_sweep(args),
+        "profile" => cmd_profile(args),
         other => Err(HfpmError::InvalidArg(format!(
             "unknown command `{other}` — try `repro help`"
         ))),
@@ -121,6 +128,9 @@ COMMANDS:
             every panel step (speed functions queried at sliding sizes)
   verify    real PJRT e2e + correctness --n 512 [--cluster mini4] [--eps 0.1]
   trace     DFPA iteration trace        --cluster hcl15 --n 5120 [--out f.csv]
+  profile   run one workload observed and print its aggregated span tree
+            (self/total on both clocks)  [jacobi|run1d|lu] [--cluster ...]
+            [--n ...] [--strategy dfpa] [--obs-out trace.json]
   sweep     scenario grid               --n 1024 [--eps 0.05]
             [--strategies dfpa,even] [--clusters mini4,synth:64]
             [--faults none,straggler:0x3@0,death:1@2] [--jobs K] [--out f.csv]
@@ -131,6 +141,12 @@ COMMANDS:
             events joined with '+'. --model-store opens ONE store service
             shared by all cells: observations merge through a single writer
             (no advisory-lock races, zero dropped saves)
+
+  run1d/run2d/jacobi/lu/sweep also accept --obs-out <file>: capture a
+  dual-clock trace (session phases, per-rank engine frames, store-service
+  commits) to <file> — `.jsonl` writes JSON-lines events + summary, any
+  other extension writes Chrome trace_event JSON (load in Perfetto; wall
+  and virtual clocks appear as separate process tracks)
 ";
 
 fn cmd_info() -> Result<()> {
@@ -249,11 +265,15 @@ fn cmd_run1d(args: &Args) -> Result<()> {
         &["strategy", "n", "partition", "matmul", "comm", "total", "iters", "imb %", "energy J", "model build"],
     );
     let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let obs = obs_arg(args)?;
     for s in strategies {
         let mut cfg = matmul1d::Matmul1dConfig::new(n, s);
         cfg.epsilon = eps;
         cfg.mode = mode;
         cfg.model_store = model_store.clone();
+        if let Some((_, sink)) = &obs {
+            cfg.obs = sink.clone();
+        }
         let r = matmul1d::run(&spec, &cfg)?;
         report_row_1d(&mut t, &r);
         let warm = warm_suffix(r.warm_started, r.warm_started_energy);
@@ -262,6 +282,9 @@ fn cmd_run1d(args: &Args) -> Result<()> {
         print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
+    if let Some((path, sink)) = &obs {
+        write_obs(path, sink)?;
+    }
     Ok(())
 }
 
@@ -275,10 +298,14 @@ fn cmd_run2d(args: &Args) -> Result<()> {
         &["strategy", "grid", "partition", "matmul", "total", "iters", "cost %", "imb %"],
     );
     let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let obs = obs_arg(args)?;
     for st in strategies {
         let mut cfg = matmul2d::Matmul2dConfig::new(n, st);
         cfg.epsilon = eps;
         cfg.model_store = model_store.clone();
+        if let Some((_, sink)) = &obs {
+            cfg.obs = sink.clone();
+        }
         let r = matmul2d::run(&spec, &cfg)?;
         t.add_row(vec![
             st.name().to_string(),
@@ -295,6 +322,9 @@ fn cmd_run2d(args: &Args) -> Result<()> {
         print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
+    if let Some((path, sink)) = &obs {
+        write_obs(path, sink)?;
+    }
     Ok(())
 }
 
@@ -331,6 +361,19 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
     let every = args.get_u64("rebalance-every", 4)? as usize;
     let eps = args.get_f64("eps", 0.05)?;
     let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let obs = obs_arg(args)?;
+    // when tracing AND persisting, route saves through a store service
+    // carrying the same sink, so the trace shows the enqueue→commit path
+    let store_service = match (&obs, &model_store) {
+        (Some((_, sink)), Some(dir)) => Some(hfpm::modelstore::StoreService::open_with(
+            dir,
+            hfpm::modelstore::StoreServiceConfig {
+                obs: sink.clone(),
+                ..Default::default()
+            },
+        )?),
+        _ => None,
+    };
     let mut t = Table::new(
         &format!(
             "jacobi on `{}` (n={n}, {sweeps} sweeps, rebalance every {every}, ε={eps})",
@@ -343,7 +386,14 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
         cfg.sweeps = sweeps;
         cfg.rebalance_every = every;
         cfg.epsilon = eps;
-        cfg.model_store = model_store.clone();
+        if let Some(svc) = &store_service {
+            cfg.store_service = Some(svc.clone());
+        } else {
+            cfg.model_store = model_store.clone();
+        }
+        if let Some((_, sink)) = &obs {
+            cfg.obs = sink.clone();
+        }
         let r = jacobi::run(&spec, &cfg)?;
         t.add_row(vec![
             s.label(),
@@ -368,6 +418,11 @@ fn cmd_jacobi(args: &Args) -> Result<()> {
         print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
+    // join the writer first so every commit span lands before the drain
+    drop(store_service);
+    if let Some((path, sink)) = &obs {
+        write_obs(path, sink)?;
+    }
     Ok(())
 }
 
@@ -385,12 +440,16 @@ fn cmd_lu(args: &Args) -> Result<()> {
         ),
         &["strategy", "partition", "compute", "comm", "total", "bench steps", "repart", "imb %", "energy J"],
     );
+    let obs = obs_arg(args)?;
     for s in strategies_arg(args)? {
         let mut cfg = lu::LuConfig::new(n, s);
         cfg.block = block;
         cfg.repartition_every = every;
         cfg.epsilon = eps;
         cfg.model_store = model_store.clone();
+        if let Some((_, sink)) = &obs {
+            cfg.obs = sink.clone();
+        }
         let r = lu::run(&spec, &cfg)?;
         t.add_row(vec![
             s.label(),
@@ -416,6 +475,9 @@ fn cmd_lu(args: &Args) -> Result<()> {
         print_store_stats(&r.store_stats);
     }
     print!("{}", t.render());
+    if let Some((path, sink)) = &obs {
+        write_obs(path, sink)?;
+    }
     Ok(())
 }
 
@@ -488,10 +550,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         grid.faults
             .push((f.to_string(), hfpm::cluster::faults::FaultPlan::parse(f)?));
     }
+    let obs = obs_arg(args)?;
+    if let Some((_, sink)) = &obs {
+        grid.obs = sink.clone();
+    }
     // one shared service: concurrent cells would otherwise race the store's
     // advisory lock and all but one cell's observations would be dropped
     if let Some(dir) = args.get_checked("model-store")? {
-        grid.store = Some(hfpm::modelstore::StoreService::open(dir)?);
+        let mut svc_cfg = hfpm::modelstore::StoreServiceConfig::default();
+        if let Some((_, sink)) = &obs {
+            svc_cfg.obs = sink.clone();
+        }
+        grid.store = Some(hfpm::modelstore::StoreService::open_with(dir, svc_cfg)?);
     }
     println!(
         "sweep: {} strategies × {} clusters × {} fault plans = {} cells (n = {n})",
@@ -506,6 +576,99 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!("{} of {} cells ok", report.ok_rows(), report.rows.len());
     if let Some(stats) = &report.store_stats {
         println!("store: {}", stats.summary());
+    }
+    drop(grid); // join the store writer before draining the sink
+    if let Some((path, sink)) = &obs {
+        write_obs(path, sink)?;
+    }
+    Ok(())
+}
+
+/// The global `--obs-out <path>` flag: when present, return the output
+/// path plus a live bounded sink to thread through the run.
+fn obs_arg(args: &Args) -> Result<Option<(std::path::PathBuf, ObsSink)>> {
+    Ok(args.get_checked("obs-out")?.map(|p| {
+        (
+            std::path::PathBuf::from(p),
+            ObsSink::bounded(obs::DEFAULT_CAPACITY),
+        )
+    }))
+}
+
+/// Drain a run's sink and write the trace (`.jsonl` → JSON-lines, any
+/// other extension → Chrome `trace_event` JSON for Perfetto).
+fn write_obs(out: &std::path::Path, sink: &ObsSink) -> Result<()> {
+    let events = sink.drain();
+    if let Some(s) = sink.summary() {
+        obs::export::write_obs_out(out, &events, &s)?;
+        println!(
+            "obs: {} events recorded, {} dropped → {}",
+            s.recorded,
+            s.dropped,
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let workload = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("jacobi");
+    let strategy = parse_strategy(&args.get_or_checked("strategy", "dfpa")?)?;
+    let model_store = args.get_checked("model-store")?.map(std::path::PathBuf::from);
+    let sink = ObsSink::bounded(obs::DEFAULT_CAPACITY);
+    match workload {
+        "jacobi" => {
+            let spec = cluster_arg(args, "mini4")?;
+            let mut cfg =
+                jacobi::JacobiConfig::new(args.get_u64("n", 1024)?, strategy);
+            cfg.sweeps = args.get_u64("sweeps", 12)? as usize;
+            cfg.rebalance_every = args.get_u64("rebalance-every", 4)? as usize;
+            cfg.epsilon = args.get_f64("eps", 0.05)?;
+            cfg.model_store = model_store;
+            cfg.obs = sink.clone();
+            jacobi::run(&spec, &cfg)?;
+        }
+        "run1d" | "matmul1d" => {
+            let spec = cluster_arg(args, "mini4")?;
+            let mut cfg =
+                matmul1d::Matmul1dConfig::new(args.get_u64("n", 2048)?, strategy);
+            cfg.epsilon = args.get_f64("eps", 0.025)?;
+            cfg.model_store = model_store;
+            cfg.obs = sink.clone();
+            matmul1d::run(&spec, &cfg)?;
+        }
+        "lu" => {
+            let spec = cluster_arg(args, "mini4")?;
+            let mut cfg = lu::LuConfig::new(args.get_u64("n", 1024)?, strategy);
+            cfg.block = args.get_u64("block", 64)?;
+            cfg.repartition_every = args.get_u64("repartition-every", 8)? as usize;
+            cfg.epsilon = args.get_f64("eps", 0.05)?;
+            cfg.model_store = model_store;
+            cfg.obs = sink.clone();
+            lu::run(&spec, &cfg)?;
+        }
+        other => {
+            return Err(HfpmError::InvalidArg(format!(
+                "profile: unknown workload `{other}` (jacobi|run1d|lu)"
+            )))
+        }
+    }
+    let events = sink.drain();
+    let summary = sink.summary().expect("bounded sink carries a summary");
+    print!("{}", obs::profile::render(&events, &summary));
+    if let Some(p) = args.get_checked("obs-out")? {
+        let out = std::path::PathBuf::from(p);
+        obs::export::write_obs_out(&out, &events, &summary)?;
+        println!(
+            "obs: {} events recorded, {} dropped → {}",
+            summary.recorded,
+            summary.dropped,
+            out.display()
+        );
     }
     Ok(())
 }

@@ -106,6 +106,44 @@ impl Value {
     }
 }
 
+/// Serialize without any whitespace — one line, for JSONL streams.
+pub fn to_compact(v: &Value) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(x) => write_num(out, *x),
+        Value::Str(s) => write_str(out, s),
+        Value::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(pairs) => {
+            out.push('{');
+            for (i, (k, val)) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(out, k);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn pad(out: &mut String, indent: usize) {
     for _ in 0..indent {
         out.push_str("  ");
@@ -360,6 +398,22 @@ mod tests {
         assert_eq!(b[0].as_f64().unwrap(), -1.5e-3);
         assert_eq!(b[2], Value::Bool(true));
         assert_eq!(b[3], Value::Null);
+    }
+
+    #[test]
+    fn compact_round_trips_on_one_line() {
+        let v = Value::Obj(vec![
+            ("kind".into(), Value::Str("span".into())),
+            ("parent".into(), Value::Null),
+            (
+                "ts".into(),
+                Value::Arr(vec![Value::Num(0.5), Value::Bool(false)]),
+            ),
+        ]);
+        let line = to_compact(&v);
+        assert!(!line.contains('\n'));
+        assert!(!line.contains(' '));
+        assert_eq!(parse(&line).unwrap(), v);
     }
 
     #[test]

@@ -656,8 +656,8 @@ impl ModelStore {
         let degrade = |what: &str| {
             self.counters.corrupt_files.fetch_add(1, Ordering::Relaxed);
             if !self.quiet {
-                eprintln!(
-                    "warn: corrupt model store file {} ({what}); treating `{}` \
+                crate::log_warn!(
+                    "corrupt model store file {} ({what}); treating `{}` \
                      as no history (cold start)",
                     path.display(),
                     key.kernel
@@ -732,8 +732,8 @@ impl ModelStore {
         if !self.can_write() {
             self.counters.dropped_saves.fetch_add(1, Ordering::Relaxed);
             if !self.quiet {
-                eprintln!(
-                    "warn: model store `{}` is locked by another writer; \
+                crate::log_warn!(
+                    "model store `{}` is locked by another writer; \
                      skipping save of {}",
                     self.dir.display(),
                     model.key.file_name()

@@ -25,6 +25,8 @@ use super::batch::ObsBatch;
 use super::snapshot::{SnapshotCell, StoreSnapshot};
 use super::{MergePolicy, ModelKey, ModelStore, StoreStats, StoredModel};
 use crate::error::{HfpmError, Result};
+use crate::log_warn;
+use crate::obs::{Layer, ObsSink};
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use crate::sync::thread::{self, JoinHandle};
@@ -48,6 +50,11 @@ pub struct StoreServiceConfig {
     pub queue_capacity: usize,
     /// Suppress the underlying store's warn output (counters still count).
     pub quiet: bool,
+    /// Tracing sink: the writer emits commit spans, enqueue→commit latency
+    /// histograms and retry instants on the store track. Disabled by
+    /// default; events carry wall time only (the writer thread has no
+    /// virtual clock in scope).
+    pub obs: ObsSink,
 }
 
 impl Default for StoreServiceConfig {
@@ -58,12 +65,15 @@ impl Default for StoreServiceConfig {
             commit_interval_s: 0.05,
             queue_capacity: 1024,
             quiet: false,
+            obs: ObsSink::disabled(),
         }
     }
 }
 
 enum Msg {
-    Batch(ObsBatch),
+    /// A batch plus its enqueue wall stamp (`ObsSink::wall_now` at submit;
+    /// 0.0 when tracing is disabled), for enqueue→commit latency.
+    Batch(ObsBatch, f64),
     /// Commit everything applied so far and ack with the current stats.
     Flush(Sender<StoreStats>),
 }
@@ -78,6 +88,8 @@ struct ServiceShared {
     /// the service fully drops) and the dropped/corrupt counters, so
     /// handles can report stats without bothering the writer.
     store: ModelStore,
+    /// Tracing sink: handles stamp enqueue times and count submits.
+    obs: ObsSink,
 }
 
 struct ServiceInner {
@@ -138,12 +150,21 @@ impl StoreService {
     pub fn open_with(dir: impl AsRef<Path>, config: StoreServiceConfig) -> Result<StoreServiceHandle> {
         let dir = dir.as_ref().to_path_buf();
         let store = ModelStore::open(&dir)?.quiet(config.quiet);
-        if !store.holds_lock() && !config.quiet {
-            eprintln!(
-                "warn: model store `{}` is locked by another process; the \
-                 service will merge in memory and defer saves until the \
-                 lock frees",
-                dir.display()
+        if !store.holds_lock() {
+            if !config.quiet {
+                log_warn!(
+                    "model store `{}` is locked by another process; the \
+                     service will merge in memory and defer saves until the \
+                     lock frees",
+                    dir.display()
+                );
+            }
+            config.obs.instant(
+                Layer::Store,
+                "lock-deferred",
+                None,
+                None,
+                "directory locked by another process; saves deferred",
             );
         }
 
@@ -160,6 +181,7 @@ impl StoreService {
             snap: SnapshotCell::new(StoreSnapshot::new(mem.clone(), 0)),
             merged_batches: AtomicU64::new(0),
             store: store.clone(),
+            obs: config.obs.clone(),
         });
         let (tx, rx) = mpsc::sync_channel(config.queue_capacity.max(1));
         let writer = Writer {
@@ -172,6 +194,8 @@ impl StoreService {
             commit_interval: Duration::from_secs_f64(config.commit_interval_s.max(1e-3)),
             shared: Arc::clone(&shared),
             version: 0,
+            obs: config.obs,
+            pending_enqueues: Vec::new(),
         };
         let thread = thread::spawn_named("hfpm-store-writer", move || writer.run(rx))?;
 
@@ -211,9 +235,12 @@ impl StoreServiceHandle {
         if batch.is_empty() {
             return Ok(());
         }
-        self.sender()?.send(Msg::Batch(batch)).map_err(|_| {
-            HfpmError::Artifact("model-store writer thread is gone".into())
-        })
+        let obs = &self.inner.shared.obs;
+        obs.count("store.submits", 1);
+        let enqueued_at = obs.wall_now();
+        self.sender()?
+            .send(Msg::Batch(batch, enqueued_at))
+            .map_err(|_| HfpmError::Artifact("model-store writer thread is gone".into()))
     }
 
     /// Block until everything submitted before this call is merged,
@@ -252,6 +279,11 @@ impl StoreServiceHandle {
     }
 }
 
+/// Wall seconds → whole microseconds, for the log2-bucket histograms.
+fn us(s: f64) -> u64 {
+    (s * 1e6) as u64
+}
+
 /// The single writer: owns the store and the authoritative in-memory map.
 struct Writer {
     store: ModelStore,
@@ -264,6 +296,10 @@ struct Writer {
     commit_interval: Duration,
     shared: Arc<ServiceShared>,
     version: u64,
+    obs: ObsSink,
+    /// Enqueue wall stamps of batches applied but not yet covered by a
+    /// commit point, for the `store.enqueue_commit_us` histogram.
+    pending_enqueues: Vec<f64>,
 }
 
 impl Writer {
@@ -284,7 +320,7 @@ impl Writer {
                     let mut acks = Vec::new();
                     for m in msgs {
                         match m {
-                            Msg::Batch(b) => self.apply(b),
+                            Msg::Batch(b, enqueued_at) => self.apply(b, enqueued_at),
                             Msg::Flush(ack) => acks.push(ack),
                         }
                     }
@@ -313,7 +349,7 @@ impl Writer {
 
     /// Merge one batch into the in-memory map (atomically: all ops under
     /// one timestamp, no snapshot published in between).
-    fn apply(&mut self, batch: ObsBatch) {
+    fn apply(&mut self, batch: ObsBatch, enqueued_at: f64) {
         let now = batch.t.unwrap_or_else(super::unix_now);
         let mut any = false;
         for op in &batch.ops {
@@ -332,6 +368,11 @@ impl Writer {
         if any {
             self.applied_since_commit += 1;
             self.shared.merged_batches.fetch_add(1, Ordering::Relaxed);
+            if self.obs.enabled() {
+                let lat = (self.obs.wall_now() - enqueued_at).max(0.0);
+                self.obs.record_hist("store.apply_latency_us", us(lat));
+                self.pending_enqueues.push(enqueued_at);
+            }
         }
     }
 
@@ -348,25 +389,51 @@ impl Writer {
     /// commit point; the merged state itself is never lost while the
     /// service lives.
     fn commit(&mut self) {
+        let span = self.obs.span_start(Layer::Store, "commit", None, None, None);
         let dirty = std::mem::take(&mut self.dirty);
+        self.obs.record_hist("store.commit_keys", dirty.len() as u64);
         for key in dirty {
             let Some(sm) = self.mem.get(&key) else { continue };
             match self.store.save(sm) {
                 Ok(true) => {}
                 Ok(false) => {
+                    // deferred behind another process's lock (counted by
+                    // the store); retried at the next commit point
+                    self.obs
+                        .instant(Layer::Store, "commit-retry", None, None, &key.file_name());
+                    self.obs.count("store.commit_retries", 1);
                     self.dirty.insert(key);
                 }
                 Err(e) => {
-                    eprintln!(
-                        "warn: model store service failed to commit {}: {e}; \
+                    log_warn!(
+                        "model store service failed to commit {}: {e}; \
                          will retry",
                         key.file_name()
                     );
+                    self.obs.instant(
+                        Layer::Store,
+                        "commit-retry",
+                        None,
+                        None,
+                        &format!("{}: {e}", key.file_name()),
+                    );
+                    self.obs.count("store.commit_retries", 1);
                     self.dirty.insert(key);
                 }
             }
         }
         self.applied_since_commit = 0;
+        if self.obs.enabled() {
+            // every batch merged before this commit point has now had its
+            // one shot at disk (deferred keys stay dirty, but the latency
+            // clock for their batches stops at the attempt)
+            let now = self.obs.wall_now();
+            for enq in self.pending_enqueues.drain(..) {
+                self.obs.record_hist("store.enqueue_commit_us", us((now - enq).max(0.0)));
+            }
+            self.obs.count("store.commits", 1);
+        }
+        self.obs.span_end(span, None);
     }
 
     fn stats(&self) -> StoreStats {
@@ -434,6 +501,46 @@ mod tests {
         let store = ModelStore::open(&dir).unwrap();
         assert!(store.holds_lock(), "service must release the lock on drop");
         assert!(store.load(&key).unwrap().is_some(), "drop lost the batch");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn observed_service_traces_the_enqueue_commit_path() {
+        use crate::obs::ObsEvent;
+        let dir = unique_temp_dir("store-service-obs");
+        let sink = ObsSink::bounded(1024);
+        let key = ModelKey::new("h", "k", "sim");
+        {
+            let handle = StoreService::open_with(
+                &dir,
+                StoreServiceConfig {
+                    obs: sink.clone(),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mut b = ObsBatch::new();
+            b.insert(key.clone(), Family::Speed, model(100.0, 7.0));
+            handle.submit(b).unwrap();
+            handle.flush().unwrap();
+        }
+        let sum = sink.summary().expect("enabled sink");
+        assert_eq!(sum.emitted, sum.recorded + sum.dropped);
+        assert_eq!(sum.counters["store.submits"], 1);
+        assert!(sum.counters["store.commits"] >= 1);
+        let enq = &sum.hists["store.enqueue_commit_us"];
+        assert_eq!(enq.count, 1, "one batch, one enqueue→commit sample");
+        assert_eq!(sum.hists["store.apply_latency_us"].count, 1);
+        assert!(sum.hists["store.commit_keys"].max >= 1);
+        let commits = sink
+            .drain()
+            .into_iter()
+            .filter(|e| {
+                matches!(e, ObsEvent::Span { layer: Layer::Store, name, .. }
+                         if name.as_str() == "commit")
+            })
+            .count();
+        assert!(commits >= 1, "commit spans on the store track");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,515 @@
+//! Exporters for the obs event stream: a JSONL line-per-event format for
+//! machine consumption, and Chrome `trace_event` JSON loadable in
+//! Perfetto (<https://ui.perfetto.dev> → "Open trace file") or
+//! `chrome://tracing`.
+//!
+//! The Chrome export renders the dual clocks as two *processes*: pid 1
+//! ("wall clock") carries every event on real elapsed time, pid 2
+//! ("virtual clock") repeats the events that have virtual stamps on the
+//! simulated cluster timeline. Within a process, each instrumented layer
+//! gets its own thread track (session / store-service / sweep / one per
+//! engine rank), so per-rank compute/wait/comm Gantt views come out of
+//! Perfetto directly. Events are sorted by (pid, tid, ts), so `ts` is
+//! non-decreasing within every track. Both exports end with the sink's
+//! loss accounting — drops are never silent.
+
+use super::{DualTime, Layer, ObsEvent, ObsSummary};
+use crate::modelstore::json::{to_compact, Value};
+use crate::Result;
+use std::path::Path;
+
+/// Wall-clock process id in the Chrome export.
+pub const PID_WALL: u64 = 1;
+/// Virtual-clock process id in the Chrome export.
+pub const PID_VIRT: u64 = 2;
+
+/// Thread-track id for a (layer, rank) pair, shared by both processes.
+pub fn track_of(layer: Layer, rank: Option<usize>) -> u64 {
+    match (layer, rank) {
+        (Layer::Session, _) => 1,
+        (Layer::Store, _) => 2,
+        (Layer::Sweep, _) => 3,
+        (Layer::Engine, None) => 9,
+        (Layer::Engine, Some(r)) => 10 + r as u64,
+    }
+}
+
+fn track_name(layer: Layer, rank: Option<usize>) -> String {
+    match (layer, rank) {
+        (Layer::Engine, Some(r)) => format!("rank {r}"),
+        (Layer::Engine, None) => "engine".to_string(),
+        (Layer::Store, _) => "store-service".to_string(),
+        (l, _) => l.name().to_string(),
+    }
+}
+
+/// JSON has no NaN/Infinity, and a timeline with one would not load;
+/// degrade defensively (matching `json::write_num`'s null policy is not
+/// an option for `ts`, which must stay numeric).
+fn fin(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+fn opt_num(x: Option<f64>) -> Value {
+    match x {
+        Some(v) if v.is_finite() => Value::Num(v),
+        _ => Value::Null,
+    }
+}
+
+/// One JSON object per line: every event in queue order, then one final
+/// `{"kind":"meta",...}` line with the counters, histograms, and the
+/// emitted/recorded/dropped accounting.
+pub fn to_jsonl(events: &[ObsEvent], summary: &ObsSummary) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let v = match ev {
+            ObsEvent::Span {
+                id,
+                parent,
+                name,
+                layer,
+                rank,
+                begin,
+                end,
+            } => Value::Obj(vec![
+                ("kind".into(), Value::Str("span".into())),
+                ("layer".into(), Value::Str(layer.name().into())),
+                ("name".into(), Value::Str(name.clone())),
+                ("id".into(), Value::Num(*id as f64)),
+                (
+                    "parent".into(),
+                    parent.map_or(Value::Null, |p| Value::Num(p as f64)),
+                ),
+                (
+                    "rank".into(),
+                    rank.map_or(Value::Null, |r| Value::Num(r as f64)),
+                ),
+                ("wall_begin_s".into(), Value::Num(fin(begin.wall_s))),
+                ("wall_end_s".into(), Value::Num(fin(end.wall_s))),
+                ("virt_begin_s".into(), opt_num(begin.virt_s)),
+                ("virt_end_s".into(), opt_num(end.virt_s)),
+            ]),
+            ObsEvent::Instant {
+                name,
+                layer,
+                rank,
+                at,
+                detail,
+            } => Value::Obj(vec![
+                ("kind".into(), Value::Str("instant".into())),
+                ("layer".into(), Value::Str(layer.name().into())),
+                ("name".into(), Value::Str(name.clone())),
+                (
+                    "rank".into(),
+                    rank.map_or(Value::Null, |r| Value::Num(r as f64)),
+                ),
+                ("wall_s".into(), Value::Num(fin(at.wall_s))),
+                ("virt_s".into(), opt_num(at.virt_s)),
+                ("detail".into(), Value::Str(detail.clone())),
+            ]),
+        };
+        out.push_str(&to_compact(&v));
+        out.push('\n');
+    }
+    out.push_str(&to_compact(&meta_value(summary)));
+    out.push('\n');
+    out
+}
+
+fn meta_value(summary: &ObsSummary) -> Value {
+    Value::Obj(vec![
+        ("kind".into(), Value::Str("meta".into())),
+        ("emitted".into(), Value::Num(summary.emitted as f64)),
+        ("recorded".into(), Value::Num(summary.recorded as f64)),
+        ("dropped".into(), Value::Num(summary.dropped as f64)),
+        (
+            "counters".into(),
+            Value::Obj(
+                summary
+                    .counters
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Value::Num(*v as f64)))
+                    .collect(),
+            ),
+        ),
+        (
+            "hists".into(),
+            Value::Obj(
+                summary
+                    .hists
+                    .iter()
+                    .map(|(k, h)| {
+                        (
+                            k.clone(),
+                            Value::Obj(vec![
+                                ("count".into(), Value::Num(h.count as f64)),
+                                ("sum".into(), Value::Num(h.sum as f64)),
+                                ("max".into(), Value::Num(h.max as f64)),
+                                (
+                                    "buckets".into(),
+                                    Value::Arr(
+                                        h.buckets
+                                            .iter()
+                                            .map(|(floor, c)| {
+                                                Value::Arr(vec![
+                                                    Value::Num(*floor as f64),
+                                                    Value::Num(*c as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+struct TraceEvent {
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    body: Value,
+}
+
+fn complete_event(
+    pid: u64,
+    tid: u64,
+    name: &str,
+    cat: &str,
+    ts_us: f64,
+    dur_us: f64,
+    args: Vec<(String, Value)>,
+) -> TraceEvent {
+    TraceEvent {
+        pid,
+        tid,
+        ts_us,
+        body: Value::Obj(vec![
+            ("name".into(), Value::Str(name.into())),
+            ("cat".into(), Value::Str(cat.into())),
+            ("ph".into(), Value::Str("X".into())),
+            ("pid".into(), Value::Num(pid as f64)),
+            ("tid".into(), Value::Num(tid as f64)),
+            ("ts".into(), Value::Num(ts_us)),
+            ("dur".into(), Value::Num(dur_us)),
+            ("args".into(), Value::Obj(args)),
+        ]),
+    }
+}
+
+fn instant_event(
+    pid: u64,
+    tid: u64,
+    name: &str,
+    cat: &str,
+    ts_us: f64,
+    args: Vec<(String, Value)>,
+) -> TraceEvent {
+    TraceEvent {
+        pid,
+        tid,
+        ts_us,
+        body: Value::Obj(vec![
+            ("name".into(), Value::Str(name.into())),
+            ("cat".into(), Value::Str(cat.into())),
+            ("ph".into(), Value::Str("i".into())),
+            ("s".into(), Value::Str("t".into())),
+            ("pid".into(), Value::Num(pid as f64)),
+            ("tid".into(), Value::Num(tid as f64)),
+            ("ts".into(), Value::Num(ts_us)),
+            ("args".into(), Value::Obj(args)),
+        ]),
+    }
+}
+
+fn metadata_event(pid: u64, tid: Option<u64>, meta: &str, value: &str) -> Value {
+    let mut pairs = vec![
+        ("name".into(), Value::Str(meta.into())),
+        ("ph".into(), Value::Str("M".into())),
+        ("pid".into(), Value::Num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid".into(), Value::Num(t as f64)));
+    }
+    pairs.push((
+        "args".into(),
+        Value::Obj(vec![("name".into(), Value::Str(value.into()))]),
+    ));
+    Value::Obj(pairs)
+}
+
+/// Chrome `trace_event` JSON. Spans become complete (`ph:"X"`) events,
+/// instants `ph:"i"`; everything lands on the wall-clock process, and
+/// events with virtual stamps are repeated on the virtual-clock process.
+pub fn to_chrome_trace(events: &[ObsEvent], summary: &ObsSummary) -> String {
+    let mut evs: Vec<TraceEvent> = Vec::new();
+    let mut tracks: Vec<(u64, Layer, Option<usize>)> = Vec::new();
+    let mut virt_used = false;
+    let mut note_track = |tracks: &mut Vec<(u64, Layer, Option<usize>)>,
+                          layer: Layer,
+                          rank: Option<usize>| {
+        let tid = track_of(layer, rank);
+        if !tracks.iter().any(|(t, _, _)| *t == tid) {
+            tracks.push((tid, layer, rank));
+        }
+    };
+    for ev in events {
+        match ev {
+            ObsEvent::Span {
+                id,
+                parent,
+                name,
+                layer,
+                rank,
+                begin,
+                end,
+            } => {
+                note_track(&mut tracks, *layer, *rank);
+                let tid = track_of(*layer, *rank);
+                let mut args = vec![("id".into(), Value::Num(*id as f64))];
+                if let Some(p) = parent {
+                    args.push(("parent".into(), Value::Num(*p as f64)));
+                }
+                let ts = fin(begin.wall_s) * 1e6;
+                let dur = (fin(end.wall_s) - fin(begin.wall_s)).max(0.0) * 1e6;
+                evs.push(complete_event(
+                    PID_WALL,
+                    tid,
+                    name,
+                    layer.name(),
+                    ts,
+                    dur,
+                    args.clone(),
+                ));
+                if let (Some(vb), Some(ve)) = (begin.virt_s, end.virt_s) {
+                    virt_used = true;
+                    let ts = fin(vb) * 1e6;
+                    let dur = (fin(ve) - fin(vb)).max(0.0) * 1e6;
+                    evs.push(complete_event(
+                        PID_VIRT,
+                        tid,
+                        name,
+                        layer.name(),
+                        ts,
+                        dur,
+                        args,
+                    ));
+                }
+            }
+            ObsEvent::Instant {
+                name,
+                layer,
+                rank,
+                at,
+                detail,
+            } => {
+                note_track(&mut tracks, *layer, *rank);
+                let tid = track_of(*layer, *rank);
+                let args = if detail.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![("detail".into(), Value::Str(detail.clone()))]
+                };
+                evs.push(instant_event(
+                    PID_WALL,
+                    tid,
+                    name,
+                    layer.name(),
+                    fin(at.wall_s) * 1e6,
+                    args.clone(),
+                ));
+                if let Some(v) = at.virt_s {
+                    virt_used = true;
+                    evs.push(instant_event(
+                        PID_VIRT,
+                        tid,
+                        name,
+                        layer.name(),
+                        fin(v) * 1e6,
+                        args,
+                    ));
+                }
+            }
+        }
+    }
+    // (pid, tid, ts) order ⇒ ts is non-decreasing within every track
+    evs.sort_by(|a, b| {
+        (a.pid, a.tid)
+            .cmp(&(b.pid, b.tid))
+            .then(a.ts_us.total_cmp(&b.ts_us))
+    });
+
+    let mut all: Vec<Value> = Vec::new();
+    all.push(metadata_event(PID_WALL, None, "process_name", "wall clock"));
+    if virt_used {
+        all.push(metadata_event(
+            PID_VIRT,
+            None,
+            "process_name",
+            "virtual clock",
+        ));
+    }
+    tracks.sort_by_key(|(tid, _, _)| *tid);
+    for (tid, layer, rank) in &tracks {
+        let name = track_name(*layer, *rank);
+        all.push(metadata_event(PID_WALL, Some(*tid), "thread_name", &name));
+        if virt_used {
+            all.push(metadata_event(PID_VIRT, Some(*tid), "thread_name", &name));
+        }
+    }
+    all.extend(evs.into_iter().map(|e| e.body));
+
+    let doc = Value::Obj(vec![
+        ("traceEvents".into(), Value::Arr(all)),
+        ("displayTimeUnit".into(), Value::Str("ms".into())),
+        (
+            "otherData".into(),
+            Value::Obj(vec![
+                ("emitted".into(), Value::Num(summary.emitted as f64)),
+                ("recorded".into(), Value::Num(summary.recorded as f64)),
+                ("dropped".into(), Value::Num(summary.dropped as f64)),
+            ]),
+        ),
+    ]);
+    doc.render()
+}
+
+/// Write the drained stream to `path`, picking the format by extension:
+/// `.jsonl` → line stream, anything else → Chrome trace JSON.
+pub fn write_obs_out(path: &Path, events: &[ObsEvent], summary: &ObsSummary) -> Result<()> {
+    let text = if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+        to_jsonl(events, summary)
+    } else {
+        to_chrome_trace(events, summary)
+    };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::modelstore::json;
+    use crate::obs::ObsSink;
+
+    fn sample() -> (Vec<ObsEvent>, ObsSummary) {
+        let sink = ObsSink::bounded(64);
+        let run = sink.span_start(Layer::Session, "run", None, None, Some(0.0));
+        let part = sink.span_start(Layer::Session, "partition", None, run.id(), Some(0.0));
+        sink.span_end(part, Some(0.5));
+        let f = sink.span_start(Layer::Engine, "compute", Some(0), None, Some(0.5));
+        sink.span_end(f, Some(1.5));
+        sink.instant(Layer::Engine, "fault", Some(1), Some(1.0), "death");
+        sink.instant(Layer::Store, "commit", None, None, "3 keys");
+        sink.span_end(run, Some(2.0));
+        sink.count("store.commits", 1);
+        sink.record_hist("lat", 9);
+        let sum = sink.summary().expect("enabled");
+        (sink.drain(), sum)
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_end_with_meta() {
+        let (evs, sum) = sample();
+        let text = to_jsonl(&evs, &sum);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), evs.len() + 1);
+        for line in &lines {
+            json::parse(line).expect("every line is standalone JSON");
+        }
+        let meta = json::parse(lines.last().expect("meta line")).expect("meta parses");
+        assert_eq!(meta.get("kind").and_then(|v| v.as_str()), Some("meta"));
+        assert_eq!(meta.get("dropped").and_then(|v| v.as_f64()), Some(0.0));
+        let e = meta.get("emitted").and_then(|v| v.as_f64()).expect("emitted");
+        let r = meta.get("recorded").and_then(|v| v.as_f64()).expect("recorded");
+        let d = meta.get("dropped").and_then(|v| v.as_f64()).expect("dropped");
+        assert_eq!(e, r + d);
+    }
+
+    #[test]
+    fn chrome_trace_parses_with_both_clock_processes() {
+        let (evs, sum) = sample();
+        let text = to_chrome_trace(&evs, &sum);
+        let doc = json::parse(&text).expect("valid JSON");
+        let tes = doc
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents");
+        let pids: Vec<f64> = tes
+            .iter()
+            .filter_map(|e| e.get("pid").and_then(|p| p.as_f64()))
+            .collect();
+        assert!(pids.contains(&(PID_WALL as f64)));
+        assert!(pids.contains(&(PID_VIRT as f64)), "virtual stamps present");
+        // store-service events have no virtual clock → wall process only
+        assert!(tes.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("commit")
+                && e.get("pid").and_then(|p| p.as_f64()) == Some(PID_WALL as f64)
+        }));
+        assert!(!tes.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("commit")
+                && e.get("pid").and_then(|p| p.as_f64()) == Some(PID_VIRT as f64)
+        }));
+    }
+
+    #[test]
+    fn chrome_trace_ts_non_decreasing_per_track() {
+        let (evs, sum) = sample();
+        let doc = json::parse(&to_chrome_trace(&evs, &sum)).expect("valid JSON");
+        let tes = doc
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents");
+        let mut last: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+        for e in tes {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("M") {
+                continue;
+            }
+            let pid = e.get("pid").and_then(|p| p.as_f64()).expect("pid") as u64;
+            let tid = e.get("tid").and_then(|t| t.as_f64()).expect("tid") as u64;
+            let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+            if let Some(prev) = last.get(&(pid, tid)) {
+                assert!(ts >= *prev, "ts regressed on track ({pid},{tid})");
+            }
+            last.insert((pid, tid), ts);
+        }
+    }
+
+    #[test]
+    fn nonfinite_stamps_degrade_instead_of_corrupting() {
+        let evs = vec![ObsEvent::Span {
+            id: 1,
+            parent: None,
+            name: "bad".into(),
+            layer: Layer::Session,
+            rank: None,
+            begin: DualTime {
+                wall_s: f64::NAN,
+                virt_s: Some(f64::INFINITY),
+            },
+            end: DualTime {
+                wall_s: 1.0,
+                virt_s: Some(2.0),
+            },
+        }];
+        let sum = ObsSummary::default();
+        json::parse(&to_chrome_trace(&evs, &sum)).expect("still valid JSON");
+        for line in to_jsonl(&evs, &sum).lines() {
+            json::parse(line).expect("still valid JSONL");
+        }
+    }
+}

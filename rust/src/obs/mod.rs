@@ -1,0 +1,595 @@
+//! `obs` — unified dual-clock tracing & metrics (DESIGN.md §3.11).
+//!
+//! Zero-dependency structured tracing for the four layers behind the
+//! paper's cost-of-adaptation claim: [`crate::adapt::AdaptiveSession`]
+//! phases (benchmark / partition / execute / store-flush), the frame
+//! engine's per-rank compute/wait/comm timelines, the store service's
+//! enqueue→commit path, and sweep grid cells. Every record carries BOTH
+//! clocks:
+//!
+//! - **wall seconds** — real elapsed time since the sink was created
+//!   (measures the partitioner's own, genuinely executed cost);
+//! - **virtual seconds** — the simulated cluster clock at the emit site,
+//!   when the emitting layer has one (`None` for wall-only layers such as
+//!   the store service writer).
+//!
+//! The sink is a bounded, drop-counting queue built on the [`crate::sync`]
+//! facade so the protocol stays loom-modelable. The hot path NEVER
+//! blocks: emission uses `try_lock`, and lock contention or a full queue
+//! increments an atomic drop counter instead of waiting. Drops are
+//! therefore never silent — `emitted == recorded + dropped` holds by
+//! construction and is reported in every [`ObsSummary`] and export.
+//!
+//! Alongside events, the sink carries a counter registry and log2-bucket
+//! histograms (`record_hist`), merged into `WorkloadReport` at run end.
+//! Exporters live in [`export`] (JSONL stream + Chrome `trace_event`
+//! JSON with separate wall/virtual process tracks, loadable in Perfetto)
+//! and [`profile`] (aggregated span tree with self/total breakdown,
+//! behind `repro profile`).
+
+pub mod export;
+pub mod profile;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
+use crate::util::timer::Stopwatch;
+use std::collections::{BTreeMap, VecDeque};
+
+/// A timestamp on both clocks. `virt_s` is `None` when the emitting layer
+/// has no virtual clock in scope (e.g. the store service writer thread).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DualTime {
+    pub wall_s: f64,
+    pub virt_s: Option<f64>,
+}
+
+/// Which instrumented layer emitted a record. Determines the thread track
+/// in the Chrome-trace export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    Session,
+    Engine,
+    Store,
+    Sweep,
+}
+
+impl Layer {
+    pub fn name(self) -> &'static str {
+        match self {
+            Layer::Session => "session",
+            Layer::Engine => "engine",
+            Layer::Store => "store",
+            Layer::Sweep => "sweep",
+        }
+    }
+}
+
+/// One recorded event. Spans are emitted *complete* (at `span_end`), so
+/// there are never unmatched begin/end pairs in a drained stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    Span {
+        /// Unique nonzero id; referenced by children via `parent`.
+        id: u64,
+        parent: Option<u64>,
+        name: String,
+        layer: Layer,
+        /// Engine rank for per-rank slices; `None` for whole-layer spans.
+        rank: Option<usize>,
+        begin: DualTime,
+        end: DualTime,
+    },
+    Instant {
+        name: String,
+        layer: Layer,
+        rank: Option<usize>,
+        at: DualTime,
+        detail: String,
+    },
+}
+
+/// An in-flight span. Returned by [`ObsSink::span_start`]; pass back to
+/// [`ObsSink::span_end`] to emit the completed record. A handle from a
+/// disabled sink is inert and free.
+#[derive(Debug)]
+pub struct SpanHandle(Option<SpanData>);
+
+#[derive(Debug)]
+struct SpanData {
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    layer: Layer,
+    rank: Option<usize>,
+    begin: DualTime,
+}
+
+impl SpanHandle {
+    /// The span's id, for threading as `parent` into children. `None`
+    /// when the sink was disabled at `span_start`.
+    pub fn id(&self) -> Option<u64> {
+        self.0.as_ref().map(|d| d.id)
+    }
+}
+
+/// log2-bucket histogram: bucket `i` counts values whose floor(log2) + 1
+/// is `i` (bucket 0 holds exactly the zeros).
+#[derive(Debug, Clone)]
+struct Hist {
+    buckets: [u64; 65],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Hist {
+    fn new() -> Self {
+        Self {
+            buckets: [0; 65],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+}
+
+/// Bucket index for a value: 0 for 0, else `floor(log2(v)) + 1`.
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Lower bound of a bucket (inclusive): the smallest value it admits.
+pub fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// A histogram flattened for reporting: only the non-empty buckets, as
+/// `(bucket_floor, count)` pairs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// Sink health + metrics snapshot, merged into `WorkloadReport` and
+/// appended to every export. The loss accounting invariant
+/// `emitted == recorded + dropped` always holds.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsSummary {
+    /// Events offered to the sink (spans + instants).
+    pub emitted: u64,
+    /// Events accepted into the bounded queue.
+    pub recorded: u64,
+    /// Events lost to a full queue or emit-path lock contention.
+    pub dropped: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSummary>,
+}
+
+struct SinkShared {
+    /// Wall-clock anchor: all `wall_s` stamps are elapsed seconds since
+    /// sink creation, so tracks from different layers line up.
+    anchor: Stopwatch,
+    queue: Mutex<VecDeque<ObsEvent>>,
+    cap: usize,
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+    next_id: AtomicU64,
+    counters: Mutex<BTreeMap<String, u64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+/// Cloneable handle to the shared bounded sink. `Default` is a disabled
+/// sink: every operation is a single branch, so instrumented code pays
+/// nearly nothing when tracing is off.
+#[derive(Clone, Default)]
+pub struct ObsSink {
+    inner: Option<Arc<SinkShared>>,
+}
+
+impl std::fmt::Debug for ObsSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "ObsSink(disabled)"),
+            Some(s) => write!(
+                f,
+                "ObsSink(cap={}, emitted={}, dropped={})",
+                s.cap,
+                s.emitted.load(Ordering::Relaxed),
+                s.dropped.load(Ordering::Relaxed)
+            ),
+        }
+    }
+}
+
+/// Default queue capacity for CLI-created sinks: roomy enough for long
+/// jacobi/LU runs, bounded so a runaway emitter cannot exhaust memory.
+pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+impl ObsSink {
+    /// A disabled sink (same as `Default`).
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    /// An enabled sink holding at most `capacity` events; later events
+    /// are dropped (and counted) once full.
+    pub fn bounded(capacity: usize) -> Self {
+        Self {
+            inner: Some(Arc::new(SinkShared {
+                anchor: Stopwatch::start(),
+                queue: Mutex::new(VecDeque::with_capacity(capacity.min(4096))),
+                cap: capacity.max(1),
+                emitted: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                next_id: AtomicU64::new(1),
+                counters: Mutex::new(BTreeMap::new()),
+                hists: Mutex::new(BTreeMap::new()),
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Wall seconds since sink creation (0.0 when disabled). The one
+    /// timestamp source for all instrumented layers — modules under the
+    /// wall-clock lint never touch `Instant::now` themselves.
+    pub fn wall_now(&self) -> f64 {
+        match &self.inner {
+            Some(s) => s.anchor.elapsed_s(),
+            None => 0.0,
+        }
+    }
+
+    /// Open a span. `virt` is the emitting layer's virtual clock reading
+    /// if it has one. Cheap no-op on a disabled sink.
+    pub fn span_start(
+        &self,
+        layer: Layer,
+        name: &str,
+        rank: Option<usize>,
+        parent: Option<u64>,
+        virt: Option<f64>,
+    ) -> SpanHandle {
+        let Some(s) = &self.inner else {
+            return SpanHandle(None);
+        };
+        SpanHandle(Some(SpanData {
+            id: s.next_id.fetch_add(1, Ordering::Relaxed),
+            parent,
+            name: name.to_string(),
+            layer,
+            rank,
+            begin: DualTime {
+                wall_s: s.anchor.elapsed_s(),
+                virt_s: virt,
+            },
+        }))
+    }
+
+    /// Close a span and emit the completed record.
+    pub fn span_end(&self, handle: SpanHandle, virt: Option<f64>) {
+        let (Some(s), Some(d)) = (&self.inner, handle.0) else {
+            return;
+        };
+        let end = DualTime {
+            wall_s: s.anchor.elapsed_s(),
+            virt_s: virt,
+        };
+        self.push(ObsEvent::Span {
+            id: d.id,
+            parent: d.parent,
+            name: d.name,
+            layer: d.layer,
+            rank: d.rank,
+            begin: d.begin,
+            end,
+        });
+    }
+
+    /// Emit a completed span with explicit stamps. For layers that learn
+    /// their slice boundaries only after the fact (the engine folds a
+    /// frame's per-rank times at the barrier); most callers want
+    /// [`span_start`](Self::span_start)/[`span_end`](Self::span_end).
+    /// Returns the span id for threading as a parent, `None` if disabled.
+    pub fn span_at(
+        &self,
+        layer: Layer,
+        name: &str,
+        rank: Option<usize>,
+        parent: Option<u64>,
+        begin: DualTime,
+        end: DualTime,
+    ) -> Option<u64> {
+        let s = self.inner.as_ref()?;
+        let id = s.next_id.fetch_add(1, Ordering::Relaxed);
+        self.push(ObsEvent::Span {
+            id,
+            parent,
+            name: name.to_string(),
+            layer,
+            rank,
+            begin,
+            end,
+        });
+        Some(id)
+    }
+
+    /// Emit a point event (fault injection, retry, warning mirror, ...).
+    pub fn instant(
+        &self,
+        layer: Layer,
+        name: &str,
+        rank: Option<usize>,
+        virt: Option<f64>,
+        detail: &str,
+    ) {
+        let Some(s) = &self.inner else {
+            return;
+        };
+        let at = DualTime {
+            wall_s: s.anchor.elapsed_s(),
+            virt_s: virt,
+        };
+        self.push(ObsEvent::Instant {
+            name: name.to_string(),
+            layer,
+            rank,
+            at,
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Never-blocking emit: try the queue lock once; contention or a full
+    /// queue becomes a counted drop, not a stall.
+    fn push(&self, ev: ObsEvent) {
+        let Some(s) = &self.inner else {
+            return;
+        };
+        s.emitted.fetch_add(1, Ordering::Relaxed);
+        match s.queue.try_lock() {
+            Ok(mut q) => {
+                if q.len() < s.cap {
+                    q.push_back(ev);
+                } else {
+                    s.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                s.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Add `n` to a named counter. Registry updates take the (rarely
+    /// contended) registry lock — they are off the per-frame hot path.
+    pub fn count(&self, name: &str, n: u64) {
+        let Some(s) = &self.inner else {
+            return;
+        };
+        if let Ok(mut c) = s.counters.lock() {
+            *c.entry(name.to_string()).or_insert(0) += n;
+        }
+    }
+
+    /// Record a value into the named log2-bucket histogram.
+    pub fn record_hist(&self, name: &str, value: u64) {
+        let Some(s) = &self.inner else {
+            return;
+        };
+        if let Ok(mut h) = s.hists.lock() {
+            h.entry(name.to_string()).or_insert_with(Hist::new).record(value);
+        }
+    }
+
+    /// Take every recorded event out of the queue (oldest first). Called
+    /// once at run end by the exporter; not a hot path, so it may block.
+    pub fn drain(&self) -> Vec<ObsEvent> {
+        let Some(s) = &self.inner else {
+            return Vec::new();
+        };
+        match s.queue.lock() {
+            Ok(mut q) => q.drain(..).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Health + metrics snapshot. `None` on a disabled sink.
+    pub fn summary(&self) -> Option<ObsSummary> {
+        let s = self.inner.as_ref()?;
+        let emitted = s.emitted.load(Ordering::Relaxed);
+        let dropped = s.dropped.load(Ordering::Relaxed);
+        let counters = match s.counters.lock() {
+            Ok(c) => c.clone(),
+            Err(_) => BTreeMap::new(),
+        };
+        let hists = match s.hists.lock() {
+            Ok(h) => h
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        HistSummary {
+                            count: v.count,
+                            sum: v.sum,
+                            max: v.max,
+                            buckets: v
+                                .buckets
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, c)| **c > 0)
+                                .map(|(i, c)| (bucket_floor(i), *c))
+                                .collect(),
+                        },
+                    )
+                })
+                .collect(),
+            Err(_) => BTreeMap::new(),
+        };
+        Some(ObsSummary {
+            emitted,
+            recorded: emitted - dropped,
+            dropped,
+            counters,
+            hists,
+        })
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = ObsSink::default();
+        assert!(!sink.enabled());
+        let h = sink.span_start(Layer::Session, "x", None, None, None);
+        assert_eq!(h.id(), None);
+        sink.span_end(h, None);
+        sink.instant(Layer::Engine, "y", Some(1), Some(2.0), "");
+        sink.count("c", 3);
+        sink.record_hist("h", 7);
+        assert!(sink.drain().is_empty());
+        assert!(sink.summary().is_none());
+    }
+
+    #[test]
+    fn spans_nest_via_parent_ids_and_carry_both_clocks() {
+        let sink = ObsSink::bounded(16);
+        let outer = sink.span_start(Layer::Session, "run", None, None, Some(0.0));
+        let outer_id = outer.id();
+        assert!(outer_id.is_some());
+        let inner = sink.span_start(Layer::Session, "partition", None, outer_id, Some(1.0));
+        sink.span_end(inner, Some(2.5));
+        sink.span_end(outer, Some(3.0));
+        let evs = sink.drain();
+        assert_eq!(evs.len(), 2);
+        let ObsEvent::Span {
+            id,
+            parent,
+            name,
+            begin,
+            end,
+            ..
+        } = &evs[0]
+        else {
+            panic!("expected span");
+        };
+        assert_eq!(name, "partition");
+        assert_eq!(*parent, outer_id);
+        assert_ne!(Some(*id), outer_id);
+        assert_eq!(begin.virt_s, Some(1.0));
+        assert_eq!(end.virt_s, Some(2.5));
+        assert!(end.wall_s >= begin.wall_s);
+        let ObsEvent::Span { name, .. } = &evs[1] else {
+            panic!("expected span");
+        };
+        assert_eq!(name, "run");
+    }
+
+    #[test]
+    fn saturation_drops_are_counted_never_silent() {
+        let sink = ObsSink::bounded(2);
+        for i in 0..5 {
+            sink.instant(Layer::Store, "e", None, None, &format!("{i}"));
+        }
+        let sum = sink.summary().expect("enabled");
+        assert_eq!(sum.emitted, 5);
+        assert_eq!(sum.recorded, 2);
+        assert_eq!(sum.dropped, 3);
+        assert_eq!(sum.emitted, sum.recorded + sum.dropped);
+        assert_eq!(sink.drain().len(), 2);
+    }
+
+    #[test]
+    fn counters_and_hists_aggregate() {
+        let sink = ObsSink::bounded(8);
+        sink.count("store.commits", 1);
+        sink.count("store.commits", 2);
+        sink.record_hist("lat", 0);
+        sink.record_hist("lat", 1);
+        sink.record_hist("lat", 5);
+        sink.record_hist("lat", 5);
+        let sum = sink.summary().expect("enabled");
+        assert_eq!(sum.counters["store.commits"], 3);
+        let h = &sum.hists["lat"];
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 11);
+        assert_eq!(h.max, 5);
+        // 0 → bucket floor 0; 1 → floor 1; 5,5 → floor 4
+        assert_eq!(h.buckets, vec![(0, 1), (1, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn bucket_math() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_floor(bucket_of(5)), 4);
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(1), 1);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_across_events() {
+        let sink = ObsSink::bounded(8);
+        sink.instant(Layer::Session, "a", None, None, "");
+        sink.instant(Layer::Session, "b", None, None, "");
+        let evs = sink.drain();
+        let walls: Vec<f64> = evs
+            .iter()
+            .map(|e| match e {
+                ObsEvent::Instant { at, .. } => at.wall_s,
+                ObsEvent::Span { end, .. } => end.wall_s,
+            })
+            .collect();
+        assert!(walls.windows(2).all(|w| w[1] >= w[0]));
+    }
+}
+
+// Loom model: two concurrent emitters against a capacity-1 sink. The
+// accounting invariant `emitted == recorded + dropped` must hold in every
+// interleaving, and the drained queue must hold exactly `recorded` events
+// — no event is ever lost without a counted drop.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::thread;
+
+    #[test]
+    fn loom_obs_emit_accounting_is_exact_under_contention() {
+        loom::model(|| {
+            let sink = ObsSink::bounded(1);
+            let s2 = sink.clone();
+            let h = thread::spawn_named("emitter", move || {
+                s2.instant(Layer::Engine, "a", Some(0), None, "");
+            })
+            .expect("spawn");
+            sink.instant(Layer::Engine, "b", Some(1), None, "");
+            h.join().expect("emitter exits");
+            let sum = sink.summary().expect("enabled");
+            assert_eq!(sum.emitted, 2);
+            assert_eq!(sum.emitted, sum.recorded + sum.dropped);
+            assert_eq!(sink.drain().len() as u64, sum.recorded);
+        });
+    }
+}

@@ -1,0 +1,252 @@
+//! Span-tree profile: aggregate a drained obs stream by span name path
+//! and render a self/total breakdown on both clocks — the `repro profile`
+//! view. "Self" time is a node's total minus its children's totals, so
+//! the cost of adaptation (partition) reads directly against the cost of
+//! the application (execute), the paper's orders-of-magnitude claim as a
+//! measured artifact.
+
+use super::{ObsEvent, ObsSummary};
+use crate::util::table::{fdur, Align, Table};
+use std::collections::BTreeMap;
+
+/// One aggregated node: all spans sharing a name path, summed.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileNode {
+    pub name: String,
+    pub count: u64,
+    pub wall_total_s: f64,
+    pub wall_self_s: f64,
+    /// `None` when no instance of this span carried virtual stamps.
+    pub virt_total_s: Option<f64>,
+    pub virt_self_s: Option<f64>,
+    pub children: Vec<ProfileNode>,
+}
+
+#[derive(Default)]
+struct Agg {
+    count: u64,
+    wall: f64,
+    virt: Option<f64>,
+    children: BTreeMap<String, Agg>,
+}
+
+impl Agg {
+    fn absorb(&mut self, wall: f64, virt: Option<f64>) {
+        self.count += 1;
+        self.wall += wall;
+        if let Some(v) = virt {
+            *self.virt.get_or_insert(0.0) += v;
+        }
+    }
+
+    fn finish(self, name: String) -> ProfileNode {
+        let mut children: Vec<ProfileNode> = self
+            .children
+            .into_iter()
+            .map(|(n, a)| a.finish(n))
+            .collect();
+        children.sort_by(|a, b| b.wall_total_s.total_cmp(&a.wall_total_s));
+        let child_wall: f64 = children.iter().map(|c| c.wall_total_s).sum();
+        let child_virt: f64 = children.iter().filter_map(|c| c.virt_total_s).sum();
+        ProfileNode {
+            name,
+            count: self.count,
+            wall_total_s: self.wall,
+            wall_self_s: (self.wall - child_wall).max(0.0),
+            virt_total_s: self.virt,
+            virt_self_s: self.virt.map(|v| (v - child_virt).max(0.0)),
+            children,
+        }
+    }
+}
+
+/// Build the aggregated span tree from a drained event stream. Spans
+/// whose parent was dropped (or never closed) surface as roots — the
+/// tree degrades, it never loses time.
+pub fn build_tree(events: &[ObsEvent]) -> Vec<ProfileNode> {
+    struct Rec<'a> {
+        parent: Option<u64>,
+        name: &'a str,
+        wall: f64,
+        virt: Option<f64>,
+    }
+    let mut by_id: BTreeMap<u64, Rec> = BTreeMap::new();
+    for ev in events {
+        if let ObsEvent::Span {
+            id,
+            parent,
+            name,
+            begin,
+            end,
+            ..
+        } = ev
+        {
+            by_id.insert(
+                *id,
+                Rec {
+                    parent: *parent,
+                    name,
+                    wall: (end.wall_s - begin.wall_s).max(0.0),
+                    virt: match (begin.virt_s, end.virt_s) {
+                        (Some(b), Some(e)) => Some((e - b).max(0.0)),
+                        _ => None,
+                    },
+                },
+            );
+        }
+    }
+    let mut root = Agg::default();
+    for rec in by_id.values() {
+        // name path root→self, chasing parents still present in the stream
+        let mut path: Vec<&str> = vec![rec.name];
+        let mut cur = rec.parent;
+        while let Some(pid) = cur {
+            match by_id.get(&pid) {
+                Some(p) => {
+                    path.push(p.name);
+                    cur = p.parent;
+                }
+                None => break,
+            }
+        }
+        path.reverse();
+        let mut node = &mut root;
+        for part in &path {
+            node = node.children.entry((*part).to_string()).or_default();
+        }
+        node.absorb(rec.wall, rec.virt);
+    }
+    let mut roots: Vec<ProfileNode> = root
+        .children
+        .into_iter()
+        .map(|(n, a)| a.finish(n))
+        .collect();
+    roots.sort_by(|a, b| b.wall_total_s.total_cmp(&a.wall_total_s));
+    roots
+}
+
+fn fvirt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => fdur(v),
+        None => "-".to_string(),
+    }
+}
+
+fn add_rows(t: &mut Table, node: &ProfileNode, depth: usize) {
+    t.add_row(vec![
+        format!("{}{}", "  ".repeat(depth), node.name),
+        node.count.to_string(),
+        fdur(node.wall_total_s),
+        fdur(node.wall_self_s),
+        fvirt(node.virt_total_s),
+        fvirt(node.virt_self_s),
+    ]);
+    for c in &node.children {
+        add_rows(t, c, depth + 1);
+    }
+}
+
+/// Render the span tree plus the sink's loss accounting and counters.
+pub fn render(events: &[ObsEvent], summary: &ObsSummary) -> String {
+    let roots = build_tree(events);
+    let mut t = Table::new(
+        "profile (wall = real partitioner cost, virt = simulated cluster time)",
+        &[
+            "span",
+            "count",
+            "wall total",
+            "wall self",
+            "virt total",
+            "virt self",
+        ],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in &roots {
+        add_rows(&mut t, r, 0);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "events: {} emitted, {} recorded, {} dropped\n",
+        summary.emitted, summary.recorded, summary.dropped
+    ));
+    for (k, v) in &summary.counters {
+        out.push_str(&format!("counter {k}: {v}\n"));
+    }
+    for (k, h) in &summary.hists {
+        out.push_str(&format!(
+            "hist {k}: count={} sum={} max={}\n",
+            h.count, h.sum, h.max
+        ));
+    }
+    out
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::obs::{Layer, ObsSink};
+
+    fn stream() -> (Vec<ObsEvent>, ObsSummary) {
+        let sink = ObsSink::bounded(64);
+        let run = sink.span_start(Layer::Session, "run", None, None, Some(0.0));
+        let p = sink.span_start(Layer::Session, "partition", None, run.id(), Some(0.0));
+        sink.span_end(p, Some(0.25));
+        let x = sink.span_start(Layer::Session, "execute", None, run.id(), Some(0.25));
+        sink.span_end(x, Some(10.25));
+        sink.span_end(run, Some(10.5));
+        let sum = sink.summary().expect("enabled");
+        (sink.drain(), sum)
+    }
+
+    #[test]
+    fn tree_separates_partition_self_from_execute() {
+        let (evs, _) = stream();
+        let roots = build_tree(&evs);
+        assert_eq!(roots.len(), 1);
+        let run = &roots[0];
+        assert_eq!(run.name, "run");
+        assert_eq!(run.children.len(), 2);
+        // children sorted by wall total; find by name to stay robust
+        let part = run
+            .children
+            .iter()
+            .find(|c| c.name == "partition")
+            .expect("partition node");
+        let exec = run
+            .children
+            .iter()
+            .find(|c| c.name == "execute")
+            .expect("execute node");
+        assert!((part.virt_total_s.expect("virt") - 0.25).abs() < 1e-9);
+        assert!((exec.virt_total_s.expect("virt") - 10.0).abs() < 1e-9);
+        // run's virt self excludes both children
+        assert!((run.virt_self_s.expect("virt") - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn orphaned_spans_surface_as_roots() {
+        let (mut evs, _) = stream();
+        // drop the "run" span: its children must become roots, not vanish
+        evs.retain(|e| !matches!(e, ObsEvent::Span { name, .. } if name == "run"));
+        let roots = build_tree(&evs);
+        let names: Vec<&str> = roots.iter().map(|r| r.name.as_str()).collect();
+        assert!(names.contains(&"partition"));
+        assert!(names.contains(&"execute"));
+    }
+
+    #[test]
+    fn render_reports_loss_accounting() {
+        let (evs, sum) = stream();
+        let text = render(&evs, &sum);
+        assert!(text.contains("partition"));
+        assert!(text.contains("execute"));
+        assert!(text.contains("0 dropped"));
+    }
+}

@@ -4,7 +4,7 @@
 //! or programmatically via [`set_level`].
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -40,24 +40,58 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+/// Set when an unparsable `HFPM_LOG` value was reported (exactly once).
+static WARNED_INVALID: AtomicBool = AtomicBool::new(false);
 
-fn current_level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw == u8::MAX {
-        let lvl = std::env::var("HFPM_LOG")
-            .ok()
-            .and_then(|s| Level::parse(&s))
-            .unwrap_or(Level::Warn);
-        LEVEL.store(lvl as u8, Ordering::Relaxed);
-        return lvl;
-    }
-    // SAFETY: only valid discriminants are ever stored.
+fn decode(raw: u8) -> Level {
+    // only valid discriminants are ever stored
     match raw {
         0 => Level::Error,
         1 => Level::Warn,
         2 => Level::Info,
         3 => Level::Debug,
         _ => Level::Trace,
+    }
+}
+
+fn current_level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        return init_from_env();
+    }
+    decode(raw)
+}
+
+/// First call resolves `HFPM_LOG`. An unparsable value defaults to `warn`
+/// AND says so once — a typo like `HFPM_LOG=vrebose` used to silently
+/// behave as if the variable were unset.
+fn init_from_env() -> Level {
+    let mut invalid: Option<String> = None;
+    let lvl = match std::env::var("HFPM_LOG") {
+        Ok(s) => Level::parse(&s).unwrap_or_else(|| {
+            invalid = Some(s);
+            Level::Warn
+        }),
+        Err(_) => Level::Warn,
+    };
+    // compare_exchange keeps the warning single-shot under racing
+    // first-callers (and respects a concurrent set_level)
+    match LEVEL.compare_exchange(u8::MAX, lvl as u8, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => {
+            if let Some(s) = invalid {
+                WARNED_INVALID.store(true, Ordering::Relaxed);
+                log_impl(
+                    Level::Warn,
+                    module_path!(),
+                    format_args!(
+                        "invalid HFPM_LOG value `{s}` \
+                         (expected error|warn|info|debug|trace); defaulting to warn"
+                    ),
+                );
+            }
+            lvl
+        }
+        Err(cur) => decode(cur),
     }
 }
 
@@ -105,6 +139,9 @@ macro_rules! log_trace {
 mod tests {
     use super::*;
 
+    // LEVEL is process-global: tests that write it must not interleave
+    static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn parse_levels() {
         assert_eq!(Level::parse("info"), Some(Level::Info));
@@ -114,10 +151,27 @@ mod tests {
 
     #[test]
     fn level_ordering() {
+        let _g = TEST_LOCK.lock().unwrap();
         assert!(Level::Error < Level::Trace);
         set_level(Level::Info);
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Debug));
         set_level(Level::Warn); // restore default-ish
+    }
+
+    #[test]
+    fn invalid_env_value_defaults_and_warns_once() {
+        let _g = TEST_LOCK.lock().unwrap();
+        std::env::set_var("HFPM_LOG", "vrebose");
+        LEVEL.store(u8::MAX, Ordering::Relaxed);
+        WARNED_INVALID.store(false, Ordering::Relaxed);
+        assert_eq!(current_level(), Level::Warn);
+        assert!(WARNED_INVALID.load(Ordering::Relaxed), "must report the typo");
+        // second read takes the cached path: no re-parse, no second report
+        WARNED_INVALID.store(false, Ordering::Relaxed);
+        assert_eq!(current_level(), Level::Warn);
+        assert!(!WARNED_INVALID.load(Ordering::Relaxed));
+        std::env::remove_var("HFPM_LOG");
+        set_level(Level::Warn);
     }
 }

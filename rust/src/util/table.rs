@@ -122,7 +122,7 @@ impl Table {
                 let _ = std::fs::create_dir_all(dir);
             }
             if let Err(e) = std::fs::write(p, self.to_csv()) {
-                eprintln!("warn: could not write {}: {e}", p.display());
+                crate::log_warn!("could not write {}: {e}", p.display());
             } else {
                 println!("csv: {}", p.display());
             }
@@ -145,17 +145,19 @@ fn csv_line(cells: &[String]) -> String {
 }
 
 /// Format a float with `prec` decimals, trimming to a compact display.
+/// Non-finite values render as the fixed tokens `nan` / `inf` / `-inf`
+/// so a poisoned metric can't garble the column layout.
 pub fn fnum(x: f64, prec: usize) -> String {
-    if x.is_nan() {
-        return "-".to_string();
+    match nonfinite(x) {
+        Some(t) => t.to_string(),
+        None => format!("{x:.prec$}"),
     }
-    format!("{x:.prec$}")
 }
 
-/// Format seconds adaptively (ns/µs/ms/s).
+/// Format seconds adaptively (ns/µs/ms/s); non-finite like [`fnum`].
 pub fn fdur(secs: f64) -> String {
-    if secs.is_nan() {
-        "-".to_string()
+    if let Some(t) = nonfinite(secs) {
+        t.to_string()
     } else if secs < 1e-6 {
         format!("{:.1}ns", secs * 1e9)
     } else if secs < 1e-3 {
@@ -164,6 +166,18 @@ pub fn fdur(secs: f64) -> String {
         format!("{:.2}ms", secs * 1e3)
     } else {
         format!("{secs:.2}s")
+    }
+}
+
+fn nonfinite(x: f64) -> Option<&'static str> {
+    if x.is_nan() {
+        Some("nan")
+    } else if x == f64::INFINITY {
+        Some("inf")
+    } else if x == f64::NEG_INFINITY {
+        Some("-inf")
+    } else {
+        None
     }
 }
 
@@ -204,5 +218,28 @@ mod tests {
     fn row_width_mismatch_panics() {
         let mut t = Table::new("", &["a", "b"]);
         t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn nonfinite_values_render_as_fixed_tokens() {
+        assert_eq!(fnum(f64::NAN, 2), "nan");
+        assert_eq!(fnum(f64::INFINITY, 2), "inf");
+        assert_eq!(fnum(f64::NEG_INFINITY, 0), "-inf");
+        assert_eq!(fdur(f64::NAN), "nan");
+        assert_eq!(fdur(f64::INFINITY), "inf");
+        assert_eq!(fdur(f64::NEG_INFINITY), "-inf");
+    }
+
+    #[test]
+    fn nonfinite_cells_keep_the_table_aligned() {
+        let mut t = Table::new("poisoned", &["metric", "value"]);
+        t.add_row(vec!["ok".into(), fnum(1.25, 2)]);
+        t.add_row(vec!["bad".into(), fnum(f64::NAN, 2)]);
+        t.add_row(vec!["worse".into(), fdur(f64::NEG_INFINITY)]);
+        let r = t.render();
+        assert!(r.contains("nan"));
+        assert!(r.contains("-inf"));
+        let widths: Vec<usize> = r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged table:\n{r}");
     }
 }

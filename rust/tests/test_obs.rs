@@ -1,0 +1,233 @@
+//! Integration tests for the obs layer's exporters, driven end-to-end
+//! through a real observed workload: JSONL schema stability, Chrome
+//! trace_event validity (and per-track `ts` monotonicity), cross-layer
+//! coverage (session phases, per-rank engine tracks, store-service
+//! commits), and the sink's no-silent-loss guarantee under saturation.
+
+use hfpm::adapt::Strategy;
+use hfpm::apps::jacobi;
+use hfpm::cluster::presets;
+use hfpm::modelstore::json::{self, Value};
+use hfpm::modelstore::{StoreService, StoreServiceConfig};
+use hfpm::obs::export::{to_chrome_trace, to_jsonl, PID_VIRT, PID_WALL};
+use hfpm::obs::{ObsEvent, ObsSink, ObsSummary};
+use hfpm::testkit::unique_temp_dir;
+
+/// Run one small jacobi workload with the given sink, routing model saves
+/// through a store service that shares it (so the trace has all three
+/// layers: session, engine, store).
+fn observed_jacobi(sink: &ObsSink) -> (Vec<ObsEvent>, ObsSummary) {
+    let dir = unique_temp_dir("test-obs-jacobi");
+    {
+        let svc = StoreService::open_with(
+            &dir,
+            StoreServiceConfig {
+                obs: sink.clone(),
+                ..Default::default()
+            },
+        )
+        .expect("open store service");
+        let spec = presets::mini4();
+        let mut cfg = jacobi::JacobiConfig::new(512, Strategy::Dfpa);
+        cfg.sweeps = 6;
+        cfg.rebalance_every = 2;
+        cfg.store_service = Some(svc.clone());
+        cfg.obs = sink.clone();
+        jacobi::run(&spec, &cfg).expect("observed jacobi run");
+        // svc (and cfg's clone) drop here: the writer joins, so every
+        // commit span is in the queue before we drain
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    let summary = sink.summary().expect("enabled sink");
+    (sink.drain(), summary)
+}
+
+/// Keys of a JSON object, in serialized order.
+fn keys(v: &Value) -> Vec<String> {
+    match v {
+        Value::Obj(pairs) => pairs.iter().map(|(k, _)| k.clone()).collect(),
+        other => panic!("expected object, got {other:?}"),
+    }
+}
+
+#[test]
+fn jsonl_schema_is_stable_per_kind() {
+    let sink = ObsSink::bounded(1 << 16);
+    let (events, summary) = observed_jacobi(&sink);
+    assert!(!events.is_empty(), "observed run must record events");
+    let text = to_jsonl(&events, &summary);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), events.len() + 1, "one line per event + meta");
+
+    // golden key sets — the machine-readable contract of the JSONL format
+    let span_keys = [
+        "kind",
+        "layer",
+        "name",
+        "id",
+        "parent",
+        "rank",
+        "wall_begin_s",
+        "wall_end_s",
+        "virt_begin_s",
+        "virt_end_s",
+    ];
+    let instant_keys = ["kind", "layer", "name", "rank", "wall_s", "virt_s", "detail"];
+    let meta_keys = ["kind", "emitted", "recorded", "dropped", "counters", "hists"];
+
+    for line in &lines {
+        let v = json::parse(line).expect("every line is standalone JSON");
+        let kind = v.get("kind").and_then(|k| k.as_str()).expect("kind field");
+        let expect: &[&str] = match kind {
+            "span" => &span_keys,
+            "instant" => &instant_keys,
+            "meta" => &meta_keys,
+            other => panic!("unknown kind `{other}` in line: {line}"),
+        };
+        assert_eq!(keys(&v), expect, "schema drift in a `{kind}` line: {line}");
+        let layers = ["session", "engine", "store", "sweep"];
+        if kind != "meta" {
+            let layer = v.get("layer").and_then(|l| l.as_str()).expect("layer");
+            assert!(layers.contains(&layer), "unknown layer `{layer}`");
+        }
+    }
+    // exactly one meta line, and it is the last one
+    let meta = json::parse(lines.last().expect("meta")).expect("meta parses");
+    assert_eq!(meta.get("kind").and_then(|k| k.as_str()), Some("meta"));
+    assert_eq!(
+        lines
+            .iter()
+            .filter(|l| l.contains("\"kind\":\"meta\""))
+            .count(),
+        1
+    );
+}
+
+#[test]
+fn chrome_trace_covers_all_layers_on_valid_tracks() {
+    let sink = ObsSink::bounded(1 << 16);
+    let (events, summary) = observed_jacobi(&sink);
+    assert_eq!(summary.dropped, 0, "capacity must fit this run");
+    let text = to_chrome_trace(&events, &summary);
+    let doc = json::parse(&text).expect("Chrome trace is valid JSON");
+    let tes = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+
+    let name_of = |e: &Value| e.get("name").and_then(|n| n.as_str()).map(String::from);
+    let pid_of = |e: &Value| e.get("pid").and_then(|p| p.as_f64()).unwrap_or(-1.0) as u64;
+    let cat_of = |e: &Value| e.get("cat").and_then(|c| c.as_str()).map(String::from);
+
+    // session phases on both clock processes
+    for phase in ["run", "partition", "execute", "store-flush"] {
+        assert!(
+            tes.iter()
+                .any(|e| name_of(e).as_deref() == Some(phase) && pid_of(e) == PID_WALL),
+            "missing session phase `{phase}` on the wall process"
+        );
+    }
+    assert!(
+        tes.iter()
+            .any(|e| name_of(e).as_deref() == Some("partition") && pid_of(e) == PID_VIRT),
+        "partition must also land on the virtual-clock process"
+    );
+    // ≥1 per-rank engine frame track (rank tids start at 10)
+    assert!(
+        tes.iter().any(|e| {
+            cat_of(e).as_deref() == Some("engine")
+                && name_of(e).as_deref() == Some("frame")
+                && e.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) >= 10.0
+        }),
+        "no per-rank engine frame events in the trace"
+    );
+    assert!(
+        tes.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M") && e.render().contains("rank 0")
+        }),
+        "rank 0 thread_name metadata missing"
+    );
+    // store-service commits (wall-only layer)
+    assert!(
+        tes.iter()
+            .any(|e| cat_of(e).as_deref() == Some("store")
+                && name_of(e).as_deref() == Some("commit")),
+        "no store-service commit span in the trace"
+    );
+    // loss accounting is part of the document
+    let other = doc.get("otherData").expect("otherData");
+    assert_eq!(other.get("dropped").and_then(|d| d.as_f64()), Some(0.0));
+}
+
+#[test]
+fn chrome_trace_ts_non_decreasing_within_every_track() {
+    let sink = ObsSink::bounded(1 << 16);
+    let (events, summary) = observed_jacobi(&sink);
+    let doc = json::parse(&to_chrome_trace(&events, &summary)).expect("valid JSON");
+    let tes = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents");
+    let mut last: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    let mut timed = 0usize;
+    for e in tes {
+        if e.get("ph").and_then(|p| p.as_str()) == Some("M") {
+            continue;
+        }
+        let pid = e.get("pid").and_then(|p| p.as_f64()).expect("pid") as u64;
+        let tid = e.get("tid").and_then(|t| t.as_f64()).expect("tid") as u64;
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("numeric ts");
+        assert!(ts.is_finite(), "non-finite ts on track ({pid},{tid})");
+        if let Some(prev) = last.get(&(pid, tid)) {
+            assert!(
+                ts >= *prev,
+                "ts regressed on track ({pid},{tid}): {ts} < {prev}"
+            );
+        }
+        last.insert((pid, tid), ts);
+        timed += 1;
+    }
+    assert!(timed > 0, "trace must contain timed events");
+    assert!(last.keys().len() >= 3, "expected several distinct tracks");
+}
+
+#[test]
+fn saturated_sink_reports_drops_in_both_exports() {
+    // a capacity this small cannot hold a jacobi run: drops are expected,
+    // and they must be *counted*, never silent
+    let sink = ObsSink::bounded(8);
+    let (events, summary) = observed_jacobi(&sink);
+    assert!(events.len() <= 8);
+    assert!(summary.dropped > 0, "tiny sink must saturate");
+    assert_eq!(summary.emitted, summary.recorded + summary.dropped);
+
+    let text = to_jsonl(&events, &summary);
+    let meta = json::parse(text.lines().last().expect("meta")).expect("meta parses");
+    let dropped = meta.get("dropped").and_then(|d| d.as_f64()).expect("dropped");
+    assert!(dropped > 0.0, "JSONL meta must surface the loss");
+
+    let doc = json::parse(&to_chrome_trace(&events, &summary)).expect("valid JSON");
+    let od = doc.get("otherData").expect("otherData");
+    assert_eq!(
+        od.get("dropped").and_then(|d| d.as_f64()),
+        Some(summary.dropped as f64),
+        "Chrome trace must surface the loss"
+    );
+}
+
+#[test]
+fn workload_report_carries_the_obs_summary() {
+    let sink = ObsSink::bounded(1 << 16);
+    let spec = presets::mini4();
+    let mut cfg = jacobi::JacobiConfig::new(512, Strategy::Dfpa);
+    cfg.sweeps = 4;
+    cfg.obs = sink.clone();
+    let r = jacobi::run(&spec, &cfg).expect("observed run");
+    let obs = r.obs.expect("observed run must merge a summary");
+    assert!(obs.emitted > 0);
+    assert_eq!(obs.emitted, obs.recorded + obs.dropped);
+
+    let unobserved = jacobi::run(&spec, &jacobi::JacobiConfig::new(512, Strategy::Dfpa))
+        .expect("unobserved run");
+    assert!(unobserved.obs.is_none(), "no sink → no summary");
+}

@@ -1,8 +1,9 @@
 //! The lint engine: a comment- and string-aware textual scanner over the
 //! repository's Rust sources.
 //!
-//! Five rules, each one a concurrency- or determinism-invariant this
-//! codebase fixed by hand at least once (see DESIGN.md §3.10):
+//! Six rules, each one a concurrency-, determinism-, or observability-
+//! invariant this codebase fixed by hand at least once (see DESIGN.md
+//! §3.10):
 //!
 //! - `float-ord` — no `partial_cmp` on the float hot paths. A NaN from a
 //!   noisy observation must order totally (`total_cmp`), not panic or
@@ -21,6 +22,11 @@
 //! - `no-unwrap` — no `.unwrap()` in non-test code of `cluster/engine/`
 //!   and `modelstore/`: those paths run under worker pools and services
 //!   where a panic poisons shared state; errors must propagate.
+//! - `no-bare-eprintln` — no `eprintln!`/`println!` in non-test library
+//!   code (`rust/src/`, except `cli/` and `main.rs`, which own the
+//!   terminal). Library diagnostics go through `util::logging` so they
+//!   are leveled and `HFPM_LOG`-filterable; ad-hoc prints bypass both
+//!   the filter and the obs event stream.
 //!
 //! Suppression goes through the allowlist file (`rust/xtask/lint.allow`):
 //! one entry per line, `<rule> <path-suffix> [line-substring]`. An entry
@@ -44,6 +50,7 @@ pub const RULE_WALL_CLOCK: &str = "wall-clock";
 pub const RULE_SAFETY_COMMENT: &str = "safety-comment";
 pub const RULE_FACADE: &str = "facade";
 pub const RULE_NO_UNWRAP: &str = "no-unwrap";
+pub const RULE_NO_BARE_EPRINTLN: &str = "no-bare-eprintln";
 
 /// Files that must route synchronization through `crate::sync`.
 const FACADE_FILES: &[&str] = &[
@@ -69,6 +76,10 @@ const WALL_CLOCK_SCOPES: &[&str] = &[
 ];
 const SAFETY_SCOPE: &str = "rust/src/";
 const UNWRAP_SCOPES: &[&str] = &["rust/src/cluster/engine/", "rust/src/modelstore/"];
+/// Library code that must log through `util::logging`, not the terminal.
+const EPRINTLN_SCOPE: &str = "rust/src/";
+/// ...except the CLI layer, which owns stdout/stderr.
+const EPRINTLN_EXEMPT: &[&str] = &["rust/src/cli/", "rust/src/main.rs"];
 
 #[derive(Debug, Clone)]
 pub struct Diagnostic {
@@ -217,8 +228,11 @@ fn lint_file(rel: &str, text: &str, out: &mut Vec<Diagnostic>) {
     let safety_scope = rel.starts_with(SAFETY_SCOPE);
     let facade_scope = FACADE_FILES.contains(&rel);
     let unwrap_scope = in_any_scope(rel, UNWRAP_SCOPES);
+    let eprintln_scope =
+        rel.starts_with(EPRINTLN_SCOPE) && !EPRINTLN_EXEMPT.iter().any(|p| rel.starts_with(p));
 
-    if !(float_scope || wall_scope || safety_scope || facade_scope || unwrap_scope) {
+    if !(float_scope || wall_scope || safety_scope || facade_scope || unwrap_scope || eprintln_scope)
+    {
         return;
     }
 
@@ -253,6 +267,10 @@ fn lint_file(rel: &str, text: &str, out: &mut Vec<Diagnostic>) {
         }
         if unwrap_scope && !line.in_test && code.contains(".unwrap()") {
             push(RULE_NO_UNWRAP);
+        }
+        // `println!` is a suffix of `eprintln!`: one contains() covers both
+        if eprintln_scope && !line.in_test && code.contains("println!") {
+            push(RULE_NO_BARE_EPRINTLN);
         }
     }
 }
@@ -551,6 +569,10 @@ mod tests {
             "rust/src/modelstore/m.rs",
             "pub fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n",
         );
+        t.write(
+            "rust/src/chatty.rs",
+            "pub fn f() {\n    eprintln!(\"library code talking to the terminal\");\n}\n",
+        );
         let ds = t.lint(&[]);
         let rules = rules_of(&ds);
         for rule in [
@@ -559,10 +581,11 @@ mod tests {
             RULE_SAFETY_COMMENT,
             RULE_FACADE,
             RULE_NO_UNWRAP,
+            RULE_NO_BARE_EPRINTLN,
         ] {
             assert!(rules.contains(&rule), "rule {rule} did not fire: {ds:?}");
         }
-        assert_eq!(ds.len(), 5, "exactly one diagnostic per seed: {ds:?}");
+        assert_eq!(ds.len(), 6, "exactly one diagnostic per seed: {ds:?}");
         // file:line diagnostics point at the offending line
         let unwrap_d = ds.iter().find(|d| d.rule == RULE_NO_UNWRAP).expect("seeded");
         assert_eq!(unwrap_d.file, "rust/src/modelstore/m.rs");
@@ -598,6 +621,31 @@ mod tests {
              fn t() {\n        \
              let m = Mutex::new(1u8);\n        \
              assert_eq!(*m.lock().unwrap(), super::f());\n    \
+             }\n\
+             }\n",
+        );
+        assert!(t.lint(&[]).is_empty(), "{:?}", t.lint(&[]));
+    }
+
+    #[test]
+    fn cli_main_and_test_modules_may_print() {
+        let t = TempTree::new("printers");
+        t.write(
+            "rust/src/cli/mod.rs",
+            "pub fn usage() {\n    println!(\"usage: ...\");\n}\n",
+        );
+        t.write(
+            "rust/src/main.rs",
+            "fn main() {\n    eprintln!(\"error: boom\");\n}\n",
+        );
+        t.write(
+            "rust/src/lib_ok.rs",
+            "pub fn f() -> u8 { 1 }\n\n\
+             #[cfg(test)]\n\
+             mod tests {\n    \
+             #[test]\n    \
+             fn t() {\n        \
+             println!(\"printing from a test is fine\");\n    \
              }\n\
              }\n",
         );

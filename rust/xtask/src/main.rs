@@ -76,7 +76,7 @@ fn main() -> ExitCode {
     }
     if diagnostics.is_empty() {
         report.push_str("lint clean\n");
-        println!("xtask lint: clean ({} rules)", 5);
+        println!("xtask lint: clean ({} rules)", 6);
     } else {
         eprintln!("xtask lint: {} violation(s)", diagnostics.len());
     }
