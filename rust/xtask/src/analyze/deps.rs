@@ -1,0 +1,455 @@
+//! Zero-dependency guard: parses every workspace member's Cargo.toml
+//! (no `cargo metadata` — cargo is not assumed present) and fails if the
+//! default build's dependency graph is anything but in-repo path deps.
+//!
+//! Rules, matching the guarantee documented in the root manifest:
+//!
+//! - path-only deps are internal and always fine;
+//! - a version/git dep in `[dependencies]` is a violation unless it is
+//!   `optional = true` *and* unreachable from the `default` feature
+//!   closure (`dep:x` / `x/feat` edges) — the `pjrt` pattern;
+//! - any version/git dep in `[dev-dependencies]`,
+//!   `[build-dependencies]`, or `[target.*.dependencies]` is a
+//!   violation: even cfg-gated deps enter the shared lockfile;
+//! - workspace-`exclude`d manifests (the loom harness) are not scanned.
+//!
+//! A missing root Cargo.toml disarms the pass quietly (fixture trees);
+//! `analyze_repo_is_clean` asserts the member count on the real repo.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::Path;
+
+use crate::lint::Diagnostic;
+
+pub const RULE_DEPS: &str = "deps";
+
+#[derive(Debug, Default)]
+pub struct DepsReport {
+    pub members: Vec<String>,
+    /// Internal path-dep count across members.
+    pub internal: usize,
+    /// Optional external deps kept out of the default build, as
+    /// "member: name" strings.
+    pub gated: Vec<String>,
+}
+
+#[derive(Debug)]
+struct Dep {
+    name: String,
+    line: usize,
+    section: String,
+    has_path: bool,
+    has_git: bool,
+    has_version: bool,
+    optional: bool,
+    /// dev-/build-/target-dependencies: external deps here are
+    /// violations regardless of optionality.
+    hard: bool,
+}
+
+#[derive(Debug, Default)]
+struct Manifest {
+    members: Vec<String>,
+    exclude: Vec<String>,
+    deps: Vec<Dep>,
+    features: BTreeMap<String, Vec<String>>,
+}
+
+/// Drop a `# comment`, respecting basic and literal strings.
+fn strip_comment(line: &str) -> &str {
+    let mut quote: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match quote {
+            Some(q) => {
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => quote = Some(c),
+                '#' => return &line[..i],
+                _ => {}
+            },
+        }
+    }
+    line
+}
+
+/// Split a `[a.b.'c.d']` header into segments, dots inside quotes kept.
+fn split_header(inner: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut quote: Option<char> = None;
+    for c in inner.chars() {
+        match quote {
+            Some(q) => {
+                if c == q {
+                    quote = None;
+                } else {
+                    cur.push(c);
+                }
+            }
+            None => match c {
+                '"' | '\'' => quote = Some(c),
+                '.' => {
+                    parts.push(cur.trim().to_string());
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            },
+        }
+    }
+    parts.push(cur.trim().to_string());
+    parts
+}
+
+fn parse_string_array(text: &str) -> Vec<String> {
+    let inner = text
+        .trim()
+        .trim_start_matches('[')
+        .trim_end_matches(']');
+    inner
+        .split(',')
+        .map(|s| s.trim().trim_matches('"').trim_matches('\'').to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Section {
+    Workspace,
+    Features,
+    /// (label, single-dep name from `[dependencies.foo]`, hard)
+    Deps(String, Option<String>, bool),
+    Other,
+}
+
+fn classify_header(inner: &str) -> Section {
+    let parts = split_header(inner);
+    match parts[0].as_str() {
+        "workspace" if parts.len() == 1 => Section::Workspace,
+        "features" => Section::Features,
+        _ => {
+            let dep_kinds = ["dependencies", "dev-dependencies", "build-dependencies"];
+            if let Some(pos) = parts.iter().position(|p| dep_kinds.contains(&p.as_str())) {
+                // `[dependencies]`, `[target.'cfg(..)'.dependencies]`,
+                // and their `.name` single-dep forms. `[workspace.dependencies]`
+                // is a shared-version table, still a dep source — treat as hard.
+                let target = pos > 0;
+                let hard = target || parts[pos] != "dependencies";
+                let single = parts.get(pos + 1).cloned();
+                Section::Deps(parts[..=pos].join("."), single, hard)
+            } else {
+                Section::Other
+            }
+        }
+    }
+}
+
+fn parse_manifest(text: &str) -> Manifest {
+    let mut m = Manifest::default();
+    let mut section = Section::Other;
+    let mut lines = text.lines().enumerate().peekable();
+
+    while let Some((idx, raw)) = lines.next() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            let inner = line.trim_start_matches('[').trim_end_matches(']');
+            section = classify_header(inner);
+            // A `[dependencies.foo]` table is itself one dep entry.
+            if let Section::Deps(label, Some(name), hard) = &section {
+                m.deps.push(Dep {
+                    name: name.clone(),
+                    line: idx + 1,
+                    section: label.clone(),
+                    has_path: false,
+                    has_git: false,
+                    has_version: false,
+                    optional: false,
+                    hard: *hard,
+                });
+            }
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            continue;
+        };
+        let key = key.trim().trim_matches('"').trim_matches('\'').to_string();
+        let mut val = val.trim().to_string();
+        // Accumulate multi-line arrays (members/exclude/feature lists).
+        while val.matches('[').count() > val.matches(']').count() {
+            match lines.next() {
+                Some((_, cont)) => {
+                    val.push(' ');
+                    val.push_str(strip_comment(cont).trim());
+                }
+                None => break,
+            }
+        }
+        match &section {
+            Section::Workspace => match key.as_str() {
+                "members" => m.members = parse_string_array(&val),
+                "exclude" => m.exclude = parse_string_array(&val),
+                _ => {}
+            },
+            Section::Features => {
+                m.features.insert(key, parse_string_array(&val));
+            }
+            Section::Deps(label, single, hard) => {
+                if let Some(dep_name) = single {
+                    // Inside `[dependencies.foo]`: keys refine that dep.
+                    if let Some(d) = m
+                        .deps
+                        .iter_mut()
+                        .rev()
+                        .find(|d| &d.name == dep_name && &d.section == label)
+                    {
+                        match key.as_str() {
+                            "path" => d.has_path = true,
+                            "git" => d.has_git = true,
+                            "version" => d.has_version = true,
+                            "optional" => d.optional = val.trim() == "true",
+                            _ => {}
+                        }
+                    }
+                    continue;
+                }
+                let mut dep = Dep {
+                    name: key,
+                    line: idx + 1,
+                    section: label.clone(),
+                    has_path: false,
+                    has_git: false,
+                    has_version: false,
+                    optional: false,
+                    hard: *hard,
+                };
+                if val.starts_with('"') || val.starts_with('\'') {
+                    dep.has_version = true;
+                } else if val.starts_with('{') {
+                    for part in val.trim_matches(|c| c == '{' || c == '}').split(',') {
+                        let Some((k, v)) = part.split_once('=') else {
+                            continue;
+                        };
+                        match k.trim() {
+                            "path" => dep.has_path = true,
+                            "git" => dep.has_git = true,
+                            "version" => dep.has_version = true,
+                            "optional" => dep.optional = v.trim() == "true",
+                            _ => {}
+                        }
+                    }
+                }
+                m.deps.push(dep);
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+/// Optional deps pulled in by the `default` feature closure.
+fn default_enabled_optionals(m: &Manifest) -> BTreeSet<String> {
+    let mut deps = BTreeSet::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stack: Vec<String> = m.features.get("default").cloned().unwrap_or_default();
+    while let Some(entry) = stack.pop() {
+        if let Some(dep) = entry.strip_prefix("dep:") {
+            deps.insert(dep.to_string());
+        } else if let Some((dep, _feat)) = entry.split_once('/') {
+            // `x/feat` force-enables optional dep x; `x?/feat` does not.
+            if !dep.ends_with('?') {
+                deps.insert(dep.to_string());
+            }
+        } else if seen.insert(entry.clone()) {
+            if let Some(sub) = m.features.get(&entry) {
+                stack.extend(sub.iter().cloned());
+            }
+        }
+    }
+    deps
+}
+
+pub fn run(root: &Path) -> (DepsReport, Vec<Diagnostic>) {
+    let mut report = DepsReport::default();
+    let mut diags = Vec::new();
+
+    let Ok(root_text) = fs::read_to_string(root.join("Cargo.toml")) else {
+        return (report, diags);
+    };
+    let ws = parse_manifest(&root_text);
+    // Deps declared in the virtual root (e.g. `[workspace.dependencies]`)
+    // are checked like a member's.
+    check_member("Cargo.toml", &ws, &mut report, &mut diags);
+
+    for member in &ws.members {
+        report.members.push(member.clone());
+        let rel = format!("{member}/Cargo.toml");
+        let Ok(text) = fs::read_to_string(root.join(&rel)) else {
+            diags.push(Diagnostic {
+                rule: RULE_DEPS,
+                file: "Cargo.toml".to_string(),
+                line: 0,
+                text: format!("workspace member `{member}` has no readable {rel}"),
+            });
+            continue;
+        };
+        let m = parse_manifest(&text);
+        check_member(&rel, &m, &mut report, &mut diags);
+    }
+    (report, diags)
+}
+
+fn check_member(rel: &str, m: &Manifest, report: &mut DepsReport, diags: &mut Vec<Diagnostic>) {
+    let default_optionals = default_enabled_optionals(m);
+    let member = rel.trim_end_matches("/Cargo.toml").trim_end_matches("Cargo.toml");
+    let member = if member.is_empty() { "<root>" } else { member };
+    for d in &m.deps {
+        let external = d.has_version || d.has_git || !d.has_path;
+        if !external {
+            report.internal += 1;
+            continue;
+        }
+        let what = if d.has_git { "git" } else { "version" };
+        if d.hard {
+            diags.push(Diagnostic {
+                rule: RULE_DEPS,
+                file: rel.to_string(),
+                line: d.line,
+                text: format!(
+                    "external {what} dependency `{}` in [{}] — even cfg-gated deps enter \
+                     the lockfile; move it to a workspace-excluded manifest",
+                    d.name, d.section
+                ),
+            });
+        } else if !d.optional {
+            diags.push(Diagnostic {
+                rule: RULE_DEPS,
+                file: rel.to_string(),
+                line: d.line,
+                text: format!(
+                    "external {what} dependency `{}` in the default build — the workspace \
+                     is zero-dependency by contract",
+                    d.name
+                ),
+            });
+        } else if default_optionals.contains(&d.name) {
+            diags.push(Diagnostic {
+                rule: RULE_DEPS,
+                file: rel.to_string(),
+                line: d.line,
+                text: format!(
+                    "optional dependency `{}` is enabled by the `default` feature closure — \
+                     gate it behind a non-default feature",
+                    d.name
+                ),
+            });
+        } else {
+            report.gated.push(format!("{member}: {}", d.name));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempTree;
+
+    fn ws(t: &TempTree, members: &[&str]) {
+        let list = members
+            .iter()
+            .map(|m| format!("\"{m}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.write(
+            "Cargo.toml",
+            &format!("[workspace]\nmembers = [{list}]\nexclude = [\"harness\"]\n"),
+        );
+    }
+
+    #[test]
+    fn path_and_gated_optional_deps_are_clean() {
+        let t = TempTree::new("deps-clean");
+        ws(&t, &["app"]);
+        t.write(
+            "app/Cargo.toml",
+            "[package]\nname = \"app\"\n\n\
+             [features]\ndefault = []\npjrt = [\"dep:xla\"]\n\n\
+             [dependencies]\nxla = { path = \"xla-stub\", optional = true }\n",
+        );
+        let (report, diags) = run(t.root());
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(report.members, vec!["app"]);
+        assert_eq!(report.internal, 1);
+    }
+
+    #[test]
+    fn version_dep_in_default_build_fires() {
+        let t = TempTree::new("deps-version");
+        ws(&t, &["app"]);
+        t.write(
+            "app/Cargo.toml",
+            "[dependencies]\nserde = \"1\"\n\n[dependencies.rand]\nversion = \"0.8\"\n",
+        );
+        let (_, diags) = run(t.root());
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().any(|d| d.text.contains("`serde`")));
+        assert!(diags.iter().any(|d| d.text.contains("`rand`")));
+        assert!(diags.iter().all(|d| d.rule == RULE_DEPS));
+    }
+
+    #[test]
+    fn optional_dep_reached_by_default_features_fires() {
+        let t = TempTree::new("deps-default");
+        ws(&t, &["app"]);
+        t.write(
+            "app/Cargo.toml",
+            "[features]\ndefault = [\"net\"]\nnet = [\"dep:curl\"]\n\n\
+             [dependencies]\ncurl = { version = \"0.4\", optional = true }\n",
+        );
+        let (_, diags) = run(t.root());
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("`curl`"));
+        assert!(diags[0].text.contains("default"));
+    }
+
+    #[test]
+    fn target_cfg_dep_fires_even_when_gated() {
+        let t = TempTree::new("deps-target");
+        ws(&t, &["app"]);
+        t.write(
+            "app/Cargo.toml",
+            "[target.'cfg(loom)'.dependencies]\nloom = \"0.7\"\n",
+        );
+        let (_, diags) = run(t.root());
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("`loom`"));
+        assert!(diags[0].text.contains("lockfile"));
+    }
+
+    #[test]
+    fn excluded_manifests_are_not_scanned() {
+        let t = TempTree::new("deps-exclude");
+        ws(&t, &["app"]);
+        t.write("app/Cargo.toml", "[package]\nname = \"app\"\n");
+        t.write(
+            "harness/Cargo.toml",
+            "[target.'cfg(loom)'.dependencies]\nloom = \"0.7\"\n",
+        );
+        let (report, diags) = run(t.root());
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(report.members, vec!["app"]);
+    }
+
+    #[test]
+    fn missing_root_manifest_disarms_quietly() {
+        let t = TempTree::new("deps-none");
+        let (report, diags) = run(t.root());
+        assert!(diags.is_empty());
+        assert!(report.members.is_empty());
+    }
+}

@@ -1,0 +1,395 @@
+//! Lightweight item parser: builds a fn/impl/mod tree over the token
+//! stream, attributing `#[cfg(test)]`/`#[cfg(loom)]` regions so the
+//! passes (and the lint rules) know which code is live in a default
+//! build.
+//!
+//! This is a recognizer, not a full parser: it tracks brace depth,
+//! `mod`/`impl`/`fn` headers, and the attributes immediately preceding
+//! them. Known approximations are documented in DESIGN.md §3.12 (e.g.
+//! out-of-line `#[cfg(test)] mod x;` declarations scope the *file*, not
+//! a region, and are not tracked here).
+
+use super::lexer::{Tok, TokKind};
+
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// The innermost `impl` type name, or `""` for free functions.
+    pub owner: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Token-index range of the body, inclusive of both braces.
+    pub body: (usize, usize),
+    pub in_test: bool,
+    pub in_loom: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct ItemTree {
+    pub fns: Vec<FnItem>,
+    /// 1-based inclusive line ranges under `#[cfg(test)]` (mods or fns,
+    /// including bare `#[test]` fns). Ranges may nest or overlap.
+    pub test_regions: Vec<(usize, usize)>,
+    pub loom_regions: Vec<(usize, usize)>,
+}
+
+impl ItemTree {
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+enum Pending {
+    Mod { line: usize, test: bool, loom: bool },
+    Impl { ty: String, line: usize, test: bool, loom: bool },
+    Fn { name: String, line: usize, test: bool, loom: bool },
+}
+
+enum ScopeKind {
+    Mod,
+    Impl(String),
+    Fn(usize),
+}
+
+struct Scope {
+    kind: ScopeKind,
+    /// Brace depth just inside the scope's opening brace.
+    depth: usize,
+    test: bool,
+    loom: bool,
+    start_line: usize,
+}
+
+pub fn parse(toks: &[Tok]) -> ItemTree {
+    let mut tree = ItemTree::default();
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut depth = 0usize;
+    let mut pending: Option<Pending> = None;
+    let mut attr_test = false;
+    let mut attr_loom = false;
+
+    let ctx_test = |scopes: &[Scope]| scopes.iter().any(|s| s.test);
+    let ctx_loom = |scopes: &[Scope]| scopes.iter().any(|s| s.loom);
+    let cur_owner = |scopes: &[Scope]| {
+        scopes
+            .iter()
+            .rev()
+            .find_map(|s| match &s.kind {
+                ScopeKind::Impl(ty) => Some(ty.clone()),
+                _ => None,
+            })
+            .unwrap_or_default()
+    };
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.kind {
+            TokKind::Punct => match t.text.as_str() {
+                "#" => {
+                    // Attribute: `#[...]` (outer) or `#![...]` (inner —
+                    // skipped without setting flags).
+                    let mut j = i + 1;
+                    let inner = toks.get(j).map(|u| u.text == "!").unwrap_or(false)
+                        && toks.get(j).map(|u| u.kind == TokKind::Punct).unwrap_or(false);
+                    if inner {
+                        j += 1;
+                    }
+                    let opens = toks
+                        .get(j)
+                        .map(|u| u.kind == TokKind::Punct && u.text == "[")
+                        .unwrap_or(false);
+                    if !opens {
+                        i += 1;
+                        continue;
+                    }
+                    let mut d = 1usize;
+                    let mut has_cfg = false;
+                    let mut has_test = false;
+                    let mut has_loom = false;
+                    let mut k = j + 1;
+                    while k < toks.len() && d > 0 {
+                        let u = &toks[k];
+                        match (u.kind, u.text.as_str()) {
+                            (TokKind::Punct, "[") => d += 1,
+                            (TokKind::Punct, "]") => d -= 1,
+                            (TokKind::Ident, "cfg") => has_cfg = true,
+                            (TokKind::Ident, "test") => has_test = true,
+                            (TokKind::Ident, "loom") => has_loom = true,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    if !inner {
+                        if has_test && (has_cfg || !has_loom) {
+                            // `#[cfg(test)]`, `#[cfg(all(test, ...))]`, or
+                            // a bare `#[test]` fn attribute.
+                            attr_test = true;
+                        }
+                        if has_cfg && has_loom {
+                            attr_loom = true;
+                        }
+                    }
+                    i = k;
+                }
+                "{" => {
+                    depth += 1;
+                    match pending.take() {
+                        Some(Pending::Mod { line, test, loom }) => scopes.push(Scope {
+                            kind: ScopeKind::Mod,
+                            depth,
+                            test,
+                            loom,
+                            start_line: line,
+                        }),
+                        Some(Pending::Impl { ty, line, test, loom }) => scopes.push(Scope {
+                            kind: ScopeKind::Impl(ty),
+                            depth,
+                            test,
+                            loom,
+                            start_line: line,
+                        }),
+                        Some(Pending::Fn { name, line, test, loom }) => {
+                            let idx = tree.fns.len();
+                            tree.fns.push(FnItem {
+                                name,
+                                owner: cur_owner(&scopes),
+                                line,
+                                body: (i, i),
+                                in_test: test,
+                                in_loom: loom,
+                            });
+                            scopes.push(Scope {
+                                kind: ScopeKind::Fn(idx),
+                                depth,
+                                test,
+                                loom,
+                                start_line: line,
+                            });
+                        }
+                        None => {}
+                    }
+                    attr_test = false;
+                    attr_loom = false;
+                    i += 1;
+                }
+                "}" => {
+                    let closes_scope = scopes
+                        .last()
+                        .map(|s| s.depth == depth)
+                        .unwrap_or(false);
+                    if closes_scope {
+                        let s = scopes.pop().expect("scope checked above");
+                        if let ScopeKind::Fn(idx) = s.kind {
+                            tree.fns[idx].body.1 = i;
+                        }
+                        if s.test {
+                            tree.test_regions.push((s.start_line, t.line));
+                        }
+                        if s.loom {
+                            tree.loom_regions.push((s.start_line, t.line));
+                        }
+                    }
+                    depth = depth.saturating_sub(1);
+                    i += 1;
+                }
+                ";" => {
+                    // `mod x;`, trait fn declarations, plain statements:
+                    // nothing opens, pending attributes are spent.
+                    pending = None;
+                    attr_test = false;
+                    attr_loom = false;
+                    i += 1;
+                }
+                _ => i += 1,
+            },
+            TokKind::Ident => match t.text.as_str() {
+                "mod" => {
+                    let named = toks
+                        .get(i + 1)
+                        .map(|u| u.kind == TokKind::Ident)
+                        .unwrap_or(false);
+                    if named {
+                        pending = Some(Pending::Mod {
+                            line: t.line,
+                            test: attr_test || ctx_test(&scopes),
+                            loom: attr_loom || ctx_loom(&scopes),
+                        });
+                        attr_test = false;
+                        attr_loom = false;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                "impl" => {
+                    // `impl` in type position (`-> impl Iterator`,
+                    // `x: impl Fn()`) is not an item header — an item-level
+                    // `impl` only ever follows a scope boundary, an
+                    // attribute's `]`, or `unsafe`.
+                    let item_position = match i.checked_sub(1).map(|p| &toks[p]) {
+                        None => true,
+                        Some(prev) => match (prev.kind, prev.text.as_str()) {
+                            (TokKind::Punct, "{" | "}" | ";" | "]") => true,
+                            (TokKind::Ident, "unsafe") => true,
+                            _ => false,
+                        },
+                    };
+                    if !item_position {
+                        i += 1;
+                        continue;
+                    }
+                    // Scan the header up to `{`, tracking `<...>` depth;
+                    // the implemented type is the last path segment seen
+                    // at angle depth 0 (after `for`, if present, and
+                    // before any `where` clause).
+                    let mut j = i + 1;
+                    let mut angle = 0i64;
+                    let mut ty = String::new();
+                    let mut collecting = true;
+                    let mut prev = String::new();
+                    while j < toks.len() {
+                        let u = &toks[j];
+                        match (u.kind, u.text.as_str()) {
+                            (TokKind::Punct, "<") => angle += 1,
+                            (TokKind::Punct, ">") => {
+                                if prev != "-" {
+                                    angle -= 1;
+                                }
+                            }
+                            (TokKind::Punct, "{") if angle <= 0 => break,
+                            (TokKind::Punct, ";") => break,
+                            (TokKind::Ident, "for") => ty.clear(),
+                            (TokKind::Ident, "where") => collecting = false,
+                            (TokKind::Ident, w) if angle == 0 && collecting => {
+                                ty = w.to_string();
+                            }
+                            _ => {}
+                        }
+                        prev = u.text.clone();
+                        j += 1;
+                    }
+                    pending = Some(Pending::Impl {
+                        ty,
+                        line: t.line,
+                        test: attr_test || ctx_test(&scopes),
+                        loom: attr_loom || ctx_loom(&scopes),
+                    });
+                    attr_test = false;
+                    attr_loom = false;
+                    i = j;
+                }
+                "fn" => {
+                    if let Some(name_tok) = toks.get(i + 1) {
+                        if name_tok.kind == TokKind::Ident {
+                            pending = Some(Pending::Fn {
+                                name: name_tok.text.clone(),
+                                line: t.line,
+                                test: attr_test || ctx_test(&scopes),
+                                loom: attr_loom || ctx_loom(&scopes),
+                            });
+                            attr_test = false;
+                            attr_loom = false;
+                            i += 2;
+                            continue;
+                        }
+                    }
+                    // `fn(...)` pointer type: not an item, leave any
+                    // pending item header untouched.
+                    i += 1;
+                }
+                _ => i += 1,
+            },
+            _ => i += 1,
+        }
+    }
+
+    // Unterminated scopes at EOF (malformed input): close them at the
+    // last token so downstream ranges stay well-formed.
+    let last_line = toks.last().map(|t| t.line).unwrap_or(1);
+    let last_idx = toks.len().saturating_sub(1);
+    while let Some(s) = scopes.pop() {
+        if let ScopeKind::Fn(idx) = s.kind {
+            tree.fns[idx].body.1 = last_idx;
+        }
+        if s.test {
+            tree.test_regions.push((s.start_line, last_line));
+        }
+        if s.loom {
+            tree.loom_regions.push((s.start_line, last_line));
+        }
+    }
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn tree_of(src: &str) -> ItemTree {
+        parse(&lex(src).toks)
+    }
+
+    #[test]
+    fn fn_owners_come_from_impl_blocks() {
+        let src = "struct S;\nimpl S {\n    fn a(&self) {}\n}\nimpl Display for S {\n    fn fmt(&self) {}\n}\nfn free() {}\n";
+        let t = tree_of(src);
+        let names: Vec<(String, String)> = t
+            .fns
+            .iter()
+            .map(|f| (f.owner.clone(), f.name.clone()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                ("S".to_string(), "a".to_string()),
+                ("S".to_string(), "fmt".to_string()),
+                (String::new(), "free".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn generic_impl_headers_resolve_the_self_type() {
+        let src = "impl<T: Iterator<Item = u32>> Holder<T> where T: Send {\n    fn get(&self) {}\n}\n";
+        let t = tree_of(src);
+        assert_eq!(t.fns[0].owner, "Holder");
+    }
+
+    #[test]
+    fn bare_test_attr_marks_fn_regions() {
+        let src = "fn live() {}\n#[test]\nfn checks() {\n    live();\n}\n";
+        let t = tree_of(src);
+        assert!(!t.fns[0].in_test);
+        assert!(t.fns[1].in_test);
+        assert!(t.is_test_line(4));
+        assert!(!t.is_test_line(1));
+    }
+
+    #[test]
+    fn cfg_loom_regions_are_attributed() {
+        let src = "#[cfg(loom)]\nmod loom_shim {\n    fn wait() {}\n}\nfn normal() {}\n";
+        let t = tree_of(src);
+        let wait = t.fns.iter().find(|f| f.name == "wait").expect("wait");
+        assert!(wait.in_loom && !wait.in_test);
+        assert!(!t.fns.iter().find(|f| f.name == "normal").expect("n").in_loom);
+    }
+
+    #[test]
+    fn impl_in_type_position_does_not_eat_the_fn() {
+        let src = "fn maker(f: impl Fn() -> u8) -> impl Iterator<Item = u8> {\n    std::iter::once(f())\n}\n";
+        let t = tree_of(src);
+        let names: Vec<&str> = t.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["maker"]);
+        assert_eq!(t.fns[0].owner, "");
+    }
+
+    #[test]
+    fn trait_decls_without_bodies_are_skipped() {
+        let src = "trait T {\n    fn sig(&self);\n    fn with_default(&self) { () }\n}\n";
+        let t = tree_of(src);
+        let names: Vec<&str> = t.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["with_default"]);
+    }
+}

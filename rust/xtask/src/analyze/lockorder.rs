@@ -1,0 +1,308 @@
+//! Lock-order analysis: per-function guard acquisition sequences,
+//! propagated through the call graph into a global lock-order graph.
+//! Any cycle (including a self-edge — re-acquiring a non-reentrant
+//! mutex) is reported as a `lock-order` diagnostic.
+//!
+//! Lock identity is the declaring field/binding name, so two distinct
+//! structs sharing a field name conflate — a conservative
+//! approximation that can only over-report (see DESIGN.md §3.12).
+//! `RwLock` readers are treated as exclusive for ordering purposes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::callgraph::{CallGraph, Event};
+use crate::lint::Diagnostic;
+
+pub const RULE_LOCK_ORDER: &str = "lock-order";
+
+#[derive(Debug, Default)]
+pub struct LockOrderReport {
+    /// Edge (held, acquired) -> one witness site "file:line".
+    pub edges: BTreeMap<(String, String), String>,
+    pub locks: BTreeSet<String>,
+    pub cycles: Vec<Vec<String>>,
+}
+
+/// Transitive lock-acquisition sets per fn, via a fixpoint over the
+/// name-resolved call graph.
+fn transitive_locks(g: &CallGraph) -> Vec<BTreeSet<String>> {
+    let mut trans: Vec<BTreeSet<String>> = g
+        .fns
+        .iter()
+        .map(|f| {
+            f.events
+                .iter()
+                .filter_map(|e| match e {
+                    Event::Acquire { lock, .. } => Some(lock.clone()),
+                    _ => None,
+                })
+                .collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for idx in 0..g.fns.len() {
+            if g.fns[idx].in_test {
+                continue;
+            }
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for e in &g.fns[idx].events {
+                if let Event::Call { callee, .. } = e {
+                    for &c in g.resolve(callee) {
+                        for l in &trans[c] {
+                            if !trans[idx].contains(l) {
+                                add.insert(l.clone());
+                            }
+                        }
+                    }
+                }
+            }
+            if !add.is_empty() {
+                trans[idx].extend(add);
+                changed = true;
+            }
+        }
+        if !changed {
+            return trans;
+        }
+    }
+}
+
+pub fn run(g: &CallGraph) -> (LockOrderReport, Vec<Diagnostic>) {
+    let trans = transitive_locks(g);
+    let mut report = LockOrderReport::default();
+
+    for f in &g.fns {
+        if f.in_test {
+            continue;
+        }
+        for (a, ev) in f.events.iter().enumerate() {
+            let (held, release) = match ev {
+                Event::Acquire { lock, release, .. } => (lock.clone(), *release),
+                _ => continue,
+            };
+            report.locks.insert(held.clone());
+            for later in f.events.iter().take(release.min(f.events.len())).skip(a + 1) {
+                match later {
+                    Event::Acquire { lock, line, .. } => {
+                        report
+                            .edges
+                            .entry((held.clone(), lock.clone()))
+                            .or_insert_with(|| format!("{}:{}", f.file, line));
+                        report.locks.insert(lock.clone());
+                    }
+                    Event::Call { callee, line, .. } => {
+                        for &c in g.resolve(callee) {
+                            for l in &trans[c] {
+                                report
+                                    .edges
+                                    .entry((held.clone(), l.clone()))
+                                    .or_insert_with(|| {
+                                        format!("{}:{} (via call to `{}`)", f.file, line, callee)
+                                    });
+                                report.locks.insert(l.clone());
+                            }
+                        }
+                    }
+                    Event::Panic { .. } => {}
+                }
+            }
+        }
+    }
+
+    report.cycles = find_cycles(&report.edges);
+    let mut diags = Vec::new();
+    for cycle in &report.cycles {
+        let (from, to) = if cycle.len() == 1 {
+            (cycle[0].clone(), cycle[0].clone())
+        } else {
+            (cycle[0].clone(), cycle[1].clone())
+        };
+        let witness = report
+            .edges
+            .get(&(from.clone(), to.clone()))
+            .cloned()
+            .unwrap_or_default();
+        let (file, line) = split_witness(&witness);
+        diags.push(Diagnostic {
+            rule: RULE_LOCK_ORDER,
+            file,
+            line,
+            text: format!(
+                "lock acquisition cycle: {} -> {} (first edge at {})",
+                cycle.join(" -> "),
+                cycle[0],
+                witness
+            ),
+        });
+    }
+    (report, diags)
+}
+
+fn split_witness(witness: &str) -> (String, usize) {
+    let head = witness.split(' ').next().unwrap_or("");
+    match head.rsplit_once(':') {
+        Some((file, line)) => (file.to_string(), line.parse().unwrap_or(0)),
+        None => (witness.to_string(), 0),
+    }
+}
+
+/// Find elementary cycles in the lock graph: self-edges plus one
+/// representative cycle per strongly-reachable back edge, deduplicated
+/// by node set.
+fn find_cycles(edges: &BTreeMap<(String, String), String>) -> Vec<Vec<String>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.as_str()).or_default().insert(b.as_str());
+    }
+    let mut cycles: Vec<Vec<String>> = Vec::new();
+    let mut seen_sets: BTreeSet<Vec<String>> = BTreeSet::new();
+
+    for (&start, nexts) in &adj {
+        if nexts.contains(start) {
+            let set = vec![start.to_string()];
+            if seen_sets.insert(set.clone()) {
+                cycles.push(set);
+            }
+        }
+    }
+
+    // DFS from each node, tracking the path to recover cycles.
+    for &start in adj.keys() {
+        let mut path: Vec<&str> = vec![start];
+        let mut stack: Vec<Vec<&str>> = vec![adj
+            .get(start)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()];
+        let mut visited_from_start: BTreeSet<&str> = BTreeSet::new();
+        while let Some(frontier) = stack.last_mut() {
+            match frontier.pop() {
+                Some(next) => {
+                    if let Some(pos) = path.iter().position(|&n| n == next) {
+                        if path.len() - pos >= 2 {
+                            let mut cyc: Vec<String> =
+                                path[pos..].iter().map(|s| s.to_string()).collect();
+                            // normalize rotation: smallest element first
+                            let min_i = cyc
+                                .iter()
+                                .enumerate()
+                                .min_by(|a, b| a.1.cmp(b.1))
+                                .map(|(i, _)| i)
+                                .unwrap_or(0);
+                            cyc.rotate_left(min_i);
+                            let mut key = cyc.clone();
+                            key.sort();
+                            if seen_sets.insert(key) {
+                                cycles.push(cyc);
+                            }
+                        }
+                        continue;
+                    }
+                    if !visited_from_start.insert(next) {
+                        continue;
+                    }
+                    path.push(next);
+                    stack.push(
+                        adj.get(next)
+                            .map(|s| s.iter().copied().collect())
+                            .unwrap_or_default(),
+                    );
+                }
+                None => {
+                    stack.pop();
+                    path.pop();
+                }
+            }
+        }
+    }
+    cycles.sort();
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::callgraph::build;
+    use super::super::items;
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run_on(src: &str) -> (LockOrderReport, Vec<Diagnostic>) {
+        let lexed = lex(src);
+        let tree = items::parse(&lexed.toks);
+        let g = build(
+            &[super::super::SrcFile {
+                rel: "rust/src/t.rs".to_string(),
+                text: src.to_string(),
+                lexed,
+                tree,
+            }],
+            &|_| true,
+        );
+        run(&g)
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                   fn f(&self) { let g = self.a.lock(); self.b.lock(); }\n\
+                   fn h(&self) { let g = self.a.lock(); self.b.lock(); }\n\
+                   }\n";
+        let (rep, diags) = run_on(src);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert!(rep.edges.contains_key(&("a".to_string(), "b".to_string())));
+    }
+
+    #[test]
+    fn direct_inversion_is_a_cycle() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                   fn f(&self) { let g = self.a.lock(); self.b.lock(); }\n\
+                   fn h(&self) { let g = self.b.lock(); self.a.lock(); }\n\
+                   }\n";
+        let (rep, diags) = run_on(src);
+        assert_eq!(rep.cycles.len(), 1, "{rep:?}");
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_LOCK_ORDER);
+        assert!(diags[0].text.contains("a -> b") || diags[0].text.contains("b -> a"));
+    }
+
+    #[test]
+    fn inversion_through_a_callee_is_found() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                   fn f(&self) { let g = self.a.lock(); self.helper(); }\n\
+                   fn helper(&self) { self.b.lock(); }\n\
+                   fn h(&self) { let g = self.b.lock(); self.a.lock(); }\n\
+                   }\n";
+        let (rep, diags) = run_on(src);
+        assert!(
+            rep.edges.contains_key(&("a".to_string(), "b".to_string())),
+            "call propagation must add a->b: {rep:?}"
+        );
+        assert_eq!(diags.len(), 1, "{diags:?}");
+    }
+
+    #[test]
+    fn reacquisition_is_a_self_cycle() {
+        let src = "struct S { a: Mutex<u8> }\n\
+                   impl S {\n\
+                   fn f(&self) { let g = self.a.lock(); self.a.lock(); }\n\
+                   }\n";
+        let (_, diags) = run_on(src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("a -> a"), "{}", diags[0].text);
+    }
+
+    #[test]
+    fn guard_dropped_before_second_lock_is_clean() {
+        let src = "struct S { a: Mutex<u8>, b: Mutex<u8> }\n\
+                   impl S {\n\
+                   fn f(&self) { self.a.lock(); self.b.lock(); }\n\
+                   fn h(&self) { self.b.lock(); self.a.lock(); }\n\
+                   }\n";
+        let (rep, diags) = run_on(src);
+        assert!(diags.is_empty(), "temporary guards never overlap: {diags:?}");
+        assert!(rep.edges.is_empty(), "{rep:?}");
+    }
+}

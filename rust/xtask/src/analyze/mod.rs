@@ -1,0 +1,486 @@
+//! The semantic analysis engine behind `cargo run -p xtask -- analyze`.
+//!
+//! Pipeline: lex every file under `rust/src/` (`lexer`), build the
+//! item tree (`items`) and the approximate call graph (`callgraph`),
+//! then run the passes:
+//!
+//! - `lockorder` — global lock-order graph, fails on cycles;
+//! - `panics` — panic-surface counts per subsystem vs `panic.budget`;
+//! - `protocol` — registry/CLI/DESIGN.md, obs-layer/Chrome-track, and
+//!   fault-grammar/test exhaustiveness;
+//! - `deps` — the zero-dependency guard over the workspace manifests;
+//! - the six textual lint rules (`crate::lint`), which share the same
+//!   lexer, plus stale-suppression pruning over `lint.allow`.
+//!
+//! The JSON report (schema `hfpm-analyze-v1`) is built by hand — no
+//! serde in a zero-dep workspace — with deterministic ordering, and is
+//! golden-tested below. See DESIGN.md §3.12.
+
+pub mod callgraph;
+pub mod deps;
+pub mod items;
+pub mod lexer;
+pub mod lockorder;
+pub mod panics;
+pub mod protocol;
+
+use std::fs;
+use std::path::Path;
+
+use crate::lint::{self, AllowEntry, Diagnostic};
+
+pub const RULE_UNUSED_SUPPRESSION: &str = "unused-suppression";
+
+/// All rules the analyzer can emit, lint rules included.
+pub const ANALYZE_RULES: &[&str] = &[
+    crate::lint::RULE_FLOAT_ORD,
+    crate::lint::RULE_WALL_CLOCK,
+    crate::lint::RULE_SAFETY_COMMENT,
+    crate::lint::RULE_FACADE,
+    crate::lint::RULE_NO_UNWRAP,
+    crate::lint::RULE_NO_BARE_EPRINTLN,
+    lockorder::RULE_LOCK_ORDER,
+    panics::RULE_PANIC_BUDGET,
+    protocol::RULE_PROTOCOL,
+    deps::RULE_DEPS,
+    RULE_UNUSED_SUPPRESSION,
+];
+
+/// One pre-lexed source file, shared by every pass.
+pub struct SrcFile {
+    /// Repo-relative path, forward slashes.
+    pub rel: String,
+    pub text: String,
+    pub lexed: lexer::Lexed,
+    pub tree: items::ItemTree,
+}
+
+#[derive(Debug, Default)]
+pub struct AnalyzeStats {
+    pub files_scanned: usize,
+    pub fns: usize,
+    pub locks: usize,
+    pub lock_edges: usize,
+    pub strategies: usize,
+    pub layers: usize,
+    pub fault_arms: usize,
+    pub workspace_members: usize,
+}
+
+pub struct AnalyzeOutcome {
+    /// Post-suppression diagnostics, sorted by (file, line, rule);
+    /// includes `unused-suppression` entries unless the escape hatch
+    /// was used.
+    pub diagnostics: Vec<Diagnostic>,
+    pub stats: AnalyzeStats,
+    pub report_json: String,
+}
+
+/// Lex + parse everything under `root/rust/src/`, sorted by path.
+pub fn load_src_files(root: &Path) -> std::io::Result<Vec<SrcFile>> {
+    let mut files = Vec::new();
+    let base = root.join("rust/src");
+    if base.is_dir() {
+        let mut paths = Vec::new();
+        lint::walk(&base, &mut paths)?;
+        for p in paths {
+            let rel = lint::rel_path(root, &p);
+            let text = fs::read_to_string(&p)?;
+            let lexed = lexer::lex(&text);
+            let tree = items::parse(&lexed.toks);
+            files.push(SrcFile { rel, text, lexed, tree });
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(files)
+}
+
+/// The `crate::sync` facade shims *implement* the primitives: their
+/// internal `state`/`lock` mutexes would otherwise pollute the lock
+/// universe with every method-name collision in the crate.
+fn is_lock_source(rel: &str) -> bool {
+    !rel.starts_with("rust/src/sync/")
+}
+
+pub fn run_analyze(
+    root: &Path,
+    allow: &[AllowEntry],
+    allow_unused: bool,
+) -> std::io::Result<AnalyzeOutcome> {
+    let mut all: Vec<Diagnostic> = lint::collect(root)?;
+
+    let files = load_src_files(root)?;
+    let g = callgraph::build(&files, &is_lock_source);
+
+    let (lock_report, lock_diags) = lockorder::run(&g);
+    all.extend(lock_diags);
+
+    let budget_path = root.join("rust/xtask/panic.budget");
+    let budgets = match fs::read_to_string(&budget_path) {
+        Ok(text) => match panics::parse_budget(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                all.push(Diagnostic {
+                    rule: panics::RULE_PANIC_BUDGET,
+                    file: "rust/xtask/panic.budget".to_string(),
+                    line: 0,
+                    text: format!("malformed budget file: {e}"),
+                });
+                Default::default()
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Default::default(),
+        Err(e) => return Err(e),
+    };
+    let (panic_reports, panic_diags) = panics::run(&g, &budgets, panics::SUBSYSTEMS);
+    all.extend(panic_diags);
+
+    let (proto_report, proto_diags) = protocol::run(root, &files);
+    all.extend(proto_diags);
+
+    let (deps_report, deps_diags) = deps::run(root);
+    all.extend(deps_diags);
+
+    let (mut kept, used) = lint::suppress(all, allow);
+    if !allow_unused {
+        for (i, entry) in allow.iter().enumerate() {
+            if !used[i] {
+                kept.push(Diagnostic {
+                    rule: RULE_UNUSED_SUPPRESSION,
+                    file: "rust/xtask/lint.allow".to_string(),
+                    line: 0,
+                    text: format!(
+                        "allow entry matches nothing — delete it (or pass \
+                         --allow-unused-suppressions during a transition): `{} {}{}`",
+                        entry.rule,
+                        entry.path_suffix,
+                        entry
+                            .line_contains
+                            .as_ref()
+                            .map(|s| format!(" {s}"))
+                            .unwrap_or_default()
+                    ),
+                });
+            }
+        }
+    }
+    kept.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    let stats = AnalyzeStats {
+        files_scanned: files.len(),
+        fns: g.fns.len(),
+        locks: lock_report.locks.len(),
+        lock_edges: lock_report.edges.len(),
+        strategies: proto_report.strategies.len(),
+        layers: proto_report.layers.len(),
+        fault_arms: proto_report.fault_arms.len(),
+        workspace_members: deps_report.members.len(),
+    };
+    let report_json = render_report(&kept, &stats, &lock_report, &panic_reports, &proto_report, &deps_report);
+
+    Ok(AnalyzeOutcome {
+        diagnostics: kept,
+        stats,
+        report_json,
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_str_array(items: &[String]) -> String {
+    let inner = items
+        .iter()
+        .map(|s| format!("\"{}\"", json_escape(s)))
+        .collect::<Vec<_>>()
+        .join(", ");
+    format!("[{inner}]")
+}
+
+fn render_report(
+    diags: &[Diagnostic],
+    stats: &AnalyzeStats,
+    locks: &lockorder::LockOrderReport,
+    panics: &[panics::SubsystemReport],
+    proto: &protocol::ProtocolReport,
+    deps: &deps::DepsReport,
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"schema\": \"hfpm-analyze-v1\",\n");
+    out.push_str(&format!("  \"clean\": {},\n", diags.is_empty()));
+
+    out.push_str("  \"diagnostics\": [");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"text\": \"{}\"}}",
+            json_escape(d.rule),
+            json_escape(&d.file),
+            d.line,
+            json_escape(&d.text)
+        ));
+    }
+    out.push_str(if diags.is_empty() { "],\n" } else { "\n  ],\n" });
+
+    out.push_str(&format!(
+        "  \"stats\": {{\"files_scanned\": {}, \"fns\": {}, \"locks\": {}, \"lock_edges\": {}, \
+         \"lock_cycles\": {}, \"strategies\": {}, \"layers\": {}, \"fault_arms\": {}, \
+         \"workspace_members\": {}}},\n",
+        stats.files_scanned,
+        stats.fns,
+        stats.locks,
+        stats.lock_edges,
+        locks.cycles.len(),
+        stats.strategies,
+        stats.layers,
+        stats.fault_arms,
+        stats.workspace_members
+    ));
+
+    let lock_names: Vec<String> = locks.locks.iter().cloned().collect();
+    out.push_str(&format!("  \"locks\": {},\n", json_str_array(&lock_names)));
+
+    out.push_str("  \"lock_edges\": [");
+    for (i, ((a, b), witness)) in locks.edges.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"held\": \"{}\", \"acquired\": \"{}\", \"witness\": \"{}\"}}",
+            json_escape(a),
+            json_escape(b),
+            json_escape(witness)
+        ));
+    }
+    out.push_str(if locks.edges.is_empty() { "],\n" } else { "\n  ],\n" });
+
+    out.push_str("  \"panic_surface\": [");
+    for (i, r) in panics.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let budget = r
+            .budget
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        out.push_str(&format!(
+            "\n    {{\"subsystem\": \"{}\", \"count\": {}, \"budget\": {}, \"roots_found\": {}, \"sites\": [",
+            json_escape(&r.name),
+            r.count,
+            budget,
+            r.roots_found
+        ));
+        for (j, s) in r.sites.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"file\": \"{}\", \"line\": {}, \"kind\": \"{}\"}}",
+                json_escape(&s.file),
+                s.line,
+                json_escape(&s.kind)
+            ));
+        }
+        out.push_str(if r.sites.is_empty() { "]}" } else { "\n    ]}" });
+    }
+    out.push_str(if panics.is_empty() { "],\n" } else { "\n  ],\n" });
+
+    out.push_str(&format!(
+        "  \"protocol\": {{\"strategies\": {}, \"layers\": {}, \"fault_arms\": {}}},\n",
+        json_str_array(&proto.strategies),
+        json_str_array(&proto.layers),
+        json_str_array(&proto.fault_arms)
+    ));
+
+    out.push_str(&format!(
+        "  \"deps\": {{\"members\": {}, \"internal_path_deps\": {}, \"gated\": {}}}\n",
+        json_str_array(&deps.members),
+        deps.internal,
+        json_str_array(&deps.gated)
+    ));
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::parse_allowlist;
+    use crate::testutil::TempTree;
+
+    fn analyze(t: &TempTree, allow: &str, allow_unused: bool) -> AnalyzeOutcome {
+        run_analyze(t.root(), &parse_allowlist(allow), allow_unused).expect("analyze")
+    }
+
+    /// Tier-1 twin of `lint_repo_is_clean`: the real repository must
+    /// analyze clean, and the pass universes must be non-empty — a
+    /// file rename that silently disarms a pass fails here, not in
+    /// some future incident.
+    #[test]
+    fn analyze_repo_is_clean() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .and_then(std::path::Path::parent)
+            .expect("xtask lives two levels under the repo root")
+            .to_path_buf();
+        let allow_text =
+            fs::read_to_string(root.join("rust/xtask/lint.allow")).unwrap_or_default();
+        let allow = parse_allowlist(&allow_text);
+        let out = run_analyze(&root, &allow, false).expect("analyze repo");
+        assert!(
+            out.diagnostics.is_empty(),
+            "repository must analyze clean; violations:\n{}",
+            out.diagnostics
+                .iter()
+                .map(|d| format!("  {d}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        let s = &out.stats;
+        assert!(s.files_scanned >= 40, "src universe collapsed: {s:?}");
+        assert!(s.strategies >= 6, "strategy universe collapsed: {s:?}");
+        assert!(s.layers >= 4, "obs layer universe collapsed: {s:?}");
+        assert!(s.fault_arms >= 3, "fault grammar universe collapsed: {s:?}");
+        assert!(s.workspace_members >= 3, "workspace universe collapsed: {s:?}");
+        assert!(s.locks >= 2, "lock universe collapsed: {s:?}");
+    }
+
+    #[test]
+    fn lock_cycle_fixture_fails_analyze() {
+        let t = TempTree::new("an-cycle");
+        t.write(
+            "rust/src/pair.rs",
+            "pub struct P { a: Mutex<u8>, b: Mutex<u8> }\n\
+             impl P {\n\
+                 pub fn fwd(&self) { let g = self.a.lock(); self.b.lock(); }\n\
+                 pub fn rev(&self) { let g = self.b.lock(); self.a.lock(); }\n\
+             }\n",
+        );
+        let out = analyze(&t, "", false);
+        assert!(
+            out.diagnostics
+                .iter()
+                .any(|d| d.rule == lockorder::RULE_LOCK_ORDER),
+            "{:?}",
+            out.diagnostics
+        );
+        assert!(out.report_json.contains("\"lock_cycles\": 1"), "{}", out.report_json);
+    }
+
+    #[test]
+    fn panic_over_budget_fixture_fails_analyze() {
+        let t = TempTree::new("an-panic");
+        t.write(
+            "rust/src/cluster/engine/frame.rs",
+            "pub fn worker_loop(o: Option<u8>) -> u8 { o.unwrap() }\n",
+        );
+        t.write("rust/xtask/panic.budget", "engine-worker 0\n");
+        let out = analyze(&t, "", false);
+        assert!(
+            out.diagnostics
+                .iter()
+                .any(|d| d.rule == panics::RULE_PANIC_BUDGET && d.text.contains("budget is 0")),
+            "{:?}",
+            out.diagnostics
+        );
+    }
+
+    #[test]
+    fn unregistered_strategy_fixture_fails_analyze() {
+        let t = TempTree::new("an-proto");
+        t.write("DESIGN.md", "documented: even\n");
+        t.write(
+            "rust/src/adapt/registry.rs",
+            "pub static ENTRIES: &[E] = &[E { name: \"even\" }, E { name: \"ghost\" }];\n",
+        );
+        t.write("rust/src/main.rs", "const HELP: &str = \"strategy: even\";\n");
+        let out = analyze(&t, "", false);
+        assert!(
+            out.diagnostics
+                .iter()
+                .any(|d| d.rule == protocol::RULE_PROTOCOL && d.text.contains("`ghost`")),
+            "{:?}",
+            out.diagnostics
+        );
+    }
+
+    #[test]
+    fn stale_suppression_fires_and_escape_hatch_silences() {
+        let t = TempTree::new("an-stale");
+        t.write("rust/src/clean.rs", "pub fn f() -> u8 { 1 }\n");
+        let out = analyze(&t, "float-ord src/nonexistent.rs partial_cmp\n", false);
+        assert_eq!(out.diagnostics.len(), 1, "{:?}", out.diagnostics);
+        assert_eq!(out.diagnostics[0].rule, RULE_UNUSED_SUPPRESSION);
+        assert!(out.diagnostics[0].text.contains("src/nonexistent.rs"));
+
+        let out = analyze(&t, "float-ord src/nonexistent.rs partial_cmp\n", true);
+        assert!(out.diagnostics.is_empty(), "{:?}", out.diagnostics);
+    }
+
+    #[test]
+    fn allow_entries_suppress_analyzer_rules_too() {
+        let t = TempTree::new("an-allow");
+        t.write(
+            "rust/src/pair.rs",
+            "pub struct P { a: Mutex<u8> }\n\
+             impl P {\n\
+                 pub fn twice(&self) { let g = self.a.lock(); self.a.lock(); }\n\
+             }\n",
+        );
+        let out = analyze(&t, "", false);
+        assert_eq!(out.diagnostics.len(), 1);
+        let out = analyze(&t, "lock-order src/pair.rs\n", false);
+        assert!(out.diagnostics.is_empty(), "{:?}", out.diagnostics);
+    }
+
+    /// Golden test for the report schema: a fixed fixture must render
+    /// byte-for-byte identically, so downstream consumers (the CI
+    /// artifact archive) can rely on the shape.
+    #[test]
+    fn report_schema_golden() {
+        let t = TempTree::new("an-golden");
+        t.write(
+            "rust/src/lib.rs",
+            "pub struct S { q: Mutex<u8>, r: Mutex<u8> }\n\
+             impl S {\n\
+                 pub fn step(&self) { let g = self.q.lock(); self.r.lock(); }\n\
+             }\n",
+        );
+        let out = analyze(&t, "", false);
+        let expected = "{\n\
+  \"schema\": \"hfpm-analyze-v1\",\n\
+  \"clean\": true,\n\
+  \"diagnostics\": [],\n\
+  \"stats\": {\"files_scanned\": 1, \"fns\": 1, \"locks\": 2, \"lock_edges\": 1, \
+\"lock_cycles\": 0, \"strategies\": 0, \"layers\": 0, \"fault_arms\": 0, \
+\"workspace_members\": 0},\n\
+  \"locks\": [\"q\", \"r\"],\n\
+  \"lock_edges\": [\n\
+    {\"held\": \"q\", \"acquired\": \"r\", \"witness\": \"rust/src/lib.rs:3\"}\n\
+  ],\n\
+  \"panic_surface\": [\n\
+    {\"subsystem\": \"engine-worker\", \"count\": 0, \"budget\": null, \"roots_found\": 0, \"sites\": []},\n\
+    {\"subsystem\": \"store-writer\", \"count\": 0, \"budget\": null, \"roots_found\": 0, \"sites\": []},\n\
+    {\"subsystem\": \"obs-hot-path\", \"count\": 0, \"budget\": null, \"roots_found\": 0, \"sites\": []}\n\
+  ],\n\
+  \"protocol\": {\"strategies\": [], \"layers\": [], \"fault_arms\": []},\n\
+  \"deps\": {\"members\": [], \"internal_path_deps\": 0, \"gated\": []}\n\
+}\n";
+        assert_eq!(out.report_json, expected, "got:\n{}", out.report_json);
+    }
+}

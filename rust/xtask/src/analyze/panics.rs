@@ -1,0 +1,324 @@
+//! Panic-surface budget: enumerate potential panic sites reachable from
+//! each subsystem root (engine worker loop, store writer thread, obs
+//! sink hot path) and compare the count against the checked-in budget
+//! file `rust/xtask/panic.budget`.
+//!
+//! Budget semantics: an entry `name N` is a ceiling. Shrinking the real
+//! surface is always free; growing past the ceiling fails `analyze`
+//! until the budget is raised *in the same PR*, which makes panic-surface
+//! growth a reviewed, explicit act. Sites lexically inside
+//! `catch_unwind(...)` arguments are excluded — the engine's slot
+//! executor already fences executor panics that way.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::callgraph::{CallGraph, Event};
+use crate::lint::Diagnostic;
+
+pub const RULE_PANIC_BUDGET: &str = "panic-budget";
+
+pub struct SubsystemSpec {
+    pub name: &'static str,
+    /// Roots as (file path suffix, fn name) pairs.
+    pub roots: &'static [(&'static str, &'static str)],
+}
+
+/// The three subsystems whose threads must not die to an avoidable
+/// panic: a dead worker poisons the frame barrier, a dead writer drops
+/// committed batches, and the obs hot path runs on every span.
+pub const SUBSYSTEMS: &[SubsystemSpec] = &[
+    SubsystemSpec {
+        name: "engine-worker",
+        roots: &[("cluster/engine/frame.rs", "worker_loop")],
+    },
+    SubsystemSpec {
+        name: "store-writer",
+        roots: &[("modelstore/service.rs", "run")],
+    },
+    SubsystemSpec {
+        name: "obs-hot-path",
+        roots: &[
+            ("obs/mod.rs", "push"),
+            ("obs/mod.rs", "span_start"),
+            ("obs/mod.rs", "span_end"),
+            ("obs/mod.rs", "span_at"),
+            ("obs/mod.rs", "instant"),
+            ("obs/mod.rs", "count"),
+            ("obs/mod.rs", "record_hist"),
+        ],
+    },
+];
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PanicSite {
+    pub file: String,
+    pub line: usize,
+    pub kind: String,
+}
+
+#[derive(Debug)]
+pub struct SubsystemReport {
+    pub name: String,
+    pub count: usize,
+    pub budget: Option<usize>,
+    pub roots_found: usize,
+    pub sites: Vec<PanicSite>,
+}
+
+/// Parse `panic.budget`: `# comment` lines and `name count` entries.
+pub fn parse_budget(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut out = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (name, count) = match (it.next(), it.next(), it.next()) {
+            (Some(n), Some(c), None) => (n, c),
+            _ => return Err(format!("line {}: expected `name count`", idx + 1)),
+        };
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("line {}: bad count `{count}`", idx + 1))?;
+        out.insert(name.to_string(), count);
+    }
+    Ok(out)
+}
+
+fn reachable_from(g: &CallGraph, roots: &[usize]) -> BTreeSet<usize> {
+    let mut seen: BTreeSet<usize> = roots.iter().copied().collect();
+    let mut stack: Vec<usize> = roots.to_vec();
+    while let Some(f) = stack.pop() {
+        for e in &g.fns[f].events {
+            if let Event::Call { callee, guarded, .. } = e {
+                if *guarded {
+                    continue;
+                }
+                for &c in g.resolve(callee) {
+                    if seen.insert(c) {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+    }
+    seen
+}
+
+pub fn run(
+    g: &CallGraph,
+    budgets: &BTreeMap<String, usize>,
+    specs: &[SubsystemSpec],
+) -> (Vec<SubsystemReport>, Vec<Diagnostic>) {
+    let mut reports = Vec::new();
+    let mut diags = Vec::new();
+
+    let known: BTreeSet<&str> = specs.iter().map(|s| s.name).collect();
+    for name in budgets.keys() {
+        if !known.contains(name.as_str()) {
+            diags.push(Diagnostic {
+                rule: RULE_PANIC_BUDGET,
+                file: "rust/xtask/panic.budget".to_string(),
+                line: 0,
+                text: format!("unknown subsystem `{name}` in panic.budget"),
+            });
+        }
+    }
+
+    for spec in specs {
+        let roots: Vec<usize> = g
+            .fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                !f.in_test
+                    && spec
+                        .roots
+                        .iter()
+                        .any(|(suffix, fname)| f.file.ends_with(suffix) && f.name == *fname)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let budget = budgets.get(spec.name).copied();
+
+        if roots.is_empty() {
+            if budget.is_some() {
+                diags.push(Diagnostic {
+                    rule: RULE_PANIC_BUDGET,
+                    file: "rust/xtask/panic.budget".to_string(),
+                    line: 0,
+                    text: format!(
+                        "subsystem `{}` has a budget entry but no root fn matched {:?} — \
+                         renamed without updating the analyzer?",
+                        spec.name, spec.roots
+                    ),
+                });
+            }
+            reports.push(SubsystemReport {
+                name: spec.name.to_string(),
+                count: 0,
+                budget,
+                roots_found: 0,
+                sites: Vec::new(),
+            });
+            continue;
+        }
+
+        let reached = reachable_from(g, &roots);
+        let mut sites: BTreeSet<PanicSite> = BTreeSet::new();
+        for &f in &reached {
+            for e in &g.fns[f].events {
+                if let Event::Panic { kind, line, guarded } = e {
+                    if !*guarded {
+                        sites.insert(PanicSite {
+                            file: g.fns[f].file.clone(),
+                            line: *line,
+                            kind: (*kind).to_string(),
+                        });
+                    }
+                }
+            }
+        }
+        let sites: Vec<PanicSite> = sites.into_iter().collect();
+        let count = sites.len();
+
+        match budget {
+            Some(limit) if count > limit => diags.push(Diagnostic {
+                rule: RULE_PANIC_BUDGET,
+                file: "rust/xtask/panic.budget".to_string(),
+                line: 0,
+                text: format!(
+                    "subsystem `{}` has {count} potential panic sites, budget is {limit} — \
+                     shrink the surface or raise the budget in this PR",
+                    spec.name
+                ),
+            }),
+            Some(_) => {}
+            None => {
+                // Roots exist but no budget line: force an explicit entry
+                // so the subsystem can't silently fall out of the pass.
+                diags.push(Diagnostic {
+                    rule: RULE_PANIC_BUDGET,
+                    file: "rust/xtask/panic.budget".to_string(),
+                    line: 0,
+                    text: format!(
+                        "subsystem `{}` ({count} sites) has no entry in panic.budget",
+                        spec.name
+                    ),
+                });
+            }
+        }
+        reports.push(SubsystemReport {
+            name: spec.name.to_string(),
+            count,
+            budget,
+            roots_found: roots.len(),
+            sites,
+        });
+    }
+    (reports, diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::callgraph::build;
+    use super::super::items;
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn graph_of(file: &str, src: &str) -> CallGraph {
+        let lexed = lex(src);
+        let tree = items::parse(&lexed.toks);
+        build(
+            &[super::super::SrcFile {
+                rel: file.to_string(),
+                text: src.to_string(),
+                lexed,
+                tree,
+            }],
+            &|_| true,
+        )
+    }
+
+    const SPEC: &[SubsystemSpec] = &[SubsystemSpec {
+        name: "engine-worker",
+        roots: &[("cluster/engine/frame.rs", "worker_loop")],
+    }];
+
+    #[test]
+    fn reachable_unwrap_over_budget_fires() {
+        let g = graph_of(
+            "rust/src/cluster/engine/frame.rs",
+            "fn worker_loop() { helper(); }\n\
+             fn helper() { some_opt().unwrap(); }\n\
+             fn some_opt() -> Option<u8> { None }\n",
+        );
+        let budgets = parse_budget("engine-worker 0\n").expect("parse");
+        let (reports, diags) = run(&g, &budgets, SPEC);
+        assert_eq!(reports[0].count, 1, "{:?}", reports[0]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("engine-worker"));
+        assert!(diags[0].text.contains("budget is 0"));
+    }
+
+    #[test]
+    fn sites_within_budget_pass() {
+        let g = graph_of(
+            "rust/src/cluster/engine/frame.rs",
+            "fn worker_loop() { helper(); }\n\
+             fn helper() { some_opt().unwrap(); }\n\
+             fn some_opt() -> Option<u8> { None }\n",
+        );
+        let budgets = parse_budget("engine-worker 5\n").expect("parse");
+        let (reports, diags) = run(&g, &budgets, SPEC);
+        assert_eq!(reports[0].count, 1);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn unreachable_and_guarded_sites_do_not_count() {
+        let g = graph_of(
+            "rust/src/cluster/engine/frame.rs",
+            "fn worker_loop() { let r = catch_unwind(|| fenced().unwrap()); }\n\
+             fn fenced() -> Option<u8> { None }\n\
+             fn island() { boom().unwrap(); }\n\
+             fn boom() -> Option<u8> { None }\n",
+        );
+        let budgets = parse_budget("engine-worker 0\n").expect("parse");
+        let (reports, diags) = run(&g, &budgets, SPEC);
+        assert_eq!(reports[0].count, 0, "{:?}", reports[0].sites);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn missing_budget_entry_with_live_roots_fires() {
+        let g = graph_of(
+            "rust/src/cluster/engine/frame.rs",
+            "fn worker_loop() {}\n",
+        );
+        let (_, diags) = run(&g, &BTreeMap::new(), SPEC);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("no entry in panic.budget"));
+    }
+
+    #[test]
+    fn renamed_root_with_budget_entry_fires() {
+        let g = graph_of("rust/src/cluster/engine/frame.rs", "fn renamed_loop() {}\n");
+        let budgets = parse_budget("engine-worker 3\n").expect("parse");
+        let (_, diags) = run(&g, &budgets, SPEC);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("no root fn matched"));
+    }
+
+    #[test]
+    fn stale_budget_subsystem_name_fires() {
+        let g = graph_of("rust/src/lib.rs", "fn f() {}\n");
+        let budgets = parse_budget("retired-subsystem 9\n").expect("parse");
+        let (_, diags) = run(&g, &budgets, SPEC);
+        assert!(
+            diags.iter().any(|d| d.text.contains("unknown subsystem")),
+            "{diags:?}"
+        );
+    }
+}

@@ -1,0 +1,366 @@
+//! Protocol-exhaustiveness pass: cross-checks that the user-facing
+//! surfaces stay in sync with the code that implements them.
+//!
+//! 1. Every `adapt::registry` strategy name appears in the CLI help
+//!    (`rust/src/main.rs` string literals) and in DESIGN.md
+//!    (case-insensitive — prose may spell `FFMPA`).
+//! 2. Every `obs::Layer` variant has a Chrome-trace track mapping in
+//!    `obs/export.rs` (a `Layer::Variant` path must occur there).
+//! 3. Every `FaultPlan::parse` grammar arm (a string literal matched
+//!    with `=>` or `==` inside `parse`) is mentioned by a test — either
+//!    `arm:` or `"arm"` in `rust/tests/` or a `#[cfg(test)]` region.
+//!
+//! Checks self-disarm only when their source file is absent (fixture
+//! trees); `analyze_repo_is_clean` asserts the parsed universes are
+//! non-empty on the real repository, so a file rename cannot silently
+//! disable a check.
+
+use std::fs;
+use std::path::Path;
+
+use super::lexer::TokKind;
+use super::SrcFile;
+use crate::lint::Diagnostic;
+
+pub const RULE_PROTOCOL: &str = "protocol";
+
+pub const REGISTRY_FILE: &str = "rust/src/adapt/registry.rs";
+pub const HELP_FILE: &str = "rust/src/main.rs";
+pub const OBS_FILE: &str = "rust/src/obs/mod.rs";
+pub const EXPORT_FILE: &str = "rust/src/obs/export.rs";
+pub const FAULTS_FILE: &str = "rust/src/cluster/faults.rs";
+
+#[derive(Debug, Default)]
+pub struct ProtocolReport {
+    pub strategies: Vec<String>,
+    pub layers: Vec<String>,
+    pub fault_arms: Vec<String>,
+}
+
+fn file<'a>(files: &'a [SrcFile], rel: &str) -> Option<&'a SrcFile> {
+    files.iter().find(|f| f.rel == rel)
+}
+
+pub fn run(root: &Path, files: &[SrcFile]) -> (ProtocolReport, Vec<Diagnostic>) {
+    let mut report = ProtocolReport::default();
+    let mut diags = Vec::new();
+
+    // --- 1. strategy registry vs CLI help + DESIGN.md -------------------
+    if let Some(reg) = file(files, REGISTRY_FILE) {
+        let toks = &reg.lexed.toks;
+        let mut names: Vec<(String, usize)> = Vec::new();
+        for i in 0..toks.len() {
+            if toks[i].kind == TokKind::Ident
+                && toks[i].text == "name"
+                && toks.get(i + 1).map(|t| t.kind == TokKind::Punct && t.text == ":")
+                    == Some(true)
+                && toks.get(i + 2).map(|t| t.kind == TokKind::Str) == Some(true)
+            {
+                names.push((toks[i + 2].text.clone(), toks[i + 2].line));
+            }
+        }
+        if names.is_empty() {
+            diags.push(Diagnostic {
+                rule: RULE_PROTOCOL,
+                file: REGISTRY_FILE.to_string(),
+                line: 0,
+                text: "no strategy names parsed from the registry — \
+                       did the `name:` field change shape?"
+                    .to_string(),
+            });
+        }
+        let help_strings: Vec<String> = file(files, HELP_FILE)
+            .map(|f| {
+                f.lexed
+                    .toks
+                    .iter()
+                    .filter(|t| t.kind == TokKind::Str)
+                    .map(|t| t.text.clone())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let design = fs::read_to_string(root.join("DESIGN.md"))
+            .unwrap_or_default()
+            .to_lowercase();
+        for (name, line) in &names {
+            if !help_strings.iter().any(|s| s.contains(name.as_str())) {
+                diags.push(Diagnostic {
+                    rule: RULE_PROTOCOL,
+                    file: REGISTRY_FILE.to_string(),
+                    line: *line,
+                    text: format!(
+                        "strategy `{name}` is registered but absent from the CLI help \
+                         strings in {HELP_FILE}"
+                    ),
+                });
+            }
+            if !design.contains(&name.to_lowercase()) {
+                diags.push(Diagnostic {
+                    rule: RULE_PROTOCOL,
+                    file: REGISTRY_FILE.to_string(),
+                    line: *line,
+                    text: format!("strategy `{name}` is registered but undocumented in DESIGN.md"),
+                });
+            }
+            report.strategies.push(name.clone());
+        }
+    }
+
+    // --- 2. obs layers vs Chrome-trace track mapping --------------------
+    if let Some(obs) = file(files, OBS_FILE) {
+        let toks = &obs.lexed.toks;
+        let mut variants: Vec<(String, usize)> = Vec::new();
+        let mut i = 0usize;
+        while i + 2 < toks.len() {
+            if toks[i].kind == TokKind::Ident
+                && toks[i].text == "enum"
+                && toks[i + 1].kind == TokKind::Ident
+                && toks[i + 1].text == "Layer"
+                && toks[i + 2].kind == TokKind::Punct
+                && toks[i + 2].text == "{"
+            {
+                let mut depth = 1i64;
+                let mut k = i + 3;
+                while k < toks.len() && depth > 0 {
+                    match (toks[k].kind, toks[k].text.as_str()) {
+                        (TokKind::Punct, "{" | "(") => depth += 1,
+                        (TokKind::Punct, "}" | ")") => depth -= 1,
+                        (TokKind::Ident, w) if depth == 1 => {
+                            variants.push((w.to_string(), toks[k].line));
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                break;
+            }
+            i += 1;
+        }
+        if variants.is_empty() {
+            diags.push(Diagnostic {
+                rule: RULE_PROTOCOL,
+                file: OBS_FILE.to_string(),
+                line: 0,
+                text: "no `enum Layer` variants parsed — did the obs layer enum move?"
+                    .to_string(),
+            });
+        }
+        let export = file(files, EXPORT_FILE);
+        let covered: Vec<String> = export
+            .map(|f| {
+                let t = &f.lexed.toks;
+                let mut out = Vec::new();
+                for i in 0..t.len().saturating_sub(3) {
+                    if t[i].kind == TokKind::Ident
+                        && t[i].text == "Layer"
+                        && t[i + 1].text == ":"
+                        && t[i + 2].text == ":"
+                        && t[i + 3].kind == TokKind::Ident
+                    {
+                        out.push(t[i + 3].text.clone());
+                    }
+                }
+                out
+            })
+            .unwrap_or_default();
+        for (v, line) in &variants {
+            if export.is_some() && !covered.contains(v) {
+                diags.push(Diagnostic {
+                    rule: RULE_PROTOCOL,
+                    file: OBS_FILE.to_string(),
+                    line: *line,
+                    text: format!(
+                        "obs layer `{v}` has no `Layer::{v}` track mapping in {EXPORT_FILE}"
+                    ),
+                });
+            }
+            report.layers.push(v.clone());
+        }
+    }
+
+    // --- 3. fault grammar arms vs tests ---------------------------------
+    if let Some(faults) = file(files, FAULTS_FILE) {
+        let toks = &faults.lexed.toks;
+        let mut arms: Vec<(String, usize)> = Vec::new();
+        for f in faults.tree.fns.iter().filter(|f| f.name == "parse" && !f.in_test) {
+            let (s, e) = f.body;
+            for i in s..=e.min(toks.len().saturating_sub(1)) {
+                if toks[i].kind != TokKind::Str || toks[i].text.is_empty() {
+                    continue;
+                }
+                let arm_by_match = toks.get(i + 1).map(|t| t.text == "=") == Some(true)
+                    && toks.get(i + 2).map(|t| t.text == ">") == Some(true);
+                let arm_by_eq = i >= 2
+                    && toks[i - 1].kind == TokKind::Punct
+                    && toks[i - 1].text == "="
+                    && toks[i - 2].kind == TokKind::Punct
+                    && toks[i - 2].text == "=";
+                if (arm_by_match || arm_by_eq)
+                    && !arms.iter().any(|(a, _)| a == &toks[i].text)
+                {
+                    arms.push((toks[i].text.clone(), toks[i].line));
+                }
+            }
+        }
+        if arms.is_empty() {
+            diags.push(Diagnostic {
+                rule: RULE_PROTOCOL,
+                file: FAULTS_FILE.to_string(),
+                line: 0,
+                text: "no grammar arms parsed from FaultPlan::parse — did the parser move?"
+                    .to_string(),
+            });
+        }
+        let corpus = test_corpus(root, files);
+        for (arm, line) in &arms {
+            let colon = format!("{arm}:");
+            let quoted = format!("\"{arm}\"");
+            if !corpus.contains(&colon) && !corpus.contains(&quoted) {
+                diags.push(Diagnostic {
+                    rule: RULE_PROTOCOL,
+                    file: FAULTS_FILE.to_string(),
+                    line: *line,
+                    text: format!(
+                        "fault grammar arm `{arm}` has no test mentioning `{colon}` or `{quoted}`"
+                    ),
+                });
+            }
+            report.fault_arms.push(arm.clone());
+        }
+    }
+
+    (report, diags)
+}
+
+/// Everything test-shaped: `rust/tests/*.rs` raw text plus the
+/// `#[cfg(test)]` region lines of every scanned source file.
+fn test_corpus(root: &Path, files: &[SrcFile]) -> String {
+    let mut corpus = String::new();
+    let tests_dir = root.join("rust/tests");
+    if let Ok(entries) = fs::read_dir(&tests_dir) {
+        let mut paths: Vec<_> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|x| x == "rs").unwrap_or(false))
+            .collect();
+        paths.sort();
+        for p in paths {
+            if let Ok(text) = fs::read_to_string(&p) {
+                corpus.push_str(&text);
+                corpus.push('\n');
+            }
+        }
+    }
+    for f in files {
+        if f.tree.test_regions.is_empty() {
+            continue;
+        }
+        for (idx, line) in f.text.lines().enumerate() {
+            if f.tree.is_test_line(idx + 1) {
+                corpus.push_str(line);
+                corpus.push('\n');
+            }
+        }
+    }
+    corpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::items;
+    use super::super::lexer::lex;
+    use super::*;
+    use crate::testutil::TempTree;
+
+    fn src_file(rel: &str, text: &str) -> SrcFile {
+        let lexed = lex(text);
+        let tree = items::parse(&lexed.toks);
+        SrcFile {
+            rel: rel.to_string(),
+            text: text.to_string(),
+            lexed,
+            tree,
+        }
+    }
+
+    #[test]
+    fn unregistered_strategy_name_fires() {
+        let t = TempTree::new("proto-strat");
+        t.write("DESIGN.md", "strategies: even and cpm are documented\n");
+        let files = vec![
+            src_file(
+                REGISTRY_FILE,
+                "pub static ENTRIES: &[E] = &[\n    E { name: \"even\" },\n    E { name: \"zeta\" },\n];\n",
+            ),
+            src_file(HELP_FILE, "const HELP: &str = \"strategies: even\";\n"),
+        ];
+        let (report, diags) = run(t.root(), &files);
+        assert_eq!(report.strategies, vec!["even", "zeta"]);
+        assert!(
+            diags.iter().any(|d| d.text.contains("`zeta`") && d.text.contains("CLI help")),
+            "{diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.text.contains("`zeta`") && d.text.contains("DESIGN.md")),
+            "{diags:?}"
+        );
+        assert!(
+            !diags.iter().any(|d| d.text.contains("`even`")),
+            "registered+documented name must not fire: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn unmapped_obs_layer_fires() {
+        let t = TempTree::new("proto-layer");
+        let files = vec![
+            src_file(OBS_FILE, "pub enum Layer {\n    Session,\n    Engine,\n}\n"),
+            src_file(
+                EXPORT_FILE,
+                "fn track_of(l: Layer) -> u32 { match l { Layer::Session => 1, _ => 0 } }\n",
+            ),
+        ];
+        let (report, diags) = run(t.root(), &files);
+        assert_eq!(report.layers, vec!["Session", "Engine"]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].text.contains("`Engine`"));
+    }
+
+    #[test]
+    fn untested_fault_arm_fires() {
+        let t = TempTree::new("proto-fault");
+        t.write(
+            "rust/tests/test_faults.rs",
+            "#[test]\nfn grammar() { parse(\"death:1@2\"); }\n",
+        );
+        let files = vec![src_file(
+            FAULTS_FILE,
+            "impl FaultPlan {\n\
+             pub fn parse(s: &str) -> u8 {\n\
+                 if s == \"none\" { return 0; }\n\
+                 match s {\n\
+                     \"death\" => 1,\n\
+                     \"straggler\" => 2,\n\
+                     _ => 3,\n\
+                 }\n\
+             }\n\
+             }\n",
+        )];
+        let (report, diags) = run(t.root(), &files);
+        assert_eq!(report.fault_arms, vec!["none", "death", "straggler"]);
+        // death is mentioned (`death:`), none is not, straggler is not
+        assert!(
+            diags.iter().any(|d| d.text.contains("`straggler`")),
+            "{diags:?}"
+        );
+        assert!(diags.iter().any(|d| d.text.contains("`none`")), "{diags:?}");
+        assert!(!diags.iter().any(|d| d.text.contains("`death`")), "{diags:?}");
+    }
+
+    #[test]
+    fn missing_source_files_disarm_quietly() {
+        let t = TempTree::new("proto-empty");
+        let (report, diags) = run(t.root(), &[]);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert!(report.strategies.is_empty());
+    }
+}

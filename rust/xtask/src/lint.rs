@@ -34,11 +34,14 @@
 //! repo-relative path ends with the suffix, and (when given) the source
 //! line contains the substring. `#` starts a comment.
 //!
-//! The scanner strips line comments, block comments, string literals
+//! The rules match against the analyzer lexer's *shadow lines*
+//! (`analyze::lexer`): the source with comments, string literals
 //! (including `r#"…"#` raw strings and multi-line strings), and char
-//! literals before matching, so prose and test fixtures never trip a
-//! rule — and tracks `#[cfg(test)]`-module brace regions so the rules
-//! with a non-test scope skip them.
+//! literals blanked to spaces, so prose and test fixtures never trip a
+//! rule. `#[cfg(test)]` regions come from the item tree
+//! (`analyze::items`), which also exempts bare-`#[test]` fns and
+//! `#[cfg(test)]`-gated impls — strictly more precise than the old
+//! mod-only brace tracker this file used to hand-roll.
 
 use std::fmt;
 use std::fs;
@@ -51,6 +54,18 @@ pub const RULE_SAFETY_COMMENT: &str = "safety-comment";
 pub const RULE_FACADE: &str = "facade";
 pub const RULE_NO_UNWRAP: &str = "no-unwrap";
 pub const RULE_NO_BARE_EPRINTLN: &str = "no-bare-eprintln";
+
+/// The six textual rules, in report order — also the staleness universe
+/// for `lint`'s unused-suppression pruning (entries naming analyzer
+/// rules belong to `analyze`).
+pub const LINT_RULES: &[&str] = &[
+    RULE_FLOAT_ORD,
+    RULE_WALL_CLOCK,
+    RULE_SAFETY_COMMENT,
+    RULE_FACADE,
+    RULE_NO_UNWRAP,
+    RULE_NO_BARE_EPRINTLN,
+];
 
 /// Files that must route synchronization through `crate::sync`.
 const FACADE_FILES: &[&str] = &[
@@ -155,6 +170,15 @@ pub fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
 /// the xtask crate itself, whose source spells the patterns it hunts).
 /// Returns diagnostics not covered by `allow`, sorted by file and line.
 pub fn run_lint(root: &Path, allow: &[AllowEntry]) -> std::io::Result<Vec<Diagnostic>> {
+    let diags = collect(root)?;
+    let (mut kept, _) = suppress(diags, allow);
+    kept.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(kept)
+}
+
+/// Raw (unsuppressed, unsorted) diagnostics for the whole tree. The
+/// analyzer driver shares this with `run_lint`.
+pub(crate) fn collect(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
     let mut files = Vec::new();
     walk(root, &mut files)?;
     let mut out = Vec::new();
@@ -166,12 +190,34 @@ pub fn run_lint(root: &Path, allow: &[AllowEntry]) -> std::io::Result<Vec<Diagno
         let text = fs::read_to_string(&path)?;
         lint_file(&rel, &text, &mut out);
     }
-    out.retain(|d| !allow.iter().any(|a| a.matches(d)));
-    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
     Ok(out)
 }
 
-fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+/// Apply the allowlist, returning the surviving diagnostics and a
+/// per-entry "matched something" flag (for stale-suppression pruning —
+/// every matching entry is marked, not just the first).
+pub(crate) fn suppress(
+    diags: Vec<Diagnostic>,
+    allow: &[AllowEntry],
+) -> (Vec<Diagnostic>, Vec<bool>) {
+    let mut used = vec![false; allow.len()];
+    let mut kept = Vec::new();
+    for d in diags {
+        let mut hit = false;
+        for (i, a) in allow.iter().enumerate() {
+            if a.matches(&d) {
+                used[i] = true;
+                hit = true;
+            }
+        }
+        if !hit {
+            kept.push(d);
+        }
+    }
+    (kept, used)
+}
+
+pub(crate) fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     for entry in fs::read_dir(dir)? {
         let entry = entry?;
         let path = entry.path();
@@ -188,7 +234,7 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-fn rel_path(root: &Path, path: &Path) -> String {
+pub(crate) fn rel_path(root: &Path, path: &Path) -> String {
     let rel = path.strip_prefix(root).unwrap_or(path);
     rel.components()
         .map(|c| c.as_os_str().to_string_lossy())
@@ -200,29 +246,18 @@ fn in_any_scope(rel: &str, scopes: &[&str]) -> bool {
     scopes.iter().any(|s| rel.starts_with(s))
 }
 
-/// Lexer state carried across lines of one file.
-#[derive(Default)]
-struct ScanState {
-    in_block_comment: bool,
-    in_string: bool,
-    /// `Some(n)` while inside a raw string closed by `"` + n `#`s.
-    in_raw_string: Option<usize>,
-}
-
 /// One source line, reduced to the parts the rules look at.
 struct Line {
-    /// Code with comments and string/char literals stripped (literals
-    /// are replaced by a space so token boundaries survive).
+    /// The lexer's shadow line: comments and string/char literals
+    /// blanked to spaces so token boundaries survive.
     code: String,
     /// The raw source line (SAFETY comments are matched on this).
     raw: String,
-    /// Inside a `#[cfg(test)]`-style module region.
+    /// Inside a `#[cfg(test)]` region (mod, fn, or impl).
     in_test: bool,
 }
 
 fn lint_file(rel: &str, text: &str, out: &mut Vec<Diagnostic>) {
-    let lines = scan_lines(text);
-
     let float_scope = in_any_scope(rel, FLOAT_SCOPES);
     let wall_scope = in_any_scope(rel, WALL_CLOCK_SCOPES);
     let safety_scope = rel.starts_with(SAFETY_SCOPE);
@@ -235,6 +270,18 @@ fn lint_file(rel: &str, text: &str, out: &mut Vec<Diagnostic>) {
     {
         return;
     }
+
+    let lexed = crate::analyze::lexer::lex(text);
+    let tree = crate::analyze::items::parse(&lexed.toks);
+    let lines: Vec<Line> = text
+        .lines()
+        .enumerate()
+        .map(|(idx, raw)| Line {
+            code: lexed.shadow_lines.get(idx).cloned().unwrap_or_default(),
+            raw: raw.to_string(),
+            in_test: tree.is_test_line(idx + 1),
+        })
+        .collect();
 
     for (idx, line) in lines.iter().enumerate() {
         let lineno = idx + 1;
@@ -315,230 +362,10 @@ fn has_word(code: &str, word: &str) -> bool {
     false
 }
 
-/// First pass: strip each line and track `#[cfg(test)]` module regions
-/// by brace depth.
-fn scan_lines(text: &str) -> Vec<Line> {
-    let mut state = ScanState::default();
-    let mut depth: i64 = 0;
-    // entry depths of open test-module regions (nested mods supported)
-    let mut test_regions: Vec<i64> = Vec::new();
-    let mut pending_test_attr = false;
-    let mut out = Vec::new();
-
-    for raw in text.lines() {
-        let code = strip_line(raw, &mut state);
-        let trimmed = code.trim();
-        let depth_before = depth;
-
-        let is_test_attr =
-            trimmed.starts_with("#[") && trimmed.contains("cfg(") && trimmed.contains("test");
-        if is_test_attr {
-            pending_test_attr = true;
-        }
-        let is_mod_decl = trimmed.starts_with("mod ")
-            || trimmed.starts_with("pub mod ")
-            || trimmed.starts_with("pub(crate) mod ")
-            || (is_test_attr && trimmed.contains(" mod "));
-        if pending_test_attr && is_mod_decl {
-            pending_test_attr = false;
-            // `mod x;` declares an out-of-line module — nothing to track
-            // here (the module file is scoped by its own path)
-            if trimmed.contains('{') {
-                test_regions.push(depth_before);
-            }
-        } else if pending_test_attr
-            && !is_test_attr
-            && !(trimmed.is_empty() || trimmed.starts_with("#["))
-        {
-            // the attribute turned out to gate something other than a
-            // `mod` (a fn, an impl): no region
-            pending_test_attr = false;
-        }
-
-        let opens = code.matches('{').count() as i64;
-        let closes = code.matches('}').count() as i64;
-        depth += opens - closes;
-
-        out.push(Line {
-            code,
-            raw: raw.to_string(),
-            in_test: !test_regions.is_empty(),
-        });
-
-        while let Some(&entry) = test_regions.last() {
-            if depth <= entry {
-                test_regions.pop();
-            } else {
-                break;
-            }
-        }
-    }
-    out
-}
-
-/// Strip comments, string literals, and char literals from one line,
-/// carrying multi-line comment/string state in `state`. Stripped spans
-/// collapse to a single space.
-fn strip_line(raw: &str, state: &mut ScanState) -> String {
-    let cs: Vec<char> = raw.chars().collect();
-    let n = cs.len();
-    let mut out = String::with_capacity(raw.len());
-    let mut i = 0;
-
-    while i < n {
-        if state.in_block_comment {
-            if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
-                state.in_block_comment = false;
-                i += 2;
-            } else {
-                i += 1;
-            }
-            continue;
-        }
-        if let Some(hashes) = state.in_raw_string {
-            if cs[i] == '"' && cs[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes {
-                state.in_raw_string = None;
-                out.push(' ');
-                i += 1 + hashes;
-            } else {
-                i += 1;
-            }
-            continue;
-        }
-        if state.in_string {
-            match cs[i] {
-                '\\' => i += 2, // skip the escaped char (incl. `\"`)
-                '"' => {
-                    state.in_string = false;
-                    out.push(' ');
-                    i += 1;
-                }
-                _ => i += 1,
-            }
-            continue;
-        }
-
-        let c = cs[i];
-        match c {
-            '/' if i + 1 < n && cs[i + 1] == '/' => break, // line comment
-            '/' if i + 1 < n && cs[i + 1] == '*' => {
-                state.in_block_comment = true;
-                out.push(' ');
-                i += 2;
-            }
-            '"' => {
-                state.in_string = true;
-                i += 1;
-            }
-            'r' | 'b' => {
-                // raw string r"…", r#"…"#, br"…" — count hashes between
-                // the prefix and the opening quote
-                let mut j = i + 1;
-                if c == 'b' && j < n && cs[j] == 'r' {
-                    j += 1;
-                }
-                let mut hashes = 0;
-                while j < n && cs[j] == '#' {
-                    hashes += 1;
-                    j += 1;
-                }
-                let prefix_is_raw = j > i + usize::from(c == 'b') && cs[i + usize::from(c == 'b')] == 'r';
-                if prefix_is_raw && j < n && cs[j] == '"' {
-                    state.in_raw_string = Some(hashes);
-                    i = j + 1;
-                } else if c == 'b' && i + 1 < n && cs[i + 1] == '"' {
-                    state.in_string = true;
-                    i += 2;
-                } else if c == 'b' && i + 1 < n && cs[i + 1] == '\'' {
-                    i += 1; // byte char: let the '\'' arm handle it
-                    out.push(c);
-                } else {
-                    out.push(c);
-                    i += 1;
-                }
-            }
-            '\'' => {
-                // char literal vs lifetime: a literal closes within a few
-                // chars (`'x'`, `'\n'`, `'\u{7f}'`); a lifetime never has
-                // a closing quote before a non-ident char
-                if i + 1 < n && cs[i + 1] == '\\' {
-                    // escaped char literal: skip to the closing quote
-                    let mut j = i + 2;
-                    while j < n {
-                        if cs[j] == '\\' {
-                            j += 2;
-                            continue;
-                        }
-                        if cs[j] == '\'' {
-                            break;
-                        }
-                        j += 1;
-                    }
-                    out.push(' ');
-                    i = (j + 1).min(n);
-                } else if i + 2 < n && cs[i + 2] == '\'' {
-                    // one-char literal, e.g. '{'
-                    out.push(' ');
-                    i += 3;
-                } else {
-                    // lifetime: keep scanning normally
-                    out.push(c);
-                    i += 1;
-                }
-            }
-            _ => {
-                out.push(c);
-                i += 1;
-            }
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::{SystemTime, UNIX_EPOCH};
-
-    /// Tiny self-contained temp tree (no tempfile crate in a zero-dep
-    /// workspace): unique per test via pid + nanos, removed on drop.
-    struct TempTree {
-        root: PathBuf,
-    }
-
-    impl TempTree {
-        fn new(tag: &str) -> TempTree {
-            let nanos = SystemTime::now()
-                .duration_since(UNIX_EPOCH)
-                .map(|d| d.as_nanos())
-                .unwrap_or(0);
-            let root = std::env::temp_dir().join(format!(
-                "xtask-lint-{tag}-{}-{}",
-                std::process::id(),
-                nanos
-            ));
-            fs::create_dir_all(&root).expect("create temp tree");
-            TempTree { root }
-        }
-
-        fn write(&self, rel: &str, content: &str) {
-            let path = self.root.join(rel);
-            if let Some(parent) = path.parent() {
-                fs::create_dir_all(parent).expect("create parent");
-            }
-            fs::write(path, content).expect("write seed file");
-        }
-
-        fn lint(&self, allow: &[AllowEntry]) -> Vec<Diagnostic> {
-            run_lint(&self.root, allow).expect("lint temp tree")
-        }
-    }
-
-    impl Drop for TempTree {
-        fn drop(&mut self) {
-            let _ = fs::remove_dir_all(&self.root);
-        }
-    }
+    use crate::testutil::TempTree;
 
     fn rules_of(ds: &[Diagnostic]) -> Vec<&'static str> {
         ds.iter().map(|d| d.rule).collect()

@@ -1,72 +1,152 @@
-//! `cargo run -p xtask -- lint` — run the in-repo lint pass.
+//! `cargo run -p xtask -- <lint|analyze|deps>` — the in-repo static
+//! analysis toolbox.
 //!
-//! Exit codes: 0 clean, 1 violations found, 2 usage/IO error. The report
-//! file (when requested with `--report`) is written in both the clean and
-//! the dirty case, so CI can archive it unconditionally.
+//! - `lint`     — the six textual rules (DESIGN.md §3.10).
+//! - `analyze`  — the full semantic pass: lint rules plus lock-order
+//!   cycle detection, the panic-surface budget, protocol
+//!   exhaustiveness, and the zero-dependency guard (DESIGN.md §3.12).
+//! - `deps`     — just the zero-dependency guard, for quick manifest
+//!   edits.
+//!
+//! Exit codes (all commands): 0 clean, 1 violations found, 2 usage/IO
+//! error. The report file (when requested with `--report`) is written
+//! in both the clean and the dirty case, so CI can archive it
+//! unconditionally — `analyze` writes the `hfpm-analyze-v1` JSON
+//! document, `lint` the plain-text diagnostic list.
+//!
+//! Both `lint` and `analyze` fail (exit 1) on allowlist entries that
+//! match nothing, each with a distinct `unused-suppression` diagnostic;
+//! `--allow-unused-suppressions` keeps a transition PR green while an
+//! entry is briefly orphaned. `lint` only prunes entries naming its own
+//! six rules — entries for analyzer rules belong to `analyze`'s
+//! universe.
 
+mod analyze;
 mod lint;
+#[cfg(test)]
+mod testutil;
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: cargo run -p xtask -- lint [--root <dir>] [--allow <file>] [--report <file>]"
+        "usage: cargo run -p xtask -- <lint|analyze|deps> [--root <dir>] [--allow <file>] \
+         [--report <file>] [--allow-unused-suppressions]"
     );
     ExitCode::from(2)
 }
 
-fn main() -> ExitCode {
-    let mut args = std::env::args().skip(1);
-    match args.next().as_deref() {
-        Some("lint") => {}
-        _ => return usage(),
-    }
+struct Opts {
+    root: PathBuf,
+    allow_path: Option<PathBuf>,
+    report_path: Option<PathBuf>,
+    allow_unused: bool,
+}
 
+fn parse_opts(args: impl Iterator<Item = String>) -> Option<Opts> {
     // Default root: two levels above this crate's manifest dir — the
     // repository root, regardless of the invoking cwd.
     let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     root.pop();
     root.pop();
-    let mut allow_path: Option<PathBuf> = None;
-    let mut report_path: Option<PathBuf> = None;
-
+    let mut opts = Opts {
+        root,
+        allow_path: None,
+        report_path: None,
+        allow_unused: false,
+    };
+    let mut args = args.peekable();
     while let Some(arg) = args.next() {
         match arg.as_str() {
-            "--root" => match args.next() {
-                Some(v) => root = PathBuf::from(v),
-                None => return usage(),
-            },
-            "--allow" => match args.next() {
-                Some(v) => allow_path = Some(PathBuf::from(v)),
-                None => return usage(),
-            },
-            "--report" => match args.next() {
-                Some(v) => report_path = Some(PathBuf::from(v)),
-                None => return usage(),
-            },
-            _ => return usage(),
+            "--root" => opts.root = PathBuf::from(args.next()?),
+            "--allow" => opts.allow_path = Some(PathBuf::from(args.next()?)),
+            "--report" => opts.report_path = Some(PathBuf::from(args.next()?)),
+            "--allow-unused-suppressions" => opts.allow_unused = true,
+            _ => return None,
         }
     }
+    Some(opts)
+}
 
-    let allow_path = allow_path.unwrap_or_else(|| root.join("rust/xtask/lint.allow"));
-    let allow = match std::fs::read_to_string(&allow_path) {
-        Ok(text) => lint::parse_allowlist(&text),
+fn load_allow(opts: &Opts, cmd: &str) -> Result<Vec<lint::AllowEntry>, ExitCode> {
+    let path = opts
+        .allow_path
+        .clone()
+        .unwrap_or_else(|| opts.root.join("rust/xtask/lint.allow"));
+    match std::fs::read_to_string(&path) {
+        Ok(text) => Ok(lint::parse_allowlist(&text)),
         // No allowlist file is fine — it just means nothing is suppressed.
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
         Err(e) => {
-            eprintln!("xtask lint: cannot read {}: {e}", allow_path.display());
-            return ExitCode::from(2);
+            eprintln!("xtask {cmd}: cannot read {}: {e}", path.display());
+            Err(ExitCode::from(2))
         }
-    };
+    }
+}
 
-    let diagnostics = match lint::run_lint(&root, &allow) {
+fn write_report(path: &PathBuf, content: &str, cmd: &str) -> Result<(), ExitCode> {
+    if let Err(e) = std::fs::write(path, content) {
+        eprintln!("xtask {cmd}: cannot write report {}: {e}", path.display());
+        return Err(ExitCode::from(2));
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let cmd = match args.next() {
+        Some(c) => c,
+        None => return usage(),
+    };
+    let Some(opts) = parse_opts(args) else {
+        return usage();
+    };
+    match cmd.as_str() {
+        "lint" => run_lint_cmd(&opts),
+        "analyze" => run_analyze_cmd(&opts),
+        "deps" => run_deps_cmd(&opts),
+        _ => usage(),
+    }
+}
+
+fn run_lint_cmd(opts: &Opts) -> ExitCode {
+    let allow = match load_allow(opts, "lint") {
+        Ok(a) => a,
+        Err(code) => return code,
+    };
+    let raw = match lint::collect(&opts.root) {
         Ok(d) => d,
         Err(e) => {
-            eprintln!("xtask lint: scan failed under {}: {e}", root.display());
+            eprintln!("xtask lint: scan failed under {}: {e}", opts.root.display());
             return ExitCode::from(2);
         }
     };
+    let (mut diagnostics, used) = lint::suppress(raw, &allow);
+    if !opts.allow_unused {
+        for (i, entry) in allow.iter().enumerate() {
+            // Entries naming analyzer rules are pruned by `analyze`.
+            if !used[i] && lint::LINT_RULES.iter().any(|r| *r == entry.rule) {
+                diagnostics.push(lint::Diagnostic {
+                    rule: analyze::RULE_UNUSED_SUPPRESSION,
+                    file: "rust/xtask/lint.allow".to_string(),
+                    line: 0,
+                    text: format!(
+                        "allow entry matches nothing — delete it (or pass \
+                         --allow-unused-suppressions during a transition): `{} {}{}`",
+                        entry.rule,
+                        entry.path_suffix,
+                        entry
+                            .line_contains
+                            .as_ref()
+                            .map(|s| format!(" {s}"))
+                            .unwrap_or_default()
+                    ),
+                });
+            }
+        }
+    }
+    diagnostics.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
 
     let mut report = String::new();
     for d in &diagnostics {
@@ -76,21 +156,81 @@ fn main() -> ExitCode {
     }
     if diagnostics.is_empty() {
         report.push_str("lint clean\n");
-        println!("xtask lint: clean ({} rules)", 6);
+        println!("xtask lint: clean ({} rules)", lint::LINT_RULES.len());
     } else {
         eprintln!("xtask lint: {} violation(s)", diagnostics.len());
     }
-
-    if let Some(path) = report_path {
-        if let Err(e) = std::fs::write(&path, &report) {
-            eprintln!("xtask lint: cannot write report {}: {e}", path.display());
-            return ExitCode::from(2);
+    if let Some(path) = &opts.report_path {
+        if let Err(code) = write_report(path, &report, "lint") {
+            return code;
         }
     }
-
     if diagnostics.is_empty() {
         ExitCode::SUCCESS
     } else {
+        ExitCode::from(1)
+    }
+}
+
+fn run_analyze_cmd(opts: &Opts) -> ExitCode {
+    let allow = match load_allow(opts, "analyze") {
+        Ok(a) => a,
+        Err(code) => return code,
+    };
+    let out = match analyze::run_analyze(&opts.root, &allow, opts.allow_unused) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("xtask analyze: scan failed under {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &out.diagnostics {
+        println!("{d}");
+    }
+    if out.diagnostics.is_empty() {
+        let s = &out.stats;
+        println!(
+            "xtask analyze: clean ({} rules; {} files, {} fns, {} locks, {} lock edges, \
+             {} strategies, {} layers, {} fault arms)",
+            analyze::ANALYZE_RULES.len(),
+            s.files_scanned,
+            s.fns,
+            s.locks,
+            s.lock_edges,
+            s.strategies,
+            s.layers,
+            s.fault_arms
+        );
+    } else {
+        eprintln!("xtask analyze: {} violation(s)", out.diagnostics.len());
+    }
+    if let Some(path) = &opts.report_path {
+        if let Err(code) = write_report(path, &out.report_json, "analyze") {
+            return code;
+        }
+    }
+    if out.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn run_deps_cmd(opts: &Opts) -> ExitCode {
+    let (report, diagnostics) = analyze::deps::run(&opts.root);
+    for d in &diagnostics {
+        println!("{d}");
+    }
+    if diagnostics.is_empty() {
+        println!(
+            "xtask deps: clean ({} members, {} internal path deps, {} gated)",
+            report.members.len(),
+            report.internal,
+            report.gated.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask deps: {} violation(s)", diagnostics.len());
         ExitCode::from(1)
     }
 }

@@ -1,0 +1,51 @@
+//! Shared test scaffolding: a tiny self-contained temp tree (no
+//! tempfile crate in a zero-dep workspace), unique per test via
+//! pid + nanos, removed on drop.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::lint::{run_lint, AllowEntry, Diagnostic};
+
+pub struct TempTree {
+    root: PathBuf,
+}
+
+impl TempTree {
+    pub fn new(tag: &str) -> TempTree {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let root = std::env::temp_dir().join(format!(
+            "xtask-lint-{tag}-{}-{}",
+            std::process::id(),
+            nanos
+        ));
+        fs::create_dir_all(&root).expect("create temp tree");
+        TempTree { root }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn write(&self, rel: &str, content: &str) {
+        let path = self.root.join(rel);
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).expect("create parent");
+        }
+        fs::write(path, content).expect("write seed file");
+    }
+
+    pub fn lint(&self, allow: &[AllowEntry]) -> Vec<Diagnostic> {
+        run_lint(&self.root, allow).expect("lint temp tree")
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
